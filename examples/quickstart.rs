@@ -1,0 +1,56 @@
+//! Quickstart: load the AOT artifacts, evaluate the FP16 model and a
+//! LATMiX-quantized variant, and generate a few tokens through the serving
+//! engine.
+//!
+//! ```sh
+//! make pretrain artifacts          # build-time python (runs once)
+//! cargo run --release --example quickstart
+//! ```
+
+use latmix::coordinator::engine::XlaExecutor;
+use latmix::coordinator::{Engine, EngineConfig, GenRequest};
+use latmix::data::{load_ppl_corpus, load_tasks};
+use latmix::eval::{perplexity, recovery, zero_shot};
+use latmix::model::{ModelDesc, WeightSet};
+use latmix::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let art = latmix::artifacts_dir();
+    let desc = ModelDesc::load(&art)?;
+    println!(
+        "latmix-tiny: d={} layers={} heads={} | {} compiled graphs",
+        desc.d_model, desc.n_layers, desc.n_heads, desc.graphs.len()
+    );
+    let rt = Runtime::new(desc)?;
+    println!("PJRT platform: {}", rt.platform());
+
+    // --- evaluate FP16 vs LATMiX-MXFP4 ------------------------------------
+    let (corpus, n, t) = load_ppl_corpus(&art)?;
+    let tasks = load_tasks(&art)?;
+    let fp = WeightSet::load(&rt.desc, "fp_raw")?;
+    let fp_ppl = perplexity(&rt, "fp", &fp, &corpus, n, t)?;
+    let fp_acc = zero_shot(&rt, "fp", &fp, &tasks)?.last().unwrap().1;
+    println!("FP16      : ppl {fp_ppl:.2}  zero-shot avg {:.1}%", fp_acc * 100.0);
+
+    if let Ok(lm) = WeightSet::load(&rt.desc, "latmix-lu_mxfp4_b32") {
+        let ppl = perplexity(&rt, "mxfp4_b32_t3", &lm, &corpus, n, t)?;
+        let acc = zero_shot(&rt, "mxfp4_b32_t3", &lm, &tasks)?.last().unwrap().1;
+        println!(
+            "LATMiX-LU : ppl {ppl:.2}  zero-shot avg {:.1}%  (recovery {:.1}%)",
+            acc * 100.0,
+            recovery(acc, fp_acc)
+        );
+    } else {
+        println!("LATMiX variant not built yet — run `make experiments`");
+    }
+
+    // --- generate through the serving engine ------------------------------
+    let exec = XlaExecutor::new(&rt, "fp", &fp)?;
+    let mut engine = Engine::new(exec, EngineConfig { max_slots: 2, eos: -1, ..Default::default() });
+    // prompt: BOS + COPY-task marker + three words + SEP — the model should copy
+    let prompt = vec![1i32, 14, 100, 101, 102, 2];
+    engine.submit(GenRequest::new(0, prompt.clone(), 4));
+    let out = engine.run_to_completion()?;
+    println!("prompt {:?} -> generated {:?}", prompt, out[0].tokens);
+    Ok(())
+}

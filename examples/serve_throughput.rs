@@ -1,0 +1,49 @@
+//! Configurable serving benchmark: sweep slot counts and request loads for
+//! any (graph, weights) pair — the tool behind Fig. 4 style measurements.
+//!
+//! ```sh
+//! cargo run --release --example serve_throughput -- \
+//!     --weights latmix-lu_mxfp4_b32 --quant mxfp4_b32_t3 \
+//!     --requests 16 --max-new 32 --slots 1,2,4,8
+//! ```
+
+use latmix::bench::Table;
+use latmix::cli::Args;
+use latmix::model::ModelDesc;
+use latmix::runtime::Runtime;
+use latmix::server::run_serving;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let wtag = args.opt("weights").unwrap_or("fp_raw").to_string();
+    let gtag = args.opt("quant").unwrap_or("fp").to_string();
+    let requests = args.opt_usize("requests", 16);
+    let max_new = args.opt_usize("max-new", 32);
+    let slots: Vec<usize> = args
+        .opt("slots")
+        .unwrap_or("1,2,4,8")
+        .split(',')
+        .filter_map(|s| s.parse().ok())
+        .collect();
+
+    let desc = ModelDesc::load(&latmix::artifacts_dir())?;
+    let rt = Runtime::new(desc)?;
+    let mut tab = Table::new(
+        "serve_throughput",
+        &format!("Serving sweep: weights={wtag} graph={gtag} requests={requests} max_new={max_new}"),
+        &["slots", "decode tok/s", "total tok/s", "ttft p50 ms", "latency p50 ms", "p99 ms"],
+    );
+    for s in slots {
+        let rep = run_serving(&rt, &gtag, &wtag, requests, max_new, s, 42)?;
+        tab.row(vec![
+            s.to_string(),
+            format!("{:.1}", rep.decode_tok_per_s),
+            format!("{:.1}", rep.total_tok_per_s),
+            format!("{:.1}", rep.ttft_p50_ms),
+            format!("{:.1}", rep.latency_p50_ms),
+            format!("{:.1}", rep.latency_p99_ms),
+        ]);
+    }
+    tab.emit();
+    Ok(())
+}

@@ -1,0 +1,6 @@
+"""LATMiX build-time package: L1 Pallas kernels, L2 JAX model + PTQ pipeline,
+and the AOT lowering that produces the artifacts the Rust coordinator serves.
+
+Python in this tree runs ONCE (`make artifacts`); it is never imported on the
+request path.
+"""

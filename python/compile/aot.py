@@ -1,0 +1,345 @@
+"""AOT lowering: JAX graphs -> HLO *text* artifacts for the Rust runtime.
+
+Interchange is HLO text, NOT serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 (the version
+the published `xla` crate binds) rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Every graph takes the *weights as runtime arguments* (fixed order, recorded
+in the manifest), so one compiled executable serves every quantization
+method — RTN / GPTQ / QuaRot / SpinQuant / LATMiX weights are just different
+argument sets. What differs per graph is the *activation* quantization
+config and the online T3 Hadamard, which are data-dependent and live in the
+HLO (lowered from the L1 Pallas kernels, interpret mode).
+
+Graph kinds (shapes static per artifact):
+  logits_ppl_<tag>    tokens (8, 128)                  -> logits (8, 128, V)
+  logits_score_<tag>  tokens (8, 48)                   -> logits (8, 48, V)
+  prefill_<tag>_b<B>  tokens (B, 32), len (B,)         -> last-logits, KV
+  decode_<tag>_b<B>   token (B,), pos (B,), KV         -> logits, KV'
+where <tag> = fp | <act_fmt>_b<bs>[_t3].
+
+Also exports: eval datasets (ppl heldout + 7 zero-shot tasks), captured
+residual-stream features for the Fig. 2 study, golden cross-check files for
+the Rust MX/GPTQ ports, and `manifest.txt`.
+"""
+
+import argparse
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import calib
+from .config import ModelConfig, QuantSpec
+from .folding import fold_norm_scales, np_params
+from .lxt import save_lxt
+from .model import forward_decode, forward_prefill, forward_seq, init_kv, init_params
+from .mx.quantize import MXConfig, mx_qdq_ref
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+PPL_SHAPE = (8, 128)
+SCORE_SHAPE = (8, 48)
+PREFILL_LEN = 32
+KV_SEQ = 160
+SERVE_BATCHES = (1, 2, 4, 8)
+
+
+# ---------------------------------------------------------------------------
+# Weight argument ordering
+
+
+def weight_names(cfg: ModelConfig) -> list:
+    """Canonical argument order for all graphs (must match rust/src/model)."""
+    names = ["embed"]
+    per_layer = [
+        "ln1", "wq", "bq", "wk", "bk", "wv", "bv", "wo", "bo",
+        "ln2", "wg", "bg", "wu", "bu", "wd", "bd",
+    ]
+    for i in range(cfg.n_layers):
+        names += [f"layers.{i}.{k}" for k in per_layer]
+    names += ["lnf", "head", "bhead"]
+    return names
+
+
+def params_to_args(params, cfg: ModelConfig) -> list:
+    flat = np_params(params)
+    return [jnp.asarray(flat[n]) for n in weight_names(cfg)]
+
+
+def args_to_params(args: list, cfg: ModelConfig) -> dict:
+    names = weight_names(cfg)
+    flat = dict(zip(names, args))
+    layers = []
+    for i in range(cfg.n_layers):
+        pre = f"layers.{i}."
+        layers.append({k[len(pre):]: v for k, v in flat.items() if k.startswith(pre)})
+    return {
+        "embed": flat["embed"],
+        "layers": layers,
+        "lnf": flat["lnf"],
+        "head": flat["head"],
+        "bhead": flat["bhead"],
+    }
+
+
+# ---------------------------------------------------------------------------
+# Lowering
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # CRITICAL: print with full constants. The default printer elides
+    # large array constants as `{...}`, which xla_extension 0.5.1's text
+    # parser silently accepts as a degenerate literal — e.g. the RoPE
+    # frequency vector collapses and every transformer output beyond
+    # position 0 is garbage. (Found the hard way; see EXPERIMENTS.md.)
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # ... and without metadata: jax 0.8 emits `source_end_line` etc. that
+    # the 0.5.1 text parser rejects as unknown attributes.
+    opts.print_metadata = False
+    return comp.as_hlo_module().to_string(opts)
+
+
+def quant_tag(qname: str, block: int, t3: int) -> str:
+    base = "fp" if qname == "none" else f"{qname}_b{block}"
+    return base + ("_t3" if t3 else "")
+
+
+def _act_cfg(qname: str, block: int):
+    return None if qname == "none" else MXConfig.from_name(qname, block)
+
+
+def lower_logits(cfg, qname, block, t3, shape, use_pallas=True):
+    act = _act_cfg(qname, block)
+
+    def fn(tokens, *weights):
+        params = args_to_params(list(weights), cfg)
+        return (
+            forward_seq(
+                params, tokens, cfg, act_cfg=act, t3=t3 or None, use_pallas=use_pallas
+            ),
+        )
+
+    tok_spec = jax.ShapeDtypeStruct(shape, jnp.int32)
+    w_specs = [
+        jax.ShapeDtypeStruct(a.shape, a.dtype)
+        for a in params_to_args(init_params(cfg, 0), cfg)
+    ]
+    return jax.jit(fn).lower(tok_spec, *w_specs)
+
+
+def _kv_specs(cfg, batch):
+    kv = init_kv(cfg, batch, KV_SEQ)
+    flat = []
+    for k, v in kv:
+        flat += [k, v]
+    return [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in flat]
+
+
+def _kv_from_flat(flat, cfg):
+    return [(flat[2 * i], flat[2 * i + 1]) for i in range(cfg.n_layers)]
+
+
+def lower_prefill(cfg, qname, block, t3, batch, use_pallas=True):
+    act = _act_cfg(qname, block)
+
+    def fn(tokens, length, *weights):
+        params = args_to_params(list(weights), cfg)
+        logits, kv = forward_prefill(
+            params, tokens, length, cfg, KV_SEQ, act_cfg=act, t3=t3 or None,
+            use_pallas=use_pallas,
+        )
+        out = [logits]
+        for k, v in kv:
+            out += [k, v]
+        return tuple(out)
+
+    tok = jax.ShapeDtypeStruct((batch, PREFILL_LEN), jnp.int32)
+    length = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    w_specs = [
+        jax.ShapeDtypeStruct(a.shape, a.dtype)
+        for a in params_to_args(init_params(cfg, 0), cfg)
+    ]
+    return jax.jit(fn).lower(tok, length, *w_specs)
+
+
+def lower_decode(cfg, qname, block, t3, batch, use_pallas=True):
+    act = _act_cfg(qname, block)
+
+    def fn(token, pos, *rest):
+        nw = len(weight_names(cfg))
+        weights = list(rest[:nw])
+        kv = _kv_from_flat(list(rest[nw:]), cfg)
+        params = args_to_params(weights, cfg)
+        logits, kv2 = forward_decode(
+            params, token, kv, pos, cfg, act_cfg=act, t3=t3 or None,
+            use_pallas=use_pallas,
+        )
+        out = [logits]
+        for k, v in kv2:
+            out += [k, v]
+        return tuple(out)
+
+    token = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    w_specs = [
+        jax.ShapeDtypeStruct(a.shape, a.dtype)
+        for a in params_to_args(init_params(cfg, 0), cfg)
+    ]
+    return jax.jit(fn).lower(token, pos, *w_specs, *_kv_specs(cfg, batch))
+
+
+# Eval graphs: (format, block, t3) combos the benches consume.
+EVAL_QUANTS = [
+    ("none", 32, 0),
+    ("mxfp4", 32, 0), ("mxfp4", 32, 32),
+    ("mxint4", 32, 0), ("mxint4", 32, 32),
+    ("nvfp4", 16, 0), ("nvfp4", 16, 32),
+    # Fig. 2b block-size sweep
+    ("mxfp4", 8, 0), ("mxfp4", 8, 32),
+    ("mxfp4", 16, 0), ("mxfp4", 16, 32),
+    ("mxfp4", 64, 0), ("mxfp4", 64, 32),
+]
+
+SERVE_QUANTS = [("none", 32, 0), ("mxfp4", 32, 32)]
+
+
+def emit_graphs(cfg: ModelConfig, out_dir: str, fast: bool = False):
+    gdir = os.path.join(out_dir, "graphs")
+    os.makedirs(gdir, exist_ok=True)
+    manifest = []
+
+    def write(name, lowered):
+        path = os.path.join(gdir, f"{name}.hlo.txt")
+        if not os.path.exists(path):
+            text = to_hlo_text(lowered)
+            with open(path, "w") as f:
+                f.write(text)
+        manifest.append(name)
+        print(f"[aot] {name}", flush=True)
+
+    quants = EVAL_QUANTS[:4] if fast else EVAL_QUANTS
+    for qname, block, t3 in quants:
+        tag = quant_tag(qname, block, t3)
+        write(f"logits_ppl_{tag}", lower_logits(cfg, qname, block, t3, PPL_SHAPE))
+        write(f"logits_score_{tag}", lower_logits(cfg, qname, block, t3, SCORE_SHAPE))
+    batches = (1, 4) if fast else SERVE_BATCHES
+    for qname, block, t3 in SERVE_QUANTS:
+        tag = quant_tag(qname, block, t3)
+        for b in batches:
+            write(f"prefill_{tag}_b{b}", lower_prefill(cfg, qname, block, t3, b))
+            write(f"decode_{tag}_b{b}", lower_decode(cfg, qname, block, t3, b))
+    return manifest
+
+
+# ---------------------------------------------------------------------------
+# Eval data, features, goldens
+
+
+def emit_eval_data(cfg: ModelConfig, out_dir: str):
+    ddir = os.path.join(out_dir, "eval")
+    os.makedirs(ddir, exist_ok=True)
+    heldout = calib.make_corpus(16, PPL_SHAPE[1], seed=777_000)
+    save_lxt(os.path.join(ddir, "ppl_heldout.lxt"), {"tokens": heldout})
+    tasks = calib.make_eval_tasks(25, seed=777_001, max_len=SCORE_SHAPE[1])
+    save_lxt(os.path.join(ddir, "zeroshot.lxt"), tasks)
+    print("[aot] eval data", flush=True)
+
+
+def emit_features(cfg: ModelConfig, out_dir: str):
+    """Capture residual-stream activations from the trained FP model (layer
+    inputs to q/k/v) — the Fig. 2 feature set.
+
+    Substitution (DESIGN.md §3.3): latmix-tiny's activations are near-
+    Gaussian (kurtosis ≈ 3) — a 0.9M-param model never develops the massive
+    systematic outlier channels that motivate the paper (Llama-class models
+    show per-channel magnitude ratios of 10-100x). We therefore inject the
+    LLM outlier pattern explicitly: a fixed set of channels is amplified by
+    deterministic factors in [6, 24], exactly the structure rotation methods
+    are designed to diffuse. Raw features are kept alongside.
+    """
+    from .lxt import load_lxt
+    from .folding import from_np_params
+
+    fdir = os.path.join(out_dir, "features")
+    os.makedirs(fdir, exist_ok=True)
+    fpath = os.path.join(out_dir, "weights", "fp_raw.lxt")
+    if os.path.exists(fpath):
+        params = fold_norm_scales(from_np_params(load_lxt(fpath), cfg))
+    else:
+        params = fold_norm_scales(init_params(cfg, 0))
+    toks = calib.make_corpus(8, 128, seed=901)
+    taps = [dict() for _ in range(cfg.n_layers)]
+    forward_seq(params, jnp.asarray(toks), cfg, taps=taps)
+    raw = np.asarray(taps[cfg.n_layers // 2]["attn_in"][0])
+    rng = np.random.default_rng(902)
+    feats = raw.copy()
+    d = feats.shape[1]
+    outlier_channels = rng.permutation(d)[: max(4, d // 16)]
+    factors = np.exp(rng.uniform(np.log(6.0), np.log(24.0), size=len(outlier_channels)))
+    for c, f in zip(outlier_channels, factors):
+        feats[:, c] *= f.astype(np.float32)
+    save_lxt(
+        os.path.join(fdir, "resid_calib.lxt"),
+        {"features": feats, "features_raw": raw,
+         "outlier_channels": outlier_channels.astype(np.int32)},
+    )
+    print(f"[aot] features {feats.shape} ({len(outlier_channels)} outlier channels)", flush=True)
+
+
+def emit_goldens(out_dir: str):
+    """Golden files for the Rust MX-codec cross-check (bit-exact contract)."""
+    gdir = os.path.join(out_dir, "golden")
+    os.makedirs(gdir, exist_ok=True)
+    rng = np.random.default_rng(42)
+    x = (rng.standard_normal((16, 128)) * np.exp2(rng.integers(-8, 9, (16, 1)))).astype(
+        np.float32
+    )
+    tensors = {"input": x}
+    for fmt in ("mxfp4", "mxint4", "mxfp6", "mxfp8", "nvfp4"):
+        for block in (8, 16, 32):
+            cfg = MXConfig.from_name(fmt, block)
+            q = np.asarray(mx_qdq_ref(jnp.asarray(x), cfg))
+            tensors[f"{fmt}_b{block}"] = q
+    save_lxt(os.path.join(gdir, "mx_qdq.lxt"), tensors)
+    print("[aot] goldens", flush=True)
+
+
+def write_manifest(cfg: ModelConfig, graphs: list, out_dir: str):
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        for k, v in cfg.items():
+            f.write(f"model.{k}={v}\n")
+        f.write(f"kv_seq={KV_SEQ}\n")
+        f.write(f"prefill_len={PREFILL_LEN}\n")
+        f.write(f"ppl_shape={PPL_SHAPE[0]}x{PPL_SHAPE[1]}\n")
+        f.write(f"score_shape={SCORE_SHAPE[0]}x{SCORE_SHAPE[1]}\n")
+        f.write("weight_order=" + ",".join(weight_names(cfg)) + "\n")
+        for g in graphs:
+            f.write(f"graph={g}\n")
+    print("[aot] manifest", flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=ART)
+    ap.add_argument("--fast", action="store_true", help="subset of graphs (CI)")
+    args = ap.parse_args()
+    cfg = ModelConfig()
+    os.makedirs(args.out, exist_ok=True)
+    graphs = emit_graphs(cfg, args.out, fast=args.fast)
+    emit_eval_data(cfg, args.out)
+    emit_features(cfg, args.out)
+    emit_goldens(args.out)
+    write_manifest(cfg, graphs, args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+"""Method registry: every quantization method of Tables 1/6 (+ NVFP Table 15)
+expressed as (transform recipe, weight-quant scheme, online-T3 flag).
+
+All methods run through the *same* pipeline (`pipeline.quantize_model`) and
+the same folded-graph forward — the paper's "same experimental setup"
+fairness requirement (Sec. 5.1, App. D.2).
+
+| method       | T1                          | T2 (per head)      | weights | T3 |
+|--------------|-----------------------------|--------------------|---------|----|
+| rtn          | —                           | —                  | RTN     | no |
+| gptq         | —                           | —                  | GPTQ    | no |
+| quarot-rtn   | random Hadamard (full)      | random Hadamard    | RTN     | 32 |
+| quarot       | random Hadamard (full)      | random Hadamard    | GPTQ    | 32 |
+| spinquant    | learned rotation (CE loss)  | learned rotation   | GPTQ    | 32 |
+| ostquant     | learned Q·diag(s) (KL)      | learned Q·diag(s)  | GPTQ    | 32 |
+| flatquant    | learned kron(Aa,Ab) (KL)    | learned affine     | GPTQ    | 32 |
+| mr-gptq      | block-diag Hadamard         | random Hadamard    | GPTQ    | 32 |
+| brq          | learned block-diag rotation | learned rotation   | GPTQ    | 32 |
+| latmix-lu    | learned affine (LU, KL+vol) | learned affine     | GPTQ    | 32 |
+| latmix-qr    | learned affine (QR, KL+vol) | learned affine     | GPTQ    | 32 |
+
+Learned baselines reuse `latmix.learn_transforms` with the restricted
+parameter family + their native loss, exactly the paper's re-implementation
+strategy ("execute all methods under the same experimental setup").
+"""
+
+from dataclasses import dataclass, replace
+
+import numpy as np
+
+from .config import LatmixConfig, ModelConfig
+from .transforms import block_diagonal, random_hadamard
+
+
+@dataclass(frozen=True)
+class MethodSpec:
+    name: str
+    transform: str          # none | fixed_hadamard | fixed_bd_hadamard | learned
+    weight_quant: str       # rtn | gptq
+    t3: int | None = 32
+    # learned-transform knobs (map onto LatmixConfig):
+    param: str = "lu"       # lu | qr | kron
+    loss: str = "kl"
+    learn_bias: bool = True
+    learn_matrix: bool = True
+    learn_upper: bool = True
+    granularity: str = "full"
+    lam: float = 0.1
+
+
+METHODS = {
+    "fp16": MethodSpec("fp16", "none", "none", t3=None),
+    "rtn": MethodSpec("rtn", "none", "rtn", t3=None),
+    "gptq": MethodSpec("gptq", "none", "gptq", t3=None),
+    "quarot-rtn": MethodSpec("quarot-rtn", "fixed_hadamard", "rtn"),
+    "quarot": MethodSpec("quarot", "fixed_hadamard", "gptq"),
+    "spinquant": MethodSpec(
+        "spinquant", "learned", "gptq",
+        param="qr", loss="ce", learn_bias=False, learn_matrix=False, lam=0.0,
+    ),
+    "ostquant": MethodSpec(
+        "ostquant", "learned", "gptq",
+        param="qr", loss="kl", learn_bias=False, learn_upper=False,
+    ),
+    "flatquant": MethodSpec(
+        "flatquant", "learned", "gptq", param="kron", loss="kl", learn_bias=False,
+    ),
+    "mr-gptq": MethodSpec("mr-gptq", "fixed_bd_hadamard", "gptq"),
+    "brq": MethodSpec(
+        "brq", "learned", "gptq",
+        param="qr", loss="kl", learn_bias=False, learn_matrix=False,
+        granularity="block",
+    ),
+    "latmix-lu": MethodSpec("latmix-lu", "learned", "gptq", param="lu"),
+    "latmix-qr": MethodSpec("latmix-qr", "learned", "gptq", param="qr"),
+    # RTN-weight variants of LATMiX used by ablations
+    "latmix-lu-rtn": MethodSpec("latmix-lu-rtn", "learned", "rtn", param="lu"),
+}
+
+# Ordered as in Table 1.
+TABLE1_METHODS = [
+    "rtn", "quarot-rtn", "gptq", "quarot", "spinquant", "ostquant",
+    "flatquant", "mr-gptq", "latmix-lu", "latmix-qr",
+]
+
+TABLE15_METHODS = [
+    "rtn", "gptq", "spinquant", "flatquant", "mr-gptq", "latmix-lu", "latmix-qr",
+]
+
+
+def fixed_transforms(method: MethodSpec, cfg: ModelConfig, seed: int = 0):
+    """Materialize the non-learned transform families."""
+    rng = np.random.default_rng(seed)
+    d, dh = cfg.d_model, cfg.head_dim
+    if method.transform == "fixed_hadamard":
+        a1 = random_hadamard(d, rng)
+    elif method.transform == "fixed_bd_hadamard":
+        a1 = block_diagonal([random_hadamard(32, rng) for _ in range(d // 32)])
+    else:
+        raise ValueError(method.transform)
+    a2s = [random_hadamard(dh, rng) for _ in range(cfg.n_layers)]
+    return a1, np.zeros(d, np.float32), a2s, [np.zeros(dh, np.float32)] * cfg.n_layers
+
+
+def latmix_config_for(method: MethodSpec, base: LatmixConfig) -> LatmixConfig:
+    """Map a learned method onto its LatmixConfig."""
+    return replace(
+        base,
+        param=method.param if method.param in ("lu", "qr") else "kron",
+        loss=method.loss,
+        learn_bias=method.learn_bias,
+        learn_matrix=method.learn_matrix,
+        granularity=method.granularity,
+        lam=method.lam,
+    )

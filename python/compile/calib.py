@@ -1,0 +1,183 @@
+"""SynthText — the synthetic language standing in for WikiText2, plus the
+seven synthetic zero-shot tasks standing in for the paper's commonsense
+suite (ARC-E/C, HellaSwag, WinoGrande, PIQA, BoolQ, OBQA).
+
+Substitution rationale (DESIGN.md §3.3): the corpus mixes "natural" text
+(topic-conditioned affine word chains with Zipf noise — learnable structure
+with a real train/held-out generalization gap) with task-patterned sentences,
+so the pretrained tiny LM acquires partial task competence exactly the way an
+LLM acquires commonsense: from distributional exposure. Zero-shot evaluation
+then scores *fresh* task instances by length-normalized choice log-likelihood,
+the LM-eval-harness protocol. Quantization degrades accuracy smoothly, which
+is what Table 1's recovery metric needs.
+
+Token map (vocab 256):
+    0 PAD   1 BOS   2 SEP   3 EOS
+    4..13   digits 0..9
+    14..20  task markers (COPY REV PARITY MAJ MODSUM AGREE RETR)
+    21..27  reserved
+    28 EVEN 29 ODD  30 A    31 B
+    32..255 word tokens
+"""
+
+import numpy as np
+
+PAD, BOS, SEP, EOS = 0, 1, 2, 3
+DIG0 = 4
+M_COPY, M_REV, M_PARITY, M_MAJ, M_MODSUM, M_AGREE, M_RETR = range(14, 21)
+EVEN, ODD, TOK_A, TOK_B = 28, 29, 30, 31
+WORD0, WORD1 = 32, 256  # word-token range
+NWORDS = WORD1 - WORD0
+
+TASKS = ["copy", "reverse", "parity", "majority", "modsum", "agree", "retrieve"]
+
+# Per-topic affine chain coefficients for "natural" text.
+_TOPICS = [(5, 17), (7, 3), (11, 29), (13, 41), (17, 7), (19, 23), (23, 5), (29, 13)]
+
+
+def _verb_for(s: int) -> int:
+    """Deterministic agreement rule: subject word -> verb word."""
+    return WORD0 + 64 + (7 * (s - WORD0) + 3) % 64
+
+
+def _zipf_word(rng) -> int:
+    r = min(rng.zipf(1.5), NWORDS)
+    return WORD0 + int(r) - 1
+
+
+def _natural_sentence(rng) -> list:
+    t = rng.integers(len(_TOPICS))
+    a, b = _TOPICS[t]
+    w = int(rng.integers(NWORDS))
+    out = []
+    for _ in range(int(rng.integers(6, 13))):
+        out.append(WORD0 + w)
+        if rng.random() < 0.8:
+            w = (a * w + b) % NWORDS
+        else:
+            w = _zipf_word(rng) - WORD0
+    return out
+
+
+def make_task_instance(task: str, rng):
+    """Return (prompt_tokens, correct_completion, distractor_completions).
+
+    The training corpus embeds `prompt + correct` as a sentence; zero-shot
+    eval presents all four completions for likelihood scoring.
+    """
+    if task == "copy":
+        k = int(rng.integers(3, 6))
+        words = [int(w) for w in rng.integers(WORD0, WORD1, size=k)]
+        prompt = [M_COPY] + words + [SEP]
+        correct = list(words)
+        distract = [
+            list(rng.permuted(words)) if k > 1 else [int(rng.integers(WORD0, WORD1))]
+            for _ in range(2)
+        ] + [[int(w) for w in rng.integers(WORD0, WORD1, size=k)]]
+    elif task == "reverse":
+        k = int(rng.integers(3, 6))
+        words = [int(w) for w in rng.integers(WORD0, WORD1, size=k)]
+        prompt = [M_REV] + words + [SEP]
+        correct = words[::-1]
+        distract = [list(words), list(rng.permuted(words)),
+                    [int(w) for w in rng.integers(WORD0, WORD1, size=k)]]
+    elif task == "parity":
+        k = 6
+        bits = rng.integers(0, 2, size=k)
+        seq = [TOK_A if b else TOK_B for b in bits]
+        prompt = [M_PARITY] + seq + [SEP]
+        n_a = int(bits.sum())
+        correct = [EVEN if n_a % 2 == 0 else ODD]
+        distract = [[ODD if n_a % 2 == 0 else EVEN], [TOK_A], [TOK_B]]
+    elif task == "majority":
+        k = 7
+        bits = rng.integers(0, 2, size=k)
+        seq = [TOK_A if b else TOK_B for b in bits]
+        prompt = [M_MAJ] + seq + [SEP]
+        maj = TOK_A if bits.sum() * 2 > k else TOK_B
+        anti = TOK_B if maj == TOK_A else TOK_A
+        correct = [maj]
+        distract = [[anti], [EVEN], [ODD]]
+    elif task == "modsum":
+        a, b = int(rng.integers(10)), int(rng.integers(10))
+        prompt = [M_MODSUM, DIG0 + a, DIG0 + b, SEP]
+        c = (a + b) % 10
+        wrong = rng.permuted([d for d in range(10) if d != c])[:3]
+        correct = [DIG0 + c]
+        distract = [[DIG0 + int(w)] for w in wrong]
+    elif task == "agree":
+        s = int(rng.integers(WORD0, WORD0 + 64))
+        prompt = [M_AGREE, s, SEP]
+        correct = [_verb_for(s)]
+        others = rng.permuted(
+            [w for w in range(WORD0 + 64, WORD0 + 128) if w != _verb_for(s)]
+        )[:3]
+        distract = [[int(w)] for w in others]
+    elif task == "retrieve":
+        keys = rng.permuted(np.arange(WORD0, WORD0 + 64))[:3]
+        vals = rng.permuted(np.arange(WORD0 + 128, WORD0 + 192))[:3]
+        pairs = []
+        for kk, vv in zip(keys, vals):
+            pairs += [int(kk), int(vv)]
+        qi = int(rng.integers(3))
+        prompt = [M_RETR] + pairs + [int(keys[qi]), SEP]
+        correct = [int(vals[qi])]
+        distract = [[int(vals[j])] for j in range(3) if j != qi]
+        distract.append([int(rng.integers(WORD0 + 128, WORD0 + 192))])
+        distract = distract[:3]
+    else:
+        raise ValueError(task)
+    return prompt, correct, distract
+
+
+def _task_sentence(rng) -> list:
+    task = TASKS[int(rng.integers(len(TASKS)))]
+    prompt, correct, _ = make_task_instance(task, rng)
+    return prompt + correct
+
+
+def make_corpus(n_seqs: int, seq_len: int, seed: int = 0) -> np.ndarray:
+    """Token matrix `(n_seqs, seq_len)` of BOS-started, SEP-joined sentences.
+    60% natural text / 40% task patterns."""
+    rng = np.random.default_rng(seed)
+    out = np.zeros((n_seqs, seq_len), dtype=np.int32)
+    for i in range(n_seqs):
+        toks = [BOS]
+        while len(toks) < seq_len:
+            s = _natural_sentence(rng) if rng.random() < 0.45 else _task_sentence(rng)
+            toks += s + [SEP]
+        out[i] = toks[:seq_len]
+    return out
+
+
+def make_eval_tasks(n_per_task: int, seed: int = 1234, max_len: int = 48):
+    """Zero-shot eval set: for each task, `n_per_task` fresh instances.
+
+    Returns a dict of arrays ready for `.lxt` export to the Rust harness:
+      tasks_<name>_tokens  (n, 4, max_len) i32 — BOS + prompt + choice, padded
+      tasks_<name>_prompt_len (n,) i32        — scoring starts at this index
+      tasks_<name>_len     (n, 4) i32          — total length per choice
+      tasks_<name>_label   (n,) i32            — index of the correct choice
+    """
+    rng = np.random.default_rng(seed)
+    out = {}
+    for task in TASKS:
+        toks = np.zeros((n_per_task, 4, max_len), dtype=np.int32)
+        plen = np.zeros((n_per_task,), dtype=np.int32)
+        tlen = np.zeros((n_per_task, 4), dtype=np.int32)
+        label = np.zeros((n_per_task,), dtype=np.int32)
+        for i in range(n_per_task):
+            prompt, correct, distract = make_task_instance(task, rng)
+            choices = [correct] + distract
+            order = rng.permutation(4)
+            label[i] = int(np.argwhere(order == 0)[0][0])
+            plen[i] = 1 + len(prompt)
+            for slot, ci in enumerate(order):
+                seq = [BOS] + prompt + choices[ci]
+                tlen[i, slot] = len(seq)
+                toks[i, slot, : len(seq)] = seq
+        out[f"tasks_{task}_tokens"] = toks
+        out[f"tasks_{task}_prompt_len"] = plen
+        out[f"tasks_{task}_len"] = tlen
+        out[f"tasks_{task}_label"] = label
+    return out

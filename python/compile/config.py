@@ -1,0 +1,109 @@
+"""Configuration dataclasses shared across the build-time pipeline.
+
+The Rust side reads the same values from `artifacts/manifest.txt`; the
+`rust/src/config/` TOML-subset parser consumes `configs/*.toml` for serving.
+"""
+
+from dataclasses import dataclass, field
+
+from .mx.quantize import MXConfig
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """latmix-tiny: a pre-RMSNorm Llama-style transformer.
+
+    Head dim (d_model / n_heads) is 32 — exactly one MX block — so the
+    per-head T2 transform acts on whole MX blocks, mirroring the paper's
+    SpinQuant-style R2 placement.
+    """
+
+    vocab: int = 256
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 384
+    max_seq: int = 256
+    rope_theta: float = 10000.0
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def items(self):
+        return {
+            "vocab": self.vocab,
+            "d_model": self.d_model,
+            "n_layers": self.n_layers,
+            "n_heads": self.n_heads,
+            "d_ff": self.d_ff,
+            "max_seq": self.max_seq,
+        }.items()
+
+
+@dataclass(frozen=True)
+class QuantSpec:
+    """Activation + weight quantization configuration for one experiment.
+
+    `act` and `weight` are MXConfig names ("none", "mxfp4", "mxint4",
+    "mxfp6", "mxfp8", "nvfp4"); `block_size` overrides the format default.
+    """
+
+    act: str = "mxfp4"
+    weight: str = "mxfp4"
+    block_size: int = 32
+
+    @property
+    def act_cfg(self) -> MXConfig:
+        bs = 16 if self.act == "nvfp4" and self.block_size == 32 else self.block_size
+        return MXConfig.from_name(self.act, bs)
+
+    @property
+    def weight_cfg(self) -> MXConfig:
+        bs = (
+            16
+            if self.weight == "nvfp4" and self.block_size == 32
+            else self.block_size
+        )
+        return MXConfig.from_name(self.weight, bs)
+
+    @property
+    def tag(self) -> str:
+        if self.act == "none" and self.weight == "none":
+            return "fp"
+        return f"{self.act}_b{self.act_cfg.block_size}"
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    """Pretraining hyperparameters for latmix-tiny (train_lm.py)."""
+
+    steps: int = 700
+    batch: int = 8
+    seq: int = 128
+    lr: float = 1.5e-3
+    warmup: int = 50
+    weight_decay: float = 0.01
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class LatmixConfig:
+    """Transformation-learning hyperparameters (Sec. 3.2 + App. D.1)."""
+
+    steps: int = 150
+    batch: int = 4
+    seq: int = 64
+    lr: float = 1e-3
+    warmup_frac: float = 0.1
+    lam: float = 0.1          # volume-regularizer weight (Eq. 9)
+    temperature: float = 1.5  # distillation softmax temperature
+    calib_samples: int = 64
+    seed: int = 0
+    loss: str = "kl"          # kl | ce | mse (Table 8)
+    init: str = "bd_hadamard_noise"  # Table 7 strategies
+    param: str = "lu"         # lu | qr
+    learn_bias: bool = True
+    learn_matrix: bool = True  # False -> orthogonal-only variants
+    learn_upper: bool = True   # False -> Q diag(s) (OSTQuant-like)
+    granularity: str = "full"  # full | block (Table 2)

@@ -1,0 +1,284 @@
+"""Experiment sweep driver: produce every weight/transform variant that the
+Rust benches evaluate (`make experiments`).
+
+Stages (each idempotent — existing artifacts are skipped, so the sweep is
+resumable and can run in the background while the Rust side builds):
+
+  table1     methods x {MXFP4, MXINT4}                (headline, Tables 1/16+)
+  table6     same variants, perplexity read by the ppl bench
+  table15    NVFP4 subset
+  fig2       feature-study transforms + per-block-size LATMiX/QuaRot variants
+  table2     transformation x granularity ablation
+  table3     FP-fused snapshots (computational invariance)
+  table14    drop-one-transform variants
+  ablations  init / loss / calib-size / seeds / steps / lambda / temperature
+             (Tables 7-13, reduced grids: 3-5 points per axis; the paper's
+             shape — saturation / robustness — is preserved, documented in
+             EXPERIMENTS.md)
+
+Scale note: budgets are sized for a 1-core CPU testbed. `--fast` shrinks
+training steps further for smoke runs.
+"""
+
+import argparse
+import os
+import sys
+import time
+from dataclasses import replace
+
+import numpy as np
+
+from .baselines import METHODS, TABLE1_METHODS, TABLE15_METHODS, latmix_config_for
+from .config import LatmixConfig, ModelConfig, QuantSpec
+from .folding import fold_params, np_params
+from .gptq import quantize_weights
+from .latmix import learn_feature_transform, learn_transforms
+from .lxt import load_lxt, save_lxt
+from .mx.quantize import MXConfig
+from .pipeline import ART, default_calib, load_fp_params, run_variant
+from .transforms import init_matrix, random_hadamard, block_diagonal
+
+STEPS_MAIN = 120   # Table-1 learned methods
+STEPS_ABL = 60     # ablation axes
+
+
+def _lcfg(steps=STEPS_MAIN, **kw):
+    return replace(LatmixConfig(), steps=steps, **kw)
+
+
+def stage_table1(cfg, art, fast):
+    steps = 20 if fast else STEPS_MAIN
+    calib = default_calib(_lcfg(steps))
+    for fmt in ("mxfp4", "mxint4"):
+        qspec = QuantSpec(act=fmt, weight=fmt)
+        for m in TABLE1_METHODS:
+            run_variant(m, qspec, cfg, _lcfg(steps), calib, art)
+
+
+def stage_table15(cfg, art, fast):
+    steps = 20 if fast else 80
+    calib = default_calib(_lcfg(steps))
+    qspec = QuantSpec(act="nvfp4", weight="nvfp4", block_size=16)
+    for m in TABLE15_METHODS:
+        run_variant(m, qspec, cfg, _lcfg(steps), calib, art)
+
+
+def stage_table2(cfg, art, fast):
+    """Transformation x granularity ablation (MXFP4 ppl)."""
+    steps = 20 if fast else STEPS_ABL
+    calib = default_calib(_lcfg(steps))
+    qspec = QuantSpec()
+    # (tag, method-name, lcfg overrides) — "none" + hadamard rows reuse
+    # gptq / quarot / mr-gptq variants from table1.
+    rows = [
+        ("t2_orth_block", dict(param="qr", learn_matrix=False, learn_bias=False, granularity="block")),
+        ("t2_orth_full", dict(param="qr", learn_matrix=False, learn_bias=False)),
+        ("t2_orthbias_block", dict(param="qr", learn_matrix=False, learn_bias=True, granularity="block")),
+        ("t2_orthbias_full", dict(param="qr", learn_matrix=False, learn_bias=True)),
+        ("t2_inv_block", dict(param="lu", learn_bias=False, granularity="block")),
+        ("t2_inv_full", dict(param="lu", learn_bias=False)),
+        ("t2_latmix_block", dict(param="lu", granularity="block")),
+    ]
+    for tag, kw in rows:
+        lcfg = _lcfg(steps, **kw)
+        wpath = os.path.join(art, "weights", f"{tag}_{qspec.tag}.lxt")
+        if os.path.exists(wpath):
+            print(f"[exp] {tag}: cached", flush=True)
+            continue
+        params0 = load_fp_params(cfg, art)
+        res = learn_transforms(params0, cfg, lcfg, qspec, calib, t3=32, verbose=False)
+        folded = fold_params(params0, cfg, res["a1"], res["v1"], res["a2s"], res["v2s"], 32)
+        q = quantize_weights(folded, cfg, qspec.weight_cfg, "gptq",
+                             calib[:16], qspec.act_cfg, 32)
+        save_lxt(wpath, np_params(q))
+        print(f"[exp] {tag}: done", flush=True)
+
+
+def stage_table3(cfg, art, fast):
+    """FP model with T1/T2 fused at several training steps — NO quantization
+    (computational-invariance check)."""
+    steps = 20 if fast else STEPS_MAIN
+    snap_steps = (0, 1, 30, 60) if not fast else (0, 1)
+    done = all(
+        os.path.exists(os.path.join(art, "weights", f"fp_fused_step{s}.lxt"))
+        for s in list(snap_steps) + [steps]
+    )
+    if done:
+        print("[exp] table3: cached", flush=True)
+        return
+    calib = default_calib(_lcfg(steps))
+    params0 = load_fp_params(cfg, art)
+    res = learn_transforms(
+        params0, cfg, _lcfg(steps), QuantSpec(), calib, t3=32,
+        snapshot_steps=snap_steps, verbose=False,
+    )
+    res["snapshots"][steps] = (res["a1"], res["v1"], res["a2s"], res["v2s"])
+    for s, (a1, v1, a2s, v2s) in res["snapshots"].items():
+        # Fold only T1/T2 (the learned transforms). T3 is an *online* op:
+        # folding its inverse into wd is only valid when the serving graph
+        # applies the Hadamard — the FP graph used for this table does not.
+        folded = fold_params(params0, cfg, a1, v1, a2s, v2s, t3=None)
+        save_lxt(os.path.join(art, "weights", f"fp_fused_step{s}.lxt"), np_params(folded))
+    print("[exp] table3: done", flush=True)
+
+
+def stage_table14(cfg, art, fast):
+    """Drop-one-transform: reuse the Table-1 latmix-lu transforms, re-fold
+    with one of T1/T2/T3 removed, re-GPTQ."""
+    tpath = os.path.join(art, "transforms", "latmix-lu_mxfp4_b32.lxt")
+    if not os.path.exists(tpath):
+        print("[exp] table14: missing latmix-lu transforms, skipped", flush=True)
+        return
+    t = load_lxt(tpath)
+    a2s = [t[f"a2.{i}"] for i in range(cfg.n_layers)]
+    v2s = [t[f"v2.{i}"] for i in range(cfg.n_layers)]
+    qspec = QuantSpec()
+    calib = default_calib(_lcfg())
+    variants = {
+        "not3": dict(a1=t["a1"], v1=t["v1"], a2s=a2s, v2s=v2s, t3=None),
+        "not1": dict(a1=None, v1=None, a2s=a2s, v2s=v2s, t3=32),
+        "not2": dict(a1=t["a1"], v1=t["v1"], a2s=None, v2s=None, t3=32),
+    }
+    for tag, kw in variants.items():
+        wpath = os.path.join(art, "weights", f"t14_{tag}_{qspec.tag}.lxt")
+        if os.path.exists(wpath):
+            print(f"[exp] t14_{tag}: cached", flush=True)
+            continue
+        params0 = load_fp_params(cfg, art)
+        folded = fold_params(params0, cfg, kw["a1"], kw["v1"], kw["a2s"], kw["v2s"], kw["t3"])
+        q = quantize_weights(folded, cfg, qspec.weight_cfg, "gptq",
+                             calib[:16], qspec.act_cfg, kw["t3"])
+        save_lxt(wpath, np_params(q))
+        print(f"[exp] t14_{tag}: done", flush=True)
+
+
+def stage_fig2(cfg, art, fast):
+    """Fig. 2 feature study: learn rotation + affine transforms minimizing
+    E(T) on captured features; save them for the Rust fig2 benches. Also
+    per-block-size LATMiX/QuaRot weight variants for Fig. 2b."""
+    fpath = os.path.join(art, "features", "resid_calib.lxt")
+    if not os.path.exists(fpath):
+        from .aot import emit_features
+        emit_features(cfg, art)
+    feats = load_lxt(fpath)["features"][:1024]
+    tdir = os.path.join(art, "transforms")
+    os.makedirs(tdir, exist_ok=True)
+    steps = 40 if fast else 400
+    for b in (8, 16, 32, 64, 128):
+        out = os.path.join(tdir, f"fig2_learned_b{b}.lxt")
+        if os.path.exists(out):
+            continue
+        mx = MXConfig.from_name("mxfp4", b)
+        a_rot, v_rot, m_rot = learn_feature_transform(
+            feats, mx, kind="qr", steps=steps, lr=3e-3, learn_matrix=False,
+            learn_bias=False, init="orthogonal", lam=0.0,
+        )
+        a_aff, v_aff, m_aff = learn_feature_transform(
+            feats, mx, kind="lu", steps=steps, lr=3e-3, lam=0.01,
+            init="bd_hadamard_noise",
+        )
+        save_lxt(out, {
+            "rot_a": a_rot, "rot_v": v_rot, "aff_a": a_aff, "aff_v": v_aff,
+        })
+        print(f"[exp] fig2 b={b}: E_rot={m_rot:.5f} E_aff={m_aff:.5f}", flush=True)
+    # Fig. 2b: ppl-vs-block-size weight variants
+    steps2 = 20 if fast else STEPS_ABL
+    calib = default_calib(_lcfg(steps2))
+    for b in (8, 16, 64):
+        qspec = QuantSpec(act="mxfp4", weight="mxfp4", block_size=b)
+        run_variant("latmix-lu", qspec, cfg, _lcfg(steps2), calib, art)
+        run_variant("quarot", qspec, cfg, _lcfg(steps2), calib, art)
+        run_variant("mr-gptq", qspec, cfg, _lcfg(steps2), calib, art)
+        run_variant("gptq", qspec, cfg, _lcfg(steps2), calib, art)
+
+
+def stage_ablations(cfg, art, fast):
+    """Tables 7-13 (reduced grids)."""
+    steps = 20 if fast else STEPS_ABL
+    qspec = QuantSpec()
+    base = _lcfg(steps)
+    calib = default_calib(base)
+
+    def custom(tag, lcfg, weight_quant="gptq", calib_override=None):
+        wpath = os.path.join(art, "weights", f"{tag}_{qspec.tag}.lxt")
+        if os.path.exists(wpath):
+            print(f"[exp] {tag}: cached", flush=True)
+            return
+        c = calib_override if calib_override is not None else calib
+        params0 = load_fp_params(cfg, art)
+        res = learn_transforms(params0, cfg, lcfg, qspec, c, t3=32, verbose=False)
+        folded = fold_params(params0, cfg, res["a1"], res["v1"], res["a2s"], res["v2s"], 32)
+        q = quantize_weights(folded, cfg, qspec.weight_cfg, weight_quant,
+                             c[:16], qspec.act_cfg, 32)
+        save_lxt(wpath, np_params(q))
+        print(f"[exp] {tag}: done", flush=True)
+
+    # Table 7: initialization (both LU and QR on the interesting subset)
+    for init in ("identity", "orthogonal", "bd_orthogonal_noise", "hadamard",
+                 "bd_hadamard", "bd_hadamard_noise"):
+        custom(f"t7_lu_{init}", replace(base, init=init, param="lu"))
+    for init in ("identity", "bd_orthogonal_noise", "bd_hadamard_noise"):
+        custom(f"t7_qr_{init}", replace(base, init=init, param="qr"))
+    # Table 8: loss ablation (kl == latmix-lu main run)
+    custom("t8_mse", replace(base, loss="mse"))
+    custom("t8_ce", replace(base, loss="ce"))
+    # Table 9: calibration set size
+    for n in (1, 4, 16, 64):
+        c = default_calib(replace(base, calib_samples=max(n, 1)))[:max(n, 1)]
+        custom(f"t9_n{n}", replace(base, calib_samples=n), calib_override=c)
+    # Table 10: calibration subset seeds
+    for seed in (1, 2, 3):
+        c = default_calib(base, seed=100 + seed)
+        custom(f"t10_seed{seed}", replace(base, seed=seed), calib_override=c)
+    # Table 11: training steps via snapshots of one longer run
+    t11_steps = (0, 15, 30, 60, 120)
+    missing = [s for s in t11_steps
+               if not os.path.exists(os.path.join(art, "weights", f"t11_s{s}_{qspec.tag}.lxt"))]
+    if missing:
+        params0 = load_fp_params(cfg, art)
+        lcfg11 = replace(base, steps=120)
+        res = learn_transforms(params0, cfg, lcfg11, qspec, calib, t3=32,
+                               snapshot_steps=t11_steps, verbose=False)
+        for s, (a1, v1, a2s, v2s) in res["snapshots"].items():
+            folded = fold_params(params0, cfg, a1, v1, a2s, v2s, 32)
+            q = quantize_weights(folded, cfg, qspec.weight_cfg, "gptq",
+                                 calib[:16], qspec.act_cfg, 32)
+            save_lxt(os.path.join(art, "weights", f"t11_s{s}_{qspec.tag}.lxt"), np_params(q))
+        print("[exp] table11: done", flush=True)
+    # Table 12: lambda sweep
+    for lam in (0.001, 0.1, 1.0, 10.0):
+        custom(f"t12_lam{lam}", replace(base, lam=lam))
+    # Table 13: temperature sweep
+    for temp in (0.1, 0.75, 1.5, 5.0):
+        custom(f"t13_T{temp}", replace(base, temperature=temp))
+
+
+STAGES = {
+    "table1": stage_table1,
+    "table15": stage_table15,
+    "table2": stage_table2,
+    "table3": stage_table3,
+    "fig2": stage_fig2,
+    "table14": stage_table14,
+    "ablations": stage_ablations,
+}
+# table14 depends on table1's latmix-lu transforms -> keep order.
+ORDER = ["table1", "fig2", "table2", "table3", "table14", "table15", "ablations"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--stages", default=",".join(ORDER))
+    ap.add_argument("--out", default=ART)
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    cfg = ModelConfig()
+    t0 = time.time()
+    for s in args.stages.split(","):
+        print(f"=== stage {s} ({time.time()-t0:.0f}s) ===", flush=True)
+        STAGES[s](cfg, args.out, args.fast)
+    print(f"=== all stages done ({time.time()-t0:.0f}s) ===", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,147 @@
+"""Transformation folding (App. B + C): rewrite the weight pytree so the
+transformed-and-quantized model has *zero* runtime overhead beyond the online
+T3 block-Hadamard.
+
+Row-vector conventions (`y = x @ W + b`):
+
+T1 (global, residual stream; `x' = x @ A1 + v1`):
+  - embedding rows:            Ẽ   = E @ A1 + v1
+  - block inputs (q/k/v/g/u):  W̃   = A1⁻¹ @ W,     b̃ = b − v1 @ A1⁻¹ @ W
+  - block outputs (o/d):       W̃   = W @ A1,        b̃ = b @ A1      (Ã1 only —
+    v1 enters the stream once, at the embedding; App. C.1)
+  - lm head:                   like a block input.
+
+T2 (per layer, per head, `dh×dh`; values `o' = o @ A2 + v2` per head):
+  - value proj  (d, H, dh):    W̃ᵥ[:,h,:] = Wᵥ[:,h,:] @ A2,  b̃ᵥ[h] = bᵥ[h] @ A2 + v2
+  - out proj    (H, dh, d):    W̃ₒ[h]     = A2⁻¹ @ Wₒ[h],
+                               b̃ₒ        = bₒ − Σ_h v2 @ A2⁻¹ @ Wₒ[h]
+  The v2 term cancels through attention because softmax rows sum to 1
+  (P @ V2 = V2, App. B Eq. 29).
+
+T3 (online block-Hadamard H before down-proj): W̃_d = H_bdᵀ @ W_d, so
+`(x @ H_bd) @ W̃_d = x @ W_d`.
+
+All folds are pure jnp — *differentiable* — so LATMiX training folds the
+candidate transforms on the fly and backpropagates through the fold
+(`latmix.py`), guaranteeing the trained objective is exactly the deployed
+model.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .kernels.ref import hadamard_matrix
+
+
+def fold_norm_scales(params: dict) -> dict:
+    """Fold RMSNorm γ into the following linear layers (QuaRot step 0);
+    norms become pure normalizations (γ = 1). Exact."""
+    out = {"embed": params["embed"], "layers": [], "bhead": params["bhead"]}
+    for lp in params["layers"]:
+        g1 = lp["ln1"][:, None]
+        g2 = lp["ln2"][:, None]
+        nl = dict(lp)
+        nl["wq"] = g1 * lp["wq"]
+        nl["wk"] = g1 * lp["wk"]
+        nl["wv"] = g1 * lp["wv"]
+        nl["wg"] = g2 * lp["wg"]
+        nl["wu"] = g2 * lp["wu"]
+        nl["ln1"] = jnp.ones_like(lp["ln1"])
+        nl["ln2"] = jnp.ones_like(lp["ln2"])
+        out["layers"].append(nl)
+    out["lnf"] = jnp.ones_like(params["lnf"])
+    out["head"] = params["lnf"][:, None] * params["head"]
+    return out
+
+
+def _fold_in(w, b, a_inv, v):
+    """Input-side fold: layer now consumes transformed activations."""
+    wn = a_inv @ w
+    bn = b - v @ wn
+    return wn, bn
+
+
+def fold_params(
+    params: dict,
+    cfg: ModelConfig,
+    a1=None,
+    v1=None,
+    a2s=None,
+    v2s=None,
+    t3: int | None = None,
+) -> dict:
+    """Return the folded weight pytree. Any transform may be None (skipped).
+
+    `a2s`/`v2s` are per-layer lists of (dh, dh) matrices / (dh,) vectors.
+    Expects γ-folded params (`fold_norm_scales`) — asserted loosely.
+    """
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+    out = {"lnf": params["lnf"], "bhead": params["bhead"], "layers": []}
+    if a1 is not None:
+        a1 = jnp.asarray(a1)
+        v1 = jnp.zeros(d, jnp.float32) if v1 is None else jnp.asarray(v1)
+        a1_inv = jnp.linalg.inv(a1)
+        out["embed"] = params["embed"] @ a1 + v1
+        out["head"], out["bhead"] = _fold_in(params["head"], params["bhead"], a1_inv, v1)
+    else:
+        out["embed"] = params["embed"]
+        out["head"] = params["head"]
+
+    for li, lp in enumerate(params["layers"]):
+        nl = dict(lp)
+        if a1 is not None:
+            for wk_, bk_ in (("wq", "bq"), ("wk", "bk"), ("wv", "bv"), ("wg", "bg"), ("wu", "bu")):
+                nl[wk_], nl[bk_] = _fold_in(nl[wk_], nl[bk_], a1_inv, v1)
+            nl["wo"] = nl["wo"] @ a1
+            nl["bo"] = nl["bo"] @ a1
+            nl["wd"] = nl["wd"] @ a1
+            nl["bd"] = nl["bd"] @ a1
+        if a2s is not None and a2s[li] is not None:
+            a2 = jnp.asarray(a2s[li])
+            v2 = (
+                jnp.zeros(dh, jnp.float32)
+                if v2s is None or v2s[li] is None
+                else jnp.asarray(v2s[li])
+            )
+            a2_inv = jnp.linalg.inv(a2)
+            wv = nl["wv"].reshape(d, h, dh)
+            nl["wv"] = jnp.einsum("dhi,ij->dhj", wv, a2).reshape(d, d)
+            nl["bv"] = (nl["bv"].reshape(h, dh) @ a2 + v2).reshape(d)
+            wo = nl["wo"].reshape(h, dh, d)
+            wo_t = jnp.einsum("ij,hjd->hid", a2_inv, wo)
+            nl["bo"] = nl["bo"] - jnp.einsum("i,hid->d", v2, wo_t)
+            nl["wo"] = wo_t.reshape(d, d)
+        if t3:
+            hm = hadamard_matrix(t3)
+            f = nl["wd"].shape[0]
+            wd = nl["wd"].reshape(f // t3, t3, d)
+            nl["wd"] = jnp.einsum("ij,njd->nid", hm.T, wd).reshape(f, d)
+        out["layers"].append(nl)
+    return out
+
+
+def np_params(params) -> dict:
+    """Flatten the pytree to `{flat_name: np.ndarray}` for `.lxt` export."""
+    flat = {"embed": params["embed"], "lnf": params["lnf"], "head": params["head"], "bhead": params["bhead"]}
+    for i, lp in enumerate(params["layers"]):
+        for k, v in lp.items():
+            flat[f"layers.{i}.{k}"] = v
+    return {k: np.asarray(v) for k, v in flat.items()}
+
+
+def from_np_params(flat: dict, cfg: ModelConfig) -> dict:
+    """Inverse of `np_params`."""
+    layers = []
+    for i in range(cfg.n_layers):
+        pre = f"layers.{i}."
+        layers.append(
+            {k[len(pre):]: jnp.asarray(v) for k, v in flat.items() if k.startswith(pre)}
+        )
+    return {
+        "embed": jnp.asarray(flat["embed"]),
+        "layers": layers,
+        "lnf": jnp.asarray(flat["lnf"]),
+        "head": jnp.asarray(flat["head"]),
+        "bhead": jnp.asarray(flat["bhead"]),
+    }

@@ -1,0 +1,158 @@
+"""GPTQ weight quantization (Frantar et al. 2023) adapted to MX blocks —
+the MR-GPTQ setting of Egiazarian et al. (2025) / the paper's Sec. 3.2
+"weight quantization" stage.
+
+Row-vector convention: layers compute `y = x @ W`, `W: (d_in, d_out)`. GPTQ
+walks the *input* dimension; each quantized row's error is compensated into
+the not-yet-quantized rows through the inverse-Hessian Cholesky factor.
+MX block boundaries (groups of `block_size` consecutive input indices) get a
+fresh shared scale computed from the *current* (error-compensated) weights —
+the MX-aware analog of GPTQ's `group_size` handling.
+
+A numpy implementation (runs once at build time; the request path only ever
+sees the resulting QDQ'd tensors). Mirrored in Rust (`rust/src/quant/gptq.rs`)
+and cross-checked via golden files.
+"""
+
+import numpy as np
+
+from .config import ModelConfig
+from .mx.quantize import MXConfig, mx_qdq_ref
+from .model import forward_seq
+
+PERCDAMP = 0.01
+
+
+def rtn_quantize(w: np.ndarray, cfg: MXConfig) -> np.ndarray:
+    """Round-to-nearest baseline for `W (d_in, d_out)`: plain MX QDQ with
+    blocks along the input (reduction) dim, one scale per (block, column)."""
+    import jax.numpy as jnp
+
+    return np.asarray(mx_qdq_ref(jnp.asarray(w.T), cfg).T)
+
+
+def _mx_scales(block: np.ndarray, cfg: MXConfig) -> np.ndarray:
+    """Per-output-column shared scale for one MX input-block (B, d_out)."""
+    amax = np.abs(block).max(axis=0)
+    if cfg.nv:
+        # two-level NVFP4 scale, per column group (tensor scale ~ amax here)
+        from .mx.formats import FP4_E2M1
+
+        s = amax / FP4_E2M1.maxval
+        return np.where(amax > 0, s, 1.0).astype(np.float32)
+    e = np.floor(np.log2(np.maximum(amax, 1e-38))) - cfg.element.emax
+    e = np.clip(e, -127, 127)
+    return np.where(amax > 0, np.exp2(e), 1.0).astype(np.float32)
+
+
+def _qdq_cols(v: np.ndarray, s: np.ndarray, cfg: MXConfig) -> np.ndarray:
+    """QDQ one weight row `v (d_out,)` with per-column scales `s`."""
+    import jax.numpy as jnp
+
+    from .mx.formats import element_qdq
+
+    return np.asarray(s * element_qdq(jnp.asarray(v / s), cfg.element))
+
+
+def gptq_quantize(
+    w: np.ndarray, hessian: np.ndarray, cfg: MXConfig, percdamp: float = PERCDAMP
+) -> np.ndarray:
+    """Quantize `W (d_in, d_out)` with Hessian `H = X^T X (d_in, d_in)`."""
+    w = w.astype(np.float64).copy()
+    d_in, d_out = w.shape
+    b = cfg.block_size
+    h = hessian.astype(np.float64).copy()
+
+    dead = np.diag(h) == 0
+    h[dead, dead] = 1.0
+    w[dead, :] = 0.0
+    damp = percdamp * float(np.mean(np.diag(h)))
+    h[np.diag_indices(d_in)] += damp
+
+    # Upper-Cholesky factor of the inverse Hessian (GPTQ's propagation
+    # matrix): inv = L L^T  =>  U = L^T satisfies U^T U = inv with U upper —
+    # exactly torch.linalg.cholesky(inv, upper=True).
+    hinv = np.linalg.inv(h)
+    hinv = np.linalg.cholesky(hinv).T
+
+    q = np.zeros_like(w)
+    scales = None
+    for i in range(d_in):
+        if i % b == 0:
+            scales = _mx_scales(w[i : i + b, :].astype(np.float32), cfg)
+        d = hinv[i, i]
+        qi = _qdq_cols(w[i, :].astype(np.float32), scales, cfg).astype(np.float64)
+        q[i, :] = qi
+        err = (w[i, :] - qi) / d
+        if i + 1 < d_in:
+            w[i + 1 :, :] -= np.outer(hinv[i, i + 1 :], err)
+    return q.astype(np.float32)
+
+
+def capture_hessians(params, tokens, cfg: ModelConfig, act_cfg, t3, batch: int = 4):
+    """Run the calibration set through the (quantized-activation) model and
+    accumulate per-linear-input Hessians `H = X^T X`.
+
+    Returns `{layer_idx: {tap_name: H}}` for taps attn_in/o_in/ffn_in/down_in.
+    """
+    import jax.numpy as jnp
+
+    hs = [
+        {k: None for k in ("attn_in", "o_in", "ffn_in", "down_in")}
+        for _ in range(cfg.n_layers)
+    ]
+    for i in range(0, tokens.shape[0], batch):
+        taps = [dict() for _ in range(cfg.n_layers)]
+        forward_seq(
+            params, jnp.asarray(tokens[i : i + batch]), cfg,
+            act_cfg=act_cfg, t3=t3, taps=taps,
+        )
+        for li in range(cfg.n_layers):
+            for k, chunks in taps[li].items():
+                x = np.asarray(chunks[0], dtype=np.float64)
+                g = x.T @ x
+                hs[li][k] = g if hs[li][k] is None else hs[li][k] + g
+    return hs
+
+
+TAP_FOR_WEIGHT = {
+    "wq": "attn_in",
+    "wk": "attn_in",
+    "wv": "attn_in",
+    "wo": "o_in",
+    "wg": "ffn_in",
+    "wu": "ffn_in",
+    "wd": "down_in",
+}
+
+
+def quantize_weights(
+    params,
+    cfg: ModelConfig,
+    weight_cfg: MXConfig,
+    method: str = "gptq",
+    calib_tokens: np.ndarray | None = None,
+    act_cfg=None,
+    t3=None,
+):
+    """QDQ all block linear weights (embeddings + head stay fp, as in the
+    paper's setup). `method` is "rtn" or "gptq"."""
+    import jax.numpy as jnp
+
+    out = {k: v for k, v in params.items() if k != "layers"}
+    out["layers"] = []
+    hs = None
+    if method == "gptq":
+        assert calib_tokens is not None
+        hs = capture_hessians(params, calib_tokens, cfg, act_cfg, t3)
+    for li, lp in enumerate(params["layers"]):
+        nl = dict(lp)
+        for wname in TAP_FOR_WEIGHT:
+            w = np.asarray(lp[wname])
+            if method == "rtn":
+                nl[wname] = jnp.asarray(rtn_quantize(w, weight_cfg))
+            else:
+                h = hs[li][TAP_FOR_WEIGHT[wname]]
+                nl[wname] = jnp.asarray(gptq_quantize(w, h, weight_cfg))
+        out["layers"].append(nl)
+    return out

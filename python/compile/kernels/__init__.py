@@ -1,0 +1,14 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into artifact HLO).
+
+All kernels run with `interpret=True`: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so the interpret path (which lowers to plain HLO ops) is
+both the correctness oracle target and the shipping configuration on this
+testbed. Real-TPU structure (BlockSpec / VMEM / MXU mapping) is analyzed in
+DESIGN.md §6 and EXPERIMENTS.md §Perf.
+"""
+
+from .mx_quant import mx_qdq_pallas
+from .hadamard import block_hadamard_pallas
+from .affine_mx import affine_qdq_pallas
+
+__all__ = ["mx_qdq_pallas", "block_hadamard_pallas", "affine_qdq_pallas"]

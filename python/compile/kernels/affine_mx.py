@@ -1,0 +1,70 @@
+"""Pallas kernel: fused affine transform + MX QDQ — `QDQ(x @ A^T + v)`.
+
+This is the LATMiX *training-time* hot-spot (Sec. 3.2): every transformed
+activation is pushed through the learned affine map and fake-quantized before
+the (full-precision) weight matmul. Fusing the transform GEMM with the QDQ
+epilogue removes one full HBM round-trip of the transformed tensor.
+
+TPU mapping (DESIGN.md §6): grid over row tiles; each step computes a
+`(TILE_ROWS, d) @ (d, d)` MXU GEMM with `A^T` resident in VMEM (d = 256 f32
+-> 256 KiB, well within budget), adds the bias on the VPU, then applies the
+same block-reduce + codec epilogue as `mx_quant.py` while the tile is still
+in VMEM. One read of x, one write of the QDQ'd output per element.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..mx.quantize import MXConfig
+from .mx_quant import _qdq_block_body
+
+DEFAULT_TILE_ROWS = 128
+
+
+def _affine_qdq_kernel(x_ref, at_ref, v_ref, o_ref, *, cfg: MXConfig):
+    tile = x_ref[...]
+    rows, d = tile.shape
+    y = (
+        jax.lax.dot_general(
+            tile, at_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        + v_ref[...]
+    )
+    if cfg.name != "none":
+        b = cfg.block_size
+        y = _qdq_block_body(y.reshape(rows, d // b, b), cfg).reshape(rows, d)
+    o_ref[...] = y.astype(tile.dtype)
+
+
+@functools.partial(jax.jit, static_argnums=(3, 4))
+def _affine_qdq_2d(x, a, v, cfg: MXConfig, tile_rows: int):
+    rows, d = x.shape
+    grid = (pl.cdiv(rows, tile_rows),)
+    return pl.pallas_call(
+        functools.partial(_affine_qdq_kernel, cfg=cfg),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, d), lambda i: (0, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile_rows, d), lambda i: (i, 0)),
+        interpret=True,
+    )(x, a.T, v)
+
+
+def affine_qdq_pallas(x, a, v, cfg: MXConfig, tile_rows: int = DEFAULT_TILE_ROWS):
+    """Fused `QDQ(x @ A^T + v)` along the last axis; any leading shape."""
+    d = x.shape[-1]
+    lead = x.shape[:-1]
+    rows = 1
+    for s in lead:
+        rows *= s
+    x2 = x.reshape(max(rows, 1), d)
+    tr = min(tile_rows, x2.shape[0])
+    return _affine_qdq_2d(x2, a, v, cfg, tr).reshape(lead + (d,))

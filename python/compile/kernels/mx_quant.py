@@ -1,0 +1,92 @@
+"""Pallas kernel: MX quantize-dequantize along the last axis.
+
+TPU mapping (DESIGN.md §6): the CUDA-native layout (one warp per 32-element
+block with shuffle max-reduce) is rethought as a VMEM tiling problem —
+each grid step streams a `(TILE_ROWS, d)` tile HBM→VMEM, views it as
+`(TILE_ROWS, N_B, B)`, reduces the lane axis on the VPU for the block abs-max,
+derives the E8M0 scale with exp2/floor(log2), applies the element codec
+vectorized, and writes the tile back. One HBM read + one write per element,
+no scratch, no atomics. With f32 and d=256, a 128-row tile is 128 KiB of
+VMEM — far inside a 16 MiB budget, leaving room for double buffering.
+
+Runs under `interpret=True` (CPU PJRT cannot execute Mosaic custom-calls);
+bit-exact vs `mx.quantize.mx_qdq_ref` by construction (same jnp ops).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..mx.formats import element_qdq, fp_qdq, FP4_E2M1, FP8_E4M3
+from ..mx.quantize import MXConfig, SCALE_EMAX, SCALE_EMIN
+
+DEFAULT_TILE_ROWS = 128
+
+
+def _qdq_block_body(xb, cfg: MXConfig, ts=None):
+    """Shared QDQ math on an `(..., N_B, B)` view — identical to the ref.
+
+    For NVFP4, `ts` is the pre-computed per-tensor second-level scale (a
+    global reduction, so it is computed outside the tiled kernel and passed
+    in as a scalar operand).
+    """
+    amax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    if cfg.nv:
+        ts = jnp.float32(1.0) if ts is None else ts
+        s = fp_qdq(amax / (FP4_E2M1.maxval * ts), FP8_E4M3)
+        s = jnp.where(s > 0, s, jnp.ones_like(s)) * ts
+        return s * fp_qdq(xb / s, FP4_E2M1)
+    e = jnp.floor(jnp.log2(jnp.maximum(amax, 1e-38))) - cfg.element.emax
+    e = jnp.clip(e, SCALE_EMIN, SCALE_EMAX)
+    s = jnp.where(amax > 0, jnp.exp2(e), jnp.ones_like(amax))
+    return s * element_qdq(xb / s, cfg.element)
+
+
+def _mx_qdq_kernel(x_ref, ts_ref, o_ref, *, cfg: MXConfig):
+    tile = x_ref[...]
+    rows, d = tile.shape
+    b = cfg.block_size
+    xb = tile.reshape(rows, d // b, b)
+    o_ref[...] = _qdq_block_body(xb, cfg, ts=ts_ref[0]).reshape(rows, d)
+
+
+def nv_tensor_scale(x):
+    """NVFP4 second-level per-tensor scale (see mx.quantize.nvfp4_qdq_ref)."""
+    tmax = jnp.max(jnp.abs(x))
+    return jnp.where(tmax > 0, tmax / (FP4_E2M1.maxval * FP8_E4M3.maxval), 1.0)
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def _mx_qdq_2d(x, cfg: MXConfig, tile_rows: int):
+    rows, d = x.shape
+    grid = (pl.cdiv(rows, tile_rows),)
+    ts = nv_tensor_scale(x).reshape(1) if cfg.nv else jnp.ones((1,), jnp.float32)
+    return pl.pallas_call(
+        functools.partial(_mx_qdq_kernel, cfg=cfg),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile_rows, d), lambda i: (i, 0)),
+        interpret=True,
+    )(x, ts)
+
+
+def mx_qdq_pallas(x, cfg: MXConfig, tile_rows: int = DEFAULT_TILE_ROWS):
+    """MX QDQ of `x` along its last axis; any leading shape."""
+    if cfg.name == "none":
+        return x
+    d = x.shape[-1]
+    assert d % cfg.block_size == 0
+    lead = x.shape[:-1]
+    rows = 1
+    for s in lead:
+        rows *= s
+    x2 = x.reshape(max(rows, 1), d)
+    tr = min(tile_rows, x2.shape[0])
+    out = _mx_qdq_2d(x2, cfg, tr)
+    return out.reshape(lead + (d,))

@@ -1,0 +1,39 @@
+"""Pure-jnp correctness oracles for every Pallas kernel.
+
+The oracle for MX QDQ is the `mx` package reference; the block-Hadamard and
+fused affine+QDQ oracles are defined here. `python/tests/test_kernels.py`
+sweeps shapes/dtypes/block-sizes with hypothesis and asserts allclose (and for
+QDQ, bit-exact equality) between each kernel and its oracle.
+"""
+
+import jax.numpy as jnp
+
+from ..mx.quantize import MXConfig, mx_qdq_ref  # noqa: F401  (re-export)
+
+
+def hadamard_matrix(n: int):
+    """Sylvester-construction Hadamard matrix, normalized to be orthogonal
+    (H @ H.T = I). Requires n a power of two."""
+    assert n & (n - 1) == 0 and n > 0, f"Hadamard size {n} not a power of 2"
+    h = jnp.ones((1, 1), dtype=jnp.float32)
+    while h.shape[0] < n:
+        h = jnp.block([[h, h], [h, -h]])
+    return h / jnp.sqrt(jnp.float32(n))
+
+
+def block_hadamard_ref(x, block: int):
+    """Apply the online T3 transform: multiply each `block`-sized group of the
+    last axis by a normalized Hadamard matrix."""
+    d = x.shape[-1]
+    assert d % block == 0
+    h = hadamard_matrix(block)
+    xb = x.reshape(x.shape[:-1] + (d // block, block))
+    yb = jnp.einsum("...nb,bc->...nc", xb, h)
+    return yb.reshape(x.shape).astype(x.dtype)
+
+
+def affine_qdq_ref(x, a, v, cfg: MXConfig):
+    """Fused `QDQ(x @ A^T + v)` — the transformed-activation fake-quant used
+    in the LATMiX training forward (Sec. 3.2) before folding."""
+    y = x @ a.T + v
+    return mx_qdq_ref(y, cfg)

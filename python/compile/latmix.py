@@ -1,0 +1,349 @@
+"""LATMiX transform learning (Sec. 3.2): optimize T1 (global, d x d) and T2
+(per layer, per head, dh x dh) with AdamW on free-form LU/QR parameters,
+minimizing the KL distillation loss (Eq. 8) plus the volume regularizer
+(Eq. 7/9), with MX fake-quantization (STE) on the transformed activations.
+
+Key property: the student forward *folds the candidate transforms into the
+weights differentiably* (`folding.fold_params`) and runs the exact deployed
+graph — so the trained objective is the deployed model, and the
+"computational invariance" relaxation (Table 3) is measurable by folding at
+any step and evaluating in full precision.
+
+Also hosts `learn_feature_transform`, the Fig. 2 numerical study: learn an
+affine map minimizing the transformation MSE E(T) (Eq. 2) directly on
+captured residual-stream features.
+"""
+
+import functools
+import time
+from dataclasses import replace
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .config import LatmixConfig, ModelConfig, QuantSpec
+from .folding import fold_params
+from .model import forward_seq
+from .mx.quantize import MXConfig, mx_qdq_ref
+from .optim import adamw_init, adamw_update, cosine_lr
+from .transforms import (
+    TSpec,
+    condition_number,
+    init_matrix,
+    make_param,
+    materialize,
+    off_block_diagonal_norm,
+    orthogonality_deviation,
+    random_hadamard,
+    random_orthogonal,
+    split_params,
+    trainable_keys,
+    vol_regularizer,
+)
+
+
+# ---------------------------------------------------------------------------
+# Transform sets (T1 + per-layer T2)
+
+
+def build_transform_set(cfg: ModelConfig, lcfg: LatmixConfig):
+    """Construct (specs, params) for T1 and the N per-layer T2 transforms,
+    initialized per `lcfg.init` (App. D: T1 block-diagonal 32x32 random
+    Hadamard for LU / random orthogonal for QR, small off-diagonal noise;
+    T2 is one MX block wide, so its init is a full 32x32 Hadamard/rotation)."""
+    rng = np.random.default_rng(lcfg.seed)
+    d, dh = cfg.d_model, cfg.head_dim
+    kw = dict(
+        learn_bias=lcfg.learn_bias,
+        learn_matrix=lcfg.learn_matrix,
+        learn_upper=lcfg.learn_upper,
+    )
+    a0 = init_matrix(d, lcfg.init, rng)
+    if lcfg.param == "kron":
+        # FlatQuant's matrix structure: T1 = kron(Aa, Ab); the (single-MX-
+        # block-wide) T2 stays an LU affine as in the paper's FlatQuant†.
+        spec1, p1 = make_param(a0, "kron", learn_bias=lcfg.learn_bias)
+        t2_kind = "lu"
+        t2_kw = dict(learn_bias=lcfg.learn_bias)
+    elif lcfg.granularity == "block":
+        spec1, p1 = make_param(a0, "blockdiag", block=32, sub_kind=lcfg.param, **kw)
+        t2_kind = lcfg.param
+        t2_kw = kw
+    else:
+        spec1, p1 = make_param(a0, lcfg.param, **kw)
+        t2_kind = lcfg.param
+        t2_kw = kw
+    t2_specs, t2_params = [], []
+    for _ in range(cfg.n_layers):
+        a20 = (
+            random_hadamard(dh, rng) if t2_kind == "lu" else random_orthogonal(dh, rng)
+        )
+        s2, p2 = make_param(a20, t2_kind, **t2_kw)
+        t2_specs.append(s2)
+        t2_params.append(p2)
+    return spec1, p1, t2_specs[0], t2_params
+
+
+def materialize_set(spec1, p1, spec2, p2_list):
+    a1, v1 = materialize(spec1, p1)
+    a2s, v2s = [], []
+    for p2 in p2_list:
+        a2, v2 = materialize(spec2, p2)
+        a2s.append(a2)
+        v2s.append(v2)
+    return a1, v1, a2s, v2s
+
+
+# ---------------------------------------------------------------------------
+# Losses
+
+
+def kl_loss(teacher_logits, student_logits, temperature: float):
+    """KL(teacher || student) with distillation temperature (Eq. 8)."""
+    t = teacher_logits / temperature
+    s = student_logits / temperature
+    pt = jax.nn.softmax(t, axis=-1)
+    return (
+        jnp.mean(jnp.sum(pt * (jax.nn.log_softmax(t, -1) - jax.nn.log_softmax(s, -1)), -1))
+        * temperature ** 2
+    )
+
+
+def ce_loss(tokens, student_logits):
+    """Next-token cross-entropy (the SpinQuant objective)."""
+    lp = jax.nn.log_softmax(student_logits[:, :-1], -1)
+    tgt = tokens[:, 1:]
+    return -jnp.mean(jnp.take_along_axis(lp, tgt[..., None], -1))
+
+
+def mse_loss(teacher_states, student_states):
+    """Per-transformer-block output MSE (the FlatQuant-style objective)."""
+    return jnp.mean((teacher_states - student_states) ** 2)
+
+
+# ---------------------------------------------------------------------------
+# Training
+
+
+def learn_transforms(
+    params_fp,
+    cfg: ModelConfig,
+    lcfg: LatmixConfig,
+    qspec: QuantSpec,
+    corpus: np.ndarray,
+    t3: int | None = 32,
+    trace_every: int = 10,
+    snapshot_steps: tuple = (),
+    verbose: bool = True,
+):
+    """Learn T1/T2 on `corpus` (calibration tokens, (N, T)).
+
+    Returns a dict:
+      a1, v1       — materialized T1
+      a2s, v2s     — per-layer T2
+      trace        — list of (step, loss, orth_dev, off_block, cond) rows
+      snapshots    — {step: (a1, v1, a2s, v2s)} for steps in snapshot_steps
+                     (Table 3 invariance / Table 11 training-steps ablation);
+                     a snapshot at step k reflects the state *before* step k.
+      specs/params — raw parameterization state (for analysis)
+    """
+    act_cfg = qspec.act_cfg
+    spec1, p1, spec2, p2_list = build_transform_set(cfg, lcfg)
+    n = min(lcfg.calib_samples, corpus.shape[0])
+    data = corpus[:n, : lcfg.seq].astype(np.int32)
+
+    # Teacher outputs are transform-independent: precompute once.
+    teacher_fwd = jax.jit(
+        lambda pr, tk: forward_seq(pr, tk, cfg, return_states=lcfg.loss == "mse")
+    )
+    teacher_cache = {}
+    nb = max(1, lcfg.batch)
+    batches = [data[i : i + nb] for i in range(0, n, nb)]
+    for bi, b in enumerate(batches):
+        out = teacher_fwd(params_fp, jnp.asarray(b))
+        teacher_cache[bi] = jax.tree_util.tree_map(jax.device_get, out)
+
+    t1_train, t1_frozen = split_params(spec1, p1)
+    t2_split = [split_params(spec2, p2) for p2 in p2_list]
+    trainables = {"t1": t1_train, "t2": [t for t, _ in t2_split]}
+    frozen = {"t1": t1_frozen, "t2": [f for _, f in t2_split]}
+
+    def merge(tr, fz):
+        p1m = {**fz["t1"], **tr["t1"]}
+        p2m = [{**f, **t} for t, f in zip(tr["t2"], fz["t2"])]
+        return p1m, p2m
+
+    def loss_fn(tr, fz, tokens, teacher_out):
+        p1m, p2m = merge(tr, fz)
+        a1, v1, a2s, v2s = materialize_set(spec1, p1m, spec2, p2m)
+        folded = fold_params(params_fp, cfg, a1, v1, a2s, v2s, t3)
+        if lcfg.loss == "mse":
+            t_logits, t_states = teacher_out
+            s_logits, s_states = forward_seq(
+                folded, tokens, cfg, act_cfg=act_cfg, t3=t3, ste=True,
+                return_states=True,
+            )
+            base = mse_loss(t_states, s_states)
+        else:
+            s_logits = forward_seq(
+                folded, tokens, cfg, act_cfg=act_cfg, t3=t3, ste=True
+            )
+            if lcfg.loss == "ce":
+                base = ce_loss(tokens, s_logits)
+            else:
+                base = kl_loss(teacher_out, s_logits, lcfg.temperature)
+        reg = vol_regularizer(spec1, p1m)
+        for p2m_i in p2m:
+            reg = reg + vol_regularizer(spec2, p2m_i)
+        return base + lcfg.lam * reg, base
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    @jax.jit
+    def step_fn(tr, opt, lr, tokens, teacher_out):
+        (loss, base), grads = grad_fn(tr, frozen, tokens, teacher_out)
+        tr2, opt2 = adamw_update(grads, opt, tr, lr, wd=1e-4)
+        return tr2, opt2, loss, base
+
+    opt = adamw_init(trainables)
+    trace = []
+    snapshots = {}
+
+    def snap():
+        p1m, p2m = merge(trainables, frozen)
+        a1, v1, a2s, v2s = materialize_set(spec1, p1m, spec2, p2m)
+        return (
+            np.asarray(a1),
+            np.asarray(v1),
+            [np.asarray(a) for a in a2s],
+            [np.asarray(v) for v in v2s],
+        )
+
+    warmup = max(1, int(lcfg.steps * lcfg.warmup_frac))
+    t0 = time.time()
+    for step in range(lcfg.steps):
+        if step in snapshot_steps:
+            snapshots[step] = snap()
+        bi = step % len(batches)
+        lr = cosine_lr(step, lcfg.steps, lcfg.lr, warmup)
+        trainables, opt, loss, base = step_fn(
+            trainables, opt, lr, jnp.asarray(batches[bi]), teacher_cache[bi]
+        )
+        if step % trace_every == 0 or step == lcfg.steps - 1:
+            p1m, _ = merge(trainables, frozen)
+            a1 = materialize(spec1, p1m)[0]
+            row = (
+                step,
+                float(loss),
+                orthogonality_deviation(a1),
+                off_block_diagonal_norm(a1, 32),
+                condition_number(a1),
+            )
+            trace.append(row)
+            if verbose:
+                print(
+                    f"  [latmix] step {step:4d} loss {float(loss):.4f} "
+                    f"orthdev {row[2]:.3f} offblock {row[3]:.3f} cond {row[4]:.2f} "
+                    f"({time.time() - t0:.0f}s)",
+                    flush=True,
+                )
+
+    if lcfg.steps in snapshot_steps:
+        snapshots[lcfg.steps] = snap()
+    p1m, p2m = merge(trainables, frozen)
+    a1, v1, a2s, v2s = materialize_set(spec1, p1m, spec2, p2m)
+    return {
+        "a1": np.asarray(a1),
+        "v1": np.asarray(v1),
+        "a2s": [np.asarray(a) for a in a2s],
+        "v2s": [np.asarray(v) for v in v2s],
+        "trace": trace,
+        "snapshots": snapshots,
+        "spec1": spec1,
+        "params1": p1m,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Fig. 2 numerical study: learn T minimizing E(T) on raw features
+
+
+def transformation_mse(x, a, v, mx_cfg: MXConfig):
+    """E(T) of Eq. (2) estimated on feature rows `x (N, d)`."""
+    y = x @ a + v
+    q = mx_qdq_ref(y, mx_cfg)
+    back = (q - v) @ jnp.linalg.inv(a)
+    return jnp.mean(jnp.sum((x - back) ** 2, axis=-1)) / x.shape[-1]
+
+
+def learn_feature_transform(
+    feats: np.ndarray,
+    mx_cfg: MXConfig,
+    kind: str = "lu",
+    steps: int = 300,
+    lr: float = 3e-3,
+    seed: int = 0,
+    learn_bias: bool = True,
+    learn_matrix: bool = True,
+    init: str = "bd_hadamard_noise",
+    lam: float = 0.1,
+    verbose: bool = False,
+):
+    """Directly minimize E(T) (Eq. 2, with STE through the quantizer) over an
+    affine/rotation family on captured features — the Fig. 2 learned curves."""
+    d = feats.shape[-1]
+    rng = np.random.default_rng(seed)
+    spec, p = make_param(
+        init_matrix(d, init, rng), kind, learn_bias=learn_bias, learn_matrix=learn_matrix
+    )
+    train, frozen = split_params(spec, p)
+    x = jnp.asarray(feats.astype(np.float32))
+
+    def loss_fn(tr):
+        pm = {**frozen, **tr}
+        a, v = materialize(spec, pm)
+        y = x @ a + v
+        q = mx_qdq_ref(y, mx_cfg)
+        # Clipped STE. Plain STE is *degenerate* for the E(T) objective: the
+        # differentiable path reconstructs x exactly (A and A^{-1} cancel),
+        # so only quantization noise treated as constant remains. Gating the
+        # pass-through on the per-block clipping threshold restores the
+        # outlier-reduction signal: clipped elements expose d|y|/dA, and a
+        # soft penalty on clipped mass steers energy below the knee.
+        b = mx_cfg.block_size
+        yb = y.reshape(y.shape[:-1] + (d // b, b))
+        amax = jax.lax.stop_gradient(jnp.max(jnp.abs(yb), axis=-1, keepdims=True))
+        s = jnp.exp2(jnp.floor(jnp.log2(jnp.maximum(amax, 1e-38))) - mx_cfg.element.emax)
+        thresh = jnp.broadcast_to(s * mx_cfg.element.maxval, yb.shape).reshape(y.shape)
+        clipped = jnp.abs(y) > thresh
+        q_ste = jnp.where(
+            clipped, q, y + jax.lax.stop_gradient(q - y)
+        )
+        back = (q_ste - v) @ jnp.linalg.inv(a)
+        mse = jnp.mean(jnp.sum((x - back) ** 2, -1)) / d
+        overflow = jnp.mean(jax.nn.relu(jnp.abs(y) - thresh) ** 2)
+        return mse + 0.1 * overflow + lam * vol_regularizer(spec, pm), mse
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    @jax.jit
+    def step_fn(tr, opt, lr_):
+        (loss, mse), g = grad_fn(tr)
+        tr2, opt2 = adamw_update(g, opt, tr, lr_)
+        return tr2, opt2, mse
+
+    opt = adamw_init(train)
+    # STE gradients through the quantizer are noisy: keep the best iterate
+    # (by true E(T)) rather than trusting the last one.
+    best = (float("inf"), train)
+    for s in range(steps):
+        lr_ = cosine_lr(s, steps, lr, max(1, steps // 10))
+        train, opt, mse = step_fn(train, opt, lr_)
+        if float(mse) < best[0]:
+            best = (float(mse), jax.tree_util.tree_map(lambda x: x, train))
+        if verbose and s % 50 == 0:
+            print(f"  [fig2 {kind}] step {s} E(T)={float(mse):.5f}", flush=True)
+    pm = {**frozen, **best[1]}
+    a, v = materialize(spec, pm)
+    return np.asarray(a), np.asarray(v), best[0]

@@ -1,0 +1,61 @@
+"""`.lxt` — the LATMiX tensor container (python writer/reader).
+
+A deliberately tiny binary format shared with `rust/src/io/lxt.rs` (offline
+environment: no safetensors/serde). Layout, all little-endian:
+
+    magic   b"LXT1"
+    u32     n_tensors
+    per tensor:
+      u16   name_len, name bytes (utf-8)
+      u8    dtype (0 = f32, 1 = i32)
+      u8    ndim
+      u32 * ndim   dims
+      raw   data (dtype * prod(dims) bytes)
+
+Both sides must round-trip bit-exactly; `rust/tests/golden_mx.rs` depends
+on it for the cross-language golden checks.
+"""
+
+import struct
+
+import numpy as np
+
+MAGIC = b"LXT1"
+DTYPES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1}
+DTYPES_INV = {0: np.float32, 1: np.int32}
+
+
+def save_lxt(path: str, tensors: dict):
+    """Write `{name: ndarray}` to `path`. Arrays are converted to f32/i32."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors.items():
+            a = np.asarray(arr)
+            if a.dtype not in DTYPES:
+                a = a.astype(np.int32 if np.issubdtype(a.dtype, np.integer) else np.float32)
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", DTYPES[a.dtype], a.ndim))
+            for dim in a.shape:
+                f.write(struct.pack("<I", dim))
+            f.write(np.ascontiguousarray(a).tobytes())
+
+
+def load_lxt(path: str) -> dict:
+    """Read an `.lxt` file back into `{name: ndarray}`."""
+    out = {}
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC, f"{path}: bad magic"
+        (n,) = struct.unpack("<I", f.read(4))
+        for _ in range(n):
+            (name_len,) = struct.unpack("<H", f.read(2))
+            name = f.read(name_len).decode("utf-8")
+            dt, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
+            dtype = np.dtype(DTYPES_INV[dt])
+            count = int(np.prod(dims)) if ndim else 1
+            data = np.frombuffer(f.read(count * dtype.itemsize), dtype=dtype)
+            out[name] = data.reshape(dims).copy()
+    return out

@@ -1,0 +1,335 @@
+"""latmix-tiny: a pre-RMSNorm Llama-style transformer in JAX (Layer 2).
+
+Conventions
+-----------
+- Row-vector activations: `y = x @ W + b`, `W: (in, out)`. All linear layers
+  carry biases (zero at init) because folding affine transforms introduces
+  bias terms (App. C).
+- Activation fake-quantization (`qdq`) is applied at every *linear input*
+  inside transformer blocks — q/k/v, attention out-proj, gate/up, down —
+  matching the QuaRot/MR-GPTQ setup the paper builds on. Attention internals
+  (RoPE, softmax) and the lm head stay full precision.
+- The online T3 block-Hadamard (when enabled) hits the down-proj input; its
+  inverse is pre-folded into `wd` by the pipeline.
+- Transform learning never touches this file: `folding.fold_params` rewrites
+  the weight pytree (differentiably during LATMiX training), so one forward
+  implementation serves the float teacher, the student, and the AOT graphs.
+
+Three entry points, all jit/AOT friendly:
+- `forward_seq`   — full-sequence logits (training, perplexity, 0-shot).
+- `forward_prefill` — logits for the last position + the KV cache.
+- `forward_decode`  — one token per active slot with per-slot positions
+  (continuous batching: each batch lane is an independent sequence).
+"""
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .mx.quantize import MXConfig, mx_qdq_ref
+from .kernels import block_hadamard_pallas, mx_qdq_pallas
+from .kernels.ref import block_hadamard_ref
+
+EPS = 1e-5
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> dict:
+    """Initialize the weight pytree (scaled-normal init, zero biases)."""
+    rng = np.random.default_rng(seed)
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+
+    def mat(shape, scale):
+        return jnp.asarray((rng.standard_normal(shape) * scale).astype(np.float32))
+
+    layers = []
+    for _ in range(cfg.n_layers):
+        layers.append(
+            {
+                "ln1": jnp.ones(d, jnp.float32),
+                "wq": mat((d, d), d ** -0.5),
+                "bq": jnp.zeros(d, jnp.float32),
+                "wk": mat((d, d), d ** -0.5),
+                "bk": jnp.zeros(d, jnp.float32),
+                "wv": mat((d, d), d ** -0.5),
+                "bv": jnp.zeros(d, jnp.float32),
+                "wo": mat((d, d), (2 * d * cfg.n_layers) ** -0.5),
+                "bo": jnp.zeros(d, jnp.float32),
+                "ln2": jnp.ones(d, jnp.float32),
+                "wg": mat((d, f), d ** -0.5),
+                "bg": jnp.zeros(f, jnp.float32),
+                "wu": mat((d, f), d ** -0.5),
+                "bu": jnp.zeros(f, jnp.float32),
+                "wd": mat((f, d), (2 * f * cfg.n_layers) ** -0.5),
+                "bd": jnp.zeros(d, jnp.float32),
+            }
+        )
+    return {
+        "embed": mat((v, d), 1.0),
+        "layers": layers,
+        "lnf": jnp.ones(d, jnp.float32),
+        "head": mat((d, v), d ** -0.5),
+        "bhead": jnp.zeros(v, jnp.float32),
+    }
+
+
+def param_count(params) -> int:
+    return sum(int(np.prod(p.shape)) for p in jax.tree_util.tree_leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+
+
+def rmsnorm(x, g):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + EPS) * g
+
+
+def _rope_angles(pos, dh: int, theta: float):
+    """pos: (...,) int32 -> cos/sin of shape (..., dh//2)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dh, 2, dtype=jnp.float32) / dh))
+    ang = pos[..., None].astype(jnp.float32) * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (..., dh); rotate pairs (even, odd)."""
+    x1 = x[..., 0::2]
+    x2 = x[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x1 * sin + x2 * cos
+    return jnp.stack([y1, y2], axis=-1).reshape(x.shape)
+
+
+def make_qdq(act_cfg: MXConfig | None, ste: bool, use_pallas: bool):
+    """Activation fake-quant hook. `ste=True` adds the straight-through
+    estimator used while learning transforms (gradients pass the quantizer)."""
+    if act_cfg is None or act_cfg.name == "none":
+        return lambda t: t
+    fn = mx_qdq_pallas if use_pallas else mx_qdq_ref
+
+    def qdq(t):
+        q = fn(t, act_cfg)
+        if ste:
+            return t + jax.lax.stop_gradient(q - t)
+        return q
+
+    return qdq
+
+
+def _attn_core(q, k, v, mask, cfg: ModelConfig):
+    """q,k,v: (B, T, H, dh); mask: (B?, T, S) boolean keep-mask."""
+    scale = cfg.head_dim ** -0.5
+    logits = jnp.einsum("bthd,bshd->bhts", q, k) * scale
+    logits = jnp.where(mask[:, None, :, :], logits, -1e9)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhts,bshd->bthd", p, v)
+
+
+def _block(params, x, pos, mask, cfg, qdq, t3, use_pallas, kv=None, kv_pos=None, taps=None):
+    """One transformer block. If `kv=(k_cache, v_cache)` is given, attention
+    runs against the cache (decode); otherwise self-attention over `x`.
+
+    When `taps` is a dict (un-jitted calibration runs only) the four linear
+    inputs are recorded: `attn_in` (q/k/v), `o_in`, `ffn_in` (gate/up),
+    `down_in` — the Hessian sources for GPTQ.
+
+    Returns (x_out, (k_new, v_new)) — the new K/V rows for cache updates.
+    """
+    b, t, d = x.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    hx = rmsnorm(x, params["ln1"])
+    hq = qdq(hx)
+    if taps is not None:
+        taps.setdefault("attn_in", []).append(hq.reshape(-1, d))
+    q = (hq @ params["wq"] + params["bq"]).reshape(b, t, h, dh)
+    k = (hq @ params["wk"] + params["bk"]).reshape(b, t, h, dh)
+    v = (hq @ params["wv"] + params["bv"]).reshape(b, t, h, dh)
+    cos, sin = _rope_angles(pos, dh, cfg.rope_theta)
+    q = apply_rope(q, cos[:, :, None, :], sin[:, :, None, :])
+    k = apply_rope(k, cos[:, :, None, :], sin[:, :, None, :])
+    if kv is not None:
+        kc, vc = kv
+        ks = _scatter_rows(kc, k[:, 0], kv_pos)
+        vs = _scatter_rows(vc, v[:, 0], kv_pos)
+        o = _attn_core(q, ks, vs, mask, cfg)
+        k_out, v_out = ks, vs
+    else:
+        o = _attn_core(q, k, v, mask, cfg)
+        k_out, v_out = k, v
+    o = o.reshape(b, t, d)
+    o = qdq(o)
+    if taps is not None:
+        taps.setdefault("o_in", []).append(o.reshape(-1, d))
+    x = x + o @ params["wo"] + params["bo"]
+
+    hx = rmsnorm(x, params["ln2"])
+    hq = qdq(hx)
+    if taps is not None:
+        taps.setdefault("ffn_in", []).append(hq.reshape(-1, d))
+    gate = jax.nn.silu(hq @ params["wg"] + params["bg"])
+    up = hq @ params["wu"] + params["bu"]
+    ff = gate * up
+    if t3:
+        bh = block_hadamard_pallas if use_pallas else block_hadamard_ref
+        ff = bh(ff, t3)
+    ff = qdq(ff)
+    if taps is not None:
+        taps.setdefault("down_in", []).append(ff.reshape(-1, ff.shape[-1]))
+    x = x + ff @ params["wd"] + params["bd"]
+    return x, (k_out, v_out)
+
+
+def _scatter_rows(cache, new_row, pos):
+    """cache: (B, S, H, dh); new_row: (B, H, dh); pos: (B,) int32.
+    Per-lane scatter via one-hot (no batched dynamic_update_slice in HLO)."""
+    s = cache.shape[1]
+    oh = (jnp.arange(s)[None, :] == pos[:, None]).astype(cache.dtype)
+    return cache * (1.0 - oh[:, :, None, None]) + new_row[:, None] * oh[:, :, None, None]
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+
+
+def forward_seq(
+    params,
+    tokens,
+    cfg: ModelConfig,
+    act_cfg: MXConfig | None = None,
+    t3: int | None = None,
+    ste: bool = False,
+    use_pallas: bool = False,
+    taps: list | None = None,
+    return_states: bool = False,
+):
+    """Full-sequence causal logits: tokens (B, T) -> (B, T, vocab).
+
+    `taps`: per-layer list of capture dicts (GPTQ calibration, un-jitted).
+    `return_states=True` additionally returns the stacked post-block residual
+    states (n_layers, B, T, d) — the per-block MSE distillation target.
+    """
+    b, t = tokens.shape
+    qdq = make_qdq(act_cfg, ste, use_pallas)
+    x = params["embed"][tokens]
+    pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None, :], (b, t))
+    mask = jnp.broadcast_to(
+        jnp.tril(jnp.ones((t, t), bool))[None, :, :], (b, t, t)
+    )
+    states = []
+    for li, lp in enumerate(params["layers"]):
+        x, _ = _block(
+            lp, x, pos, mask, cfg, qdq, t3, use_pallas,
+            taps=None if taps is None else taps[li],
+        )
+        if return_states:
+            states.append(x)
+    x = rmsnorm(x, params["lnf"])
+    logits = x @ params["head"] + params["bhead"]
+    if return_states:
+        return logits, jnp.stack(states)
+    return logits
+
+
+def init_kv(cfg: ModelConfig, batch: int, max_seq: int):
+    """Zeroed KV cache pytree: list of (k, v), each (B, S, H, dh)."""
+    shape = (batch, max_seq, cfg.n_heads, cfg.head_dim)
+    return [
+        (jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32))
+        for _ in range(cfg.n_layers)
+    ]
+
+
+def forward_prefill(
+    params,
+    tokens,
+    length,
+    cfg: ModelConfig,
+    max_seq: int,
+    act_cfg: MXConfig | None = None,
+    t3: int | None = None,
+    use_pallas: bool = False,
+):
+    """Prefill: tokens (B, T) padded, `length` (B,) actual prompt lengths.
+    Returns (logits_at_last (B, vocab), kv) with K/V written at [0, T)."""
+    b, t = tokens.shape
+    qdq = make_qdq(act_cfg, False, use_pallas)
+    x = params["embed"][tokens]
+    pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None, :], (b, t))
+    causal = jnp.tril(jnp.ones((t, t), bool))[None, :, :]
+    valid = (jnp.arange(t)[None, :] < length[:, None])[:, None, :]
+    mask = jnp.logical_and(causal, valid)
+    kv_out = []
+    for lp in params["layers"]:
+        x, (k, v) = _block(lp, x, pos, mask, cfg, qdq, t3, use_pallas)
+        pad = max_seq - t
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_out.append((k, v))
+    x = rmsnorm(x, params["lnf"])
+    logits = x @ params["head"] + params["bhead"]
+    last = jnp.clip(length - 1, 0, t - 1)
+    logits_last = jnp.take_along_axis(logits, last[:, None, None], axis=1)[:, 0]
+    return logits_last, kv_out
+
+
+def forward_decode(
+    params,
+    token,
+    kv,
+    pos,
+    cfg: ModelConfig,
+    act_cfg: MXConfig | None = None,
+    t3: int | None = None,
+    use_pallas: bool = False,
+):
+    """One decode step with per-slot positions (continuous batching).
+
+    token (B,) int32, pos (B,) int32 — position at which `token` sits.
+    Returns (logits (B, vocab), kv_new)."""
+    b = token.shape[0]
+    s = kv[0][0].shape[1]
+    qdq = make_qdq(act_cfg, False, use_pallas)
+    x = params["embed"][token][:, None, :]
+    posv = pos[:, None]
+    mask = (jnp.arange(s)[None, :] <= pos[:, None])[:, None, :]
+    kv_new = []
+    for lp, lkv in zip(params["layers"], kv):
+        x, (k, v) = _block(
+            lp, x, posv, mask, cfg, qdq, t3, use_pallas, kv=lkv, kv_pos=pos
+        )
+        kv_new.append((k, v))
+    x = rmsnorm(x, params["lnf"])
+    return (x @ params["head"] + params["bhead"])[:, 0], kv_new
+
+
+# ---------------------------------------------------------------------------
+# Losses / metrics
+
+
+def lm_loss(params, tokens, cfg, **fwd_kw):
+    """Next-token cross-entropy (mean over all positions)."""
+    logits = forward_seq(params, tokens[:, :-1], cfg, **fwd_kw)
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def perplexity(params, tokens, cfg: ModelConfig, batch: int = 8, **fwd_kw) -> float:
+    """Corpus perplexity over token matrix (N, T)."""
+    total, count = 0.0, 0
+    loss_fn = jax.jit(
+        functools.partial(lm_loss, cfg=cfg, **fwd_kw), static_argnames=()
+    )
+    for i in range(0, tokens.shape[0], batch):
+        chunk = tokens[i : i + batch]
+        total += float(loss_fn(params, jnp.asarray(chunk))) * chunk.shape[0]
+        count += chunk.shape[0]
+    return float(np.exp(total / max(count, 1)))

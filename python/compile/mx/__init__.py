@@ -1,0 +1,33 @@
+"""Microscaling (MX) data-format substrate — build-time Python side.
+
+Mirrors `rust/src/mx/` (the request-path implementation). The two are
+cross-checked bit-exactly through golden files written by
+`python/compile/golden.py` and read by `rust/tests/golden_mx.rs`.
+"""
+
+from .formats import (
+    ElementFormat,
+    FP4_E2M1,
+    FP6_E2M3,
+    FP8_E4M3,
+    INT4,
+    FORMATS,
+    fp_qdq,
+    int_qdq,
+)
+from .quantize import MXConfig, mx_qdq_ref, nvfp4_qdq_ref, quantize_tensor
+
+__all__ = [
+    "ElementFormat",
+    "FP4_E2M1",
+    "FP6_E2M3",
+    "FP8_E4M3",
+    "INT4",
+    "FORMATS",
+    "fp_qdq",
+    "int_qdq",
+    "MXConfig",
+    "mx_qdq_ref",
+    "nvfp4_qdq_ref",
+    "quantize_tensor",
+]

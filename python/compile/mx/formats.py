@@ -1,0 +1,93 @@
+"""Element codecs for microscaling formats (OCP MX spec v1.0).
+
+Each MX block shares a power-of-two scale (E8M0); elements within the block
+are stored in a narrow format. This module implements quantize-dequantize
+(QDQ, "fake quantization") for the element formats used in the paper:
+
+- FP4 E2M1  (MXFP4 elements): values ±{0, .5, 1, 1.5, 2, 3, 4, 6}
+- INT4      (MXINT4 elements): two's-complement fixed point, integers [-8, 7]
+- FP6 E2M3  (MXFP6 elements):  max 7.5
+- FP8 E4M3  (MXFP8 elements, and NVFP4 *scales*): max 448
+
+All math is f32 `jax.numpy`; round-to-nearest-even comes from `jnp.round`
+operating on grid units, matching IEEE RNE on these tiny grids.
+
+`emax` is the exponent of the largest representable magnitude — the `r_max`
+of Eq. (1) in the paper: the shared scale is `2^(floor(log2 amax) - emax)`.
+"""
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class ElementFormat:
+    """A narrow element format inside an MX block.
+
+    Attributes:
+        name:  canonical name used in configs and artifact manifests.
+        kind:  "fp" or "int".
+        ebits: exponent bits (fp only).
+        mbits: mantissa bits (fp), or integer magnitude bits (int).
+        emax:  exponent of the max representable value (the paper's r_max).
+        maxval: largest representable magnitude.
+        bits:  total storage bits per element (for footprint accounting).
+    """
+
+    name: str
+    kind: str
+    ebits: int
+    mbits: int
+    emax: int
+    maxval: float
+    bits: int
+
+
+FP4_E2M1 = ElementFormat("fp4_e2m1", "fp", ebits=2, mbits=1, emax=2, maxval=6.0, bits=4)
+FP6_E2M3 = ElementFormat("fp6_e2m3", "fp", ebits=2, mbits=3, emax=2, maxval=7.5, bits=6)
+FP8_E4M3 = ElementFormat("fp8_e4m3", "fp", ebits=4, mbits=3, emax=8, maxval=448.0, bits=8)
+# INT4: sign + 3 magnitude bits interpreted as fixed point with 2 fractional
+# bits relative to the shared exponent; in Eq.-(1) terms r_max = 2 and the
+# element quantizer is round+clamp to integers in [-8, 7] (see int_qdq).
+INT4 = ElementFormat("int4", "int", ebits=0, mbits=3, emax=2, maxval=7.0, bits=4)
+
+FORMATS = {f.name: f for f in (FP4_E2M1, FP6_E2M3, FP8_E4M3, INT4)}
+
+
+def fp_qdq(v, fmt: ElementFormat):
+    """Round `v` (already divided by the shared scale) to the nearest value
+    representable in the floating-point element format, saturating at
+    ±fmt.maxval. Handles subnormals (e.g. ±0.5 for FP4 E2M1).
+    """
+    assert fmt.kind == "fp"
+    bias = 2 ** (fmt.ebits - 1) - 1
+    emin = 1 - bias  # smallest normal exponent; subnormal step = 2^(emin-mbits)
+    a = jnp.abs(v)
+    sign = jnp.sign(v)
+    a = jnp.minimum(a, fmt.maxval)
+    # Exponent of the enclosing binade, clamped into [emin, emax]. a == 0
+    # hits the emin clamp (log2(0) = -inf) and quantizes to 0 exactly.
+    e = jnp.clip(jnp.floor(jnp.log2(jnp.maximum(a, 1e-38))), emin, fmt.emax)
+    step = jnp.exp2(e - fmt.mbits)
+    q = jnp.round(a / step) * step
+    # Rounding can carry into the next binade (e.g. 5.9 -> 6.0); re-saturate.
+    q = jnp.minimum(q, fmt.maxval)
+    return sign * q
+
+
+def int_qdq(v, fmt: ElementFormat = INT4):
+    """Round `v` (already divided by the shared scale and pre-multiplied by
+    2^(2) fixed-point shift folded into the scale) to an integer in
+    [-(2^(mbits), 2^mbits - 1], i.e. [-8, 7] for INT4."""
+    assert fmt.kind == "int"
+    lo = -float(2 ** fmt.mbits)
+    hi = float(2 ** fmt.mbits - 1)
+    return jnp.clip(jnp.round(v), lo, hi)
+
+
+def element_qdq(v, fmt: ElementFormat):
+    """Dispatch QDQ in the scaled domain for any element format."""
+    if fmt.kind == "fp":
+        return fp_qdq(v, fmt)
+    return int_qdq(v, fmt)

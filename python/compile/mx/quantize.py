@@ -1,0 +1,119 @@
+"""MX quantization (Eq. (1) of the paper) — pure-jnp reference path.
+
+The Pallas kernels in `python/compile/kernels/` must agree with these
+functions bit-for-bit (asserted by `python/tests/test_kernels.py`); the Rust
+substrate in `rust/src/mx/` is cross-checked through golden files.
+
+Quantization of a block `x_I`:
+
+    s = 2^( floor(log2 max|x_I|) - emax )      # shared E8M0 scale
+    QDQ(x_j) = s * Q_e(x_j / s)                # element codec in scaled domain
+
+Scales are clamped to the E8M0 exponent range [-127, 127]; an all-zero block
+uses scale 1 (its elements QDQ to 0 regardless).
+"""
+
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+
+from .formats import FORMATS, ElementFormat, FP4_E2M1, FP8_E4M3, element_qdq, fp_qdq
+
+# E8M0 shared-scale exponent range.
+SCALE_EMIN = -127
+SCALE_EMAX = 127
+
+
+@dataclass(frozen=True)
+class MXConfig:
+    """A full MX tensor-quantization configuration.
+
+    `name` values accepted by `from_name`: "none", "mxfp4", "mxint4",
+    "mxfp6", "mxfp8" (block 32 unless overridden) and "nvfp4" (block 16,
+    E4M3 scales).
+    """
+
+    name: str
+    element: ElementFormat = field(default=FP4_E2M1)
+    block_size: int = 32
+    nv: bool = False  # NVFP4: FP8-E4M3 scale instead of E8M0 power-of-two
+
+    @staticmethod
+    def from_name(name: str, block_size: int | None = None) -> "MXConfig":
+        if name == "none":
+            return MXConfig("none", FP4_E2M1, block_size or 32)
+        if name == "nvfp4":
+            return MXConfig("nvfp4", FP4_E2M1, block_size or 16, nv=True)
+        table = {
+            "mxfp4": "fp4_e2m1",
+            "mxint4": "int4",
+            "mxfp6": "fp6_e2m3",
+            "mxfp8": "fp8_e4m3",
+        }
+        if name not in table:
+            raise ValueError(f"unknown quant format {name!r}")
+        return MXConfig(name, FORMATS[table[name]], block_size or 32)
+
+    @property
+    def bits_per_element(self) -> float:
+        """Storage bits per element including the amortized shared scale."""
+        if self.name == "none":
+            return 32.0
+        return self.element.bits + 8.0 / self.block_size
+
+
+def _block_scales(amax, emax: int):
+    """Power-of-two shared scale per block from the block abs-max (Eq. 1)."""
+    e = jnp.floor(jnp.log2(jnp.maximum(amax, 1e-38))) - emax
+    e = jnp.clip(e, SCALE_EMIN, SCALE_EMAX)
+    scale = jnp.exp2(e)
+    return jnp.where(amax > 0, scale, jnp.ones_like(scale))
+
+
+def mx_qdq_ref(x, cfg: MXConfig):
+    """Quantize-dequantize `x` along its last axis with MX blocks.
+
+    Works for any leading shape; requires `x.shape[-1] % cfg.block_size == 0`.
+    """
+    if cfg.name == "none":
+        return x
+    if cfg.nv:
+        return nvfp4_qdq_ref(x, cfg)
+    b = cfg.block_size
+    d = x.shape[-1]
+    assert d % b == 0, f"last dim {d} not divisible by block size {b}"
+    shape = x.shape
+    xb = x.reshape(shape[:-1] + (d // b, b))
+    amax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    s = _block_scales(amax, cfg.element.emax)
+    q = s * element_qdq(xb / s, cfg.element)
+    return q.reshape(shape).astype(x.dtype)
+
+
+def nvfp4_qdq_ref(x, cfg: MXConfig):
+    """NVFP4: FP4 E2M1 elements with an FP8 E4M3 shared scale (block 16),
+    plus NVIDIA's second-level per-tensor f32 scale that keeps every block's
+    `amax/6` inside E4M3 range (otherwise large tensors saturate at 448).
+
+    The E4M3 scale tracks amax more tightly than E8M0's power-of-two grid,
+    which is why the paper's Table 15 spreads are smaller.
+    """
+    b = cfg.block_size
+    d = x.shape[-1]
+    assert d % b == 0
+    shape = x.shape
+    xb = x.reshape(shape[:-1] + (d // b, b))
+    amax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    tmax = jnp.max(jnp.abs(x))
+    # per-tensor scale: map the largest block scale to the top of E4M3 range.
+    ts = jnp.where(tmax > 0, tmax / (FP4_E2M1.maxval * FP8_E4M3.maxval), 1.0)
+    s = fp_qdq(amax / (FP4_E2M1.maxval * ts), FP8_E4M3)
+    s = jnp.where(s > 0, s, jnp.ones_like(s)) * ts
+    q = s * fp_qdq(xb / s, FP4_E2M1)
+    return q.reshape(shape).astype(x.dtype)
+
+
+def quantize_tensor(w, cfg: MXConfig):
+    """QDQ a 2-D weight matrix `w` (out, in) with blocks along the *input*
+    dimension (the reduction axis of the matmul, matching activations)."""
+    return mx_qdq_ref(w, cfg)

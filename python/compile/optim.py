@@ -1,0 +1,38 @@
+"""Minimal AdamW + cosine schedule (optax is not available offline).
+
+Used by both `train_lm.py` (pretraining) and `latmix.py` (transform
+learning, per App. D.1: AdamW, cosine LR, linear warmup).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(grads, state, params, lr, b1=0.9, b2=0.999, eps=1e-8, wd=0.0):
+    """One AdamW step; returns (new_params, new_state)."""
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    bc1 = 1 - b1 ** t.astype(jnp.float32)
+    bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+    def upd(p, m_, v_):
+        step = lr * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+        return p - step - lr * wd * p
+
+    new_params = jax.tree_util.tree_map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def cosine_lr(step, total_steps, base_lr, warmup, start_factor=0.1):
+    """Linear warmup (start_factor -> 1) then cosine decay to 0.1 * base."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = start_factor + (1 - start_factor) * step / jnp.maximum(warmup, 1)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total_steps - warmup, 1), 0, 1)
+    cos = 0.1 + 0.9 * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return base_lr * jnp.where(step < warmup, warm, cos)

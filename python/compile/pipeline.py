@@ -1,0 +1,141 @@
+"""PTQ pipeline orchestration: FP checkpoint -> (transform learning ->)
+folding -> weight quantization -> `.lxt` artifacts for the Rust coordinator.
+
+Each method x format variant becomes `artifacts/weights/<method>_<fmt>.lxt`
+(folded, weight-QDQ'd tensors — runtime arguments of the shared HLO graphs)
+plus `artifacts/transforms/<method>_<fmt>.lxt` (the learned A1/v1/A2s for the
+analysis benches) and training traces for Figs. 3/6.
+
+Idempotent: variants whose artifact files already exist are skipped, so the
+experiment sweep (`python -m compile.experiments`) is resumable.
+"""
+
+import os
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from .baselines import METHODS, MethodSpec, fixed_transforms, latmix_config_for
+from .calib import make_corpus
+from .config import LatmixConfig, ModelConfig, QuantSpec
+from .folding import fold_norm_scales, fold_params, from_np_params, np_params
+from .gptq import quantize_weights
+from .latmix import learn_transforms
+from .lxt import load_lxt, save_lxt
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def load_fp_params(cfg: ModelConfig, art_dir: str = ART):
+    """Load the pretrained checkpoint, γ-folded (the pipeline's step 0)."""
+    flat = load_lxt(os.path.join(art_dir, "weights", "fp_raw.lxt"))
+    return fold_norm_scales(from_np_params(flat, cfg))
+
+
+def quantize_model(
+    params0,
+    cfg: ModelConfig,
+    method: MethodSpec,
+    qspec: QuantSpec,
+    lcfg: LatmixConfig,
+    calib: np.ndarray,
+    seed: int = 0,
+    verbose: bool = True,
+):
+    """Run one method end to end on γ-folded params.
+
+    Returns (quantized_folded_params, transforms_dict_or_None, trace)."""
+    t3 = method.t3
+    transforms = None
+    trace = []
+    if method.transform == "none":
+        folded = params0
+    elif method.transform.startswith("fixed"):
+        a1, v1, a2s, v2s = fixed_transforms(method, cfg, seed)
+        folded = fold_params(params0, cfg, a1, v1, a2s, v2s, t3)
+        transforms = {"a1": a1, "v1": v1, "a2s": a2s, "v2s": v2s}
+    else:  # learned
+        mcfg = latmix_config_for(method, lcfg)
+        result = learn_transforms(
+            params0, cfg, mcfg, qspec, calib, t3=t3, verbose=verbose
+        )
+        transforms = result
+        trace = result["trace"]
+        folded = fold_params(
+            params0, cfg, result["a1"], result["v1"], result["a2s"], result["v2s"], t3
+        )
+
+    if method.weight_quant == "none":
+        return folded, transforms, trace
+    qparams = quantize_weights(
+        folded,
+        cfg,
+        qspec.weight_cfg,
+        method=method.weight_quant,
+        calib_tokens=calib[: min(16, calib.shape[0])],
+        act_cfg=qspec.act_cfg,
+        t3=t3,
+    )
+    return qparams, transforms, trace
+
+
+def variant_tag(method_name: str, qspec: QuantSpec) -> str:
+    return f"{method_name}_{qspec.tag}"
+
+
+def transforms_to_flat(transforms: dict) -> dict:
+    flat = {"a1": transforms["a1"], "v1": transforms["v1"]}
+    for i, (a2, v2) in enumerate(zip(transforms["a2s"], transforms["v2s"])):
+        flat[f"a2.{i}"] = np.asarray(a2)
+        flat[f"v2.{i}"] = np.asarray(v2)
+    return flat
+
+
+def run_variant(
+    method_name: str,
+    qspec: QuantSpec,
+    cfg: ModelConfig,
+    lcfg: LatmixConfig,
+    calib: np.ndarray,
+    art_dir: str = ART,
+    tag: str | None = None,
+    force: bool = False,
+    verbose: bool = True,
+):
+    """Produce (and cache) the artifacts for one method x format variant.
+    Returns the weights path."""
+    tag = tag or variant_tag(method_name, qspec)
+    wpath = os.path.join(art_dir, "weights", f"{tag}.lxt")
+    if os.path.exists(wpath) and not force:
+        if verbose:
+            print(f"[pipeline] {tag}: cached", flush=True)
+        return wpath
+    t0 = time.time()
+    method = METHODS[method_name]
+    params0 = load_fp_params(cfg, art_dir)
+    qparams, transforms, trace = quantize_model(
+        params0, cfg, method, qspec, lcfg, calib, verbose=verbose
+    )
+    os.makedirs(os.path.dirname(wpath), exist_ok=True)
+    save_lxt(wpath, np_params(qparams))
+    if transforms is not None:
+        tdir = os.path.join(art_dir, "transforms")
+        os.makedirs(tdir, exist_ok=True)
+        save_lxt(os.path.join(tdir, f"{tag}.lxt"), transforms_to_flat(transforms))
+    if trace:
+        trdir = os.path.join(art_dir, "traces")
+        os.makedirs(trdir, exist_ok=True)
+        with open(os.path.join(trdir, f"{tag}.csv"), "w") as f:
+            f.write("step,loss,orth_dev,off_block,cond\n")
+            for row in trace:
+                f.write(",".join(f"{x:.6g}" for x in row) + "\n")
+    if verbose:
+        print(f"[pipeline] {tag}: done in {time.time()-t0:.0f}s -> {wpath}", flush=True)
+    return wpath
+
+
+def default_calib(lcfg: LatmixConfig, seed: int = 0) -> np.ndarray:
+    """Calibration corpus — the SynthText *training* distribution (the paper
+    reuses WikiText2-train for both transform learning and GPTQ)."""
+    return make_corpus(max(lcfg.calib_samples, 16), lcfg.seq, seed=seed)

@@ -1,0 +1,91 @@
+"""Pretrain latmix-tiny on SynthText (build-time substrate).
+
+The paper quantizes *pretrained* checkpoints (Llama/Qwen); with no network
+and no checkpoints, we train the substitute model from scratch — this is the
+"train a small transformer and log the loss curve" half of the end-to-end
+driver. Loss curve lands in artifacts/traces/pretrain_loss.csv and is quoted
+in EXPERIMENTS.md.
+
+Usage: python -m compile.train_lm [--steps N] [--out DIR]
+"""
+
+import argparse
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .calib import make_corpus
+from .config import ModelConfig, TrainConfig
+from .folding import np_params
+from .lxt import save_lxt
+from .model import init_params, lm_loss, param_count, perplexity
+from .optim import adamw_init, adamw_update, cosine_lr
+
+
+def train(cfg: ModelConfig, tcfg: TrainConfig, out_dir: str, verbose: bool = True):
+    rng = np.random.default_rng(tcfg.seed)
+    n_train = tcfg.steps * tcfg.batch // 4 + 64  # ~4 epochs over the pool
+    corpus = make_corpus(n_train, tcfg.seq, seed=tcfg.seed)
+    heldout = make_corpus(64, tcfg.seq, seed=tcfg.seed + 10_000)
+
+    params = init_params(cfg, tcfg.seed)
+    if verbose:
+        print(f"[pretrain] {param_count(params):,} params, {n_train} train seqs", flush=True)
+
+    grad_fn = jax.value_and_grad(lambda p, b: lm_loss(p, b, cfg))
+
+    @jax.jit
+    def step_fn(p, opt, lr, batch):
+        loss, g = grad_fn(p, batch)
+        p2, opt2 = adamw_update(g, opt, p, lr, wd=tcfg.weight_decay)
+        return p2, opt2, loss
+
+    opt = adamw_init(params)
+    trace = []
+    t0 = time.time()
+    for step in range(tcfg.steps):
+        idx = rng.integers(0, corpus.shape[0], tcfg.batch)
+        lr = cosine_lr(step, tcfg.steps, tcfg.lr, tcfg.warmup)
+        params, opt, loss = step_fn(params, opt, lr, jnp.asarray(corpus[idx]))
+        if step % 20 == 0 or step == tcfg.steps - 1:
+            trace.append((step, float(loss)))
+            if verbose:
+                print(
+                    f"[pretrain] step {step:4d}/{tcfg.steps} loss {float(loss):.4f} "
+                    f"({time.time()-t0:.0f}s)",
+                    flush=True,
+                )
+
+    ppl_train = perplexity(params, corpus[:32], cfg)
+    ppl_held = perplexity(params, heldout, cfg)
+    if verbose:
+        print(f"[pretrain] ppl train={ppl_train:.3f} heldout={ppl_held:.3f}", flush=True)
+
+    os.makedirs(os.path.join(out_dir, "weights"), exist_ok=True)
+    os.makedirs(os.path.join(out_dir, "traces"), exist_ok=True)
+    save_lxt(os.path.join(out_dir, "weights", "fp_raw.lxt"), np_params(params))
+    with open(os.path.join(out_dir, "traces", "pretrain_loss.csv"), "w") as f:
+        f.write("step,loss\n")
+        for s, l in trace:
+            f.write(f"{s},{l:.6f}\n")
+        f.write(f"# ppl_train={ppl_train:.4f} ppl_heldout={ppl_held:.4f}\n")
+    return params, {"ppl_train": ppl_train, "ppl_heldout": ppl_held, "trace": trace}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=TrainConfig.steps)
+    ap.add_argument("--batch", type=int, default=TrainConfig.batch)
+    ap.add_argument("--seq", type=int, default=TrainConfig.seq)
+    ap.add_argument("--out", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    args = ap.parse_args()
+    cfg = ModelConfig()
+    tcfg = TrainConfig(steps=args.steps, batch=args.batch, seq=args.seq)
+    train(cfg, tcfg, args.out)
+
+
+if __name__ == "__main__":
+    main()

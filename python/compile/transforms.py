@@ -1,0 +1,313 @@
+"""Invertible affine transformations: parameterizations, initialization, and
+materialization (Sec. 3.2, Eqs. 5-7), plus the baselines' restricted families.
+
+Parameterizations (all exposing `(spec, params)` where `spec` is static
+metadata and `params` a pytree of arrays — jit-friendly):
+
+- **lu** (Eq. 5, Glow-style):  `A = P L (U + diag(s))`, `P` a fixed
+  permutation, `L` unit lower-triangular, `U` strictly upper, `s` learned as
+  `log|s|` with signs frozen at init (the paper's stabilized variant).
+- **qr** (Eq. 6):  `A = Q0 expm(skew(G)) (R + diag(s))` — the learned
+  orthogonal factor is *composed with* the initial `Q0` so `G = 0` reproduces
+  the init exactly (initializing the paper's `Q = expm(skew(G))` at an
+  arbitrary rotation would need a matrix logarithm).
+  Restrictions of qr give the baselines: `learn_matrix=False` → SpinQuant-style
+  pure rotations; `learn_upper=False` → OSTQuant-style `Q diag(s)`.
+- **kron**: `A = kron(Aa, Ab)` — FlatQuant's matrix structure (Sun et al.).
+- **blockdiag**: independent sub-transforms per MX block — the BRQ /
+  MR-GPTQ granularity (Table 2 "Block" rows).
+- **fixed**: a frozen matrix (random Hadamard / rotation baselines).
+
+Initialization strategies (Table 7): identity / full or block-diagonal
+orthogonal / full or block-diagonal Hadamard, each optionally `_noise`.
+"""
+
+from dataclasses import dataclass, field
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import jax.scipy.linalg as jsl
+
+from .kernels.ref import hadamard_matrix
+
+
+# ---------------------------------------------------------------------------
+# Initial matrices
+
+
+def random_orthogonal(d: int, rng) -> np.ndarray:
+    """Haar-ish random rotation via QR of a Gaussian matrix."""
+    m = rng.standard_normal((d, d))
+    q, r = np.linalg.qr(m)
+    return (q * np.sign(np.diag(r))).astype(np.float32)
+
+
+def random_hadamard(d: int, rng) -> np.ndarray:
+    """Randomized Hadamard: H diag(+-1) — orthogonal, magnitude-spreading."""
+    h = np.asarray(hadamard_matrix(d))
+    signs = rng.integers(0, 2, size=d) * 2.0 - 1.0
+    return (h * signs[None, :]).astype(np.float32)
+
+
+def block_diagonal(blocks: list) -> np.ndarray:
+    d = sum(b.shape[0] for b in blocks)
+    out = np.zeros((d, d), dtype=np.float32)
+    o = 0
+    for b in blocks:
+        k = b.shape[0]
+        out[o : o + k, o : o + k] = b
+        o += k
+    return out
+
+
+def init_matrix(d: int, strategy: str, rng, block: int = 32) -> np.ndarray:
+    """Build the initial `A0` for a given Table-7 strategy."""
+    noise = 0.0
+    base = strategy
+    if strategy.endswith("_noise"):
+        noise = 1e-3
+        base = strategy[: -len("_noise")]
+    if base == "identity":
+        a = np.eye(d, dtype=np.float32)
+    elif base == "orthogonal":
+        a = random_orthogonal(d, rng)
+    elif base == "bd_orthogonal":
+        a = block_diagonal([random_orthogonal(block, rng) for _ in range(d // block)])
+    elif base == "hadamard":
+        a = random_hadamard(d, rng)
+    elif base == "bd_hadamard":
+        a = block_diagonal([random_hadamard(block, rng) for _ in range(d // block)])
+    else:
+        raise ValueError(f"unknown init strategy {strategy!r}")
+    if noise > 0:
+        mask = a == 0.0
+        a = a + (rng.standard_normal((d, d)) * noise).astype(np.float32) * mask
+    return a
+
+
+# ---------------------------------------------------------------------------
+# Spec + params
+
+
+@dataclass(frozen=True)
+class TSpec:
+    """Static description of one transform parameterization (hashable, safe
+    to close over in jitted functions; arrays live in the params pytree)."""
+
+    kind: str                 # lu | qr | kron | blockdiag | fixed
+    dim: int
+    learn_bias: bool = True
+    learn_matrix: bool = True  # qr: False -> rotation-only (SpinQuant-like)
+    learn_upper: bool = True   # qr: False -> Q diag(s) (OSTQuant-like)
+    block: int = 0             # blockdiag sub-size
+    sub_kind: str = "lu"       # blockdiag: inner parameterization
+
+
+def make_param(a0: np.ndarray, kind: str, **kw):
+    """Build `(spec, params)` initialized so materialize(spec, params) == (A0, 0)."""
+    d = a0.shape[0]
+    if kind == "lu":
+        spec = TSpec("lu", d, learn_bias=kw.get("learn_bias", True))
+        p, l, u = jax.scipy.linalg.lu(jnp.asarray(a0))
+        s = jnp.diag(u)
+        params = {
+            "perm": p,
+            "lower": jnp.tril(l, -1),
+            "upper": jnp.triu(u, 1),
+            "log_s": jnp.log(jnp.abs(s) + 1e-12),
+            "sign_s": jnp.sign(jnp.where(s == 0, 1.0, s)),
+            "v": jnp.zeros(d, jnp.float32),
+        }
+        return spec, params
+    if kind == "qr":
+        spec = TSpec(
+            "qr",
+            d,
+            learn_bias=kw.get("learn_bias", True),
+            learn_matrix=kw.get("learn_matrix", True),
+            learn_upper=kw.get("learn_upper", True),
+        )
+        q0, r0 = jnp.linalg.qr(jnp.asarray(a0))
+        sgn = jnp.sign(jnp.where(jnp.diag(r0) == 0, 1.0, jnp.diag(r0)))
+        q0 = q0 * sgn[None, :]
+        r0 = r0 * sgn[:, None]
+        s = jnp.diag(r0)
+        params = {
+            "q0": q0,
+            "g": jnp.zeros((d, d), jnp.float32),
+            "upper": jnp.triu(r0, 1),
+            "log_s": jnp.log(jnp.abs(s) + 1e-12),
+            "sign_s": jnp.sign(jnp.where(s == 0, 1.0, s)),
+            "v": jnp.zeros(d, jnp.float32),
+        }
+        return spec, params
+    if kind == "kron":
+        # factor d = da * db with da the largest power of two <= sqrt-ish
+        da = kw.get("da") or _kron_factor(d)
+        db = d // da
+        spec = TSpec("kron", d, learn_bias=kw.get("learn_bias", True))
+        rng = np.random.default_rng(kw.get("seed", 0))
+        params = {
+            "a": jnp.asarray(random_hadamard(da, rng)),
+            "b": jnp.asarray(random_orthogonal(db, rng)),
+            "v": jnp.zeros(d, jnp.float32),
+        }
+        return spec, params
+    if kind == "blockdiag":
+        b = kw.get("block", 32)
+        nb = d // b
+        sub_kind = kw.get("sub_kind", "lu")
+        spec = TSpec(
+            "blockdiag",
+            d,
+            learn_bias=kw.get("learn_bias", True),
+            learn_matrix=kw.get("learn_matrix", True),
+            learn_upper=kw.get("learn_upper", True),
+            block=b,
+            sub_kind=sub_kind,
+        )
+        subs = []
+        for i in range(nb):
+            _, sp = make_param(
+                np.asarray(a0[i * b : (i + 1) * b, i * b : (i + 1) * b]),
+                sub_kind,
+                learn_bias=kw.get("learn_bias", True),
+                learn_matrix=kw.get("learn_matrix", True),
+                learn_upper=kw.get("learn_upper", True),
+            )
+            subs.append(sp)
+        stacked = {
+            k: jnp.stack([s[k] for s in subs]) for k in subs[0] if k != "v"
+        }
+        stacked["v"] = jnp.zeros(d, jnp.float32)
+        return spec, stacked
+    if kind == "fixed":
+        spec = TSpec("fixed", d, learn_bias=False, learn_matrix=False)
+        return spec, {"a": jnp.asarray(a0), "v": jnp.zeros(d, jnp.float32)}
+    raise ValueError(kind)
+
+
+def _kron_factor(d: int) -> int:
+    """Largest power-of-two factor of d not exceeding sqrt(d)*2 (FlatQuant
+    uses two lightweight near-square factors)."""
+    best = 1
+    k = 1
+    while k <= d:
+        if d % k == 0 and k * k <= d * 2:
+            best = k
+        k *= 2
+    return best
+
+
+def _lu_mat(spec: TSpec, p: dict):
+    d = spec.dim if spec.kind == "lu" else spec.block
+    l = jnp.tril(p["lower"], -1) + jnp.eye(d)
+    s = p["sign_s"] * jnp.exp(p["log_s"])
+    u = jnp.triu(p["upper"], 1) + jnp.diag(s)
+    return p["perm"] @ l @ u
+
+
+def _qr_mat(spec: TSpec, p: dict):
+    d = p["g"].shape[-1]
+    g = p["g"]
+    q = p["q0"] @ jsl.expm(0.5 * (g - g.T))
+    log_s = p["log_s"] if spec.learn_matrix else jax.lax.stop_gradient(p["log_s"])
+    upper = p["upper"]
+    if not (spec.learn_matrix and spec.learn_upper):
+        upper = jax.lax.stop_gradient(upper)
+    s = p["sign_s"] * jnp.exp(log_s)
+    r = jnp.triu(upper, 1) + jnp.diag(s)
+    return q @ r
+
+
+def materialize(spec: TSpec, params: dict):
+    """Return `(A, v)`; differentiable in `params`."""
+    v = params["v"] if spec.learn_bias else jax.lax.stop_gradient(params["v"])
+    if spec.kind == "lu":
+        return _lu_mat(spec, params), v
+    if spec.kind == "qr":
+        return _qr_mat(spec, params), v
+    if spec.kind == "kron":
+        return jnp.kron(params["a"], params["b"]), v
+    if spec.kind == "fixed":
+        return params["a"], v
+    if spec.kind == "blockdiag":
+        sub_spec = TSpec(
+            spec.sub_kind,
+            spec.block,
+            learn_bias=spec.learn_bias,
+            learn_matrix=spec.learn_matrix,
+            learn_upper=spec.learn_upper,
+        )
+        subp = {k: val for k, val in params.items() if k != "v"}
+        fn = _lu_mat if spec.sub_kind == "lu" else _qr_mat
+        mats = jax.vmap(lambda q: fn(sub_spec, q))(subp)
+        nb = spec.dim // spec.block
+        a = jsl.block_diag(*[mats[i] for i in range(nb)])
+        return a, v
+    raise ValueError(spec.kind)
+
+
+# Which params receive gradients, per kind.
+_TRAINABLE = {
+    "lu": {"lower", "upper", "log_s", "v"},
+    "qr": {"g", "upper", "log_s", "v"},
+    "kron": {"a", "b", "v"},
+    "blockdiag": None,  # resolved from sub_kind
+    "fixed": set(),
+}
+
+
+def trainable_keys(spec: TSpec) -> set:
+    keys = _TRAINABLE[spec.kind if spec.kind != "blockdiag" else spec.sub_kind]
+    keys = set(keys)
+    if not spec.learn_bias:
+        keys.discard("v")
+    if spec.kind == "qr" or (spec.kind == "blockdiag" and spec.sub_kind == "qr"):
+        if not spec.learn_matrix:
+            keys -= {"upper", "log_s"}
+        elif not spec.learn_upper:
+            keys.discard("upper")
+    return keys
+
+
+def split_params(spec: TSpec, params: dict):
+    """Partition into (trainable, frozen) dicts."""
+    keys = trainable_keys(spec)
+    train = {k: v for k, v in params.items() if k in keys}
+    frozen = {k: v for k, v in params.items() if k not in keys}
+    return train, frozen
+
+
+# ---------------------------------------------------------------------------
+# Regularizer + diagnostics
+
+
+def vol_regularizer(spec: TSpec, params: dict):
+    """Log-domain volume regularizer (Eq. 7, practical form):
+    `(sum_i log|s_i|)^2` — shares minima with `(prod|s_i| - 1)^2`."""
+    if "log_s" not in params:
+        return jnp.float32(0.0)
+    return jnp.sum(params["log_s"]) ** 2
+
+
+def orthogonality_deviation(a) -> float:
+    """Fig. 3a metric: spectral distance of `A` from the orthogonal group."""
+    d = a.shape[0]
+    return float(jnp.linalg.norm(a.T @ a - jnp.eye(d), ord=2))
+
+
+def off_block_diagonal_norm(a, block: int = 32) -> float:
+    """Fig. 3b metric: spectral norm of `A` with its block-diagonal zeroed."""
+    d = a.shape[0]
+    mask = np.ones((d, d), dtype=np.float32)
+    for o in range(0, d, block):
+        mask[o : o + block, o : o + block] = 0.0
+    return float(jnp.linalg.norm(a * mask, ord=2))
+
+
+def condition_number(a) -> float:
+    """Fig. 6 metric."""
+    s = jnp.linalg.svd(a, compute_uv=False)
+    return float(s[0] / s[-1])

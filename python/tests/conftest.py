@@ -1,0 +1,11 @@
+import os
+import sys
+
+# Make `compile` importable when pytest is run from python/ or the repo root.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from hypothesis import settings
+
+# Single-CPU testbed: keep hypothesis sweeps meaningful but bounded.
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")

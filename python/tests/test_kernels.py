@@ -1,0 +1,131 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes, block sizes, formats and value scales; QDQ kernels
+must be *bit-exact* against `mx_qdq_ref`, GEMM-bearing kernels allclose.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.mx import MXConfig, mx_qdq_ref
+from compile.kernels import affine_qdq_pallas, block_hadamard_pallas, mx_qdq_pallas
+from compile.kernels.ref import affine_qdq_ref, block_hadamard_ref, hadamard_matrix
+
+FMTS = ["mxfp4", "mxint4", "mxfp6", "mxfp8", "nvfp4"]
+
+
+@given(
+    seed=st.integers(0, 2 ** 32 - 1),
+    rows=st.integers(1, 40),
+    nblocks=st.integers(1, 6),
+    fmt=st.sampled_from(FMTS),
+    block=st.sampled_from([8, 16, 32]),
+    logscale=st.floats(-6, 6),
+)
+@settings(max_examples=40)
+def test_mx_qdq_kernel_bitexact(seed, rows, nblocks, fmt, block, logscale):
+    rng = np.random.default_rng(seed)
+    d = nblocks * block
+    x = jnp.asarray(
+        (rng.standard_normal((rows, d)) * 2.0 ** logscale).astype(np.float32)
+    )
+    cfg = MXConfig.from_name(fmt, block)
+    ref = np.asarray(mx_qdq_ref(x, cfg))
+    ker = np.asarray(mx_qdq_pallas(x, cfg))
+    if fmt == "nvfp4":
+        # The non-power-of-two E4M3 scale path divides by a general f32;
+        # XLA's reciprocal-multiply rewrite differs between the two jitted
+        # programs by <= 1 ULP. E8M0 formats divide by exact powers of two
+        # and must match bit-for-bit.
+        np.testing.assert_allclose(ref, ker, rtol=3e-7, atol=0)
+    else:
+        np.testing.assert_array_equal(ref, ker)
+
+
+@pytest.mark.parametrize("tile_rows", [1, 7, 32, 128])
+def test_mx_qdq_kernel_tile_row_invariance(tile_rows):
+    """The grid decomposition must not change results (rows are independent)."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((50, 128)).astype(np.float32))
+    cfg = MXConfig.from_name("mxfp4")
+    base = mx_qdq_pallas(x, cfg, tile_rows=128)
+    np.testing.assert_array_equal(
+        np.asarray(base), np.asarray(mx_qdq_pallas(x, cfg, tile_rows=tile_rows))
+    )
+
+
+def test_mx_qdq_kernel_3d_shapes():
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.standard_normal((2, 9, 64)).astype(np.float32))
+    cfg = MXConfig.from_name("mxint4")
+    np.testing.assert_array_equal(
+        np.asarray(mx_qdq_ref(x, cfg)), np.asarray(mx_qdq_pallas(x, cfg))
+    )
+
+
+class TestHadamard:
+    def test_matrix_orthogonal(self):
+        for n in (2, 8, 32, 128):
+            h = np.asarray(hadamard_matrix(n))
+            np.testing.assert_allclose(h @ h.T, np.eye(n), atol=1e-6)
+
+    @given(
+        seed=st.integers(0, 2 ** 32 - 1),
+        rows=st.integers(1, 16),
+        nblocks=st.integers(1, 4),
+        block=st.sampled_from([8, 16, 32, 64]),
+    )
+    def test_kernel_matches_ref(self, seed, rows, nblocks, block):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.standard_normal((rows, nblocks * block)).astype(np.float32))
+        np.testing.assert_allclose(
+            np.asarray(block_hadamard_ref(x, block)),
+            np.asarray(block_hadamard_pallas(x, block)),
+            atol=1e-5,
+        )
+
+    def test_energy_preserved(self):
+        """Orthogonality: ||Hx|| == ||x|| per row."""
+        rng = np.random.default_rng(5)
+        x = jnp.asarray(rng.standard_normal((8, 128)).astype(np.float32))
+        y = block_hadamard_ref(x, 32)
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(x), axis=1),
+            np.linalg.norm(np.asarray(y), axis=1),
+            rtol=1e-5,
+        )
+
+    def test_involution(self):
+        """Normalized Sylvester H is symmetric -> applying twice = identity."""
+        rng = np.random.default_rng(6)
+        x = jnp.asarray(rng.standard_normal((4, 64)).astype(np.float32))
+        y = block_hadamard_ref(block_hadamard_ref(x, 32), 32)
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-5)
+
+    def test_outlier_diffusion(self):
+        """A single spike spreads to 1/sqrt(B) of its magnitude — the
+        outlier-reduction mechanism rotation methods rely on."""
+        x = np.zeros((1, 32), np.float32)
+        x[0, 3] = 32.0
+        y = np.asarray(block_hadamard_ref(jnp.asarray(x), 32))
+        np.testing.assert_allclose(np.abs(y), 32.0 / np.sqrt(32), atol=1e-5)
+
+
+@given(
+    seed=st.integers(0, 2 ** 32 - 1),
+    rows=st.integers(1, 12),
+    fmt=st.sampled_from(["mxfp4", "mxint4", "none"]),
+)
+@settings(max_examples=20)
+def test_affine_qdq_kernel_matches_ref(seed, rows, fmt):
+    rng = np.random.default_rng(seed)
+    d = 64
+    x = jnp.asarray(rng.standard_normal((rows, d)).astype(np.float32))
+    a = jnp.asarray((rng.standard_normal((d, d)) / np.sqrt(d)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal(d).astype(np.float32))
+    cfg = MXConfig.from_name(fmt)
+    ref = affine_qdq_ref(x, a, v, cfg)
+    ker = affine_qdq_pallas(x, a, v, cfg)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(ker), atol=2e-5, rtol=1e-5)

@@ -1,0 +1,203 @@
+//! Fig. 2 — transformation analysis on captured residual-stream features.
+//!
+//! 2a: transformation MSE E(T) vs MX block size for {vanilla, Hadamard,
+//!     block-Hadamard, learned rotation, learned affine} (+ the Theorem 3.3
+//!     bound surrogate for each).
+//! 2b: WikiText2→SynthText perplexity vs block size for the corresponding
+//!     end-to-end quantized models (evaluated on the PJRT runtime).
+//! 2c: per-MX-block error profile at B = 32.
+//!
+//! Shape targets (paper): learned affine lowest E(T) at every B; block-
+//! Hadamard beats full Hadamard at small B; 2c: full rotation flattens but
+//! raises most blocks, block-H lowers dominant blocks only, learned affine
+//! lowers all blocks.
+
+use latmix::bench::Table;
+use latmix::io::load_lxt;
+use latmix::linalg::{block_diag, hadamard, Mat};
+use latmix::mx::MxConfig;
+use latmix::transform::bound::theorem_bound;
+use latmix::transform::{per_block_error, transformation_mse, Affine};
+use latmix::util::Pcg64;
+
+fn load_features() -> Option<(Vec<f32>, usize)> {
+    let p = latmix::artifacts_dir().join("features").join("resid_calib.lxt");
+    let map = load_lxt(&p).ok()?;
+    let t = map.get("features")?;
+    Some((t.as_f32().ok()?.to_vec(), t.dims[1]))
+}
+
+fn learned_transform(b: usize, which: &str, d: usize) -> Option<Affine> {
+    let p = latmix::artifacts_dir()
+        .join("transforms")
+        .join(format!("fig2_learned_b{b}.lxt"));
+    let map = load_lxt(&p).ok()?;
+    let a = map.get(&format!("{which}_a"))?.as_f32().ok()?.to_vec();
+    let v = map.get(&format!("{which}_v"))?.as_f32().ok()?.to_vec();
+    Affine::new(Mat::from_vec(d, d, a), v).ok()
+}
+
+fn block_hadamard_mat(d: usize, b: usize) -> Mat {
+    let h = hadamard(b);
+    block_diag(&vec![h; d / b])
+}
+
+fn main() {
+    let Some((feats, d)) = load_features() else {
+        eprintln!("fig2: artifacts/features missing — run `make artifacts experiments`");
+        return;
+    };
+    let mut rng = Pcg64::seed(7);
+    let full_h = Affine::new(hadamard(d), vec![0.0; d]).unwrap();
+    let rand_rot = Affine::new(latmix::linalg::random_orthogonal(d, &mut rng), vec![0.0; d]).unwrap();
+    let identity = Affine::identity(d);
+
+    // ---- Fig. 2a: E(T) vs block size ------------------------------------
+    let mut t2a = Table::new(
+        "fig2a_mse",
+        "Transformation MSE E(T) vs MX block size (MXFP4, captured features)",
+        &["transform", "B=8", "B=16", "B=32", "B=64", "B=128"],
+    );
+    let blocks = [8usize, 16, 32, 64, 128];
+    let mut rows: Vec<(String, Vec<f64>)> = Vec::new();
+    for (name, make) in [
+        ("vanilla", None::<usize>),
+        ("hadamard (full)", None),
+        ("random rotation", None),
+        ("block hadamard", Some(0)),
+        ("learned rotation", Some(1)),
+        ("learned affine (LATMiX)", Some(2)),
+    ] {
+        let mut vals = Vec::new();
+        for &b in &blocks {
+            let cfg = MxConfig::from_name("mxfp4", Some(b)).unwrap();
+            let t = match (name, make) {
+                ("vanilla", _) => identity.clone_affine(),
+                ("hadamard (full)", _) => full_h.clone_affine(),
+                ("random rotation", _) => rand_rot.clone_affine(),
+                ("block hadamard", _) => {
+                    Affine::new(block_hadamard_mat(d, b.min(d)), vec![0.0; d]).unwrap()
+                }
+                ("learned rotation", _) => match learned_transform(b, "rot", d) {
+                    Some(t) => t,
+                    None => continue,
+                },
+                _ => match learned_transform(b, "aff", d) {
+                    Some(t) => t,
+                    None => continue,
+                },
+            };
+            vals.push(transformation_mse(&feats, d, &t, &cfg));
+        }
+        rows.push((name.to_string(), vals));
+    }
+    for (name, vals) in &rows {
+        let mut cells = vec![name.clone()];
+        cells.extend(vals.iter().map(|v| format!("{v:.5}")));
+        while cells.len() < 6 {
+            cells.push("-".into());
+        }
+        t2a.row(cells);
+    }
+    t2a.emit();
+
+    // ---- Theorem 3.3 bound surrogate at B=32 ----------------------------
+    let mut tb = Table::new(
+        "fig2_bound",
+        "Theorem 3.3 factors at B=32: ||A^-1||^2_sigma * mean_i M_i (surrogate)",
+        &["transform", "bound surrogate", "empirical E(T)"],
+    );
+    let cfg32 = MxConfig::from_name("mxfp4", Some(32)).unwrap();
+    for (name, t) in [
+        ("vanilla", identity.clone_affine()),
+        ("hadamard (full)", full_h.clone_affine()),
+        ("block hadamard", Affine::new(block_hadamard_mat(d, 32), vec![0.0; d]).unwrap()),
+    ]
+    .into_iter()
+    .chain(learned_transform(32, "rot", d).map(|t| ("learned rotation", t)))
+    .chain(learned_transform(32, "aff", d).map(|t| ("learned affine (LATMiX)", t)))
+    {
+        tb.row(vec![
+            name.to_string(),
+            format!("{:.4}", theorem_bound(&feats, d, &t, 32)),
+            format!("{:.5}", transformation_mse(&feats, d, &t, &cfg32)),
+        ]);
+    }
+    tb.emit();
+
+    // ---- Fig. 2c: per-block error profile at B=32 ------------------------
+    let mut t2c = Table::new(
+        "fig2c_blockerr",
+        "Per-MX-block quantization error (B=32)",
+        &["transform", "blocks (low->high index)"],
+    );
+    for (name, t) in [
+        ("vanilla", identity.clone_affine()),
+        ("hadamard (full)", full_h.clone_affine()),
+        ("block hadamard", Affine::new(block_hadamard_mat(d, 32), vec![0.0; d]).unwrap()),
+    ]
+    .into_iter()
+    .chain(learned_transform(32, "aff", d).map(|t| ("learned affine (LATMiX)", t)))
+    {
+        let errs = per_block_error(&feats, d, &t, &cfg32);
+        let cells = errs.iter().map(|e| format!("{e:.5}")).collect::<Vec<_>>().join("  ");
+        t2c.row(vec![name.to_string(), cells]);
+    }
+    t2c.emit();
+
+    // ---- Fig. 2b: perplexity vs block size (runtime eval) ----------------
+    fig2b();
+}
+
+fn fig2b() {
+    use latmix::data::load_ppl_corpus;
+    use latmix::eval::perplexity;
+    use latmix::model::{ModelDesc, WeightSet};
+    use latmix::runtime::Runtime;
+
+    let art = latmix::artifacts_dir();
+    let Ok(desc) = ModelDesc::load(&art) else {
+        eprintln!("fig2b: no manifest; skipping ppl-vs-B");
+        return;
+    };
+    let Ok(rt) = Runtime::new(desc) else { return };
+    let Ok((corpus, n, t)) = load_ppl_corpus(&art) else { return };
+    let mut tab = Table::new(
+        "fig2b_ppl",
+        "Perplexity vs MX block size (MXFP4 weights+activations)",
+        &["method", "B=8", "B=16", "B=32", "B=64"],
+    );
+    for (method, t3) in [
+        ("gptq", false),
+        ("quarot", true),
+        ("mr-gptq", true),
+        ("latmix-lu", true),
+    ] {
+        let mut cells = vec![method.to_string()];
+        for b in [8usize, 16, 32, 64] {
+            let wtag = format!("{method}_mxfp4_b{b}");
+            let gtag = format!("mxfp4_b{b}{}", if t3 { "_t3" } else { "" });
+            let cell = match WeightSet::load(&rt.desc, &wtag) {
+                Ok(ws) => match perplexity(&rt, &gtag, &ws, &corpus, n, t) {
+                    Ok(p) => format!("{p:.2}"),
+                    Err(e) => format!("err:{e}"),
+                },
+                Err(_) => "-".into(),
+            };
+            cells.push(cell);
+        }
+        tab.row(cells);
+    }
+    tab.emit();
+}
+
+/// Affine lacks Clone (holds a cached inverse) — tiny helper for benches.
+trait CloneAffine {
+    fn clone_affine(&self) -> Affine;
+}
+
+impl CloneAffine for Affine {
+    fn clone_affine(&self) -> Affine {
+        Affine::new(self.a.clone(), self.v.clone()).unwrap()
+    }
+}

@@ -1,0 +1,82 @@
+//! Fig. 4 — serving throughput (tokens/s) vs batch size for BF16(f32),
+//! MR-GPTQ, Learned-Inv (LATMiX without bias) and LATMiX.
+//!
+//! The paper's claim: because LATMiX transforms fold into the weights, all
+//! MX-quantized methods share the decode graph and their throughput is
+//! indistinguishable ("at most negligible inference overhead"). Here that is
+//! true *by construction* — the bench demonstrates it and quantifies the
+//! quantized-graph (QDQ ops + online T3) overhead vs the f32 graph.
+
+use latmix::bench::Table;
+use latmix::model::ModelDesc;
+use latmix::runtime::Runtime;
+use latmix::server::run_serving;
+
+fn main() {
+    let art = latmix::artifacts_dir();
+    let desc = match ModelDesc::load(&art) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("fig4: no artifacts ({e})");
+            return;
+        }
+    };
+    let rt = Runtime::new(desc).unwrap();
+    // (display, graph tag, weights tag)
+    let q = "mxfp4_b32_t3";
+    let methods: Vec<(&str, &str, String)> = vec![
+        ("FP (f32 graph)", "fp", "fp_raw".into()),
+        ("MR-GPTQ", q, "mr-gptq_mxfp4_b32".into()),
+        ("Learned Inv (no bias)", q, "t2_inv_full_mxfp4_b32".into()),
+        ("LATMiX-LU", q, "latmix-lu_mxfp4_b32".into()),
+    ];
+    let slots = [1usize, 2, 4, 8];
+    let mut tab = Table::new(
+        "fig4_throughput",
+        "Decode throughput (tok/s) vs batch size (paper Fig. 4)",
+        &["method", "b=1", "b=2", "b=4", "b=8"],
+    );
+    let requests = 12;
+    let max_new = 24;
+    // Warm the executable cache: compilation must not land on whichever
+    // method happens to touch a graph first.
+    for (_, gtag, wtag) in &methods {
+        for s in slots {
+            // enough requests that every (prefill, decode) bucket compiles
+            let _ = run_serving(&rt, gtag, wtag, s, 2, s, 1);
+        }
+    }
+    for (name, gtag, wtag) in &methods {
+        let mut cells = vec![name.to_string()];
+        for s in slots {
+            match run_serving(&rt, gtag, wtag, requests, max_new, s, 42) {
+                Ok(rep) => cells.push(format!("{:.1}", rep.decode_tok_per_s)),
+                Err(e) => {
+                    eprintln!("  {name} b={s}: {e}");
+                    cells.push("-".into());
+                }
+            }
+        }
+        tab.row(cells);
+    }
+    tab.emit();
+
+    // latency detail at b=4
+    let mut lat = Table::new(
+        "fig4_latency",
+        "Latency detail at 4 slots",
+        &["method", "ttft p50 ms", "ttft p99 ms", "req latency p50 ms", "p99 ms"],
+    );
+    for (name, gtag, wtag) in &methods {
+        if let Ok(rep) = run_serving(&rt, gtag, wtag, requests, max_new, 4, 43) {
+            lat.row(vec![
+                name.to_string(),
+                format!("{:.1}", rep.ttft_p50_ms),
+                format!("{:.1}", rep.ttft_p99_ms),
+                format!("{:.1}", rep.latency_p50_ms),
+                format!("{:.1}", rep.latency_p99_ms),
+            ]);
+        }
+    }
+    lat.emit();
+}

@@ -1,0 +1,155 @@
+//! Microbenchmarks for the perf pass (EXPERIMENTS.md §Perf): MX codec
+//! pack/unpack throughput, FWHT, RTN/GPTQ, coordinator ops (batcher admit,
+//! KV gather/scatter), and — when artifacts exist — PJRT decode-step
+//! latency per compiled batch size.
+
+use latmix::bench::{fmt_time, Bencher, Table};
+use latmix::coordinator::engine::{Engine, EngineConfig, MockExecutor};
+use latmix::coordinator::{Batcher, GenRequest, KvCache};
+use latmix::linalg::{block_hadamard_apply, Mat};
+use latmix::mx::{mx_qdq_rows, pack::PackedMx, MxConfig};
+use latmix::quant::{gptq_quantize, rtn_quantize};
+use latmix::util::Pcg64;
+
+fn main() {
+    let mut tab = Table::new(
+        "microbench",
+        "Hot-path microbenchmarks (criterion-lite)",
+        &["op", "mean", "p99", "throughput"],
+    );
+    let mut rng = Pcg64::seed(99);
+
+    // MX QDQ (f32 in/out) — the activation-quant inner loop analog
+    let n = 1 << 16;
+    let x = rng.normal_vec(n, 2.0);
+    let cfg = MxConfig::from_name("mxfp4", Some(32)).unwrap();
+    let r = Bencher::new("mx_qdq 64K f32").with_iters(3, 20).run(|| {
+        let mut y = x.clone();
+        mx_qdq_rows(&mut y, 512, &cfg);
+        y
+    });
+    tab.row(vec![
+        r.name.clone(),
+        fmt_time(r.mean_s),
+        fmt_time(r.p99_s),
+        format!("{:.0} Melem/s", r.throughput(n as f64) / 1e6),
+    ]);
+
+    // bit-pack + unpack
+    let r = Bencher::new("mxfp4 pack 64K").with_iters(3, 20).run(|| PackedMx::pack(&x, cfg));
+    tab.row(vec![r.name.clone(), fmt_time(r.mean_s), fmt_time(r.p99_s),
+        format!("{:.0} Melem/s", r.throughput(n as f64) / 1e6)]);
+    let packed = PackedMx::pack(&x, cfg);
+    let mut out = vec![0.0f32; n];
+    let r = Bencher::new("mxfp4 unpack 64K").with_iters(3, 20).run(|| packed.unpack_into(&mut out));
+    tab.row(vec![r.name.clone(), fmt_time(r.mean_s), fmt_time(r.p99_s),
+        format!("{:.0} Melem/s", r.throughput(n as f64) / 1e6)]);
+
+    // FWHT (online T3 path analog)
+    let mut h = rng.normal_vec(1 << 14, 1.0);
+    let r = Bencher::new("fwht 16K (B=32)").with_iters(3, 30).run(|| {
+        block_hadamard_apply(&mut h, 32);
+    });
+    tab.row(vec![r.name.clone(), fmt_time(r.mean_s), fmt_time(r.p99_s),
+        format!("{:.0} Melem/s", r.throughput((1 << 14) as f64) / 1e6)]);
+
+    // RTN / GPTQ weight quant (128x384)
+    let (din, dout) = (128usize, 384usize);
+    let w = rng.normal_vec(din * dout, 0.2);
+    let r = Bencher::new("rtn 128x384").with_iters(2, 10).run(|| rtn_quantize(&w, din, dout, &cfg));
+    tab.row(vec![r.name.clone(), fmt_time(r.mean_s), fmt_time(r.p99_s), "-".into()]);
+    let hmat = {
+        let mut m = Mat::eye(din);
+        for i in 0..din {
+            for j in 0..din {
+                m[(i, j)] += 0.01 * ((i + j) % 7) as f32;
+            }
+            m[(i, i)] += 10.0;
+        }
+        m
+    };
+    let r = Bencher::new("gptq 128x384").with_iters(1, 5).run(|| gptq_quantize(&w, din, dout, &hmat, &cfg, 0.01));
+    tab.row(vec![r.name.clone(), fmt_time(r.mean_s), fmt_time(r.p99_s), "-".into()]);
+
+    // batcher admit
+    let r = Bencher::new("batcher push+admit 1K").with_iters(3, 20).run(|| {
+        let mut b = Batcher::new(vec![1, 2, 4, 8]);
+        for id in 0..1000u64 {
+            b.push(GenRequest::new(id, vec![1, 2, 3], 4));
+        }
+        let mut n = 0;
+        while b.pending() > 0 {
+            n += b.admit(8).len();
+        }
+        n
+    });
+    tab.row(vec![r.name.clone(), fmt_time(r.mean_s), fmt_time(r.p99_s),
+        format!("{:.1} Mreq/s", r.throughput(1000.0) / 1e6)]);
+
+    // KV gather/scatter at serving dims (4 layers, 160 seq, 128 row, b=8)
+    let mut kv = KvCache::new(8, 4, 160, 128);
+    for id in 0..8u64 {
+        kv.alloc(id).unwrap();
+    }
+    let ids: Vec<u64> = (0..8).collect();
+    let r = Bencher::new("kv gather+scatter b=8").with_iters(3, 20).run(|| {
+        let g = kv.gather_batch(&ids, 8);
+        kv.scatter_batch(&ids, 8, &g);
+    });
+    let bytes = 8.0 * 4.0 * 2.0 * 160.0 * 128.0 * 4.0 * 2.0; // gather+scatter
+    tab.row(vec![r.name.clone(), fmt_time(r.mean_s), fmt_time(r.p99_s),
+        format!("{:.1} GiB/s", r.throughput(bytes) / (1 << 30) as f64)]);
+
+    // mock engine step loop (coordinator overhead without PJRT)
+    let r = Bencher::new("mock engine 16reqx8tok").with_iters(2, 10).run(|| {
+        let mut e = Engine::new(MockExecutor::default(), EngineConfig { max_slots: 4, eos: -1, ..Default::default() });
+        for i in 0..16u64 {
+            e.submit(GenRequest::new(i, vec![1, 2, 3], 8));
+        }
+        e.run_to_completion().unwrap().len()
+    });
+    tab.row(vec![r.name.clone(), fmt_time(r.mean_s), fmt_time(r.p99_s),
+        format!("{:.0} Ktok/s", r.throughput(128.0) / 1e3)]);
+
+    tab.emit();
+
+    pjrt_decode_bench();
+}
+
+/// PJRT decode-step latency per batch size (needs artifacts).
+fn pjrt_decode_bench() {
+    use latmix::coordinator::engine::{StepExecutor, XlaExecutor};
+    use latmix::model::{ModelDesc, WeightSet};
+    use latmix::runtime::Runtime;
+
+    let art = latmix::artifacts_dir();
+    let Ok(desc) = ModelDesc::load(&art) else { return };
+    let Ok(rt) = Runtime::new(desc) else { return };
+    let Ok(ws) = WeightSet::load(&rt.desc, "fp_raw") else { return };
+    let mut tab = Table::new(
+        "microbench_pjrt",
+        "PJRT decode-step latency (fp vs quantized graph)",
+        &["graph", "batch", "step mean", "step p99", "tok/s"],
+    );
+    for tag in ["fp", "mxfp4_b32_t3"] {
+        let Ok(exec) = XlaExecutor::new(&rt, tag, &ws) else { continue };
+        let kvdims = exec.n_layers() * 2;
+        for b in [1usize, 4, 8] {
+            let plane = exec.kv_seq() * exec.kv_row();
+            let kv: Vec<Vec<f32>> = vec![vec![0.0f32; b * plane]; kvdims];
+            let tokens = vec![5i32; b];
+            let pos = vec![3i32; b];
+            let r = Bencher::new("step").with_iters(3, 15).run(|| {
+                exec.decode(&tokens, &pos, &kv, b).unwrap()
+            });
+            tab.row(vec![
+                tag.into(),
+                b.to_string(),
+                fmt_time(r.mean_s),
+                fmt_time(r.p99_s),
+                format!("{:.1}", b as f64 / r.mean_s),
+            ]);
+        }
+    }
+    tab.emit();
+}

@@ -1,0 +1,270 @@
+//! Perplexity-based tables: 2 (granularity ablation), 3 (computational
+//! invariance), 5/8 (loss ablation), 6 (method comparison), 7 (init),
+//! 9 (calibration size), 10 (calibration seeds), 11 (training steps),
+//! 12 (lambda), 13 (temperature), 14 (drop-one-transform).
+//!
+//! All rows evaluate precomputed weight variants (python build path) on the
+//! PJRT runtime. Zero-shot averages are added where the paper reports them;
+//! pass --ppl-only to skip them (faster).
+
+use latmix::bench::Table;
+use latmix::data::{load_ppl_corpus, load_tasks, TaskSet};
+use latmix::eval::{perplexity, zero_shot};
+use latmix::model::{ModelDesc, WeightSet};
+use latmix::runtime::Runtime;
+
+struct Ctx {
+    rt: Runtime,
+    corpus: Vec<i32>,
+    n: usize,
+    t: usize,
+    tasks: Vec<TaskSet>,
+    with_acc: bool,
+}
+
+impl Ctx {
+    fn ppl(&self, wtag: &str, gtag: &str) -> Option<f64> {
+        let ws = WeightSet::load(&self.rt.desc, wtag).ok()?;
+        match perplexity(&self.rt, gtag, &ws, &self.corpus, self.n, self.t) {
+            Ok(p) => Some(p),
+            Err(e) => {
+                eprintln!("  {wtag} @ {gtag}: {e}");
+                None
+            }
+        }
+    }
+
+    fn acc(&self, wtag: &str, gtag: &str) -> Option<f64> {
+        if !self.with_acc {
+            return None;
+        }
+        let gtag = gtag.replace("logits_ppl_", "");
+        let ws = WeightSet::load(&self.rt.desc, wtag).ok()?;
+        zero_shot(&self.rt, &gtag, &ws, &self.tasks)
+            .ok()
+            .map(|a| a.last().unwrap().1)
+    }
+
+    fn row(&self, tab: &mut Table, label: &str, wtag: &str, gtag: &str, acc: bool) {
+        let p = self.ppl(wtag, gtag);
+        let mut cells = vec![
+            label.to_string(),
+            p.map(|v| format!("{v:.2}")).unwrap_or_else(|| "-".into()),
+        ];
+        if acc {
+            cells.push(
+                self.acc(wtag, gtag)
+                    .map(|a| format!("{:.2}", a * 100.0))
+                    .unwrap_or_else(|| "-".into()),
+            );
+        }
+        tab.row(cells);
+    }
+}
+
+const Q: &str = "mxfp4_b32";
+
+fn main() {
+    let ppl_only = std::env::args().any(|a| a == "--ppl-only");
+    let art = latmix::artifacts_dir();
+    let desc = match ModelDesc::load(&art) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("ppl_tables: no artifacts ({e})");
+            return;
+        }
+    };
+    let rt = Runtime::new(desc).unwrap();
+    let (corpus, n, t) = load_ppl_corpus(&art).unwrap();
+    let tasks = load_tasks(&art).unwrap();
+    let ctx = Ctx { rt, corpus, n, t, tasks, with_acc: !ppl_only };
+
+    table6(&ctx);
+    table2(&ctx);
+    table3(&ctx);
+    table8(&ctx);
+    table7(&ctx);
+    table9(&ctx);
+    table10(&ctx);
+    table11(&ctx);
+    table12(&ctx);
+    table13(&ctx);
+    table14(&ctx);
+}
+
+fn table6(ctx: &Ctx) {
+    let mut tab = Table::new("table6_ppl", "Perplexity, MXFP4 W+A (paper Table 6)", &["method", "ppl"]);
+    ctx.row(&mut tab, "FP16", "fp_raw", "fp", false);
+    for (name, wtag, t3) in [
+        ("RTN", "rtn", false),
+        ("QuaRot-RTN", "quarot-rtn", true),
+        ("GPTQ", "gptq", false),
+        ("QuaRot", "quarot", true),
+        ("SpinQuant", "spinquant", true),
+        ("OSTQuant", "ostquant", true),
+        ("FlatQuant†", "flatquant", true),
+        ("BRQ (block rotation)", "brq", true),
+        ("MR-GPTQ", "mr-gptq", true),
+        ("LATMiX-LU (Ours)", "latmix-lu", true),
+        ("LATMiX-QR (Ours)", "latmix-qr", true),
+    ] {
+        let gtag = format!("{Q}{}", if t3 { "_t3" } else { "" });
+        ctx.row(&mut tab, name, &format!("{wtag}_{Q}"), &gtag, false);
+    }
+    tab.emit();
+}
+
+fn table2(ctx: &Ctx) {
+    let mut tab = Table::new(
+        "table2_granularity",
+        "Transformation x granularity ablation, MXFP4 ppl (paper Table 2)",
+        &["transform", "granularity", "ppl"],
+    );
+    let rows: Vec<(&str, &str, String, bool)> = vec![
+        ("None", "-", format!("gptq_{Q}"), false),
+        ("Random Hadamard", "Block", format!("mr-gptq_{Q}"), true),
+        ("Random Hadamard", "Full", format!("quarot_{Q}"), true),
+        ("Learned Orth.", "Block", format!("t2_orth_block_{Q}"), true),
+        ("Learned Orth.", "Full", format!("t2_orth_full_{Q}"), true),
+        ("Learned Orth. + bias", "Block", format!("t2_orthbias_block_{Q}"), true),
+        ("Learned Orth. + bias", "Full", format!("t2_orthbias_full_{Q}"), true),
+        ("Learned Inv.", "Block", format!("t2_inv_block_{Q}"), true),
+        ("Learned Inv.", "Full", format!("t2_inv_full_{Q}"), true),
+        ("LATMiX-LU", "Block", format!("t2_latmix_block_{Q}"), true),
+        ("LATMiX-LU", "Full", format!("latmix-lu_{Q}"), true),
+    ];
+    for (tr, gran, wtag, t3) in rows {
+        let gtag = format!("{Q}{}", if t3 { "_t3" } else { "" });
+        let p = ctx.ppl(&wtag, &gtag);
+        tab.row(vec![
+            tr.into(),
+            gran.into(),
+            p.map(|v| format!("{v:.2}")).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    tab.emit();
+}
+
+fn table3(ctx: &Ctx) {
+    let mut tab = Table::new(
+        "table3_invariance",
+        "FP perplexity after fusing learned T1/T2, no quantization (paper Table 3)",
+        &["training steps", "ppl"],
+    );
+    ctx.row(&mut tab, "FP16 (no transform)", "fp_raw", "fp", false);
+    for s in [0usize, 1, 30, 60, 120] {
+        ctx.row(&mut tab, &format!("{s}"), &format!("fp_fused_step{s}"), "fp", false);
+    }
+    tab.emit();
+}
+
+fn table8(ctx: &Ctx) {
+    let mut tab = Table::new(
+        "table8_loss",
+        "Loss-function ablation (paper Tables 5+8): ppl + 0-shot avg",
+        &["loss", "ppl", "avg acc %"],
+    );
+    let gtag = format!("{Q}_t3");
+    ctx.row(&mut tab, "MSE (per-block, FlatQuant-style)", &format!("t8_mse_{Q}"), &gtag, true);
+    ctx.row(&mut tab, "CE (SpinQuant-style)", &format!("t8_ce_{Q}"), &gtag, true);
+    ctx.row(&mut tab, "KL (LATMiX)", &format!("latmix-lu_{Q}"), &gtag, true);
+    tab.emit();
+}
+
+fn table7(ctx: &Ctx) {
+    let mut tab = Table::new(
+        "table7_init",
+        "Initialization ablation, ppl (paper Table 7)",
+        &["init", "LU", "QR"],
+    );
+    let gtag = format!("{Q}_t3");
+    for init in ["identity", "orthogonal", "bd_orthogonal_noise", "hadamard", "bd_hadamard", "bd_hadamard_noise"] {
+        let lu = ctx.ppl(&format!("t7_lu_{init}_{Q}"), &gtag);
+        let qr = ctx.ppl(&format!("t7_qr_{init}_{Q}"), &gtag);
+        tab.row(vec![
+            init.into(),
+            lu.map(|v| format!("{v:.2}")).unwrap_or_else(|| "-".into()),
+            qr.map(|v| format!("{v:.2}")).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    tab.emit();
+}
+
+fn table9(ctx: &Ctx) {
+    let mut tab = Table::new(
+        "table9_calibsize",
+        "Calibration set size (paper Table 9)",
+        &["samples", "ppl", "avg acc %"],
+    );
+    let gtag = format!("{Q}_t3");
+    for nc in [1usize, 4, 16, 64] {
+        ctx.row(&mut tab, &format!("{nc}"), &format!("t9_n{nc}_{Q}"), &gtag, true);
+    }
+    tab.emit();
+}
+
+fn table10(ctx: &Ctx) {
+    let mut tab = Table::new(
+        "table10_calibseed",
+        "Calibration subset robustness (paper Table 10): ppl across 3 random subsets",
+        &["seed", "ppl", "avg acc %"],
+    );
+    let gtag = format!("{Q}_t3");
+    for seed in 1..=3usize {
+        ctx.row(&mut tab, &format!("{seed}"), &format!("t10_seed{seed}_{Q}"), &gtag, true);
+    }
+    tab.emit();
+}
+
+fn table11(ctx: &Ctx) {
+    let mut tab = Table::new(
+        "table11_steps",
+        "Transform-training steps (paper Table 11)",
+        &["steps", "ppl", "avg acc %"],
+    );
+    let gtag = format!("{Q}_t3");
+    for s in [0usize, 15, 30, 60, 120] {
+        ctx.row(&mut tab, &format!("{s}"), &format!("t11_s{s}_{Q}"), &gtag, true);
+    }
+    tab.emit();
+}
+
+fn table12(ctx: &Ctx) {
+    let mut tab = Table::new(
+        "table12_lambda",
+        "Volume-regularizer lambda sweep (paper Table 12)",
+        &["lambda", "ppl", "avg acc %"],
+    );
+    let gtag = format!("{Q}_t3");
+    for lam in ["0.001", "0.1", "1.0", "10.0"] {
+        ctx.row(&mut tab, lam, &format!("t12_lam{lam}_{Q}"), &gtag, true);
+    }
+    tab.emit();
+}
+
+fn table13(ctx: &Ctx) {
+    let mut tab = Table::new(
+        "table13_temp",
+        "Distillation temperature sweep (paper Table 13)",
+        &["T", "ppl", "avg acc %"],
+    );
+    let gtag = format!("{Q}_t3");
+    for temp in ["0.1", "0.75", "1.5", "5.0"] {
+        ctx.row(&mut tab, temp, &format!("t13_T{temp}_{Q}"), &gtag, true);
+    }
+    tab.emit();
+}
+
+fn table14(ctx: &Ctx) {
+    let mut tab = Table::new(
+        "table14_single",
+        "Drop-one-transform ablation (paper Table 14)",
+        &["variant", "ppl"],
+    );
+    let gtag = format!("{Q}_t3");
+    ctx.row(&mut tab, "All (T1+T2+T3)", &format!("latmix-lu_{Q}"), &gtag, false);
+    ctx.row(&mut tab, "No T3", &format!("t14_not3_{Q}"), Q, false);
+    ctx.row(&mut tab, "No T1", &format!("t14_not1_{Q}"), &gtag, false);
+    ctx.row(&mut tab, "No T2", &format!("t14_not2_{Q}"), &gtag, false);
+    tab.emit();
+}

@@ -1,0 +1,136 @@
+//! Table 1 (+ per-task Tables 16-23, FlatQuant Table 4, NVFP Table 15):
+//! zero-shot average accuracy and recovery for every method under MXFP4,
+//! MXINT4 and NVFP4, evaluated on the PJRT runtime with the AOT graphs.
+//!
+//! Shape targets: LATMiX-LU/QR best or tied-best recovery; QuaRot-RTN can
+//! fall below plain RTN; GPTQ > RTN; learned methods > fixed rotations.
+
+use latmix::bench::Table;
+use latmix::data::load_tasks;
+use latmix::eval::{recovery, zero_shot};
+use latmix::model::{ModelDesc, WeightSet};
+use latmix::runtime::Runtime;
+
+/// (display name, weights tag prefix, uses online T3)
+const METHODS: &[(&str, &str, bool)] = &[
+    ("RTN", "rtn", false),
+    ("QuaRot-RTN", "quarot-rtn", true),
+    ("GPTQ", "gptq", false),
+    ("QuaRot", "quarot", true),
+    ("SpinQuant", "spinquant", true),
+    ("OSTQuant", "ostquant", true),
+    ("FlatQuant†", "flatquant", true),
+    ("MR-GPTQ", "mr-gptq", true),
+    ("LATMiX-LU (Ours)", "latmix-lu", true),
+    ("LATMiX-QR (Ours)", "latmix-qr", true),
+];
+
+const NVFP_METHODS: &[&str] = &[
+    "rtn", "gptq", "spinquant", "flatquant", "mr-gptq", "latmix-lu", "latmix-qr",
+];
+
+fn main() {
+    let per_task = std::env::args().any(|a| a == "--per-task");
+    let art = latmix::artifacts_dir();
+    let desc = match ModelDesc::load(&art) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("table1: no artifacts ({e}); run `make artifacts experiments`");
+            return;
+        }
+    };
+    let rt = Runtime::new(desc).unwrap();
+    let tasks = load_tasks(&art).unwrap();
+
+    // FP16 reference
+    let fp_ws = WeightSet::load(&rt.desc, "fp_raw").expect("fp_raw weights");
+    let fp_accs = zero_shot(&rt, "fp", &fp_ws, &tasks).unwrap();
+    let fp_avg = fp_accs.last().unwrap().1;
+
+    for (fmt, block, title) in [
+        ("mxfp4", 32usize, "MXFP4"),
+        ("mxint4", 32, "MXINT4"),
+    ] {
+        let mut tab = Table::new(
+            &format!("table1_{fmt}"),
+            &format!("Zero-shot accuracy / recovery, {title} (paper Table 1)"),
+            &["method", "avg acc %", "recovery %"],
+        );
+        tab.row(vec!["FP16".into(), format!("{:.2}", fp_avg * 100.0), "100.00".into()]);
+        for (name, wtag_prefix, t3) in METHODS {
+            let wtag = format!("{wtag_prefix}_{fmt}_b{block}");
+            let gtag = format!("{fmt}_b{block}{}", if *t3 { "_t3" } else { "" });
+            match eval_variant(&rt, &wtag, &gtag, &tasks) {
+                Some(accs) => {
+                    let avg = accs.last().unwrap().1;
+                    tab.row(vec![
+                        name.to_string(),
+                        format!("{:.2}", avg * 100.0),
+                        format!("{:.2}", recovery(avg, fp_avg)),
+                    ]);
+                    if per_task {
+                        emit_per_task(fmt, name, &accs, fp_avg);
+                    }
+                }
+                None => tab.row(vec![name.to_string(), "-".into(), "-".into()]),
+            }
+        }
+        tab.emit();
+    }
+
+    // ---- Table 15: NVFP4 --------------------------------------------------
+    let mut tab = Table::new(
+        "table15_nvfp",
+        "Zero-shot accuracy / recovery, NVFP4 (paper Table 15)",
+        &["method", "avg acc %", "recovery %"],
+    );
+    tab.row(vec!["FP16".into(), format!("{:.2}", fp_avg * 100.0), "100.00".into()]);
+    for m in NVFP_METHODS {
+        let t3 = !matches!(*m, "rtn" | "gptq");
+        let wtag = format!("{m}_nvfp4_b16");
+        let gtag = format!("nvfp4_b16{}", if t3 { "_t3" } else { "" });
+        match eval_variant(&rt, &wtag, &gtag, &tasks) {
+            Some(accs) => {
+                let avg = accs.last().unwrap().1;
+                tab.row(vec![
+                    m.to_string(),
+                    format!("{:.2}", avg * 100.0),
+                    format!("{:.2}", recovery(avg, fp_avg)),
+                ]);
+            }
+            None => tab.row(vec![m.to_string(), "-".into(), "-".into()]),
+        }
+    }
+    tab.emit();
+    println!("note: Table 4 (FlatQuant comparison) = FlatQuant† vs LATMiX rows above;");
+    println!("per-benchmark Tables 16-23: rerun with --per-task");
+}
+
+fn eval_variant(
+    rt: &Runtime,
+    wtag: &str,
+    gtag: &str,
+    tasks: &[latmix::data::TaskSet],
+) -> Option<Vec<(String, f64)>> {
+    let ws = WeightSet::load(&rt.desc, wtag).ok()?;
+    match zero_shot(rt, gtag, &ws, tasks) {
+        Ok(a) => Some(a),
+        Err(e) => {
+            eprintln!("  {wtag} @ {gtag}: {e}");
+            None
+        }
+    }
+}
+
+fn emit_per_task(fmt: &str, method: &str, accs: &[(String, f64)], fp_avg: f64) {
+    let mut t = Table::new(
+        &format!("table16_{fmt}_{}", method.replace([' ', '(', ')', '†'], "")),
+        &format!("Per-task breakdown — {method} / {fmt}"),
+        &["task", "acc %"],
+    );
+    for (name, a) in accs {
+        t.row(vec![name.clone(), format!("{:.2}", a * 100.0)]);
+    }
+    t.row(vec!["recovery %".into(), format!("{:.2}", recovery(accs.last().unwrap().1, fp_avg))]);
+    t.emit();
+}

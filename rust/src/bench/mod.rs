@@ -1,0 +1,157 @@
+//! Criterion-lite bench harness (criterion is not vendorable offline).
+//!
+//! `cargo bench` runs each `[[bench]]` binary with `harness = false`; they
+//! use [`Bencher`] for timed sections and [`Table`] to print the paper's
+//! rows/series as markdown, mirrored into `artifacts/results/<id>.md`.
+
+use std::time::Instant;
+
+use crate::util::Summary;
+
+/// Timed measurement: warmup, then `iters` timed runs, p50/p99 + throughput.
+pub struct Bencher {
+    pub name: String,
+    pub warmup: usize,
+    pub iters: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub std_s: f64,
+    pub iters: usize,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, units_per_iter: f64) -> f64 {
+        units_per_iter / self.mean_s
+    }
+}
+
+impl Bencher {
+    pub fn new(name: &str) -> Self {
+        Bencher { name: name.to_string(), warmup: 3, iters: 10 }
+    }
+
+    pub fn with_iters(mut self, warmup: usize, iters: usize) -> Self {
+        self.warmup = warmup;
+        self.iters = iters;
+        self
+    }
+
+    pub fn run<T>(&self, mut f: impl FnMut() -> T) -> BenchResult {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut s = Summary::new();
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            s.push(t0.elapsed().as_secs_f64());
+        }
+        BenchResult {
+            name: self.name.clone(),
+            mean_s: s.mean(),
+            p50_s: s.percentile(50.0),
+            p99_s: s.percentile(99.0),
+            std_s: s.std(),
+            iters: self.iters,
+        }
+    }
+}
+
+/// Markdown table builder that prints to stdout and saves to
+/// `artifacts/results/<id>.md`.
+pub struct Table {
+    pub id: String,
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(id: &str, title: &str, header: &[&str]) -> Table {
+        Table {
+            id: id.to_string(),
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = format!("## {} — {}\n\n", self.id, self.title);
+        out += &format!("| {} |\n", self.header.join(" | "));
+        out += &format!("|{}\n", "---|".repeat(self.header.len()));
+        for r in &self.rows {
+            out += &format!("| {} |\n", r.join(" | "));
+        }
+        out
+    }
+
+    /// Print and persist under `artifacts/results/`.
+    pub fn emit(&self) {
+        let text = self.render();
+        println!("{text}");
+        let dir = crate::artifacts_dir().join("results");
+        if std::fs::create_dir_all(&dir).is_ok() {
+            let _ = std::fs::write(dir.join(format!("{}.md", self.id)), &text);
+        }
+    }
+}
+
+/// Format seconds human-readably.
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.2}s", s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bencher_measures() {
+        let r = Bencher::new("spin").with_iters(1, 5).run(|| {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(r.mean_s > 0.0);
+        assert!(r.p99_s >= r.p50_s);
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new("test", "Test table", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let s = t.render();
+        assert!(s.contains("| a | b |"));
+        assert!(s.contains("| 1 | 2 |"));
+    }
+
+    #[test]
+    fn fmt_time_ranges() {
+        assert!(fmt_time(2e-9).ends_with("ns"));
+        assert!(fmt_time(2e-5).ends_with("µs"));
+        assert!(fmt_time(2e-2).ends_with("ms"));
+        assert!(fmt_time(2.0).ends_with('s'));
+    }
+}

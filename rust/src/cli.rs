@@ -1,0 +1,95 @@
+//! Minimal CLI argument parser (clap is not vendorable offline).
+//!
+//! Supports `binary <subcommand> [--flag] [--key value] [positional...]`.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from raw args (excluding argv[0]). Tokens starting with `--`
+    /// consume the following token as their value unless it also starts with
+    /// `--` or is absent (then they are boolean flags).
+    pub fn parse(raw: &[String]) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = Some(it.next().unwrap().clone());
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                match it.peek() {
+                    Some(v) if !v.starts_with("--") => {
+                        out.options.insert(name.to_string(), it.next().unwrap().clone());
+                    }
+                    _ => out.flags.push(name.to_string()),
+                }
+            } else {
+                out.positional.push(tok.clone());
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        let raw: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&raw)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> usize {
+        self.opt(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> f64 {
+        self.opt(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name) || self.opt(name) == Some("true")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(&s.split_whitespace().map(String::from).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("serve --batch 4 --verbose --rate 2.5 extra");
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.opt_usize("batch", 0), 4);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.opt_f64("rate", 0.0), 2.5);
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("eval --fast");
+        assert!(a.flag("fast"));
+        assert_eq!(a.opt("fast"), None);
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = parse("--x 1");
+        assert_eq!(a.subcommand, None);
+        assert_eq!(a.opt_usize("x", 0), 1);
+    }
+}

@@ -1,0 +1,204 @@
+//! TOML-subset configuration parser (serde/toml are not vendorable offline).
+//!
+//! Supports the subset the serving configs need: `[section]` headers,
+//! `key = value` with string / int / float / bool / flat arrays, `#`
+//! comments. Keys are exposed as `section.key`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    List(Vec<Value>),
+}
+
+impl Value {
+    fn parse(raw: &str) -> Result<Value> {
+        let raw = raw.trim();
+        if raw.starts_with('"') && raw.ends_with('"') && raw.len() >= 2 {
+            return Ok(Value::Str(raw[1..raw.len() - 1].to_string()));
+        }
+        if raw == "true" {
+            return Ok(Value::Bool(true));
+        }
+        if raw == "false" {
+            return Ok(Value::Bool(false));
+        }
+        if raw.starts_with('[') && raw.ends_with(']') {
+            let inner = &raw[1..raw.len() - 1];
+            let mut items = Vec::new();
+            for part in split_top_level(inner) {
+                let p = part.trim();
+                if !p.is_empty() {
+                    items.push(Value::parse(p)?);
+                }
+            }
+            return Ok(Value::List(items));
+        }
+        if let Ok(i) = raw.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+        if let Ok(f) = raw.parse::<f64>() {
+            return Ok(Value::Float(f));
+        }
+        bail!("cannot parse value {raw:?}")
+    }
+}
+
+/// Split on commas not inside quotes/brackets.
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut depth = 0;
+    let mut quote = false;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '"' => {
+                quote = !quote;
+                cur.push(c);
+            }
+            '[' if !quote => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' if !quote => {
+                depth -= 1;
+                cur.push(c);
+            }
+            ',' if !quote && depth == 0 => {
+                out.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    pub values: BTreeMap<String, Value>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (ln, line) in text.lines().enumerate() {
+            let line = strip_comment(line).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') && line.ends_with(']') {
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("line {}: expected key = value, got {line:?}", ln + 1);
+            };
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            values.insert(key, Value::parse(v)?);
+        }
+        Ok(Config { values })
+    }
+
+    pub fn load(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("read {path:?}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn str(&self, key: &str) -> Option<&str> {
+        match self.values.get(key) {
+            Some(Value::Str(s)) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn int(&self, key: &str) -> Option<i64> {
+        match self.values.get(key) {
+            Some(Value::Int(i)) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn float(&self, key: &str) -> Option<f64> {
+        match self.values.get(key) {
+            Some(Value::Float(f)) => Some(*f),
+            Some(Value::Int(i)) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn bool(&self, key: &str) -> Option<bool> {
+        match self.values.get(key) {
+            Some(Value::Bool(b)) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn int_list(&self, key: &str) -> Option<Vec<i64>> {
+        match self.values.get(key) {
+            Some(Value::List(items)) => items
+                .iter()
+                .map(|v| match v {
+                    Value::Int(i) => Some(*i),
+                    _ => None,
+                })
+                .collect(),
+            _ => None,
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    let mut quote = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => quote = !quote,
+            '#' if !quote => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic() {
+        let c = Config::parse(
+            "top = 1\n[serve]\nmodel = \"latmix-tiny\"  # comment\nbatches = [1, 2, 4]\nrate = 3.5\nverbose = true\n",
+        )
+        .unwrap();
+        assert_eq!(c.int("top"), Some(1));
+        assert_eq!(c.str("serve.model"), Some("latmix-tiny"));
+        assert_eq!(c.int_list("serve.batches"), Some(vec![1, 2, 4]));
+        assert_eq!(c.float("serve.rate"), Some(3.5));
+        assert_eq!(c.bool("serve.verbose"), Some(true));
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let c = Config::parse("s = \"a#b\"\n").unwrap();
+        assert_eq!(c.str("s"), Some("a#b"));
+    }
+
+    #[test]
+    fn bad_line_errors() {
+        assert!(Config::parse("nonsense\n").is_err());
+    }
+}

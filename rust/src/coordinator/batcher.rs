@@ -1,0 +1,120 @@
+//! Continuous batcher: FIFO admission queue + batch-size bucketing.
+//!
+//! The AOT artifacts are compiled at fixed batch sizes (1/2/4/8); the
+//! batcher picks, for a given number of ready lanes, the bucket that
+//! maximizes occupancy (smallest compiled size >= lanes, else the largest
+//! size, repeatedly). Invariants (property-tested): no request is lost or
+//! duplicated; admission order is FIFO; a formed batch never exceeds the
+//! requested capacity.
+
+use std::collections::VecDeque;
+
+use super::request::GenRequest;
+
+pub struct Batcher {
+    queue: VecDeque<GenRequest>,
+    /// Compiled batch sizes, ascending.
+    pub buckets: Vec<usize>,
+    admitted: u64,
+    enqueued: u64,
+}
+
+impl Batcher {
+    pub fn new(mut buckets: Vec<usize>) -> Self {
+        buckets.sort_unstable();
+        assert!(!buckets.is_empty());
+        Batcher { queue: VecDeque::new(), buckets, admitted: 0, enqueued: 0 }
+    }
+
+    pub fn push(&mut self, req: GenRequest) {
+        self.enqueued += 1;
+        self.queue.push_back(req);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn counters(&self) -> (u64, u64) {
+        (self.enqueued, self.admitted)
+    }
+
+    /// Smallest compiled bucket that covers `lanes`, or the largest bucket.
+    pub fn bucket_for(&self, lanes: usize) -> usize {
+        for &b in &self.buckets {
+            if b >= lanes {
+                return b;
+            }
+        }
+        *self.buckets.last().unwrap()
+    }
+
+    /// Admit up to `max_lanes` queued requests (FIFO), bounded by the
+    /// largest bucket. Returns the admitted requests (possibly empty).
+    pub fn admit(&mut self, max_lanes: usize) -> Vec<GenRequest> {
+        let cap = max_lanes.min(*self.buckets.last().unwrap());
+        let n = cap.min(self.queue.len());
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.queue.pop_front().unwrap());
+        }
+        self.admitted += out.len() as u64;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64) -> GenRequest {
+        GenRequest::new(id, vec![1, 2, 3], 4)
+    }
+
+    #[test]
+    fn fifo_order() {
+        let mut b = Batcher::new(vec![1, 2, 4]);
+        for id in 0..5 {
+            b.push(req(id));
+        }
+        let batch = b.admit(4);
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let b = Batcher::new(vec![1, 2, 4, 8]);
+        assert_eq!(b.bucket_for(1), 1);
+        assert_eq!(b.bucket_for(3), 4);
+        assert_eq!(b.bucket_for(8), 8);
+        assert_eq!(b.bucket_for(20), 8);
+    }
+
+    #[test]
+    fn admit_respects_capacity() {
+        let mut b = Batcher::new(vec![1, 2, 4]);
+        for id in 0..10 {
+            b.push(req(id));
+        }
+        assert_eq!(b.admit(2).len(), 2);
+        assert_eq!(b.admit(100).len(), 4); // clamped to largest bucket
+        assert_eq!(b.pending(), 4);
+    }
+
+    #[test]
+    fn counters_conserved() {
+        let mut b = Batcher::new(vec![2]);
+        for id in 0..7 {
+            b.push(req(id));
+        }
+        let mut admitted = 0;
+        while b.pending() > 0 {
+            admitted += b.admit(2).len();
+        }
+        let (enq, adm) = b.counters();
+        assert_eq!(enq, 7);
+        assert_eq!(adm, 7);
+        assert_eq!(admitted, 7);
+    }
+}

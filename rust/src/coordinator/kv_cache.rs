@@ -1,0 +1,171 @@
+//! KV-cache slot manager.
+//!
+//! The decode graph's KV tensors have a fixed batch dimension (one lane per
+//! slot); this module owns the host-side KV state per *sequence* and the
+//! slot accounting. Because PJRT literals round-trip host memory on this
+//! testbed, the cache holds each sequence's K/V rows as flat `f32` vectors
+//! (`n_layers * 2 * kv_seq * n_heads * head_dim`) that the engine gathers
+//! into batch literals per step.
+//!
+//! Invariants (property-tested in `rust/tests/coordinator_props.rs`):
+//! - a slot is never double-allocated;
+//! - free() returns capacity exactly once;
+//! - the set of live sequence ids equals the set of allocated slots.
+
+use std::collections::HashMap;
+
+use super::request::RequestId;
+
+/// Per-sequence KV state (host side).
+#[derive(Clone)]
+pub struct SeqKv {
+    /// `[layer][k_or_v]` flat `(kv_seq, n_heads, head_dim)` row-major.
+    pub data: Vec<Vec<f32>>,
+    /// Number of valid positions (= tokens processed so far).
+    pub pos: usize,
+}
+
+pub struct KvCache {
+    pub capacity: usize,
+    pub n_layers: usize,
+    pub kv_seq: usize,
+    pub kv_row: usize, // n_heads * head_dim
+    live: HashMap<RequestId, SeqKv>,
+}
+
+impl KvCache {
+    pub fn new(capacity: usize, n_layers: usize, kv_seq: usize, kv_row: usize) -> Self {
+        KvCache { capacity, n_layers, kv_seq, kv_row, live: HashMap::new() }
+    }
+
+    pub fn free_slots(&self) -> usize {
+        self.capacity - self.live.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.live.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live.is_empty()
+    }
+
+    pub fn contains(&self, id: RequestId) -> bool {
+        self.live.contains_key(&id)
+    }
+
+    /// Allocate a zeroed sequence slot. Err if full or duplicate.
+    pub fn alloc(&mut self, id: RequestId) -> anyhow::Result<()> {
+        anyhow::ensure!(self.live.len() < self.capacity, "kv cache full");
+        anyhow::ensure!(!self.live.contains_key(&id), "slot {id} double-alloc");
+        let plane = self.kv_seq * self.kv_row;
+        let data = vec![vec![0.0f32; plane]; self.n_layers * 2];
+        self.live.insert(id, SeqKv { data, pos: 0 });
+        Ok(())
+    }
+
+    pub fn free(&mut self, id: RequestId) -> bool {
+        self.live.remove(&id).is_some()
+    }
+
+    pub fn get(&self, id: RequestId) -> Option<&SeqKv> {
+        self.live.get(&id)
+    }
+
+    pub fn get_mut(&mut self, id: RequestId) -> Option<&mut SeqKv> {
+        self.live.get_mut(&id)
+    }
+
+    pub fn ids(&self) -> Vec<RequestId> {
+        let mut v: Vec<_> = self.live.keys().copied().collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Gather lanes `ids` into one batch KV buffer per (layer, k/v), shaped
+    /// `(batch, kv_seq, row)` flat — the decode graph's input layout. Lanes
+    /// beyond `ids.len()` (padding) are zeroed.
+    pub fn gather_batch(&self, ids: &[RequestId], batch: usize) -> Vec<Vec<f32>> {
+        let plane = self.kv_seq * self.kv_row;
+        let mut out = vec![vec![0.0f32; batch * plane]; self.n_layers * 2];
+        for (lane, id) in ids.iter().enumerate() {
+            let seq = &self.live[id];
+            for (li, buf) in out.iter_mut().enumerate() {
+                buf[lane * plane..(lane + 1) * plane].copy_from_slice(&seq.data[li]);
+            }
+        }
+        out
+    }
+
+    /// Scatter updated batch KV back into the per-sequence state and bump
+    /// positions.
+    pub fn scatter_batch(&mut self, ids: &[RequestId], batch: usize, planes: &[Vec<f32>]) {
+        let plane = self.kv_seq * self.kv_row;
+        assert_eq!(planes.len(), self.n_layers * 2);
+        for (lane, id) in ids.iter().enumerate() {
+            debug_assert!(lane < batch);
+            let seq = self.live.get_mut(id).expect("scatter into missing slot");
+            for (li, buf) in planes.iter().enumerate() {
+                seq.data[li].copy_from_slice(&buf[lane * plane..(lane + 1) * plane]);
+            }
+            seq.pos += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cache() -> KvCache {
+        KvCache::new(4, 2, 8, 4)
+    }
+
+    #[test]
+    fn alloc_free_cycle() {
+        let mut c = cache();
+        assert_eq!(c.free_slots(), 4);
+        c.alloc(1).unwrap();
+        c.alloc(2).unwrap();
+        assert_eq!(c.free_slots(), 2);
+        assert!(c.free(1));
+        assert!(!c.free(1));
+        assert_eq!(c.free_slots(), 3);
+    }
+
+    #[test]
+    fn double_alloc_rejected() {
+        let mut c = cache();
+        c.alloc(7).unwrap();
+        assert!(c.alloc(7).is_err());
+    }
+
+    #[test]
+    fn full_rejected() {
+        let mut c = cache();
+        for id in 0..4 {
+            c.alloc(id).unwrap();
+        }
+        assert!(c.alloc(99).is_err());
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let mut c = cache();
+        c.alloc(1).unwrap();
+        c.alloc(2).unwrap();
+        // write recognizable data
+        c.get_mut(1).unwrap().data[0][0] = 11.0;
+        c.get_mut(2).unwrap().data[0][0] = 22.0;
+        let g = c.gather_batch(&[1, 2], 4);
+        assert_eq!(g[0][0], 11.0);
+        assert_eq!(g[0][8 * 4], 22.0); // lane 1 offset = plane
+        // mutate and scatter back
+        let mut g2 = g.clone();
+        g2[0][0] = 110.0;
+        c.scatter_batch(&[1, 2], 4, &g2);
+        assert_eq!(c.get(1).unwrap().data[0][0], 110.0);
+        assert_eq!(c.get(1).unwrap().pos, 1);
+        assert_eq!(c.get(2).unwrap().pos, 1);
+    }
+}

@@ -1,0 +1,40 @@
+//! Request / result types shared across the serving stack.
+
+use std::time::Instant;
+
+pub type RequestId = u64;
+
+/// A generation request entering the router.
+#[derive(Clone, Debug)]
+pub struct GenRequest {
+    pub id: RequestId,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    /// Greedy decoding when None; top-k sampling seed otherwise.
+    pub sample_seed: Option<u64>,
+    pub arrived: Instant,
+}
+
+impl GenRequest {
+    pub fn new(id: RequestId, prompt: Vec<i32>, max_new_tokens: usize) -> Self {
+        GenRequest { id, prompt, max_new_tokens, sample_seed: None, arrived: Instant::now() }
+    }
+}
+
+/// A finished generation.
+#[derive(Clone, Debug)]
+pub struct GenResult {
+    pub id: RequestId,
+    pub prompt_len: usize,
+    pub tokens: Vec<i32>,
+    /// Time from arrival to first generated token.
+    pub ttft_s: f64,
+    /// Time from arrival to completion.
+    pub total_s: f64,
+}
+
+impl GenResult {
+    pub fn decode_tokens(&self) -> usize {
+        self.tokens.len()
+    }
+}

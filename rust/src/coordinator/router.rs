@@ -1,0 +1,116 @@
+//! Request router: the front door of the serving stack.
+//!
+//! Assigns request ids, tracks in-flight state, and (when running multiple
+//! engine workers) routes by least-loaded worker. On this single-node CPU
+//! testbed there is one engine; the router still provides the id/state
+//! machinery and the load-balancing policy used by the property tests.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::request::{GenRequest, RequestId};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReqState {
+    Queued,
+    Running,
+    Done,
+}
+
+pub struct Router {
+    next_id: AtomicU64,
+    states: HashMap<RequestId, ReqState>,
+    /// Outstanding request count per worker.
+    worker_load: Vec<usize>,
+    assignment: HashMap<RequestId, usize>,
+}
+
+impl Router {
+    pub fn new(workers: usize) -> Router {
+        assert!(workers > 0);
+        Router {
+            next_id: AtomicU64::new(1),
+            states: HashMap::new(),
+            worker_load: vec![0; workers],
+            assignment: HashMap::new(),
+        }
+    }
+
+    /// Create a request and route it to the least-loaded worker.
+    /// Returns (request, worker index).
+    pub fn route(&mut self, prompt: Vec<i32>, max_new: usize) -> (GenRequest, usize) {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let worker = self
+            .worker_load
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, l)| **l)
+            .map(|(i, _)| i)
+            .unwrap();
+        self.worker_load[worker] += 1;
+        self.states.insert(id, ReqState::Queued);
+        self.assignment.insert(id, worker);
+        (GenRequest::new(id, prompt, max_new), worker)
+    }
+
+    pub fn mark_running(&mut self, id: RequestId) {
+        self.states.insert(id, ReqState::Running);
+    }
+
+    pub fn mark_done(&mut self, id: RequestId) {
+        if let Some(w) = self.assignment.get(&id) {
+            self.worker_load[*w] = self.worker_load[*w].saturating_sub(1);
+        }
+        self.states.insert(id, ReqState::Done);
+    }
+
+    pub fn state(&self, id: RequestId) -> Option<ReqState> {
+        self.states.get(&id).copied()
+    }
+
+    pub fn loads(&self) -> &[usize] {
+        &self.worker_load
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.states
+            .values()
+            .filter(|s| **s != ReqState::Done)
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_unique_and_monotone() {
+        let mut r = Router::new(1);
+        let (a, _) = r.route(vec![1], 4);
+        let (b, _) = r.route(vec![2], 4);
+        assert!(b.id > a.id);
+    }
+
+    #[test]
+    fn least_loaded_routing() {
+        let mut r = Router::new(3);
+        let mut counts = [0usize; 3];
+        for _ in 0..9 {
+            let (_, w) = r.route(vec![1], 4);
+            counts[w] += 1;
+        }
+        assert_eq!(counts, [3, 3, 3]);
+    }
+
+    #[test]
+    fn completion_frees_load() {
+        let mut r = Router::new(2);
+        let (a, wa) = r.route(vec![1], 4);
+        assert_eq!(r.loads()[wa], 1);
+        r.mark_done(a.id);
+        assert_eq!(r.loads()[wa], 0);
+        assert_eq!(r.state(a.id), Some(ReqState::Done));
+        assert_eq!(r.in_flight(), 0);
+    }
+}

@@ -1,0 +1,81 @@
+//! Step scheduler: decides, per engine iteration, whether to run a prefill
+//! (admit waiting requests into free KV slots) and which running sequences
+//! join the decode step.
+//!
+//! Policy: **prefill-priority with decode fairness** — admit waiting work
+//! whenever slots are free (prefill batches amortize well), then decode all
+//! running lanes, oldest first, in buckets. This mirrors vLLM's default
+//! behaviour at this scale.
+
+use super::request::RequestId;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedulerPolicy {
+    /// Admit prefill whenever possible (default).
+    PrefillPriority,
+    /// Only admit when fewer than `low_watermark` lanes are running.
+    DecodePriority { low_watermark: usize },
+}
+
+/// The plan for one engine iteration.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StepPlan {
+    /// How many waiting requests to admit (prefill) this step.
+    pub admit: usize,
+    /// Running sequence ids to decode this step (all of them, bucketed by
+    /// the engine).
+    pub decode: Vec<RequestId>,
+}
+
+pub fn plan_step(
+    policy: SchedulerPolicy,
+    waiting: usize,
+    running: &[RequestId],
+    free_slots: usize,
+    max_prefill_batch: usize,
+) -> StepPlan {
+    let admit = match policy {
+        SchedulerPolicy::PrefillPriority => waiting.min(free_slots).min(max_prefill_batch),
+        SchedulerPolicy::DecodePriority { low_watermark } => {
+            if running.len() < low_watermark {
+                waiting.min(free_slots).min(max_prefill_batch)
+            } else {
+                0
+            }
+        }
+    };
+    StepPlan { admit, decode: running.to_vec() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefill_priority_admits_up_to_free() {
+        let p = plan_step(SchedulerPolicy::PrefillPriority, 10, &[1, 2], 3, 8);
+        assert_eq!(p.admit, 3);
+        assert_eq!(p.decode, vec![1, 2]);
+    }
+
+    #[test]
+    fn prefill_bounded_by_batch() {
+        let p = plan_step(SchedulerPolicy::PrefillPriority, 10, &[], 8, 4);
+        assert_eq!(p.admit, 4);
+    }
+
+    #[test]
+    fn decode_priority_defers_admission() {
+        let policy = SchedulerPolicy::DecodePriority { low_watermark: 2 };
+        let p = plan_step(policy, 5, &[1, 2, 3], 4, 8);
+        assert_eq!(p.admit, 0);
+        let p2 = plan_step(policy, 5, &[1], 4, 8);
+        assert!(p2.admit > 0);
+    }
+
+    #[test]
+    fn no_waiting_no_admit() {
+        let p = plan_step(SchedulerPolicy::PrefillPriority, 0, &[7], 3, 8);
+        assert_eq!(p.admit, 0);
+    }
+}

@@ -1,0 +1,114 @@
+//! Serving workload generation + eval-dataset loading.
+//!
+//! Zero-shot task sets and the perplexity corpus are *generated at build
+//! time* by `python/compile/calib.py` and shipped in `artifacts/eval/` (one
+//! generator, no cross-language drift); this module loads them. The
+//! serving workload (random prompts with a Poisson-ish arrival pattern) is
+//! generated here in Rust since it lives on the request path.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::io::{load_lxt, Tensor};
+use crate::util::Pcg64;
+
+pub const TASKS: [&str; 7] = [
+    "copy", "reverse", "parity", "majority", "modsum", "agree", "retrieve",
+];
+
+/// One zero-shot task set (n instances x 4 choices).
+#[derive(Clone, Debug)]
+pub struct TaskSet {
+    pub name: String,
+    pub n: usize,
+    pub max_len: usize,
+    /// (n, 4, max_len) BOS+prompt+choice token sequences.
+    pub tokens: Vec<i32>,
+    /// (n,) index where the completion starts.
+    pub prompt_len: Vec<i32>,
+    /// (n, 4) total sequence lengths.
+    pub len: Vec<i32>,
+    /// (n,) correct choice index.
+    pub label: Vec<i32>,
+}
+
+pub fn load_tasks(artifacts: &Path) -> Result<Vec<TaskSet>> {
+    let map = load_lxt(&artifacts.join("eval").join("zeroshot.lxt"))?;
+    let mut out = Vec::new();
+    for task in TASKS {
+        let t = |suffix: &str| -> Result<&Tensor> {
+            map.get(&format!("tasks_{task}_{suffix}"))
+                .with_context(|| format!("zeroshot.lxt missing tasks_{task}_{suffix}"))
+        };
+        let tokens = t("tokens")?;
+        let n = tokens.dims[0];
+        let max_len = tokens.dims[2];
+        out.push(TaskSet {
+            name: task.to_string(),
+            n,
+            max_len,
+            tokens: tokens.as_i32()?.to_vec(),
+            prompt_len: t("prompt_len")?.as_i32()?.to_vec(),
+            len: t("len")?.as_i32()?.to_vec(),
+            label: t("label")?.as_i32()?.to_vec(),
+        });
+    }
+    Ok(out)
+}
+
+/// The held-out perplexity corpus: (n_seqs, seq_len) token matrix.
+pub fn load_ppl_corpus(artifacts: &Path) -> Result<(Vec<i32>, usize, usize)> {
+    let map = load_lxt(&artifacts.join("eval").join("ppl_heldout.lxt"))?;
+    let t = map.get("tokens").context("ppl_heldout.lxt missing tokens")?;
+    Ok((t.as_i32()?.to_vec(), t.dims[0], t.dims[1]))
+}
+
+/// Synthetic serving workload: `n` prompts of word tokens, lengths in
+/// [4, max_prompt], each asking for `max_new` tokens.
+pub fn serving_workload(
+    n: usize,
+    max_prompt: usize,
+    max_new: usize,
+    seed: u64,
+) -> Vec<(Vec<i32>, usize)> {
+    let mut rng = Pcg64::seed(seed);
+    (0..n)
+        .map(|_| {
+            let len = 4 + rng.below((max_prompt - 4) as u64 + 1) as usize;
+            let mut p = vec![1i32]; // BOS
+            for _ in 1..len {
+                p.push(32 + rng.below(224) as i32);
+            }
+            (p, max_new)
+        })
+        .collect()
+}
+
+/// Export a `BTreeMap<String, Tensor>` helper for writing results (used by
+/// examples that persist intermediate tensors).
+pub fn tensor_map(items: Vec<(&str, Tensor)>) -> BTreeMap<String, Tensor> {
+    items.into_iter().map(|(k, v)| (k.to_string(), v)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workload_shapes() {
+        let w = serving_workload(16, 24, 32, 7);
+        assert_eq!(w.len(), 16);
+        for (p, n) in &w {
+            assert!(p.len() >= 4 && p.len() <= 24);
+            assert_eq!(p[0], 1);
+            assert_eq!(*n, 32);
+        }
+    }
+
+    #[test]
+    fn workload_deterministic() {
+        assert_eq!(serving_workload(4, 16, 8, 9), serving_workload(4, 16, 8, 9));
+    }
+}

@@ -1,0 +1,138 @@
+//! Evaluation harness over the PJRT runtime: perplexity and zero-shot task
+//! accuracy — the Rust mirror of `python/compile/evaluate.py`, operating on
+//! AOT `logits_*` graphs with any weight variant as arguments.
+//!
+//! Scoring protocol (LM-eval-harness style): for each instance, score all
+//! four `BOS + prompt + choice` sequences by mean per-token log-likelihood
+//! of the choice span; predict the argmax.
+
+use anyhow::{Context, Result};
+
+use crate::data::TaskSet;
+use crate::model::WeightSet;
+use crate::runtime::{i32_literal, literal_to_f32, Runtime};
+
+/// Evaluate perplexity of a weight variant under a quant graph tag
+/// (`fp`, `mxfp4_b32_t3`, ...). Corpus: flat (n, t) tokens.
+pub fn perplexity(
+    rt: &Runtime,
+    tag: &str,
+    ws: &WeightSet,
+    corpus: &[i32],
+    n: usize,
+    t: usize,
+) -> Result<f64> {
+    let graph = format!("logits_ppl_{tag}");
+    let (gb, gt) = rt.desc.ppl_shape;
+    anyhow::ensure!(t == gt, "corpus seq len {t} != graph {gt}");
+    let weights = rt.stage_weights(ws)?;
+    let vocab = rt.desc.vocab;
+    let mut total_nll = 0.0f64;
+    let mut count = 0usize;
+    let mut batch_tokens = vec![0i32; gb * gt];
+    let mut rows_done = 0usize;
+    while rows_done < n {
+        let rows = (n - rows_done).min(gb);
+        batch_tokens.fill(0);
+        batch_tokens[..rows * gt]
+            .copy_from_slice(&corpus[rows_done * gt..(rows_done + rows) * gt]);
+        let tok_lit = i32_literal(&batch_tokens, &[gb as i64, gt as i64])?;
+        let mut inputs: Vec<&xla::Literal> = vec![&tok_lit];
+        inputs.extend(weights.iter());
+        let parts = rt.execute(&graph, &inputs)?;
+        let logits = literal_to_f32(&parts[0])?;
+        for r in 0..rows {
+            for pos in 0..gt - 1 {
+                let tgt = batch_tokens[r * gt + pos + 1] as usize;
+                let row = &logits[(r * gt + pos) * vocab..(r * gt + pos + 1) * vocab];
+                total_nll += nll_of(row, tgt);
+                count += 1;
+            }
+        }
+        rows_done += rows;
+    }
+    Ok((total_nll / count as f64).exp())
+}
+
+fn nll_of(logits: &[f32], target: usize) -> f64 {
+    // stable log-softmax
+    let m = logits.iter().fold(f32::NEG_INFINITY, |a, b| a.max(*b)) as f64;
+    let lse: f64 = logits.iter().map(|x| ((*x as f64) - m).exp()).sum::<f64>().ln() + m;
+    lse - logits[target] as f64
+}
+
+/// Zero-shot accuracy per task + macro average.
+pub fn zero_shot(
+    rt: &Runtime,
+    tag: &str,
+    ws: &WeightSet,
+    tasks: &[TaskSet],
+) -> Result<Vec<(String, f64)>> {
+    let graph = format!("logits_score_{tag}");
+    let (gb, gt) = rt.desc.score_shape;
+    let weights = rt.stage_weights(ws)?;
+    let vocab = rt.desc.vocab;
+    let mut out = Vec::new();
+    let mut sum = 0.0;
+    for task in tasks {
+        anyhow::ensure!(task.max_len == gt, "task len {} != graph {gt}", task.max_len);
+        let total = task.n * 4;
+        let mut scores = vec![0.0f64; total];
+        let mut done = 0usize;
+        let mut batch_tokens = vec![0i32; gb * gt];
+        while done < total {
+            let rows = (total - done).min(gb);
+            batch_tokens.fill(0);
+            batch_tokens[..rows * gt]
+                .copy_from_slice(&task.tokens[done * gt..(done + rows) * gt]);
+            let tok_lit = i32_literal(&batch_tokens, &[gb as i64, gt as i64])?;
+            let mut inputs: Vec<&xla::Literal> = vec![&tok_lit];
+            inputs.extend(weights.iter());
+            let parts = rt.execute(&graph, &inputs)?;
+            let logits = literal_to_f32(&parts[0])?;
+            for r in 0..rows {
+                let flat = done + r;
+                let inst = flat / 4;
+                let plen = task.prompt_len[inst] as usize;
+                let tlen = task.len[flat] as usize;
+                let mut nll = 0.0f64;
+                let mut cnt = 0usize;
+                for pos in (plen - 1)..(tlen - 1) {
+                    let tgt = batch_tokens[r * gt + pos + 1] as usize;
+                    let row = &logits[(r * gt + pos) * vocab..(r * gt + pos + 1) * vocab];
+                    nll += nll_of(row, tgt);
+                    cnt += 1;
+                }
+                scores[flat] = -(nll / cnt.max(1) as f64);
+            }
+            done += rows;
+        }
+        let mut correct = 0usize;
+        for inst in 0..task.n {
+            let s = &scores[inst * 4..(inst + 1) * 4];
+            let pred = s
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .context("empty scores")?;
+            if pred as i32 == task.label[inst] {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / task.n as f64;
+        sum += acc;
+        out.push((task.name.clone(), acc));
+    }
+    out.push(("avg".into(), sum / tasks.len() as f64));
+    Ok(out)
+}
+
+/// Accuracy-recovery percentage vs a full-precision reference.
+pub fn recovery(acc: f64, fp_acc: f64) -> f64 {
+    if fp_acc > 0.0 {
+        100.0 * acc / fp_acc
+    } else {
+        0.0
+    }
+}

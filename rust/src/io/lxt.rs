@@ -1,0 +1,181 @@
+//! `.lxt` — the LATMiX tensor container (Rust reader/writer).
+//!
+//! Byte-level contract with `python/compile/lxt.py` (little-endian):
+//!
+//! ```text
+//! magic  b"LXT1"
+//! u32    n_tensors
+//! per tensor:
+//!   u16  name_len, name (utf-8)
+//!   u8   dtype (0 = f32, 1 = i32)
+//!   u8   ndim
+//!   u32 * ndim  dims
+//!   raw  data
+//! ```
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// A named dense tensor (f32 or i32).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: TensorData,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Tensor {
+    pub fn f32(dims: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        Tensor { dims, data: TensorData::F32(data) }
+    }
+
+    pub fn i32(dims: Vec<usize>, data: Vec<i32>) -> Tensor {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        Tensor { dims, data: TensorData::I32(data) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+}
+
+const MAGIC: &[u8; 4] = b"LXT1";
+
+pub fn save_lxt(path: &Path, tensors: &BTreeMap<String, Tensor>) -> Result<()> {
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("create {path:?}"))?,
+    );
+    f.write_all(MAGIC)?;
+    f.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in tensors {
+        let nb = name.as_bytes();
+        f.write_all(&(nb.len() as u16).to_le_bytes())?;
+        f.write_all(nb)?;
+        let dt: u8 = match t.data {
+            TensorData::F32(_) => 0,
+            TensorData::I32(_) => 1,
+        };
+        f.write_all(&[dt, t.dims.len() as u8])?;
+        for d in &t.dims {
+            f.write_all(&(*d as u32).to_le_bytes())?;
+        }
+        match &t.data {
+            TensorData::F32(v) => {
+                for x in v {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+            }
+            TensorData::I32(v) => {
+                for x in v {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+pub fn load_lxt(path: &Path) -> Result<BTreeMap<String, Tensor>> {
+    let raw = std::fs::read(path).with_context(|| format!("read {path:?}"))?;
+    let mut cur = std::io::Cursor::new(raw);
+    let mut magic = [0u8; 4];
+    cur.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{path:?}: bad magic {magic:?}");
+    }
+    let n = read_u32(&mut cur)? as usize;
+    let mut out = BTreeMap::new();
+    for _ in 0..n {
+        let name_len = read_u16(&mut cur)? as usize;
+        let mut nb = vec![0u8; name_len];
+        cur.read_exact(&mut nb)?;
+        let name = String::from_utf8(nb)?;
+        let mut hdr = [0u8; 2];
+        cur.read_exact(&mut hdr)?;
+        let (dt, ndim) = (hdr[0], hdr[1] as usize);
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(read_u32(&mut cur)? as usize);
+        }
+        let count: usize = if ndim == 0 { 1 } else { dims.iter().product() };
+        let data = match dt {
+            0 => {
+                let mut v = vec![0f32; count];
+                let mut buf = vec![0u8; count * 4];
+                cur.read_exact(&mut buf)?;
+                for (i, c) in buf.chunks_exact(4).enumerate() {
+                    v[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+                }
+                TensorData::F32(v)
+            }
+            1 => {
+                let mut v = vec![0i32; count];
+                let mut buf = vec![0u8; count * 4];
+                cur.read_exact(&mut buf)?;
+                for (i, c) in buf.chunks_exact(4).enumerate() {
+                    v[i] = i32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+                }
+                TensorData::I32(v)
+            }
+            other => bail!("{path:?}: unknown dtype {other}"),
+        };
+        out.insert(name, Tensor { dims, data });
+    }
+    Ok(out)
+}
+
+fn read_u32(c: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    c.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u16(c: &mut impl Read) -> Result<u16> {
+    let mut b = [0u8; 2];
+    c.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut m = BTreeMap::new();
+        m.insert("a".into(), Tensor::f32(vec![2, 3], vec![1.0, 2.0, 3.0, -1.0, 0.5, 1e-7]));
+        m.insert("b".into(), Tensor::i32(vec![4], vec![1, -2, 3, 4]));
+        let tmp = std::env::temp_dir().join("latmix_lxt_test.lxt");
+        save_lxt(&tmp, &m).unwrap();
+        let back = load_lxt(&tmp).unwrap();
+        assert_eq!(m, back);
+        std::fs::remove_file(&tmp).ok();
+    }
+}

@@ -1,0 +1,73 @@
+//! `artifacts/manifest.txt` parser: model dimensions, graph inventory, and
+//! the canonical weight-argument order shared with `python/compile/aot.py`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub values: BTreeMap<String, String>,
+    pub graphs: Vec<String>,
+    pub weight_order: Vec<String>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("read {path:?}"))?;
+        let mut values = BTreeMap::new();
+        let mut graphs = Vec::new();
+        let mut weight_order = Vec::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else { continue };
+            match k {
+                "graph" => graphs.push(v.to_string()),
+                "weight_order" => {
+                    weight_order = v.split(',').map(|s| s.to_string()).collect()
+                }
+                _ => {
+                    values.insert(k.to_string(), v.to_string());
+                }
+            }
+        }
+        Ok(Manifest { values, graphs, weight_order })
+    }
+
+    pub fn int(&self, key: &str) -> Result<usize> {
+        self.values
+            .get(key)
+            .with_context(|| format!("manifest missing {key}"))?
+            .parse()
+            .with_context(|| format!("manifest {key} not an int"))
+    }
+
+    pub fn has_graph(&self, name: &str) -> bool {
+        self.graphs.iter().any(|g| g == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_manifest() {
+        let tmp = std::env::temp_dir().join("latmix_manifest_test.txt");
+        std::fs::write(
+            &tmp,
+            "model.d_model=128\nkv_seq=160\nweight_order=embed,lnf\ngraph=decode_fp_b1\ngraph=logits_ppl_fp\n",
+        )
+        .unwrap();
+        let m = Manifest::load(&tmp).unwrap();
+        assert_eq!(m.int("model.d_model").unwrap(), 128);
+        assert_eq!(m.weight_order, vec!["embed", "lnf"]);
+        assert!(m.has_graph("decode_fp_b1"));
+        assert!(!m.has_graph("nope"));
+        std::fs::remove_file(&tmp).ok();
+    }
+}

@@ -1,0 +1,7 @@
+//! Artifact I/O: the `.lxt` tensor container and the build manifest.
+
+pub mod lxt;
+pub mod manifest;
+
+pub use lxt::{load_lxt, save_lxt, Tensor};
+pub use manifest::Manifest;

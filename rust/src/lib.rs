@@ -1,0 +1,54 @@
+//! # latmix
+//!
+//! Production-grade reproduction of **LATMiX: Learnable Affine
+//! Transformations for Microscaling Quantization of LLMs** as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! - **L3 (this crate)** — the request-path coordinator: PJRT runtime,
+//!   continuous-batching serving engine, KV-cache manager, evaluation
+//!   harness, plus every substrate the paper's evaluation needs (MX format
+//!   codecs, dense linear algebra, affine-transform analysis, RTN/GPTQ).
+//! - **L2/L1 (python/, build-time only)** — the JAX transformer, the Pallas
+//!   MX kernels, transform learning, and the AOT lowering that produces
+//!   `artifacts/` (HLO text + `.lxt` weight sets). Python never runs on the
+//!   request path.
+//!
+//! The offline build environment vendors only the `xla` + `anyhow` crates;
+//! everything usually pulled from crates.io (CLI parsing, config, RNG,
+//! property testing, bench harness, async runtime) is implemented in-repo —
+//! see `DESIGN.md` §3.1.
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod io;
+pub mod linalg;
+pub mod model;
+pub mod mx;
+pub mod quant;
+pub mod runtime;
+pub mod server;
+pub mod testing;
+pub mod transform;
+pub mod util;
+
+/// Repo-root-relative artifacts directory (overridable via `LATMIX_ARTIFACTS`).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("LATMIX_ARTIFACTS") {
+        return p.into();
+    }
+    // Look upward from cwd for an `artifacts/manifest.txt`.
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.txt").exists() || cand.is_dir() {
+            return cand;
+        }
+        if !dir.pop() {
+            return "artifacts".into();
+        }
+    }
+}

@@ -1,0 +1,108 @@
+//! Normalized Sylvester Hadamard matrices and the fast in-place block
+//! transform (the serving-side mirror of the L1 `hadamard.py` kernel; used
+//! by the analysis benches and the quantization substrate).
+
+use super::Mat;
+
+/// Normalized Hadamard matrix (H Hᵀ = I); `n` must be a power of two.
+pub fn hadamard(n: usize) -> Mat {
+    assert!(n.is_power_of_two(), "Hadamard size {n} not a power of 2");
+    let mut m = Mat::zeros(n, n);
+    let scale = 1.0 / (n as f32).sqrt();
+    for i in 0..n {
+        for j in 0..n {
+            // H[i][j] = (-1)^{popcount(i & j)} (Sylvester construction)
+            let sign = if (i & j).count_ones() % 2 == 0 { 1.0 } else { -1.0 };
+            m[(i, j)] = sign * scale;
+        }
+    }
+    m
+}
+
+/// Fast Walsh-Hadamard transform of one `block`-sized chunk, in place.
+/// O(B log B) butterflies + 1/sqrt(B) normalization.
+#[inline]
+pub fn fwht_inplace(x: &mut [f32]) {
+    let n = x.len();
+    debug_assert!(n.is_power_of_two());
+    let mut h = 1;
+    while h < n {
+        let mut i = 0;
+        while i < n {
+            for j in i..i + h {
+                let a = x[j];
+                let b = x[j + h];
+                x[j] = a + b;
+                x[j + h] = a - b;
+            }
+            i += h * 2;
+        }
+        h *= 2;
+    }
+    let scale = 1.0 / (n as f32).sqrt();
+    for v in x.iter_mut() {
+        *v *= scale;
+    }
+}
+
+/// Apply the normalized block-Hadamard to each `block`-sized group of `x`
+/// (the online T3 transform). `x.len()` must be a multiple of `block`.
+pub fn block_hadamard_apply(x: &mut [f32], block: usize) {
+    assert_eq!(x.len() % block, 0);
+    for chunk in x.chunks_mut(block) {
+        fwht_inplace(chunk);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn hadamard_orthogonal() {
+        for n in [2usize, 8, 32] {
+            let h = hadamard(n);
+            let hth = h.t().matmul(&h);
+            assert!(hth.sub(&Mat::eye(n)).max_abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn fwht_matches_matrix() {
+        let mut rng = Pcg64::seed(1);
+        let x = rng.normal_vec(32, 1.0);
+        let h = hadamard(32);
+        let expect = h.apply_affine(&x, None);
+        // NOTE: apply_affine computes x @ H; the FWHT computes H x — the
+        // Sylvester H is symmetric so these coincide.
+        let mut got = x.clone();
+        fwht_inplace(&mut got);
+        for (g, e) in got.iter().zip(&expect) {
+            assert!((g - e).abs() < 1e-4, "{g} vs {e}");
+        }
+    }
+
+    #[test]
+    fn fwht_energy_preserving_and_involutive() {
+        let mut rng = Pcg64::seed(2);
+        let x = rng.normal_vec(64, 2.0);
+        let norm = |v: &[f32]| v.iter().map(|a| a * a).sum::<f32>().sqrt();
+        let mut y = x.clone();
+        fwht_inplace(&mut y);
+        assert!((norm(&x) - norm(&y)).abs() < 1e-3);
+        fwht_inplace(&mut y);
+        for (a, b) in x.iter().zip(&y) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn block_apply_is_per_block() {
+        let mut x = vec![0.0f32; 64];
+        x[0] = 1.0; // only first block affected
+        block_hadamard_apply(&mut x, 32);
+        assert!(x[..32].iter().all(|v| v.abs() > 0.0));
+        assert!(x[32..].iter().all(|v| *v == 0.0));
+    }
+}

@@ -1,0 +1,412 @@
+//! Dense linear algebra substrate (row-major `f32` matrices).
+//!
+//! Provides exactly what the LATMiX analysis path needs: matmul, LU-based
+//! inverse/solve, QR, Hadamard construction, spectral norm (power
+//! iteration), condition number, block-diagonal assembly. Not a general
+//! BLAS — shapes here are ≤ a few hundred, called off the hot path; the
+//! serving hot path delegates all heavy math to the compiled XLA artifacts.
+
+pub mod hadamard;
+
+pub use hadamard::{block_hadamard_apply, hadamard};
+
+/// Row-major f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(rows * cols, data.len(), "shape mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut m = Mat::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m[(i, j)] = f(i, j);
+            }
+        }
+        m
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn t(&self) -> Mat {
+        Mat::from_fn(self.cols, self.rows, |i, j| self[(j, i)])
+    }
+
+    /// `self @ other` — blocked i-k-j loop (cache-friendly for row-major).
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            let orow = &mut out.data[i * other.cols..(i + 1) * other.cols];
+            for k in 0..self.cols {
+                let a = self.data[i * self.cols + k];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[k * other.cols..(k + 1) * other.cols];
+                for (o, b) in orow.iter_mut().zip(brow.iter()) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// `x @ self + v` for a row vector `x` (the affine-transform hot call).
+    pub fn apply_affine(&self, x: &[f32], v: Option<&[f32]>) -> Vec<f32> {
+        assert_eq!(x.len(), self.rows);
+        let mut out = match v {
+            Some(v) => v.to_vec(),
+            None => vec![0.0; self.cols],
+        };
+        for (k, &xv) in x.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let row = self.row(k);
+            for (o, r) in out.iter_mut().zip(row) {
+                *o += xv * r;
+            }
+        }
+        out
+    }
+
+    pub fn scale(&self, s: f32) -> Mat {
+        Mat::from_vec(self.rows, self.cols, self.data.iter().map(|x| x * s).collect())
+    }
+
+    pub fn sub(&self, o: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (o.rows, o.cols));
+        Mat::from_vec(
+            self.rows,
+            self.cols,
+            self.data.iter().zip(&o.data).map(|(a, b)| a - b).collect(),
+        )
+    }
+
+    pub fn frobenius(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, x| m.max(x.abs()))
+    }
+
+    /// LU decomposition with partial pivoting. Returns (LU-packed, perm,
+    /// sign) or None if singular.
+    pub fn lu(&self) -> Option<(Mat, Vec<usize>, f32)> {
+        assert_eq!(self.rows, self.cols);
+        let n = self.rows;
+        let mut a = self.clone();
+        let mut perm: Vec<usize> = (0..n).collect();
+        let mut sign = 1.0f32;
+        for k in 0..n {
+            // pivot
+            let mut p = k;
+            let mut best = a[(k, k)].abs();
+            for i in k + 1..n {
+                let v = a[(i, k)].abs();
+                if v > best {
+                    best = v;
+                    p = i;
+                }
+            }
+            if best < 1e-12 {
+                return None;
+            }
+            if p != k {
+                for j in 0..n {
+                    let tmp = a[(k, j)];
+                    a[(k, j)] = a[(p, j)];
+                    a[(p, j)] = tmp;
+                }
+                perm.swap(k, p);
+                sign = -sign;
+            }
+            let piv = a[(k, k)];
+            for i in k + 1..n {
+                let f = a[(i, k)] / piv;
+                a[(i, k)] = f;
+                for j in k + 1..n {
+                    let akj = a[(k, j)];
+                    a[(i, j)] -= f * akj;
+                }
+            }
+        }
+        Some((a, perm, sign))
+    }
+
+    /// Solve `self @ x = b` for each column of `b`.
+    pub fn solve(&self, b: &Mat) -> Option<Mat> {
+        let n = self.rows;
+        assert_eq!(b.rows, n);
+        let (lu, perm, _) = self.lu()?;
+        let mut x = Mat::zeros(n, b.cols);
+        for c in 0..b.cols {
+            // forward (apply perm)
+            let mut y = vec![0.0f32; n];
+            for i in 0..n {
+                let mut s = b[(perm[i], c)];
+                for j in 0..i {
+                    s -= lu[(i, j)] * y[j];
+                }
+                y[i] = s;
+            }
+            // backward
+            for i in (0..n).rev() {
+                let mut s = y[i];
+                for j in i + 1..n {
+                    s -= lu[(i, j)] * x[(j, c)];
+                }
+                x[(i, c)] = s / lu[(i, i)];
+            }
+        }
+        Some(x)
+    }
+
+    pub fn inverse(&self) -> Option<Mat> {
+        self.solve(&Mat::eye(self.rows))
+    }
+
+    pub fn det(&self) -> f32 {
+        match self.lu() {
+            None => 0.0,
+            Some((lu, _, sign)) => {
+                let mut d = sign;
+                for i in 0..self.rows {
+                    d *= lu[(i, i)];
+                }
+                d
+            }
+        }
+    }
+
+    /// Spectral norm (largest singular value) by power iteration on AᵀA.
+    pub fn spectral_norm(&self) -> f32 {
+        let mut v = vec![1.0f32; self.cols];
+        let norm = |x: &[f32]| x.iter().map(|a| a * a).sum::<f32>().sqrt();
+        let mut prev = 0.0f32;
+        for _ in 0..200 {
+            // w = A v ; u = Aᵀ w
+            let mut w = vec![0.0f32; self.rows];
+            for i in 0..self.rows {
+                w[i] = self.row(i).iter().zip(&v).map(|(a, b)| a * b).sum();
+            }
+            let mut u = vec![0.0f32; self.cols];
+            for i in 0..self.rows {
+                let wi = w[i];
+                for (uj, aij) in u.iter_mut().zip(self.row(i)) {
+                    *uj += aij * wi;
+                }
+            }
+            let n = norm(&u);
+            if n == 0.0 {
+                return 0.0;
+            }
+            for x in u.iter_mut() {
+                *x /= n;
+            }
+            let sigma = n.sqrt();
+            if (sigma - prev).abs() <= 1e-6 * sigma.max(1e-12) {
+                return sigma;
+            }
+            prev = sigma;
+            v = u;
+        }
+        prev
+    }
+
+    /// Condition number estimate sigma_max(A) * sigma_max(A^-1).
+    pub fn condition(&self) -> f32 {
+        match self.inverse() {
+            None => f32::INFINITY,
+            Some(inv) => self.spectral_norm() * inv.spectral_norm(),
+        }
+    }
+
+    /// Zero out the `block x block` diagonal blocks (Fig. 3b metric).
+    pub fn off_block_diagonal(&self, block: usize) -> Mat {
+        let mut m = self.clone();
+        let n = self.rows;
+        for o in (0..n).step_by(block) {
+            for i in o..(o + block).min(n) {
+                for j in o..(o + block).min(n) {
+                    m[(i, j)] = 0.0;
+                }
+            }
+        }
+        m
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f32;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f32 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f32 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// Assemble a block-diagonal matrix from square blocks.
+pub fn block_diag(blocks: &[Mat]) -> Mat {
+    let n: usize = blocks.iter().map(|b| b.rows).sum();
+    let mut out = Mat::zeros(n, n);
+    let mut o = 0;
+    for b in blocks {
+        assert_eq!(b.rows, b.cols);
+        for i in 0..b.rows {
+            for j in 0..b.cols {
+                out[(o + i, o + j)] = b[(i, j)];
+            }
+        }
+        o += b.rows;
+    }
+    out
+}
+
+/// Random orthogonal matrix via Gram-Schmidt QR of a Gaussian matrix.
+pub fn random_orthogonal(n: usize, rng: &mut crate::util::Pcg64) -> Mat {
+    let g = Mat::from_vec(n, n, rng.normal_vec(n * n, 1.0));
+    // modified Gram-Schmidt on columns
+    let mut q = g.t(); // rows of q = columns of g
+    for i in 0..n {
+        for j in 0..i {
+            let dot: f32 = (0..n).map(|k| q[(i, k)] * q[(j, k)]).sum();
+            for k in 0..n {
+                let v = q[(j, k)];
+                q[(i, k)] -= dot * v;
+            }
+        }
+        let norm: f32 = (0..n).map(|k| q[(i, k)] * q[(i, k)]).sum::<f32>().sqrt();
+        for k in 0..n {
+            q[(i, k)] /= norm.max(1e-12);
+        }
+    }
+    q.t()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn rand_mat(n: usize, seed: u64) -> Mat {
+        let mut r = Pcg64::seed(seed);
+        Mat::from_vec(n, n, r.normal_vec(n * n, 1.0))
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = rand_mat(16, 1);
+        let i = Mat::eye(16);
+        assert!(a.matmul(&i).sub(&a).max_abs() < 1e-6);
+        assert!(i.matmul(&a).sub(&a).max_abs() < 1e-6);
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        let a = rand_mat(24, 2);
+        let inv = a.inverse().unwrap();
+        let prod = a.matmul(&inv);
+        assert!(prod.sub(&Mat::eye(24)).max_abs() < 1e-3, "{}", prod.sub(&Mat::eye(24)).max_abs());
+    }
+
+    #[test]
+    fn solve_matches_inverse() {
+        let a = rand_mat(12, 3);
+        let b = rand_mat(12, 4);
+        let x = a.solve(&b).unwrap();
+        assert!(a.matmul(&x).sub(&b).max_abs() < 1e-3);
+    }
+
+    #[test]
+    fn det_of_diag() {
+        let mut d = Mat::eye(4);
+        d[(0, 0)] = 2.0;
+        d[(1, 1)] = 3.0;
+        assert!((d.det() - 6.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn spectral_norm_of_diag() {
+        let mut d = Mat::eye(8);
+        d[(3, 3)] = -5.0;
+        assert!((d.spectral_norm() - 5.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn orthogonal_is_orthogonal() {
+        let mut rng = Pcg64::seed(4);
+        let q = random_orthogonal(32, &mut rng);
+        let qtq = q.t().matmul(&q);
+        assert!(qtq.sub(&Mat::eye(32)).max_abs() < 1e-4);
+        assert!((q.condition() - 1.0).abs() < 1e-2);
+    }
+
+    #[test]
+    fn block_diag_assembly() {
+        let b = Mat::eye(2).scale(2.0);
+        let m = block_diag(&[b.clone(), b]);
+        assert_eq!(m.rows, 4);
+        assert_eq!(m[(0, 0)], 2.0);
+        assert_eq!(m[(2, 2)], 2.0);
+        assert_eq!(m[(0, 2)], 0.0);
+    }
+
+    #[test]
+    fn off_block_diagonal_zeroes_blocks() {
+        let a = rand_mat(8, 5);
+        let off = a.off_block_diagonal(4);
+        assert_eq!(off[(0, 0)], 0.0);
+        assert_eq!(off[(5, 6)], 0.0);
+        assert_eq!(off[(0, 5)], a[(0, 5)]);
+    }
+
+    #[test]
+    fn affine_apply_matches_matmul() {
+        let a = rand_mat(8, 6);
+        let mut r = Pcg64::seed(7);
+        let x = r.normal_vec(8, 1.0);
+        let v = r.normal_vec(8, 1.0);
+        let y = a.apply_affine(&x, Some(&v));
+        for j in 0..8 {
+            let expect: f32 = (0..8).map(|k| x[k] * a[(k, j)]).sum::<f32>() + v[j];
+            assert!((y[j] - expect).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,132 @@
+//! `latmix` — the L3 coordinator CLI.
+//!
+//! Subcommands:
+//!   info                          artifact + model summary
+//!   eval   --weights TAG --quant TAG [--ppl-only]
+//!   serve  --weights TAG --quant TAG [--requests N] [--slots N] [--max-new N]
+//!   quantize-info --weights TAG   MX footprint accounting
+//!   variants                      list available weight variants
+
+use anyhow::{Context, Result};
+
+use latmix::cli::Args;
+use latmix::data::{load_ppl_corpus, load_tasks};
+use latmix::eval::{perplexity, zero_shot};
+use latmix::model::{ModelDesc, WeightSet};
+use latmix::mx::{MxConfig, pack::PackedMx};
+use latmix::runtime::Runtime;
+use latmix::server::run_serving;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("info") => info(),
+        Some("variants") => variants(),
+        Some("eval") => eval(&args),
+        Some("serve") => serve(&args),
+        Some("quantize-info") => quantize_info(&args),
+        _ => {
+            eprintln!(
+                "usage: latmix <info|variants|eval|serve|quantize-info> [options]\n\
+                 \n\
+                 eval   --weights TAG --quant TAG [--ppl-only]\n\
+                 serve  --weights TAG --quant TAG [--requests N] [--slots N] [--max-new N]\n\
+                 quantize-info --weights TAG [--format mxfp4]"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn desc() -> Result<ModelDesc> {
+    let art = latmix::artifacts_dir();
+    ModelDesc::load(&art).with_context(|| format!("load manifest from {art:?} (run `make artifacts` first)"))
+}
+
+fn info() -> Result<()> {
+    let d = desc()?;
+    println!("latmix-tiny: d_model={} layers={} heads={} d_ff={} vocab={}", d.d_model, d.n_layers, d.n_heads, d.d_ff, d.vocab);
+    println!("kv_seq={} prefill_len={} graphs={}", d.kv_seq, d.prefill_len, d.graphs.len());
+    for g in &d.graphs {
+        println!("  graph {g}");
+    }
+    Ok(())
+}
+
+fn variants() -> Result<()> {
+    let d = desc()?;
+    for v in WeightSet::available(&d) {
+        println!("{v}");
+    }
+    Ok(())
+}
+
+fn eval(args: &Args) -> Result<()> {
+    let d = desc()?;
+    let wtag = args.opt("weights").context("--weights required")?;
+    let qtag = args.opt("quant").unwrap_or("fp");
+    let rt = Runtime::new(d)?;
+    let ws = WeightSet::load(&rt.desc, wtag)?;
+    let art = latmix::artifacts_dir();
+    let (corpus, n, t) = load_ppl_corpus(&art)?;
+    let ppl = perplexity(&rt, qtag, &ws, &corpus, n, t)?;
+    println!("weights={wtag} quant={qtag} ppl={ppl:.3}");
+    if !args.flag("ppl-only") {
+        let tasks = load_tasks(&art)?;
+        for (name, acc) in zero_shot(&rt, qtag, &ws, &tasks)? {
+            println!("  {name}: {:.2}%", acc * 100.0);
+        }
+    }
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let d = desc()?;
+    let wtag = args.opt("weights").unwrap_or("fp16").to_string();
+    let qtag = args.opt("quant").unwrap_or("fp").to_string();
+    let requests = args.opt_usize("requests", 16);
+    let slots = args.opt_usize("slots", 8);
+    let max_new = args.opt_usize("max-new", 32);
+    let rt = Runtime::new(d)?;
+    let rep = run_serving(&rt, &qtag, &wtag, requests, max_new, slots, 42)?;
+    println!(
+        "graph={} weights={} requests={} wall={:.2}s decode_tok/s={:.1} total_tok/s={:.1}",
+        rep.tag, rep.weights, rep.requests, rep.wall_s, rep.decode_tok_per_s, rep.total_tok_per_s
+    );
+    println!(
+        "ttft p50={:.1}ms p99={:.1}ms  latency p50={:.1}ms p99={:.1}ms",
+        rep.ttft_p50_ms, rep.ttft_p99_ms, rep.latency_p50_ms, rep.latency_p99_ms
+    );
+    Ok(())
+}
+
+fn quantize_info(args: &Args) -> Result<()> {
+    let d = desc()?;
+    let wtag = args.opt("weights").context("--weights required")?;
+    let fmt = args.opt("format").unwrap_or("mxfp4");
+    let ws = WeightSet::load(&d, wtag)?;
+    let cfg = MxConfig::from_name(fmt, None)?;
+    let mut total_f32 = 0usize;
+    let mut total_packed = 0usize;
+    for (name, t) in d.weight_order.iter().zip(&ws.tensors) {
+        if let Ok(data) = t.as_f32() {
+            total_f32 += data.len() * 4;
+            // pack 2-D block-linear weights only (dims divisible by block)
+            if t.dims.len() == 2 && data.len() % cfg.block_size == 0 && name.contains("w") {
+                let packed = PackedMx::pack(data, cfg);
+                total_packed += packed.bytes();
+            } else {
+                total_packed += data.len() * 4;
+            }
+        }
+    }
+    println!(
+        "weights={wtag} params={} f32={:.2}MiB packed({})={:.2}MiB ratio={:.2}x",
+        ws.param_count,
+        total_f32 as f64 / (1 << 20) as f64,
+        fmt,
+        total_packed as f64 / (1 << 20) as f64,
+        total_f32 as f64 / total_packed as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,112 @@
+//! Model descriptor + weight-set handling: the Rust view of the AOT
+//! artifacts. A [`ModelDesc`] is parsed from `artifacts/manifest.txt`; a
+//! [`WeightSet`] is one `.lxt` file reordered into the canonical
+//! argument order shared with `python/compile/aot.py`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::io::{load_lxt, Manifest, Tensor};
+
+/// Static model + artifact dimensions (mirror of python `ModelConfig` plus
+/// the AOT shapes).
+#[derive(Clone, Debug)]
+pub struct ModelDesc {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub kv_seq: usize,
+    pub prefill_len: usize,
+    pub ppl_shape: (usize, usize),
+    pub score_shape: (usize, usize),
+    pub weight_order: Vec<String>,
+    pub graphs: Vec<String>,
+    pub artifacts: PathBuf,
+}
+
+impl ModelDesc {
+    pub fn load(artifacts: &Path) -> Result<ModelDesc> {
+        let m = Manifest::load(&artifacts.join("manifest.txt"))?;
+        let shape = |key: &str| -> Result<(usize, usize)> {
+            let raw = m
+                .values
+                .get(key)
+                .with_context(|| format!("manifest missing {key}"))?;
+            let (a, b) = raw.split_once('x').context("bad shape")?;
+            Ok((a.parse()?, b.parse()?))
+        };
+        Ok(ModelDesc {
+            vocab: m.int("model.vocab")?,
+            d_model: m.int("model.d_model")?,
+            n_layers: m.int("model.n_layers")?,
+            n_heads: m.int("model.n_heads")?,
+            d_ff: m.int("model.d_ff")?,
+            kv_seq: m.int("kv_seq")?,
+            prefill_len: m.int("prefill_len")?,
+            ppl_shape: shape("ppl_shape")?,
+            score_shape: shape("score_shape")?,
+            weight_order: m.weight_order.clone(),
+            graphs: m.graphs.clone(),
+            artifacts: artifacts.to_path_buf(),
+        })
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    pub fn graph_path(&self, name: &str) -> PathBuf {
+        self.artifacts.join("graphs").join(format!("{name}.hlo.txt"))
+    }
+
+    pub fn weights_path(&self, tag: &str) -> PathBuf {
+        self.artifacts.join("weights").join(format!("{tag}.lxt"))
+    }
+}
+
+/// One model variant's weights, ordered for direct use as PJRT arguments.
+#[derive(Clone, Debug)]
+pub struct WeightSet {
+    pub tag: String,
+    pub tensors: Vec<Tensor>,
+    /// Total f32 parameter count (for footprint reporting).
+    pub param_count: usize,
+}
+
+impl WeightSet {
+    /// Load `artifacts/weights/<tag>.lxt` and order per the manifest.
+    pub fn load(desc: &ModelDesc, tag: &str) -> Result<WeightSet> {
+        let path = desc.weights_path(tag);
+        let mut map = load_lxt(&path)?;
+        let mut tensors = Vec::with_capacity(desc.weight_order.len());
+        let mut count = 0usize;
+        for name in &desc.weight_order {
+            let t = map
+                .remove(name)
+                .with_context(|| format!("{path:?} missing weight {name}"))?;
+            count += t.len();
+            tensors.push(t);
+        }
+        Ok(WeightSet { tag: tag.to_string(), tensors, param_count: count })
+    }
+
+    /// Names of weight variants currently present under artifacts/weights.
+    pub fn available(desc: &ModelDesc) -> Vec<String> {
+        let dir = desc.artifacts.join("weights");
+        let mut out = Vec::new();
+        if let Ok(rd) = std::fs::read_dir(dir) {
+            for e in rd.flatten() {
+                if let Some(name) = e.file_name().to_str() {
+                    if let Some(tag) = name.strip_suffix(".lxt") {
+                        out.push(tag.to_string());
+                    }
+                }
+            }
+        }
+        out.sort();
+        out
+    }
+}

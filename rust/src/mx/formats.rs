@@ -1,0 +1,209 @@
+//! Element codecs for MX formats (OCP MX spec v1.0). Bit-exact mirror of
+//! `python/compile/mx/formats.py` — see that module for the semantics.
+
+/// A narrow element format inside an MX block.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ElementFormat {
+    pub name: &'static str,
+    pub is_fp: bool,
+    pub ebits: i32,
+    pub mbits: i32,
+    /// Exponent of the max representable value — the paper's `r_max`.
+    pub emax: i32,
+    pub maxval_bits: u32, // f32 bits of maxval (const-friendly)
+    pub bits: u32,
+}
+
+impl ElementFormat {
+    #[inline]
+    pub fn maxval(&self) -> f32 {
+        f32::from_bits(self.maxval_bits)
+    }
+}
+
+pub const FP4_E2M1: ElementFormat = ElementFormat {
+    name: "fp4_e2m1", is_fp: true, ebits: 2, mbits: 1, emax: 2,
+    maxval_bits: 0x40c00000, // 6.0
+    bits: 4,
+};
+pub const FP6_E2M3: ElementFormat = ElementFormat {
+    name: "fp6_e2m3", is_fp: true, ebits: 2, mbits: 3, emax: 2,
+    maxval_bits: 0x40f00000, // 7.5
+    bits: 6,
+};
+pub const FP8_E4M3: ElementFormat = ElementFormat {
+    name: "fp8_e4m3", is_fp: true, ebits: 4, mbits: 3, emax: 8,
+    maxval_bits: 0x43e00000, // 448.0
+    bits: 8,
+};
+pub const INT4: ElementFormat = ElementFormat {
+    name: "int4", is_fp: false, ebits: 0, mbits: 3, emax: 2,
+    maxval_bits: 0x40e00000, // 7.0
+    bits: 4,
+};
+
+/// Exact floor(log2(a)) for positive finite normal f32 (exponent-field
+/// extraction). Values below the smallest normal return -127, matching the
+/// python `max(a, 1e-38)` guard once downstream clamps (>= -126) apply.
+#[inline]
+pub fn floor_log2(a: f32) -> i32 {
+    debug_assert!(a >= 0.0);
+    let exp = ((a.to_bits() >> 23) & 0xff) as i32;
+    if exp == 0 {
+        -127
+    } else {
+        exp - 127
+    }
+}
+
+#[inline]
+fn exp2i(e: i32) -> f32 {
+    // exact for e in [-126, 127]
+    f32::from_bits((((e + 127) as u32) & 0xff) << 23)
+}
+
+/// QDQ in the scaled domain for a floating-point element format
+/// (round-to-nearest-even on the mantissa grid, saturating, subnormal-aware).
+#[inline]
+pub fn fp_qdq(v: f32, fmt: ElementFormat) -> f32 {
+    debug_assert!(fmt.is_fp);
+    let bias = (1 << (fmt.ebits - 1)) - 1;
+    let emin = 1 - bias;
+    let a = v.abs().min(fmt.maxval());
+    let e = floor_log2(a).clamp(emin, fmt.emax);
+    let step = exp2i(e - fmt.mbits);
+    let q = (a / step).round_ties_even() * step;
+    let q = q.min(fmt.maxval());
+    if v == 0.0 {
+        0.0
+    } else {
+        q.copysign(v)
+    }
+}
+
+/// QDQ in the scaled domain for INT4: round + clamp to [-8, 7].
+#[inline]
+pub fn int_qdq(v: f32, fmt: ElementFormat) -> f32 {
+    debug_assert!(!fmt.is_fp);
+    let lo = -((1 << fmt.mbits) as f32);
+    let hi = ((1 << fmt.mbits) - 1) as f32;
+    v.round_ties_even().clamp(lo, hi)
+}
+
+#[inline]
+pub fn element_qdq(v: f32, fmt: ElementFormat) -> f32 {
+    if fmt.is_fp {
+        fp_qdq(v, fmt)
+    } else {
+        int_qdq(v, fmt)
+    }
+}
+
+/// Encode a scaled FP4 value to its 4-bit code (sign + e2m1), and back.
+/// Used by the bit-packing layer.
+#[inline]
+pub fn fp4_encode(v: f32) -> u8 {
+    let q = fp_qdq(v, FP4_E2M1);
+    let sign = if q.is_sign_negative() && q != 0.0 { 8u8 } else { 0 };
+    let a = q.abs();
+    // grid: 0, .5, 1, 1.5, 2, 3, 4, 6 -> codes 0..7
+    let code = match a {
+        x if x < 0.25 => 0,
+        x if x < 0.75 => 1,
+        x if x < 1.25 => 2,
+        x if x < 1.75 => 3,
+        x if x < 2.5 => 4,
+        x if x < 3.5 => 5,
+        x if x < 5.0 => 6,
+        _ => 7,
+    };
+    sign | code
+}
+
+#[inline]
+pub fn fp4_decode(code: u8) -> f32 {
+    const GRID: [f32; 8] = [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0];
+    let v = GRID[(code & 7) as usize];
+    if code & 8 != 0 {
+        -v
+    } else {
+        v
+    }
+}
+
+/// Encode a scaled INT4 value to its 4-bit two's-complement code, and back.
+#[inline]
+pub fn int4_encode(v: f32) -> u8 {
+    (int_qdq(v, INT4) as i32 & 0xf) as u8
+}
+
+#[inline]
+pub fn int4_decode(code: u8) -> f32 {
+    let s = ((code as i8) << 4) >> 4; // sign-extend low nibble
+    s as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fp4_grid_exact() {
+        for v in [0.0f32, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0] {
+            assert_eq!(fp_qdq(v, FP4_E2M1), v);
+            assert_eq!(fp_qdq(-v, FP4_E2M1), -v);
+        }
+    }
+
+    #[test]
+    fn fp4_saturates_and_ties_even() {
+        assert_eq!(fp_qdq(100.0, FP4_E2M1), 6.0);
+        assert_eq!(fp_qdq(2.5, FP4_E2M1), 2.0); // tie -> even mantissa
+        assert_eq!(fp_qdq(3.5, FP4_E2M1), 4.0);
+        assert_eq!(fp_qdq(0.25, FP4_E2M1), 0.0); // subnormal tie -> 0
+    }
+
+    #[test]
+    fn fp8_max_and_ints() {
+        assert_eq!(fp_qdq(1e9, FP8_E4M3), 448.0);
+        for v in 0..17 {
+            assert_eq!(fp_qdq(v as f32, FP8_E4M3), v as f32);
+        }
+    }
+
+    #[test]
+    fn int4_range() {
+        assert_eq!(int_qdq(100.0, INT4), 7.0);
+        assert_eq!(int_qdq(-100.0, INT4), -8.0);
+        for k in -8..=7 {
+            assert_eq!(int_qdq(k as f32, INT4), k as f32);
+        }
+    }
+
+    #[test]
+    fn floor_log2_exact() {
+        assert_eq!(floor_log2(1.0), 0);
+        assert_eq!(floor_log2(0.9999999), -1);
+        assert_eq!(floor_log2(2.0), 1);
+        assert_eq!(floor_log2(3.9999998), 1);
+        assert_eq!(floor_log2(4.0), 2);
+        assert_eq!(floor_log2(0.5), -1);
+    }
+
+    #[test]
+    fn fp4_codec_roundtrip() {
+        for code in 0u8..16 {
+            let v = fp4_decode(code);
+            let rt = fp4_decode(fp4_encode(v));
+            assert_eq!(v, rt, "code {code}");
+        }
+    }
+
+    #[test]
+    fn int4_codec_roundtrip() {
+        for code in 0u8..16 {
+            let v = int4_decode(code);
+            assert_eq!(int4_decode(int4_encode(v)), v);
+        }
+    }
+}

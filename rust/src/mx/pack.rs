@@ -1,0 +1,127 @@
+//! True bit-packed MX storage: two 4-bit element codes per byte plus one
+//! E8M0 scale byte per block. This is what an MXFP4/MXINT4 tensor costs in
+//! memory (4.25 bits/elem at B=32) — used by the footprint accounting in
+//! `quantize-info` and by the codec throughput benches in the perf pass.
+
+use super::formats::{floor_log2, fp4_decode, fp4_encode, int4_decode, int4_encode};
+use super::quantize::{MxConfig, SCALE_EMAX, SCALE_EMIN};
+
+/// A bit-packed MX tensor (4-bit element formats only).
+#[derive(Clone, Debug)]
+pub struct PackedMx {
+    pub cfg: MxConfig,
+    pub len: usize,
+    /// One E8M0 byte per block: biased exponent (e + 127).
+    pub scales: Vec<u8>,
+    /// Two element codes per byte, low nibble first.
+    pub codes: Vec<u8>,
+}
+
+#[inline]
+fn exp2i(e: i32) -> f32 {
+    f32::from_bits((((e + 127) as u32) & 0xff) << 23)
+}
+
+impl PackedMx {
+    /// Pack `x` (blocks along the flat axis). Requires a 4-bit element
+    /// format ("mxfp4" or "mxint4") and `x.len() % block_size == 0`.
+    pub fn pack(x: &[f32], cfg: MxConfig) -> PackedMx {
+        assert!(cfg.name == "mxfp4" || cfg.name == "mxint4", "pack: 4-bit formats only");
+        assert_eq!(x.len() % cfg.block_size, 0);
+        let nb = x.len() / cfg.block_size;
+        let mut scales = Vec::with_capacity(nb);
+        let mut codes = vec![0u8; (x.len() + 1) / 2];
+        let is_fp = cfg.element.is_fp;
+        for (bi, block) in x.chunks(cfg.block_size).enumerate() {
+            let amax = block.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            let e = if amax > 0.0 {
+                (floor_log2(amax) - cfg.element.emax).clamp(SCALE_EMIN, SCALE_EMAX)
+            } else {
+                0
+            };
+            scales.push((e + 127) as u8);
+            let s = exp2i(e);
+            let base = bi * cfg.block_size;
+            for (j, &v) in block.iter().enumerate() {
+                let code = if is_fp { fp4_encode(v / s) } else { int4_encode(v / s) };
+                let idx = base + j;
+                if idx % 2 == 0 {
+                    codes[idx / 2] |= code;
+                } else {
+                    codes[idx / 2] |= code << 4;
+                }
+            }
+        }
+        PackedMx { cfg, len: x.len(), scales, codes }
+    }
+
+    /// Unpack to f32 (the dequantized values).
+    pub fn unpack(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.len];
+        self.unpack_into(&mut out);
+        out
+    }
+
+    /// Unpack into a preallocated buffer (hot-path variant).
+    pub fn unpack_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.len);
+        let b = self.cfg.block_size;
+        let is_fp = self.cfg.element.is_fp;
+        for (bi, chunk) in out.chunks_mut(b).enumerate() {
+            let s = exp2i(self.scales[bi] as i32 - 127);
+            let base = bi * b;
+            for (j, o) in chunk.iter_mut().enumerate() {
+                let idx = base + j;
+                let byte = self.codes[idx / 2];
+                let code = if idx % 2 == 0 { byte & 0xf } else { byte >> 4 };
+                let v = if is_fp { fp4_decode(code) } else { int4_decode(code) };
+                *o = v * s;
+            }
+        }
+    }
+
+    /// Total packed bytes (codes + scales).
+    pub fn bytes(&self) -> usize {
+        self.codes.len() + self.scales.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mx::quantize::mx_qdq;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn pack_unpack_equals_qdq() {
+        let mut rng = Pcg64::seed(11);
+        for name in ["mxfp4", "mxint4"] {
+            let cfg = MxConfig::from_name(name, Some(32)).unwrap();
+            let x = rng.normal_vec(256, 4.0);
+            let packed = PackedMx::pack(&x, cfg);
+            let unpacked = packed.unpack();
+            let qdq = mx_qdq(&x, 256, &cfg);
+            for (i, (a, b)) in unpacked.iter().zip(&qdq).enumerate() {
+                assert!((a - b).abs() < 1e-6, "{name} idx {i}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn footprint_is_4_25_bits() {
+        let cfg = MxConfig::from_name("mxfp4", Some(32)).unwrap();
+        let x = vec![1.0f32; 1024];
+        let p = PackedMx::pack(&x, cfg);
+        let bits = p.bytes() as f64 * 8.0 / 1024.0;
+        assert!((bits - 4.25).abs() < 1e-9, "{bits}");
+    }
+
+    #[test]
+    fn pack_idempotent_on_qdq_values() {
+        let mut rng = Pcg64::seed(12);
+        let cfg = MxConfig::from_name("mxfp4", Some(16)).unwrap();
+        let x = mx_qdq(&rng.normal_vec(64, 2.0), 64, &cfg);
+        let p = PackedMx::pack(&x, cfg);
+        assert_eq!(p.unpack(), x);
+    }
+}

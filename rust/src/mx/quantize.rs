@@ -1,0 +1,158 @@
+//! Block quantize-dequantize (Eq. 1): shared power-of-two (E8M0) scale per
+//! block + element codec, plus the NVFP4 two-level variant.
+
+use super::formats::{element_qdq, floor_log2, fp_qdq, ElementFormat, FP4_E2M1, FP8_E4M3, INT4, FP6_E2M3};
+
+pub const SCALE_EMIN: i32 = -127;
+pub const SCALE_EMAX: i32 = 127;
+
+/// Full MX tensor-quantization configuration (mirror of python `MXConfig`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MxConfig {
+    pub name: &'static str,
+    pub element: ElementFormat,
+    pub block_size: usize,
+    pub nv: bool,
+}
+
+impl MxConfig {
+    pub fn from_name(name: &str, block_size: Option<usize>) -> anyhow::Result<MxConfig> {
+        let bs = block_size;
+        Ok(match name {
+            "none" => MxConfig { name: "none", element: FP4_E2M1, block_size: bs.unwrap_or(32), nv: false },
+            "mxfp4" => MxConfig { name: "mxfp4", element: FP4_E2M1, block_size: bs.unwrap_or(32), nv: false },
+            "mxint4" => MxConfig { name: "mxint4", element: INT4, block_size: bs.unwrap_or(32), nv: false },
+            "mxfp6" => MxConfig { name: "mxfp6", element: FP6_E2M3, block_size: bs.unwrap_or(32), nv: false },
+            "mxfp8" => MxConfig { name: "mxfp8", element: FP8_E4M3, block_size: bs.unwrap_or(32), nv: false },
+            "nvfp4" => MxConfig { name: "nvfp4", element: FP4_E2M1, block_size: bs.unwrap_or(16), nv: true },
+            other => anyhow::bail!("unknown quant format {other:?}"),
+        })
+    }
+
+    /// Storage bits per element including the amortized shared scale.
+    pub fn bits_per_element(&self) -> f64 {
+        if self.name == "none" {
+            return 32.0;
+        }
+        self.element.bits as f64 + 8.0 / self.block_size as f64
+    }
+}
+
+#[inline]
+fn exp2i(e: i32) -> f32 {
+    f32::from_bits((((e + 127) as u32) & 0xff) << 23)
+}
+
+/// Shared E8M0 scale of one block from its abs-max (Eq. 1).
+#[inline]
+pub fn block_scale(amax: f32, emax: i32) -> f32 {
+    if amax <= 0.0 {
+        return 1.0;
+    }
+    let e = (floor_log2(amax) - emax).clamp(SCALE_EMIN, SCALE_EMAX);
+    exp2i(e)
+}
+
+/// QDQ one contiguous block in place.
+pub fn qdq_block(x: &mut [f32], cfg: &MxConfig, nv_tensor_scale: f32) {
+    let amax = x.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    if cfg.nv {
+        let ts = nv_tensor_scale;
+        let s0 = fp_qdq(amax / (FP4_E2M1.maxval() * ts), FP8_E4M3);
+        let s = if s0 > 0.0 { s0 } else { 1.0 } * ts;
+        for v in x.iter_mut() {
+            *v = s * fp_qdq(*v / s, FP4_E2M1);
+        }
+    } else {
+        let s = block_scale(amax, cfg.element.emax);
+        for v in x.iter_mut() {
+            *v = s * element_qdq(*v / s, cfg.element);
+        }
+    }
+}
+
+/// NVFP4 second-level per-tensor scale (mirror of python `nv_tensor_scale`).
+pub fn nv_tensor_scale(x: &[f32]) -> f32 {
+    let tmax = x.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    if tmax > 0.0 {
+        tmax / (FP4_E2M1.maxval() * FP8_E4M3.maxval())
+    } else {
+        1.0
+    }
+}
+
+/// QDQ a flat tensor whose last axis is `row_len`, blocks along that axis.
+pub fn mx_qdq_rows(x: &mut [f32], row_len: usize, cfg: &MxConfig) {
+    if cfg.name == "none" {
+        return;
+    }
+    assert_eq!(x.len() % row_len, 0);
+    assert_eq!(row_len % cfg.block_size, 0, "row {row_len} vs block {}", cfg.block_size);
+    let ts = if cfg.nv { nv_tensor_scale(x) } else { 1.0 };
+    for row in x.chunks_mut(row_len) {
+        for block in row.chunks_mut(cfg.block_size) {
+            qdq_block(block, cfg, ts);
+        }
+    }
+}
+
+/// Convenience: QDQ a copy.
+pub fn mx_qdq(x: &[f32], row_len: usize, cfg: &MxConfig) -> Vec<f32> {
+    let mut out = x.to_vec();
+    mx_qdq_rows(&mut out, row_len, cfg);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn zero_block_is_zero() {
+        let mut x = vec![0.0f32; 32];
+        qdq_block(&mut x, &MxConfig::from_name("mxfp4", None).unwrap(), 1.0);
+        assert!(x.iter().all(|v| *v == 0.0));
+    }
+
+    #[test]
+    fn scale_is_power_of_two() {
+        assert_eq!(block_scale(6.0, 2), 1.0); // floor(log2 6)=2 -> 2^(2-2)
+        assert_eq!(block_scale(1.0, 2), 0.25);
+        assert_eq!(block_scale(8.0, 2), 2.0);
+    }
+
+    #[test]
+    fn qdq_idempotent_fp4() {
+        let mut rng = Pcg64::seed(9);
+        let cfg = MxConfig::from_name("mxfp4", Some(16)).unwrap();
+        let x = rng.normal_vec(128, 3.0);
+        let q1 = mx_qdq(&x, 64, &cfg);
+        let q2 = mx_qdq(&q1, 64, &cfg);
+        assert_eq!(q1, q2);
+    }
+
+    #[test]
+    fn error_bounded() {
+        let mut rng = Pcg64::seed(10);
+        for name in ["mxfp4", "mxint4", "mxfp6", "mxfp8"] {
+            let cfg = MxConfig::from_name(name, Some(32)).unwrap();
+            let x = rng.normal_vec(256, 10.0);
+            let q = mx_qdq(&x, 256, &cfg);
+            for (block_x, block_q) in x.chunks(32).zip(q.chunks(32)) {
+                let amax = block_x.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+                for (a, b) in block_x.iter().zip(block_q) {
+                    assert!((a - b).abs() <= amax * 0.5 + 1e-6);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bits_accounting() {
+        let c = MxConfig::from_name("mxfp4", None).unwrap();
+        assert!((c.bits_per_element() - 4.25).abs() < 1e-9);
+        let n = MxConfig::from_name("nvfp4", None).unwrap();
+        assert!((n.bits_per_element() - 4.5).abs() < 1e-9);
+    }
+}

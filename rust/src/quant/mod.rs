@@ -1,0 +1,41 @@
+//! Weight quantization substrate (Rust side): RTN and the GPTQ port.
+//!
+//! The canonical weight quantization happens at build time in
+//! `python/compile/gptq.py`; this mirror exists so (a) the error-analysis
+//! benches can sweep quantizers without Python, and (b) the two
+//! implementations cross-check each other (`rust/tests/golden_mx.rs`).
+
+pub mod gptq;
+pub mod rtn;
+
+pub use gptq::gptq_quantize;
+pub use rtn::rtn_quantize;
+
+/// Mean squared error between two equal-length slices.
+pub fn mse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| ((x - y) as f64).powi(2))
+        .sum::<f64>()
+        / a.len() as f64
+}
+
+/// Proxy task loss for weight quantization quality: `tr((W-Q)^T H (W-Q))`,
+/// the GPTQ objective itself.
+pub fn hessian_loss(w: &[f32], q: &[f32], h: &crate::linalg::Mat, d_out: usize) -> f64 {
+    let d_in = h.rows;
+    assert_eq!(w.len(), d_in * d_out);
+    let mut total = 0.0f64;
+    // delta^T H delta summed over output columns
+    for c in 0..d_out {
+        let delta: Vec<f32> = (0..d_in).map(|r| w[r * d_out + c] - q[r * d_out + c]).collect();
+        let hd = h.apply_affine(&delta, None);
+        total += delta
+            .iter()
+            .zip(&hd)
+            .map(|(a, b)| (*a as f64) * (*b as f64))
+            .sum::<f64>();
+    }
+    total
+}

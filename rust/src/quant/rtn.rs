@@ -1,0 +1,56 @@
+//! Round-to-nearest weight quantization: plain MX QDQ of `W (d_in, d_out)`
+//! with blocks along the input (reduction) dimension.
+
+use crate::mx::quantize::{qdq_block, nv_tensor_scale, MxConfig};
+
+/// QDQ `w` (row-major, `d_in x d_out`) with one shared scale per
+/// (input-block, output-column) pair — mirrors `gptq.rtn_quantize` in python.
+pub fn rtn_quantize(w: &[f32], d_in: usize, d_out: usize, cfg: &MxConfig) -> Vec<f32> {
+    assert_eq!(w.len(), d_in * d_out);
+    assert_eq!(d_in % cfg.block_size, 0);
+    let ts = if cfg.nv { nv_tensor_scale(w) } else { 1.0 };
+    let mut out = w.to_vec();
+    let b = cfg.block_size;
+    let mut col_block = vec![0.0f32; b];
+    for g in (0..d_in).step_by(b) {
+        for c in 0..d_out {
+            for j in 0..b {
+                col_block[j] = out[(g + j) * d_out + c];
+            }
+            qdq_block(&mut col_block, cfg, ts);
+            for j in 0..b {
+                out[(g + j) * d_out + c] = col_block[j];
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::mse;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn rtn_error_reasonable() {
+        let mut rng = Pcg64::seed(41);
+        let (d_in, d_out) = (64, 32);
+        let w = rng.normal_vec(d_in * d_out, 0.3);
+        let cfg = MxConfig::from_name("mxfp4", Some(32)).unwrap();
+        let q = rtn_quantize(&w, d_in, d_out, &cfg);
+        let e = mse(&w, &q);
+        let var = w.iter().map(|x| (x * x) as f64).sum::<f64>() / w.len() as f64;
+        assert!(e > 0.0 && e < var * 0.2, "mse {e} var {var}");
+    }
+
+    #[test]
+    fn rtn_idempotent_fp4() {
+        let mut rng = Pcg64::seed(42);
+        let w = rng.normal_vec(32 * 8, 1.0);
+        let cfg = MxConfig::from_name("mxfp4", Some(32)).unwrap();
+        let q1 = rtn_quantize(&w, 32, 8, &cfg);
+        let q2 = rtn_quantize(&q1, 32, 8, &cfg);
+        assert_eq!(q1, q2);
+    }
+}

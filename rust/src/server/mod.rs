@@ -1,0 +1,86 @@
+//! Serving front-end: drives the engine with a synthetic request workload
+//! and reports throughput/latency — the Fig. 4 measurement path and the
+//! `latmix serve` subcommand.
+
+use anyhow::Result;
+
+use crate::coordinator::{Engine, EngineConfig, GenRequest, GenResult};
+use crate::coordinator::engine::{StepExecutor, XlaExecutor};
+use crate::data::serving_workload;
+use crate::model::{ModelDesc, WeightSet};
+use crate::runtime::Runtime;
+use crate::util::Summary;
+
+/// Aggregated serving metrics for one run.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub tag: String,
+    pub weights: String,
+    pub requests: usize,
+    pub wall_s: f64,
+    pub decode_tok_per_s: f64,
+    pub total_tok_per_s: f64,
+    pub ttft_p50_ms: f64,
+    pub ttft_p99_ms: f64,
+    pub latency_p50_ms: f64,
+    pub latency_p99_ms: f64,
+}
+
+impl ServeReport {
+    pub fn from_results(
+        tag: &str,
+        weights: &str,
+        results: &[GenResult],
+        stats: &crate::coordinator::EngineStats,
+    ) -> ServeReport {
+        let mut ttft = Summary::new();
+        let mut lat = Summary::new();
+        let mut total_toks = 0usize;
+        for r in results {
+            ttft.push(r.ttft_s * 1e3);
+            lat.push(r.total_s * 1e3);
+            total_toks += r.prompt_len + r.tokens.len();
+        }
+        ServeReport {
+            tag: tag.to_string(),
+            weights: weights.to_string(),
+            requests: results.len(),
+            wall_s: stats.wall_s,
+            decode_tok_per_s: stats.decode_tok_per_s(),
+            total_tok_per_s: total_toks as f64 / stats.wall_s.max(1e-9),
+            ttft_p50_ms: ttft.percentile(50.0),
+            ttft_p99_ms: ttft.percentile(99.0),
+            latency_p50_ms: lat.percentile(50.0),
+            latency_p99_ms: lat.percentile(99.0),
+        }
+    }
+}
+
+/// Run a closed-loop serving benchmark: submit `n_requests` prompts, run the
+/// engine to completion, report throughput.
+pub fn run_serving(
+    rt: &Runtime,
+    graph_tag: &str,
+    weights_tag: &str,
+    n_requests: usize,
+    max_new: usize,
+    max_slots: usize,
+    seed: u64,
+) -> Result<ServeReport> {
+    let desc: &ModelDesc = &rt.desc;
+    let ws = WeightSet::load(desc, weights_tag)?;
+    let exec = XlaExecutor::new(rt, graph_tag, &ws)?;
+    let max_prompt = exec.prefill_len();
+    let mut engine = Engine::new(
+        exec,
+        EngineConfig { max_slots, eos: -1, ..Default::default() },
+    );
+    for (i, (prompt, m)) in serving_workload(n_requests, max_prompt, max_new, seed)
+        .into_iter()
+        .enumerate()
+    {
+        engine.submit(GenRequest::new(i as u64, prompt, m));
+    }
+    let results = engine.run_to_completion()?;
+    Ok(ServeReport::from_results(graph_tag, weights_tag, &results, &engine.stats))
+}

@@ -1,0 +1,174 @@
+//! Property-testing mini-framework (proptest is not vendorable offline).
+//!
+//! `forall(cases, gen, prop)` runs `prop` on `cases` generated inputs; on
+//! failure it performs a bounded greedy shrink via the generator's
+//! `shrink` hook and reports the smallest failing case. Deterministic:
+//! seeded from the property name unless `LATMIX_PT_SEED` is set.
+//!
+//! Used for the coordinator invariants (routing, batching, KV-slot state)
+//! and the MX codec round-trip properties — see `rust/tests/`.
+
+use crate::util::Pcg64;
+
+/// A generator of random cases plus an optional shrinker.
+pub trait Gen {
+    type Value: std::fmt::Debug + Clone;
+    fn generate(&self, rng: &mut Pcg64) -> Self::Value;
+    /// Candidate smaller versions of `v` (tried in order).
+    fn shrink(&self, _v: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Run `prop` on `cases` random inputs; panic with the minimal failing case.
+pub fn forall<G: Gen>(name: &str, cases: usize, gen: &G, prop: impl Fn(&G::Value) -> Result<(), String>) {
+    let seed = std::env::var("LATMIX_PT_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| fnv1a(name.as_bytes()));
+    let mut rng = Pcg64::seed(seed);
+    for case in 0..cases {
+        let v = gen.generate(&mut rng);
+        if let Err(msg) = prop(&v) {
+            // greedy shrink, bounded
+            let mut best = v.clone();
+            let mut best_msg = msg;
+            let mut budget = 200;
+            'outer: while budget > 0 {
+                for cand in gen.shrink(&best) {
+                    budget -= 1;
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                    if budget == 0 {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property {name} failed (case {case}, seed {seed}):\n  input: {best:?}\n  error: {best_msg}"
+            );
+        }
+    }
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in bytes {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Generator: f32 vector with log-uniform magnitude spread (stress for MX).
+pub struct VecGen {
+    pub min_len: usize,
+    pub max_len: usize,
+    pub multiple_of: usize,
+    pub log_scale_range: (f32, f32),
+}
+
+impl Gen for VecGen {
+    type Value = Vec<f32>;
+
+    fn generate(&self, rng: &mut Pcg64) -> Vec<f32> {
+        let span = (self.max_len - self.min_len) / self.multiple_of;
+        let len = self.min_len + self.multiple_of * rng.below(span as u64 + 1) as usize;
+        let (lo, hi) = self.log_scale_range;
+        let scale = (lo + rng.f32() * (hi - lo)).exp2();
+        (0..len).map(|_| rng.normal() * scale).collect()
+    }
+
+    fn shrink(&self, v: &Vec<f32>) -> Vec<Vec<f32>> {
+        let mut out = Vec::new();
+        if v.len() > self.min_len {
+            out.push(v[..v.len() - self.multiple_of].to_vec());
+            out.push(v[self.multiple_of..].to_vec());
+        }
+        // zero half the entries
+        if v.iter().any(|x| *x != 0.0) {
+            let mut z = v.clone();
+            for x in z.iter_mut().skip(1).step_by(2) {
+                *x = 0.0;
+            }
+            if &z != v {
+                out.push(z);
+            }
+        }
+        out
+    }
+}
+
+/// Generator: small usize in [lo, hi].
+pub struct UsizeGen(pub usize, pub usize);
+
+impl Gen for UsizeGen {
+    type Value = usize;
+
+    fn generate(&self, rng: &mut Pcg64) -> usize {
+        self.0 + rng.below((self.1 - self.0 + 1) as u64) as usize
+    }
+
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        if *v > self.0 {
+            vec![self.0, (self.0 + *v) / 2, *v - 1]
+        } else {
+            vec![]
+        }
+    }
+}
+
+/// Generator: a random "event script" for the coordinator state machines —
+/// a list of (op_code, value) pairs interpreted by the test.
+pub struct ScriptGen {
+    pub max_len: usize,
+    pub ops: usize,
+    pub max_value: u64,
+}
+
+impl Gen for ScriptGen {
+    type Value = Vec<(u8, u64)>;
+
+    fn generate(&self, rng: &mut Pcg64) -> Vec<(u8, u64)> {
+        let len = 1 + rng.below(self.max_len as u64) as usize;
+        (0..len)
+            .map(|_| (rng.below(self.ops as u64) as u8, rng.below(self.max_value.max(1))))
+            .collect()
+    }
+
+    fn shrink(&self, v: &Vec<(u8, u64)>) -> Vec<Vec<(u8, u64)>> {
+        let mut out = Vec::new();
+        if v.len() > 1 {
+            out.push(v[..v.len() / 2].to_vec());
+            out.push(v[v.len() / 2..].to_vec());
+            out.push(v[..v.len() - 1].to_vec());
+            out.push(v[1..].to_vec());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        forall("sum_nonneg", 50, &VecGen { min_len: 8, max_len: 64, multiple_of: 8, log_scale_range: (-4.0, 4.0) }, |v| {
+            let s: f32 = v.iter().map(|x| x * x).sum();
+            if s >= 0.0 { Ok(()) } else { Err(format!("negative {s}")) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property must_fail failed")]
+    fn failing_property_shrinks() {
+        forall("must_fail", 10, &UsizeGen(0, 100), |v| {
+            if *v < 3 { Ok(()) } else { Err("too big".into()) }
+        });
+    }
+}

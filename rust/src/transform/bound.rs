@@ -1,0 +1,98 @@
+//! Theorem 3.3 numerics: evaluate the two factors of the MX quantization
+//! error bound —  `||A^{-1}||_σ^2 / N_B * Σ_i M_i`  with
+//! `M_i = E[(max_{j∈I_i} |T(x)_j|)^2]` — on empirical features.
+//!
+//! The bench `fig2_mse` prints both the empirical E(T) and this bound to
+//! show they move together (the paper's design argument), and
+//! `examples/error_analysis.rs` walks through the Dirac-delta example of
+//! Sec. 3.1.
+
+use super::Affine;
+
+/// `M_i` estimates: expected squared block max of the transformed features.
+pub fn block_max_moments(x: &[f32], d: usize, t: &Affine, block: usize) -> Vec<f64> {
+    assert_eq!(d % block, 0);
+    let y = t.forward_rows(x);
+    let nb = d / block;
+    let rows = x.len() / d;
+    let mut out = vec![0.0f64; nb];
+    for r in 0..rows {
+        for i in 0..nb {
+            let mut m = 0.0f32;
+            for j in 0..block {
+                m = m.max(y[r * d + i * block + j].abs());
+            }
+            out[i] += (m as f64) * (m as f64);
+        }
+    }
+    for o in out.iter_mut() {
+        *o /= rows as f64;
+    }
+    out
+}
+
+/// The Theorem 3.3 upper-bound surrogate (up to the fixed format constant):
+/// `||A^{-1}||_σ^2 * mean_i M_i`.
+pub fn theorem_bound(x: &[f32], d: usize, t: &Affine, block: usize) -> f64 {
+    let inv_norm = t.inverse_matrix().spectral_norm() as f64;
+    let moments = block_max_moments(x, d, t, block);
+    let mean_m: f64 = moments.iter().sum::<f64>() / moments.len() as f64;
+    inv_norm * inv_norm * mean_m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{hadamard, Mat};
+    use crate::mx::MxConfig;
+    use crate::transform::transformation_mse;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn bound_dominates_error_up_to_constant() {
+        // The bound differs from E(T) by the format constant C_Q 2^{-2 r};
+        // check monotone consistency instead of absolute domination.
+        let mut rng = Pcg64::seed(31);
+        let d = 64;
+        let rows = 64;
+        let mut x = rng.normal_vec(d * rows, 0.1);
+        for r in 0..rows {
+            x[r * d + 5] = 15.0;
+        }
+        let cfg = MxConfig::from_name("mxfp4", Some(32)).unwrap();
+        let id = Affine::identity(d);
+        let h = Affine::new(hadamard(d), vec![0.0; d]).unwrap();
+        let e_id = transformation_mse(&x, d, &id, &cfg);
+        let e_h = transformation_mse(&x, d, &h, &cfg);
+        let b_id = theorem_bound(&x, d, &id, 32);
+        let b_h = theorem_bound(&x, d, &h, 32);
+        assert!(e_h < e_id);
+        assert!(b_h < b_id, "bound should track: {b_h} vs {b_id}");
+    }
+
+    #[test]
+    fn dirac_example_from_section_3_1() {
+        // x = [10, 1, 0.5, 0.5], B = 2: H_4 reduces block-1 max but raises
+        // block-2 max — exactly the paper's illustration.
+        let x = [10.0f32, 1.0, 0.5, 0.5];
+        let id = Affine::identity(4);
+        // normalized Walsh-Hadamard: x H = [6, 4.5, 5, 4.5] as in the paper
+        let h4 = Affine::new(hadamard(4), vec![0.0; 4]).unwrap();
+        let m_id = block_max_moments(&x, 4, &id, 2);
+        let m_h = block_max_moments(&x, 4, &h4, 2);
+        assert!(m_h[0] < m_id[0], "block 1 improves: {m_h:?} vs {m_id:?}");
+        assert!(m_h[1] > m_id[1], "block 2 degrades: {m_h:?} vs {m_id:?}");
+    }
+
+    #[test]
+    fn inverse_norm_tradeoff() {
+        // Shrinking one direction of A reduces block maxima but blows up
+        // ||A^{-1}||_σ — the tension Theorem 3.3 formalizes.
+        let d = 8;
+        let mut a = Mat::eye(d);
+        a[(0, 0)] = 0.01;
+        let t = Affine::new(a, vec![0.0; d]).unwrap();
+        let inv_norm = t.inverse_matrix().spectral_norm();
+        assert!(inv_norm > 50.0);
+    }
+}

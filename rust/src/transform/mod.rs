@@ -1,0 +1,179 @@
+//! Affine-transform analysis substrate: apply/invert transforms, measure the
+//! transformation MSE E(T) (Eq. 2), and evaluate the Theorem 3.3 bound —
+//! the machinery behind the Fig. 2 benches and `examples/error_analysis.rs`.
+
+pub mod bound;
+
+use crate::linalg::Mat;
+use crate::mx::{mx_qdq_rows, MxConfig};
+
+/// An invertible affine transformation `T(x) = x A + v` (row-vector
+/// convention, matching `python/compile/transforms.py`).
+#[derive(Clone, Debug)]
+pub struct Affine {
+    pub a: Mat,
+    pub v: Vec<f32>,
+    a_inv: Mat,
+}
+
+impl Affine {
+    pub fn new(a: Mat, v: Vec<f32>) -> anyhow::Result<Affine> {
+        anyhow::ensure!(a.rows == a.cols, "A must be square");
+        anyhow::ensure!(v.len() == a.cols, "v dim mismatch");
+        let a_inv = a
+            .inverse()
+            .ok_or_else(|| anyhow::anyhow!("transform matrix is singular"))?;
+        Ok(Affine { a, v, a_inv })
+    }
+
+    pub fn identity(d: usize) -> Affine {
+        Affine { a: Mat::eye(d), v: vec![0.0; d], a_inv: Mat::eye(d) }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.a.rows
+    }
+
+    pub fn inverse_matrix(&self) -> &Mat {
+        &self.a_inv
+    }
+
+    /// `y = x A + v` for each row of `x` (flat, row-major, `d` columns).
+    pub fn forward_rows(&self, x: &[f32]) -> Vec<f32> {
+        let d = self.dim();
+        assert_eq!(x.len() % d, 0);
+        let mut out = Vec::with_capacity(x.len());
+        for row in x.chunks(d) {
+            out.extend(self.a.apply_affine(row, Some(&self.v)));
+        }
+        out
+    }
+
+    /// `x = (y - v) A^{-1}` for each row of `y`.
+    pub fn backward_rows(&self, y: &[f32]) -> Vec<f32> {
+        let d = self.dim();
+        assert_eq!(y.len() % d, 0);
+        let mut out = Vec::with_capacity(y.len());
+        let mut tmp = vec![0.0f32; d];
+        for row in y.chunks(d) {
+            for (t, (a, b)) in tmp.iter_mut().zip(row.iter().zip(&self.v)) {
+                *t = a - b;
+            }
+            out.extend(self.a_inv.apply_affine(&tmp, None));
+        }
+        out
+    }
+}
+
+/// Transformation MSE `E(T)` (Eq. 2) estimated on feature rows `x`:
+/// `mean_rows ||x - T^{-1}(Q(T(x)))||^2 / d`.
+pub fn transformation_mse(x: &[f32], d: usize, t: &Affine, cfg: &MxConfig) -> f64 {
+    assert_eq!(x.len() % d, 0);
+    let mut y = t.forward_rows(x);
+    mx_qdq_rows(&mut y, d, cfg);
+    let back = t.backward_rows(&y);
+    let n_rows = x.len() / d;
+    let mut total = 0.0f64;
+    for (a, b) in x.iter().zip(&back) {
+        let e = (*a - *b) as f64;
+        total += e * e;
+    }
+    total / (n_rows as f64) / (d as f64)
+}
+
+/// Per-MX-block quantization error profile (Fig. 2c):
+/// `E_B^i(T) = mean over rows of mean_j ((x - T^{-1} Q T x)_j)^2` per block i.
+pub fn per_block_error(x: &[f32], d: usize, t: &Affine, cfg: &MxConfig) -> Vec<f64> {
+    let b = cfg.block_size;
+    assert_eq!(d % b, 0);
+    let mut y = t.forward_rows(x);
+    mx_qdq_rows(&mut y, d, cfg);
+    let back = t.backward_rows(&y);
+    let nb = d / b;
+    let n_rows = x.len() / d;
+    let mut out = vec![0.0f64; nb];
+    for r in 0..n_rows {
+        for i in 0..nb {
+            for j in 0..b {
+                let idx = r * d + i * b + j;
+                let e = (x[idx] - back[idx]) as f64;
+                out[i] += e * e;
+            }
+        }
+    }
+    for o in out.iter_mut() {
+        *o /= (n_rows * b) as f64;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{hadamard, random_orthogonal};
+    use crate::util::Pcg64;
+
+    #[test]
+    fn forward_backward_roundtrip() {
+        let mut rng = Pcg64::seed(21);
+        let a = random_orthogonal(32, &mut rng);
+        let v = rng.normal_vec(32, 1.0);
+        let t = Affine::new(a, v).unwrap();
+        let x = rng.normal_vec(32 * 4, 2.0);
+        let back = t.backward_rows(&t.forward_rows(&x));
+        for (p, q) in x.iter().zip(&back) {
+            assert!((p - q).abs() < 1e-3, "{p} vs {q}");
+        }
+    }
+
+    #[test]
+    fn identity_mse_equals_plain_qdq_error() {
+        let mut rng = Pcg64::seed(22);
+        let d = 64;
+        let x = rng.normal_vec(d * 16, 1.0);
+        let cfg = MxConfig::from_name("mxfp4", Some(32)).unwrap();
+        let t = Affine::identity(d);
+        let e = transformation_mse(&x, d, &t, &cfg);
+        // direct computation
+        let q = crate::mx::mx_qdq(&x, d, &cfg);
+        let direct: f64 = x
+            .iter()
+            .zip(&q)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            / 16.0
+            / d as f64;
+        assert!((e - direct).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hadamard_reduces_outlier_mse() {
+        // One huge channel: full Hadamard spreads it -> lower E(T).
+        let mut rng = Pcg64::seed(23);
+        let d = 64;
+        let rows = 32;
+        let mut x = rng.normal_vec(d * rows, 0.05);
+        for r in 0..rows {
+            x[r * d + 3] = 20.0 + rng.normal();
+        }
+        let cfg = MxConfig::from_name("mxfp4", Some(32)).unwrap();
+        let e_id = transformation_mse(&x, d, &Affine::identity(d), &cfg);
+        let h = hadamard(d);
+        let t = Affine::new(h, vec![0.0; d]).unwrap();
+        let e_h = transformation_mse(&x, d, &t, &cfg);
+        assert!(e_h < e_id, "hadamard {e_h} vs identity {e_id}");
+    }
+
+    #[test]
+    fn per_block_error_sums_to_mse() {
+        let mut rng = Pcg64::seed(24);
+        let d = 64;
+        let x = rng.normal_vec(d * 8, 1.5);
+        let cfg = MxConfig::from_name("mxfp4", Some(16)).unwrap();
+        let t = Affine::identity(d);
+        let blocks = per_block_error(&x, d, &t, &cfg);
+        let mse = transformation_mse(&x, d, &t, &cfg);
+        let avg: f64 = blocks.iter().sum::<f64>() / blocks.len() as f64;
+        assert!((avg - mse).abs() < 1e-9, "{avg} vs {mse}");
+    }
+}

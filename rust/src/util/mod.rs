@@ -1,0 +1,7 @@
+//! Small utilities: deterministic RNG and summary statistics.
+
+pub mod rng;
+pub mod stats;
+
+pub use rng::Pcg64;
+pub use stats::Summary;

@@ -1,0 +1,235 @@
+//! Property tests on the coordinator invariants (routing, batching, KV
+//! state) and the MX codecs, using the in-repo `testing` framework
+//! (proptest is not vendorable offline; DESIGN.md §3.1).
+
+use latmix::coordinator::engine::{Engine, EngineConfig, MockExecutor};
+use latmix::coordinator::{Batcher, GenRequest, KvCache, Router, SchedulerPolicy};
+use latmix::mx::{mx_qdq, pack::PackedMx, MxConfig};
+use latmix::testing::{forall, ScriptGen, UsizeGen, VecGen};
+use latmix::util::Pcg64;
+
+#[test]
+fn prop_mx_qdq_idempotent_fp_formats() {
+    let gen = VecGen { min_len: 32, max_len: 256, multiple_of: 32, log_scale_range: (-8.0, 8.0) };
+    for fmt in ["mxfp4", "mxfp6", "mxfp8"] {
+        let cfg = MxConfig::from_name(fmt, Some(32)).unwrap();
+        forall(&format!("qdq_idempotent_{fmt}"), 40, &gen, |v| {
+            let q1 = mx_qdq(v, v.len(), &cfg);
+            let q2 = mx_qdq(&q1, v.len(), &cfg);
+            if q1 == q2 {
+                Ok(())
+            } else {
+                Err("second QDQ changed values".into())
+            }
+        });
+    }
+}
+
+#[test]
+fn prop_mx_qdq_sign_and_zero_preserving() {
+    let gen = VecGen { min_len: 32, max_len: 128, multiple_of: 32, log_scale_range: (-10.0, 10.0) };
+    for fmt in ["mxfp4", "mxint4", "nvfp4"] {
+        let cfg = MxConfig::from_name(fmt, Some(16)).unwrap();
+        forall(&format!("qdq_sign_{fmt}"), 40, &gen, |v| {
+            let q = mx_qdq(v, v.len(), &cfg);
+            for (a, b) in v.iter().zip(&q) {
+                if *a == 0.0 && *b != 0.0 {
+                    return Err(format!("zero became {b}"));
+                }
+                if a * b < 0.0 {
+                    return Err(format!("sign flip {a} -> {b}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}
+
+#[test]
+fn prop_pack_unpack_matches_qdq() {
+    let gen = VecGen { min_len: 32, max_len: 512, multiple_of: 32, log_scale_range: (-6.0, 6.0) };
+    for fmt in ["mxfp4", "mxint4"] {
+        let cfg = MxConfig::from_name(fmt, Some(32)).unwrap();
+        forall(&format!("pack_roundtrip_{fmt}"), 40, &gen, |v| {
+            let packed = PackedMx::pack(v, cfg);
+            let un = packed.unpack();
+            let qdq = mx_qdq(v, v.len(), &cfg);
+            for (i, (a, b)) in un.iter().zip(&qdq).enumerate() {
+                if (a - b).abs() > 1e-6 {
+                    return Err(format!("idx {i}: packed {a} vs qdq {b}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}
+
+/// Batcher: no request lost or duplicated, FIFO preserved, batch <= cap.
+#[test]
+fn prop_batcher_conservation() {
+    let gen = ScriptGen { max_len: 60, ops: 2, max_value: 9 };
+    forall("batcher_conservation", 60, &gen, |script| {
+        let mut b = Batcher::new(vec![1, 2, 4, 8]);
+        let mut next_id = 0u64;
+        let mut pushed = Vec::new();
+        let mut admitted = Vec::new();
+        for (op, val) in script {
+            match op % 2 {
+                0 => {
+                    b.push(GenRequest::new(next_id, vec![1], 4));
+                    pushed.push(next_id);
+                    next_id += 1;
+                }
+                _ => {
+                    let batch = b.admit(*val as usize + 1);
+                    if batch.len() > 8 {
+                        return Err(format!("batch {} exceeds cap", batch.len()));
+                    }
+                    admitted.extend(batch.iter().map(|r| r.id));
+                }
+            }
+        }
+        admitted.extend(b.admit(usize::MAX).iter().map(|r| r.id));
+        while b.pending() > 0 {
+            admitted.extend(b.admit(usize::MAX).iter().map(|r| r.id));
+        }
+        if admitted != pushed {
+            return Err(format!("order/conservation broken: {admitted:?} vs {pushed:?}"));
+        }
+        Ok(())
+    });
+}
+
+/// KV cache: alloc/free scripts never double-allocate, never leak capacity.
+#[test]
+fn prop_kv_slot_accounting() {
+    let gen = ScriptGen { max_len: 80, ops: 2, max_value: 12 };
+    forall("kv_slots", 60, &gen, |script| {
+        let cap = 6;
+        let mut kv = KvCache::new(cap, 2, 8, 4);
+        let mut live: Vec<u64> = Vec::new();
+        for (op, val) in script {
+            match op % 2 {
+                0 => {
+                    let id = *val;
+                    let ok = kv.alloc(id).is_ok();
+                    let should = live.len() < cap && !live.contains(&id);
+                    if ok != should {
+                        return Err(format!("alloc({id}) = {ok}, expected {should}"));
+                    }
+                    if ok {
+                        live.push(id);
+                    }
+                }
+                _ => {
+                    let id = *val;
+                    let ok = kv.free(id);
+                    let should = live.contains(&id);
+                    if ok != should {
+                        return Err(format!("free({id}) = {ok}, expected {should}"));
+                    }
+                    live.retain(|x| *x != id);
+                }
+            }
+            if kv.free_slots() != cap - live.len() {
+                return Err("capacity leak".into());
+            }
+            let mut ids = kv.ids();
+            let mut expect = live.clone();
+            ids.sort_unstable();
+            expect.sort_unstable();
+            if ids != expect {
+                return Err(format!("live set mismatch {ids:?} vs {expect:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Router: loads are balanced within 1 and conserve in-flight counts.
+#[test]
+fn prop_router_balance() {
+    let gen = UsizeGen(1, 64);
+    forall("router_balance", 30, &gen, |n| {
+        let mut r = Router::new(4);
+        let mut ids = Vec::new();
+        for _ in 0..*n {
+            let (req, _) = r.route(vec![1], 4);
+            ids.push(req.id);
+        }
+        let max = r.loads().iter().max().unwrap();
+        let min = r.loads().iter().min().unwrap();
+        if max - min > 1 {
+            return Err(format!("imbalance {:?}", r.loads()));
+        }
+        if r.in_flight() != *n {
+            return Err("in-flight count wrong".into());
+        }
+        for id in ids {
+            r.mark_done(id);
+        }
+        if r.loads().iter().sum::<usize>() != 0 {
+            return Err("loads not freed".into());
+        }
+        Ok(())
+    });
+}
+
+/// Engine end-to-end (mock executor): every submitted request completes with
+/// exactly the requested number of tokens, under random workload shapes.
+#[test]
+fn prop_engine_completes_all() {
+    let gen = ScriptGen { max_len: 12, ops: 1, max_value: 6 };
+    forall("engine_completion", 25, &gen, |script| {
+        let mut e = Engine::new(
+            MockExecutor::default(),
+            EngineConfig { max_slots: 3, policy: SchedulerPolicy::PrefillPriority, eos: -1 },
+        );
+        let mut rng = Pcg64::seed(script.len() as u64);
+        let mut want = Vec::new();
+        for (i, (_, val)) in script.iter().enumerate() {
+            let plen = 1 + (*val as usize % 6);
+            let gen_len = 1 + rng.below(5) as usize;
+            let prompt: Vec<i32> = (0..plen as i32).collect();
+            e.submit(GenRequest::new(i as u64, prompt, gen_len));
+            want.push(gen_len);
+        }
+        let out = e.run_to_completion().map_err(|e| e.to_string())?;
+        if out.len() != script.len() {
+            return Err(format!("{} of {} completed", out.len(), script.len()));
+        }
+        for (r, w) in out.iter().zip(&want) {
+            if r.tokens.len() != *w {
+                return Err(format!("req {} got {} tokens, want {w}", r.id, r.tokens.len()));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Mock-engine determinism: same workload -> same tokens (no state bleed
+/// between lanes in gather/scatter).
+#[test]
+fn prop_engine_deterministic() {
+    let gen = UsizeGen(1, 8);
+    forall("engine_deterministic", 15, &gen, |n| {
+        let run = || {
+            let mut e = Engine::new(
+                MockExecutor::default(),
+                EngineConfig { max_slots: 4, policy: SchedulerPolicy::PrefillPriority, eos: -1 },
+            );
+            for i in 0..*n {
+                e.submit(GenRequest::new(i as u64, vec![i as i32, 7], 5));
+            }
+            e.run_to_completion()
+                .unwrap()
+                .into_iter()
+                .map(|r| r.tokens)
+                .collect::<Vec<_>>()
+        };
+        if run() != run() {
+            return Err("nondeterministic generation".into());
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,62 @@
+//! Cross-language golden checks: the Rust MX codecs must agree with the
+//! Python reference on the exact tensors in `artifacts/golden/mx_qdq.lxt`
+//! (written by `python/compile/aot.py::emit_goldens`).
+//!
+//! Contract: <= 1 ULP everywhere, and bit-exact for the 4-bit grids.
+//! XLA's CPU `exp2` can return a power of two 1 ULP low (e.g. 2^-13 as
+//! 0x3a9fffff); the Rust side constructs scales exactly from the exponent
+//! bits, so fp8/fp6 values (fine mantissa grids) may differ by that ULP
+//! while the coarse fp4/int4 grids absorb it.
+//! NVFP4 (non-power-of-two scale divisions): <= 2 ULP relative.
+
+use latmix::io::load_lxt;
+use latmix::mx::{mx_qdq, MxConfig};
+
+fn golden_path() -> Option<std::path::PathBuf> {
+    let p = latmix::artifacts_dir().join("golden").join("mx_qdq.lxt");
+    p.exists().then_some(p)
+}
+
+#[test]
+fn golden_mx_qdq_cross_check() {
+    let Some(path) = golden_path() else {
+        eprintln!("skipping: artifacts/golden/mx_qdq.lxt missing (run `make artifacts`)");
+        return;
+    };
+    let map = load_lxt(&path).unwrap();
+    let input = map["input"].as_f32().unwrap();
+    let row = map["input"].dims[1];
+    let mut checked = 0;
+    for (name, tensor) in &map {
+        if name == "input" {
+            continue;
+        }
+        let (fmt, block) = name.rsplit_once("_b").unwrap();
+        let cfg = MxConfig::from_name(fmt, Some(block.parse().unwrap())).unwrap();
+        let expect = tensor.as_f32().unwrap();
+        let got = mx_qdq(input, row, &cfg);
+        if fmt == "mxfp4" || fmt == "mxint4" {
+            // coarse 4-bit grids absorb XLA's exp2 ULP error: bit-exact.
+            for (i, (e, g)) in expect.iter().zip(&got).enumerate() {
+                assert!(
+                    e.to_bits() == g.to_bits(),
+                    "{name}[{i}]: python {e} ({:#x}) vs rust {g} ({:#x})",
+                    e.to_bits(),
+                    g.to_bits()
+                );
+            }
+        } else {
+            // fp6/fp8 mantissa grids expose the exp2 ULP, nvfp4 divides by
+            // non-powers-of-two: agree to ~1e-6 relative.
+            for (i, (e, g)) in expect.iter().zip(&got).enumerate() {
+                let tol = e.abs().max(1e-30) * 1e-6;
+                assert!(
+                    (e - g).abs() <= tol,
+                    "{name}[{i}]: python {e} vs rust {g}"
+                );
+            }
+        }
+        checked += 1;
+    }
+    assert!(checked >= 15, "expected >= 15 golden format/block combos, got {checked}");
+}

@@ -1,0 +1,127 @@
+//! Integration tests over the real PJRT runtime + AOT artifacts.
+//!
+//! These need `make artifacts` (graphs + fp_raw weights); they self-skip
+//! with a notice when artifacts are absent so `cargo test` stays green on a
+//! fresh clone.
+
+use latmix::coordinator::engine::StepExecutor;
+use latmix::coordinator::{Engine, EngineConfig, GenRequest};
+use latmix::data::{load_ppl_corpus, load_tasks};
+use latmix::eval::{perplexity, zero_shot};
+use latmix::model::{ModelDesc, WeightSet};
+use latmix::runtime::Runtime;
+
+fn runtime() -> Option<Runtime> {
+    let art = latmix::artifacts_dir();
+    if !art.join("manifest.txt").exists() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return None;
+    }
+    let desc = ModelDesc::load(&art).unwrap();
+    if !desc.weights_path("fp_raw").exists() {
+        eprintln!("skipping: no fp_raw weights (run `make pretrain artifacts`)");
+        return None;
+    }
+    Some(Runtime::new(desc).unwrap())
+}
+
+#[test]
+fn fp_perplexity_matches_python() {
+    let Some(rt) = runtime() else { return };
+    let ws = WeightSet::load(&rt.desc, "fp_raw").unwrap();
+    let art = latmix::artifacts_dir();
+    let (corpus, n, t) = load_ppl_corpus(&art).unwrap();
+    let ppl = perplexity(&rt, "fp", &ws, &corpus, n, t).unwrap();
+    // python train_lm reports heldout ppl ~9 on this corpus; the graph
+    // execution must land in the same regime (fused-vs-eager gives ~1e-5
+    // logit differences only).
+    assert!(ppl > 2.0 && ppl < 30.0, "fp ppl {ppl} out of range");
+}
+
+#[test]
+fn quantized_ppl_ordering() {
+    let Some(rt) = runtime() else { return };
+    let ws = WeightSet::load(&rt.desc, "fp_raw").unwrap();
+    let art = latmix::artifacts_dir();
+    let (corpus, n, t) = load_ppl_corpus(&art).unwrap();
+    let fp = perplexity(&rt, "fp", &ws, &corpus, n, t).unwrap();
+    // fp weights under activation quantization: worse than fp, finite.
+    let q = perplexity(&rt, "mxfp4_b32", &ws, &corpus, n, t).unwrap();
+    assert!(q > fp, "act-quant ppl {q} should exceed fp {fp}");
+    assert!(q < fp * 40.0, "act-quant ppl {q} unreasonably bad");
+}
+
+#[test]
+fn zero_shot_beats_chance_fp() {
+    let Some(rt) = runtime() else { return };
+    let ws = WeightSet::load(&rt.desc, "fp_raw").unwrap();
+    let tasks = load_tasks(&latmix::artifacts_dir()).unwrap();
+    let accs = zero_shot(&rt, "fp", &ws, &tasks).unwrap();
+    let avg = accs.last().unwrap().1;
+    assert!(avg > 0.30, "fp zero-shot avg {avg} should beat chance (0.25)");
+}
+
+#[test]
+fn serving_engine_end_to_end() {
+    let Some(rt) = runtime() else { return };
+    let ws = WeightSet::load(&rt.desc, "fp_raw").unwrap();
+    let exec =
+        latmix::coordinator::engine::XlaExecutor::new(&rt, "fp", &ws).unwrap();
+    let mut engine = Engine::new(exec, EngineConfig { max_slots: 4, eos: -1, ..Default::default() });
+    for i in 0..5u64 {
+        engine.submit(GenRequest::new(i, vec![1, 40 + i as i32, 50], 6));
+    }
+    let out = engine.run_to_completion().unwrap();
+    assert_eq!(out.len(), 5);
+    for r in &out {
+        assert_eq!(r.tokens.len(), 6);
+        for t in &r.tokens {
+            assert!(*t >= 0 && (*t as usize) < engine.exec.vocab());
+        }
+    }
+    assert!(engine.stats.decode_tokens >= 30);
+}
+
+#[test]
+fn decode_matches_logits_graph() {
+    // Consistency across graph kinds: greedy continuation via prefill+decode
+    // must equal argmax chaining on the full-sequence logits graph.
+    let Some(rt) = runtime() else { return };
+    let ws = WeightSet::load(&rt.desc, "fp_raw").unwrap();
+    let exec =
+        latmix::coordinator::engine::XlaExecutor::new(&rt, "fp", &ws).unwrap();
+    let prompt = vec![1i32, 40, 41, 42];
+    let mut engine = Engine::new(exec, EngineConfig { max_slots: 1, eos: -1, ..Default::default() });
+    engine.submit(GenRequest::new(0, prompt.clone(), 4));
+    let out = engine.run_to_completion().unwrap();
+    let via_engine = out[0].tokens.clone();
+
+    // reference: run logits graph step by step over growing sequence
+    use latmix::runtime::{i32_literal, literal_to_f32};
+    let weights = rt.stage_weights(&ws).unwrap();
+    let (gb, gt) = rt.desc.ppl_shape;
+    let vocab = rt.desc.vocab;
+    let mut seq = prompt.clone();
+    let mut via_logits = Vec::new();
+    for _ in 0..4 {
+        let mut toks = vec![0i32; gb * gt];
+        toks[..seq.len()].copy_from_slice(&seq);
+        let mut inputs = vec![i32_literal(&toks, &[gb as i64, gt as i64]).unwrap()];
+        for w in &weights {
+            let dims: Vec<i64> = w.array_shape().unwrap().dims().to_vec();
+            inputs.push(w.reshape(&dims).unwrap());
+        }
+        let parts = rt.execute("logits_ppl_fp", &inputs).unwrap();
+        let logits = literal_to_f32(&parts[0]).unwrap();
+        let row = &logits[(seq.len() - 1) * vocab..seq.len() * vocab];
+        let next = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0 as i32;
+        via_logits.push(next);
+        seq.push(next);
+    }
+    assert_eq!(via_engine, via_logits, "KV decode path diverges from full-seq path");
+}
