@@ -2,62 +2,102 @@
 //! pack/unpack throughput, FWHT, RTN/GPTQ, coordinator ops (batcher admit,
 //! KV gather/scatter), and — when artifacts exist — PJRT decode-step
 //! latency per compiled batch size.
+//!
+//! Every timed section lands in two places:
+//! - the human-readable markdown table (stdout + `artifacts/results/`);
+//! - `BENCH_microbench.json` at the repo root (schema in README.md §Perf
+//!   methodology), the machine-readable perf trajectory tracked per PR.
+//!
+//! The `* scalar-ref` rows time the retained reference codec
+//! (`latmix::mx::reference`) in the same process, so each JSON snapshot
+//! carries its own baseline-vs-optimized comparison. `LATMIX_BENCH_SMOKE=1`
+//! shrinks iteration counts for the tier-1 CI smoke run.
 
-use latmix::bench::{fmt_time, Bencher, Table};
+use latmix::bench::{fmt_time, Bencher, JsonReport, Table};
 use latmix::coordinator::engine::{Engine, EngineConfig, MockExecutor};
 use latmix::coordinator::{Batcher, GenRequest, KvCache};
 use latmix::linalg::{block_hadamard_apply, Mat};
-use latmix::mx::{mx_qdq_rows, pack::PackedMx, MxConfig};
+use latmix::mx::{mx_qdq_rows, pack::PackedMx, reference, MxConfig};
 use latmix::quant::{gptq_quantize, rtn_quantize};
 use latmix::util::Pcg64;
 
 fn main() {
+    let smoke = std::env::var("LATMIX_BENCH_SMOKE").is_ok();
+    let it = |warmup: usize, iters: usize| -> (usize, usize) {
+        if smoke {
+            (1, iters.min(3))
+        } else {
+            (warmup, iters)
+        }
+    };
     let mut tab = Table::new(
         "microbench",
         "Hot-path microbenchmarks (criterion-lite)",
         &["op", "mean", "p99", "throughput"],
     );
+    let mut json = JsonReport::new("microbench");
     let mut rng = Pcg64::seed(99);
 
-    // MX QDQ (f32 in/out) — the activation-quant inner loop analog
+    let elem_row = |tab: &mut Table, json: &mut JsonReport, r: &latmix::bench::BenchResult, n: f64| {
+        tab.row(vec![
+            r.name.clone(),
+            fmt_time(r.mean_s),
+            fmt_time(r.p99_s),
+            format!("{:.0} Melem/s", r.throughput(n) / 1e6),
+        ]);
+        json.push(r, Some(("elem/s", n)));
+    };
+
+    // MX QDQ (f32 in/out) — the activation-quant inner loop analog.
+    // scalar-ref = retained per-element division codec (the pre-PR
+    // baseline); the optimized row uses LUT/exponent arithmetic + the pool.
     let n = 1 << 16;
     let x = rng.normal_vec(n, 2.0);
     let cfg = MxConfig::from_name("mxfp4", Some(32)).unwrap();
-    let r = Bencher::new("mx_qdq 64K f32").with_iters(3, 20).run(|| {
+    let (w, i) = it(3, 20);
+    let r = Bencher::new("mx_qdq 64K f32 scalar-ref").with_iters(w, i).run(|| {
+        let mut y = x.clone();
+        reference::mx_qdq_rows_ref(&mut y, 512, &cfg);
+        y
+    });
+    elem_row(&mut tab, &mut json, &r, n as f64);
+    let r = Bencher::new("mx_qdq 64K f32").with_iters(w, i).run(|| {
         let mut y = x.clone();
         mx_qdq_rows(&mut y, 512, &cfg);
         y
     });
-    tab.row(vec![
-        r.name.clone(),
-        fmt_time(r.mean_s),
-        fmt_time(r.p99_s),
-        format!("{:.0} Melem/s", r.throughput(n as f64) / 1e6),
-    ]);
+    elem_row(&mut tab, &mut json, &r, n as f64);
 
-    // bit-pack + unpack
-    let r = Bencher::new("mxfp4 pack 64K").with_iters(3, 20).run(|| PackedMx::pack(&x, cfg));
-    tab.row(vec![r.name.clone(), fmt_time(r.mean_s), fmt_time(r.p99_s),
-        format!("{:.0} Melem/s", r.throughput(n as f64) / 1e6)]);
+    // bit-pack + unpack: scalar-ref baseline, then the LUT/parallel codec
+    let r = Bencher::new("mxfp4 pack 64K scalar-ref").with_iters(w, i).run(|| reference::pack_ref(&x, &cfg));
+    elem_row(&mut tab, &mut json, &r, n as f64);
+    let r = Bencher::new("mxfp4 pack 64K").with_iters(w, i).run(|| PackedMx::pack(&x, cfg));
+    elem_row(&mut tab, &mut json, &r, n as f64);
     let packed = PackedMx::pack(&x, cfg);
+    let r = Bencher::new("mxfp4 unpack 64K scalar-ref")
+        .with_iters(w, i)
+        .run(|| reference::unpack_ref(&cfg, n, &packed.scales, &packed.codes));
+    elem_row(&mut tab, &mut json, &r, n as f64);
     let mut out = vec![0.0f32; n];
-    let r = Bencher::new("mxfp4 unpack 64K").with_iters(3, 20).run(|| packed.unpack_into(&mut out));
-    tab.row(vec![r.name.clone(), fmt_time(r.mean_s), fmt_time(r.p99_s),
-        format!("{:.0} Melem/s", r.throughput(n as f64) / 1e6)]);
+    let r = Bencher::new("mxfp4 unpack 64K").with_iters(w, i).run(|| packed.unpack_into(&mut out));
+    elem_row(&mut tab, &mut json, &r, n as f64);
 
     // FWHT (online T3 path analog)
     let mut h = rng.normal_vec(1 << 14, 1.0);
-    let r = Bencher::new("fwht 16K (B=32)").with_iters(3, 30).run(|| {
+    let (w, i) = it(3, 30);
+    let r = Bencher::new("fwht 16K (B=32)").with_iters(w, i).run(|| {
         block_hadamard_apply(&mut h, 32);
     });
-    tab.row(vec![r.name.clone(), fmt_time(r.mean_s), fmt_time(r.p99_s),
-        format!("{:.0} Melem/s", r.throughput((1 << 14) as f64) / 1e6)]);
+    elem_row(&mut tab, &mut json, &r, (1 << 14) as f64);
 
     // RTN / GPTQ weight quant (128x384)
     let (din, dout) = (128usize, 384usize);
-    let w = rng.normal_vec(din * dout, 0.2);
-    let r = Bencher::new("rtn 128x384").with_iters(2, 10).run(|| rtn_quantize(&w, din, dout, &cfg));
-    tab.row(vec![r.name.clone(), fmt_time(r.mean_s), fmt_time(r.p99_s), "-".into()]);
+    let wq = rng.normal_vec(din * dout, 0.2);
+    let (wu, iu) = it(2, 10);
+    let r = Bencher::new("rtn 128x384").with_iters(wu, iu).run(|| rtn_quantize(&wq, din, dout, &cfg));
+    tab.row(vec![r.name.clone(), fmt_time(r.mean_s), fmt_time(r.p99_s),
+        format!("{:.0} Melem/s", r.throughput((din * dout) as f64) / 1e6)]);
+    json.push(&r, Some(("elem/s", (din * dout) as f64)));
     let hmat = {
         let mut m = Mat::eye(din);
         for i in 0..din {
@@ -68,11 +108,23 @@ fn main() {
         }
         m
     };
-    let r = Bencher::new("gptq 128x384").with_iters(1, 5).run(|| gptq_quantize(&w, din, dout, &hmat, &cfg, 0.01));
+    let (wu, iu) = it(1, 5);
+    let r = Bencher::new("gptq 128x384").with_iters(wu, iu).run(|| gptq_quantize(&wq, din, dout, &hmat, &cfg, 0.01));
     tab.row(vec![r.name.clone(), fmt_time(r.mean_s), fmt_time(r.p99_s), "-".into()]);
+    json.push(&r, None);
+
+    // dense matmul micro-kernel (transform-analysis path)
+    let mm = Mat::from_vec(192, 192, rng.normal_vec(192 * 192, 1.0));
+    let (wu, iu) = it(2, 10);
+    let r = Bencher::new("matmul 192x192").with_iters(wu, iu).run(|| mm.matmul(&mm));
+    let flops = 2.0 * 192f64 * 192.0 * 192.0;
+    tab.row(vec![r.name.clone(), fmt_time(r.mean_s), fmt_time(r.p99_s),
+        format!("{:.2} GFLOP/s", r.throughput(flops) / 1e9)]);
+    json.push(&r, Some(("flop/s", flops)));
 
     // batcher admit
-    let r = Bencher::new("batcher push+admit 1K").with_iters(3, 20).run(|| {
+    let (wu, iu) = it(3, 20);
+    let r = Bencher::new("batcher push+admit 1K").with_iters(wu, iu).run(|| {
         let mut b = Batcher::new(vec![1, 2, 4, 8]);
         for id in 0..1000u64 {
             b.push(GenRequest::new(id, vec![1, 2, 3], 4));
@@ -85,6 +137,7 @@ fn main() {
     });
     tab.row(vec![r.name.clone(), fmt_time(r.mean_s), fmt_time(r.p99_s),
         format!("{:.1} Mreq/s", r.throughput(1000.0) / 1e6)]);
+    json.push(&r, Some(("req/s", 1000.0)));
 
     // KV gather/scatter at serving dims (4 layers, 160 seq, 128 row, b=8)
     let mut kv = KvCache::new(8, 4, 160, 128);
@@ -92,16 +145,18 @@ fn main() {
         kv.alloc(id).unwrap();
     }
     let ids: Vec<u64> = (0..8).collect();
-    let r = Bencher::new("kv gather+scatter b=8").with_iters(3, 20).run(|| {
+    let r = Bencher::new("kv gather+scatter b=8").with_iters(wu, iu).run(|| {
         let g = kv.gather_batch(&ids, 8);
         kv.scatter_batch(&ids, 8, &g);
     });
     let bytes = 8.0 * 4.0 * 2.0 * 160.0 * 128.0 * 4.0 * 2.0; // gather+scatter
     tab.row(vec![r.name.clone(), fmt_time(r.mean_s), fmt_time(r.p99_s),
         format!("{:.1} GiB/s", r.throughput(bytes) / (1 << 30) as f64)]);
+    json.push(&r, Some(("byte/s", bytes)));
 
     // mock engine step loop (coordinator overhead without PJRT)
-    let r = Bencher::new("mock engine 16reqx8tok").with_iters(2, 10).run(|| {
+    let (wu, iu) = it(2, 10);
+    let r = Bencher::new("mock engine 16reqx8tok").with_iters(wu, iu).run(|| {
         let mut e = Engine::new(MockExecutor::default(), EngineConfig { max_slots: 4, eos: -1, ..Default::default() });
         for i in 0..16u64 {
             e.submit(GenRequest::new(i, vec![1, 2, 3], 8));
@@ -110,10 +165,15 @@ fn main() {
     });
     tab.row(vec![r.name.clone(), fmt_time(r.mean_s), fmt_time(r.p99_s),
         format!("{:.0} Ktok/s", r.throughput(128.0) / 1e3)]);
+    json.push(&r, Some(("tok/s", 128.0)));
 
     tab.emit();
+    let path = json.emit();
+    println!("json -> {}", path.display());
 
-    pjrt_decode_bench();
+    if !smoke {
+        pjrt_decode_bench();
+    }
 }
 
 /// PJRT decode-step latency per batch size (needs artifacts).

@@ -108,6 +108,111 @@ impl Table {
     }
 }
 
+/// Machine-readable bench report: collects [`BenchResult`]s and writes
+/// `BENCH_<id>.json` at the repo root so every PR's perf trajectory is
+/// diffable in version control. Schema (documented in README.md §Perf
+/// methodology):
+///
+/// ```json
+/// {
+///   "bench": "microbench",
+///   "schema": 1,
+///   "results": [
+///     {"op": "mx_qdq 64K f32", "mean_s": 1.2e-4, "p50_s": ..., "p99_s": ...,
+///      "std_s": ..., "iters": 20,
+///      "throughput": 5.4e8, "throughput_unit": "elem/s"}
+///   ]
+/// }
+/// ```
+pub struct JsonReport {
+    pub id: String,
+    entries: Vec<String>,
+}
+
+impl JsonReport {
+    pub fn new(id: &str) -> JsonReport {
+        JsonReport { id: id.to_string(), entries: Vec::new() }
+    }
+
+    /// Record one result; `throughput` is `(unit, units_per_iter)`.
+    pub fn push(&mut self, r: &BenchResult, throughput: Option<(&str, f64)>) {
+        let mut s = format!(
+            "{{\"op\": {}, \"mean_s\": {:e}, \"p50_s\": {:e}, \"p99_s\": {:e}, \"std_s\": {:e}, \"iters\": {}",
+            json_str(&r.name),
+            r.mean_s,
+            r.p50_s,
+            r.p99_s,
+            r.std_s,
+            r.iters
+        );
+        if let Some((unit, units_per_iter)) = throughput {
+            s += &format!(
+                ", \"throughput\": {:e}, \"throughput_unit\": {}",
+                r.throughput(units_per_iter),
+                json_str(unit)
+            );
+        }
+        s += "}";
+        self.entries.push(s);
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = format!("{{\n  \"bench\": {},\n  \"schema\": 1,\n  \"results\": [\n", json_str(&self.id));
+        out += &self
+            .entries
+            .iter()
+            .map(|e| format!("    {e}"))
+            .collect::<Vec<_>>()
+            .join(",\n");
+        out += "\n  ]\n}\n";
+        out
+    }
+
+    /// Write `BENCH_<id>.json` into the repo root (nearest ancestor with a
+    /// `ROADMAP.md`, overridable via `LATMIX_BENCH_DIR`), returning the path.
+    pub fn emit(&self) -> std::path::PathBuf {
+        let dir = match std::env::var("LATMIX_BENCH_DIR") {
+            Ok(d) => std::path::PathBuf::from(d),
+            Err(_) => repo_root(),
+        };
+        let path = dir.join(format!("BENCH_{}.json", self.id));
+        if let Err(e) = std::fs::write(&path, self.render()) {
+            eprintln!("warning: could not write {}: {e}", path.display());
+        }
+        path
+    }
+}
+
+/// Nearest ancestor of cwd containing `ROADMAP.md` (the repo root), else cwd.
+pub fn repo_root() -> std::path::PathBuf {
+    let cwd = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    let mut dir = cwd.clone();
+    loop {
+        if dir.join("ROADMAP.md").exists() {
+            return dir;
+        }
+        if !dir.pop() {
+            return cwd;
+        }
+    }
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
 /// Format seconds human-readably.
 pub fn fmt_time(s: f64) -> String {
     if s < 1e-6 {
@@ -153,5 +258,33 @@ mod tests {
         assert!(fmt_time(2e-5).ends_with("µs"));
         assert!(fmt_time(2e-2).ends_with("ms"));
         assert!(fmt_time(2.0).ends_with('s'));
+    }
+
+    #[test]
+    fn json_report_renders() {
+        let r = BenchResult {
+            name: "op \"x\"".into(),
+            mean_s: 1.5e-4,
+            p50_s: 1.4e-4,
+            p99_s: 2.0e-4,
+            std_s: 1.0e-5,
+            iters: 7,
+        };
+        let mut j = JsonReport::new("unit");
+        j.push(&r, Some(("elem/s", 1000.0)));
+        j.push(&r, None);
+        let s = j.render();
+        assert!(s.contains("\"bench\": \"unit\""));
+        assert!(s.contains("\"op\": \"op \\\"x\\\"\""));
+        assert!(s.contains("\"iters\": 7"));
+        assert!(s.contains("\"throughput_unit\": \"elem/s\""));
+        // numbers must be bare JSON literals, not NaN/inf
+        assert!(!s.contains("NaN") && !s.contains("inf"));
+    }
+
+    #[test]
+    fn repo_root_has_roadmap_or_is_cwd() {
+        let root = repo_root();
+        assert!(root.join("ROADMAP.md").exists() || root == std::env::current_dir().unwrap());
     }
 }

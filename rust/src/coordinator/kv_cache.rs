@@ -85,23 +85,62 @@ impl KvCache {
     /// Gather lanes `ids` into one batch KV buffer per (layer, k/v), shaped
     /// `(batch, kv_seq, row)` flat — the decode graph's input layout. Lanes
     /// beyond `ids.len()` (padding) are zeroed.
+    ///
+    /// Each (layer, k/v) buffer is an independent write target, so at
+    /// serving dims the plane copies fan out over the scoped thread pool.
     pub fn gather_batch(&self, ids: &[RequestId], batch: usize) -> Vec<Vec<f32>> {
         let plane = self.kv_seq * self.kv_row;
         let mut out = vec![vec![0.0f32; batch * plane]; self.n_layers * 2];
-        for (lane, id) in ids.iter().enumerate() {
-            let seq = &self.live[id];
-            for (li, buf) in out.iter_mut().enumerate() {
-                buf[lane * plane..(lane + 1) * plane].copy_from_slice(&seq.data[li]);
+        if batch * plane * out.len() < crate::util::par::PAR_MIN_LEN {
+            for (lane, id) in ids.iter().enumerate() {
+                let seq = &self.live[id];
+                for (li, buf) in out.iter_mut().enumerate() {
+                    buf[lane * plane..(lane + 1) * plane].copy_from_slice(&seq.data[li]);
+                }
             }
+        } else {
+            crate::util::par::for_each_chunk(&mut out, 1, |li, bufs| {
+                let buf = &mut bufs[0];
+                for (lane, id) in ids.iter().enumerate() {
+                    let seq = &self.live[id];
+                    buf[lane * plane..(lane + 1) * plane].copy_from_slice(&seq.data[li]);
+                }
+            });
         }
         out
     }
 
     /// Scatter updated batch KV back into the per-sequence state and bump
     /// positions.
+    ///
+    /// One `iter_mut` pass over the slot map yields simultaneous `&mut`
+    /// borrows of the distinct live sequences, so at serving dims each
+    /// (lane, sequence) copy-back runs on its own pool worker.
     pub fn scatter_batch(&mut self, ids: &[RequestId], batch: usize, planes: &[Vec<f32>]) {
         let plane = self.kv_seq * self.kv_row;
         assert_eq!(planes.len(), self.n_layers * 2);
+        if batch * plane * planes.len() >= crate::util::par::PAR_MIN_LEN {
+            let mut pairs: Vec<(usize, &mut SeqKv)> = self
+                .live
+                .iter_mut()
+                .filter_map(|(id, seq)| ids.iter().position(|x| x == id).map(|lane| (lane, seq)))
+                .collect();
+            // One pair per distinct live id: only equivalent to the serial
+            // loop when every id resolved and none repeat — otherwise fall
+            // through to the serial path, which preserves the original
+            // doubled-scatter / missing-slot-panic semantics exactly.
+            if pairs.len() == ids.len() {
+                crate::util::par::for_each_chunk(&mut pairs, 1, |_, pair| {
+                    let (lane, seq) = &mut pair[0];
+                    debug_assert!(*lane < batch);
+                    for (li, buf) in planes.iter().enumerate() {
+                        seq.data[li].copy_from_slice(&buf[*lane * plane..(*lane + 1) * plane]);
+                    }
+                    seq.pos += 1;
+                });
+                return;
+            }
+        }
         for (lane, id) in ids.iter().enumerate() {
             debug_assert!(lane < batch);
             let seq = self.live.get_mut(id).expect("scatter into missing slot");

@@ -60,21 +60,37 @@ impl Mat {
         Mat::from_fn(self.cols, self.rows, |i, j| self[(j, i)])
     }
 
-    /// `self @ other` — blocked i-k-j loop (cache-friendly for row-major).
+    /// `self @ other` — tiled i-k-j micro-kernel. The k-loop is unrolled
+    /// 4-wide so the inner j-loop fuses four B rows per pass (4x the
+    /// arithmetic intensity per `out` traversal), and the old `a == 0.0`
+    /// zero-skip branch is gone: on dense data it only bought branch
+    /// mispredictions in the innermost loop.
     pub fn matmul(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
-        let mut out = Mat::zeros(self.rows, other.cols);
-        for i in 0..self.rows {
-            let orow = &mut out.data[i * other.cols..(i + 1) * other.cols];
-            for k in 0..self.cols {
-                let a = self.data[i * self.cols + k];
-                if a == 0.0 {
-                    continue;
+        let (m, kd, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        for i in 0..m {
+            let arow = &self.data[i * kd..(i + 1) * kd];
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            let mut k = 0;
+            while k + 4 <= kd {
+                let (a0, a1, a2, a3) = (arow[k], arow[k + 1], arow[k + 2], arow[k + 3]);
+                let b0 = &other.data[k * n..(k + 1) * n];
+                let b1 = &other.data[(k + 1) * n..(k + 2) * n];
+                let b2 = &other.data[(k + 2) * n..(k + 3) * n];
+                let b3 = &other.data[(k + 3) * n..(k + 4) * n];
+                for j in 0..n {
+                    orow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
                 }
-                let brow = &other.data[k * other.cols..(k + 1) * other.cols];
+                k += 4;
+            }
+            while k < kd {
+                let a = arow[k];
+                let brow = &other.data[k * n..(k + 1) * n];
                 for (o, b) in orow.iter_mut().zip(brow.iter()) {
                     *o += a * b;
                 }
+                k += 1;
             }
         }
         out

@@ -56,10 +56,28 @@ pub fn floor_log2(a: f32) -> i32 {
     }
 }
 
+/// Exact `2^e` by exponent-field construction — exact for `e` in
+/// `[-126, 127]`, `0.0` for `e == -127` (the E8M0 bottom code). Shared by
+/// the quantize/pack/GPTQ scale paths.
 #[inline]
-fn exp2i(e: i32) -> f32 {
-    // exact for e in [-126, 127]
+pub fn exp2i(e: i32) -> f32 {
     f32::from_bits((((e + 127) as u32) & 0xff) << 23)
+}
+
+/// Exact `2^e` over the full f32 range including subnormal results
+/// (`e` in `[-149, -127]`). Used to turn the per-element division by a
+/// power-of-two block scale into a multiplication by its exact inverse:
+/// for `s = 2^e`, `x * 2^-e` and `x / 2^e` are the same correctly-rounded
+/// value, and `2^-e` needs the subnormal range when `e = 127`.
+#[inline]
+pub fn exp2i_ext(e: i32) -> f32 {
+    if e >= -126 {
+        exp2i(e)
+    } else if e >= -149 {
+        f32::from_bits(1u32 << (e + 149))
+    } else {
+        0.0
+    }
 }
 
 /// QDQ in the scaled domain for a floating-point element format
@@ -100,23 +118,22 @@ pub fn element_qdq(v: f32, fmt: ElementFormat) -> f32 {
 }
 
 /// Encode a scaled FP4 value to its 4-bit code (sign + e2m1), and back.
-/// Used by the bit-packing layer.
+/// Used by the bit-packing layer. Branchless: after `fp_qdq` snaps `v`
+/// onto the grid {0, .5, 1, 1.5, 2, 3, 4, 6}, the code is read straight
+/// out of the exponent/mantissa bit fields instead of a cascade of
+/// magnitude compares (bit-exact with the old compare chain — see the
+/// `fp4_encode_matches_compare_chain` test).
 #[inline]
 pub fn fp4_encode(v: f32) -> u8 {
     let q = fp_qdq(v, FP4_E2M1);
-    let sign = if q.is_sign_negative() && q != 0.0 { 8u8 } else { 0 };
-    let a = q.abs();
-    // grid: 0, .5, 1, 1.5, 2, 3, 4, 6 -> codes 0..7
-    let code = match a {
-        x if x < 0.25 => 0,
-        x if x < 0.75 => 1,
-        x if x < 1.25 => 2,
-        x if x < 1.75 => 3,
-        x if x < 2.5 => 4,
-        x if x < 3.5 => 5,
-        x if x < 5.0 => 6,
-        _ => 7,
-    };
+    let bits = q.to_bits();
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let m = ((bits >> 22) & 1) as i32;
+    // exp 0 -> code 0; exp 126 (0.5) -> 1; exp 127.. -> 2*(exp-126) + m
+    let t = exp - 126;
+    let code = (t.max(0) * 2 + m + (t == 0) as i32) as u8;
+    // sign nibble only for nonzero codes (-0.0 encodes as +0, like before)
+    let sign = (((bits >> 31) as u8) << 3) * (code != 0) as u8;
     sign | code
 }
 
@@ -141,6 +158,28 @@ pub fn int4_encode(v: f32) -> u8 {
 pub fn int4_decode(code: u8) -> f32 {
     let s = ((code as i8) << 4) >> 4; // sign-extend low nibble
     s as f32
+}
+
+fn pair_lut(decode: fn(u8) -> f32) -> [[f32; 2]; 256] {
+    let mut t = [[0.0f32; 2]; 256];
+    for b in 0..256usize {
+        t[b] = [decode((b & 0xf) as u8), decode((b >> 4) as u8)];
+    }
+    t
+}
+
+/// Packed byte -> two decoded FP4 elements (low nibble first). Decoding a
+/// byte becomes one 2 KiB-table load instead of two shift/branch nibble
+/// decodes — the unpack hot path walks this table.
+pub fn fp4_pair_lut() -> &'static [[f32; 2]; 256] {
+    static LUT: std::sync::OnceLock<[[f32; 2]; 256]> = std::sync::OnceLock::new();
+    LUT.get_or_init(|| pair_lut(fp4_decode))
+}
+
+/// Packed byte -> two decoded INT4 elements (low nibble first).
+pub fn int4_pair_lut() -> &'static [[f32; 2]; 256] {
+    static LUT: std::sync::OnceLock<[[f32; 2]; 256]> = std::sync::OnceLock::new();
+    LUT.get_or_init(|| pair_lut(int4_decode))
 }
 
 #[cfg(test)]
@@ -204,6 +243,54 @@ mod tests {
         for code in 0u8..16 {
             let v = int4_decode(code);
             assert_eq!(int4_decode(int4_encode(v)), v);
+        }
+    }
+
+    #[test]
+    fn fp4_encode_matches_compare_chain() {
+        // the retired compare-chain encoder lives on as the retained oracle
+        use crate::mx::reference::fp4_encode_ref as encode_ref;
+        let mut v = -8.0f32;
+        while v < 8.0 {
+            assert_eq!(fp4_encode(v), encode_ref(v), "v={v}");
+            v += 0.0625;
+        }
+        for v in [0.0f32, -0.0, f32::INFINITY, f32::NEG_INFINITY, 1e-40, -1e-40, 1e30] {
+            assert_eq!(fp4_encode(v), encode_ref(v), "v={v}");
+        }
+    }
+
+    #[test]
+    fn pair_luts_match_nibble_decodes() {
+        for b in 0..=255u8 {
+            let fp = fp4_pair_lut()[b as usize];
+            assert_eq!(fp[0].to_bits(), fp4_decode(b & 0xf).to_bits());
+            assert_eq!(fp[1].to_bits(), fp4_decode(b >> 4).to_bits());
+            let iv = int4_pair_lut()[b as usize];
+            assert_eq!(iv[0].to_bits(), int4_decode(b & 0xf).to_bits());
+            assert_eq!(iv[1].to_bits(), int4_decode(b >> 4).to_bits());
+        }
+    }
+
+    #[test]
+    fn exp2i_ext_exact_incl_subnormals() {
+        for e in -126..=127 {
+            assert_eq!(exp2i_ext(e).to_bits(), exp2i(e).to_bits(), "e={e}");
+            assert_eq!(exp2i_ext(e), (e as f64).exp2() as f32, "e={e}");
+        }
+        assert_eq!(exp2i_ext(-127), f32::from_bits(1 << 22));
+        assert_eq!(exp2i_ext(-149), f32::from_bits(1));
+        assert_eq!(exp2i_ext(-150), 0.0);
+        // the inverse identity the codec relies on: x / 2^e == x * 2^-e
+        for e in [-127i32, -126, -1, 0, 1, 126, 127] {
+            let s = exp2i(e);
+            if s == 0.0 {
+                continue;
+            }
+            let inv = exp2i_ext(-e);
+            for x in [1.0f32, 3.7, 1e-30, -2.5e20, 6.0] {
+                assert_eq!((x / s).to_bits(), (x * inv).to_bits(), "e={e} x={x}");
+            }
         }
     }
 }

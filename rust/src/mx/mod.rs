@@ -4,15 +4,22 @@
 //! (cross-checked against golden files in `rust/tests/golden_mx.rs`); the
 //! NVFP4 path divides by non-power-of-two scales and is checked to 1-2 ULP.
 //!
-//! Three layers:
-//! - [`formats`] — element codecs (FP4 E2M1 / INT4 / FP6 E2M3 / FP8 E4M3).
-//! - [`quantize`] — block quantize-dequantize (Eq. 1 of the paper).
+//! Four layers:
+//! - [`formats`] — element codecs (FP4 E2M1 / INT4 / FP6 E2M3 / FP8 E4M3),
+//!   plus the branchless encoders and byte-pair decode LUTs the hot path
+//!   uses.
+//! - [`quantize`] — block quantize-dequantize (Eq. 1 of the paper),
+//!   exponent-arithmetic scales, parallel over blocks.
 //! - [`pack`] — true bit-packed storage (4-bit nibbles + E8M0 scale bytes),
 //!   used for footprint accounting and the codec throughput benches.
+//! - [`reference`] — the retained scalar implementation, the bit-exactness
+//!   oracle for the fast path.
 
 pub mod formats;
 pub mod pack;
 pub mod quantize;
+pub mod reference;
 
 pub use formats::{ElementFormat, FP4_E2M1, FP6_E2M3, FP8_E4M3, INT4};
+pub use pack::PackedMx;
 pub use quantize::{mx_qdq, mx_qdq_rows, MxConfig};

@@ -2,9 +2,21 @@
 //! E8M0 scale byte per block. This is what an MXFP4/MXINT4 tensor costs in
 //! memory (4.25 bits/elem at B=32) — used by the footprint accounting in
 //! `quantize-info` and by the codec throughput benches in the perf pass.
+//!
+//! Hot-path layout choices (property-tested bit-exact against the scalar
+//! loops in `mx::reference`):
+//! - encode walks byte pairs (`chunks_exact(2)`) — no per-element `idx % 2`
+//!   nibble branch;
+//! - the block scale is applied as a multiply by its exact power-of-two
+//!   inverse instead of a division;
+//! - decode reads two elements per packed byte from the 256-entry LUTs in
+//!   [`super::formats`];
+//! - blocks fan out over the scoped thread pool (`util::par`) above
+//!   [`crate::util::par::PAR_MIN_LEN`] elements.
 
-use super::formats::{floor_log2, fp4_decode, fp4_encode, int4_decode, int4_encode};
+use super::formats::{exp2i, exp2i_ext, floor_log2, fp4_encode, fp4_pair_lut, int4_encode, int4_pair_lut};
 use super::quantize::{MxConfig, SCALE_EMAX, SCALE_EMIN};
+use crate::util::par;
 
 /// A bit-packed MX tensor (4-bit element formats only).
 #[derive(Clone, Debug)]
@@ -17,40 +29,64 @@ pub struct PackedMx {
     pub codes: Vec<u8>,
 }
 
-#[inline]
-fn exp2i(e: i32) -> f32 {
-    f32::from_bits((((e + 127) as u32) & 0xff) << 23)
-}
-
 impl PackedMx {
-    /// Pack `x` (blocks along the flat axis). Requires a 4-bit element
-    /// format ("mxfp4" or "mxint4") and `x.len() % block_size == 0`.
+    /// Pack `x` (blocks along the flat axis). Requires a single-level
+    /// 4-bit element format — the guard is structural (`element.bits == 4`)
+    /// so future 4-bit formats pack without touching this codec; NVFP4 is
+    /// excluded because its second-level FP8 scale does not fit the E8M0
+    /// scale byte.
     pub fn pack(x: &[f32], cfg: MxConfig) -> PackedMx {
-        assert!(cfg.name == "mxfp4" || cfg.name == "mxint4", "pack: 4-bit formats only");
+        assert!(
+            cfg.element.bits == 4 && !cfg.nv && cfg.name != "none",
+            "pack: single-level 4-bit element formats only, got {}",
+            cfg.name
+        );
         assert_eq!(x.len() % cfg.block_size, 0);
-        let nb = x.len() / cfg.block_size;
-        let mut scales = Vec::with_capacity(nb);
-        let mut codes = vec![0u8; (x.len() + 1) / 2];
+        if cfg.block_size % 2 != 0 {
+            // odd block sizes straddle byte boundaries; the scalar
+            // reference's global idx%2 indexing handles them (off any hot
+            // path — real MX blocks are 16/32)
+            let (scales, codes) = super::reference::pack_ref(x, &cfg);
+            return PackedMx { cfg, len: x.len(), scales, codes };
+        }
+        let b = cfg.block_size;
+        let nb = x.len() / b;
+        let mut scales = vec![0u8; nb];
+        let mut codes = vec![0u8; x.len() / 2];
         let is_fp = cfg.element.is_fp;
-        for (bi, block) in x.chunks(cfg.block_size).enumerate() {
+        let emax = cfg.element.emax;
+        let encode = move |v: f32| if is_fp { fp4_encode(v) } else { int4_encode(v) };
+        let do_block = |bi: usize, scale: &mut u8, cbytes: &mut [u8]| {
+            let block = &x[bi * b..(bi + 1) * b];
             let amax = block.iter().fold(0.0f32, |m, v| m.max(v.abs()));
             let e = if amax > 0.0 {
-                (floor_log2(amax) - cfg.element.emax).clamp(SCALE_EMIN, SCALE_EMAX)
+                (floor_log2(amax) - emax).clamp(SCALE_EMIN, SCALE_EMAX)
             } else {
                 0
             };
-            scales.push((e + 127) as u8);
+            *scale = (e + 127) as u8;
             let s = exp2i(e);
-            let base = bi * cfg.block_size;
-            for (j, &v) in block.iter().enumerate() {
-                let code = if is_fp { fp4_encode(v / s) } else { int4_encode(v / s) };
-                let idx = base + j;
-                if idx % 2 == 0 {
-                    codes[idx / 2] |= code;
-                } else {
-                    codes[idx / 2] |= code << 4;
+            if s == 0.0 {
+                // denormal-range block: keep the reference division semantics
+                for (pair, byte) in block.chunks_exact(2).zip(cbytes.iter_mut()) {
+                    *byte = encode(pair[0] / s) | (encode(pair[1] / s) << 4);
+                }
+            } else {
+                let s_inv = exp2i_ext(-e);
+                for (pair, byte) in block.chunks_exact(2).zip(cbytes.iter_mut()) {
+                    *byte = encode(pair[0] * s_inv) | (encode(pair[1] * s_inv) << 4);
                 }
             }
+        };
+        if x.len() < par::PAR_MIN_LEN {
+            for bi in 0..nb {
+                let (lo, hi) = (bi * b / 2, (bi + 1) * b / 2);
+                do_block(bi, &mut scales[bi], &mut codes[lo..hi]);
+            }
+        } else {
+            par::for_each_chunk2(&mut scales, 1, &mut codes, b / 2, |bi, sc, cb| {
+                do_block(bi, &mut sc[0], cb)
+            });
         }
         PackedMx { cfg, len: x.len(), scales, codes }
     }
@@ -62,21 +98,34 @@ impl PackedMx {
         out
     }
 
-    /// Unpack into a preallocated buffer (hot-path variant).
+    /// Unpack into a preallocated buffer (hot-path variant): one LUT load
+    /// per packed byte, two multiplies out.
     pub fn unpack_into(&self, out: &mut [f32]) {
         assert_eq!(out.len(), self.len);
         let b = self.cfg.block_size;
-        let is_fp = self.cfg.element.is_fp;
-        for (bi, chunk) in out.chunks_mut(b).enumerate() {
-            let s = exp2i(self.scales[bi] as i32 - 127);
-            let base = bi * b;
-            for (j, o) in chunk.iter_mut().enumerate() {
-                let idx = base + j;
-                let byte = self.codes[idx / 2];
-                let code = if idx % 2 == 0 { byte & 0xf } else { byte >> 4 };
-                let v = if is_fp { fp4_decode(code) } else { int4_decode(code) };
-                *o = v * s;
+        if b % 2 != 0 {
+            let v = super::reference::unpack_ref(&self.cfg, self.len, &self.scales, &self.codes);
+            out.copy_from_slice(&v);
+            return;
+        }
+        let lut = if self.cfg.element.is_fp { fp4_pair_lut() } else { int4_pair_lut() };
+        let scales = &self.scales;
+        let codes = &self.codes;
+        let do_block = |bi: usize, chunk: &mut [f32]| {
+            let s = exp2i(scales[bi] as i32 - 127);
+            let cb = &codes[bi * b / 2..bi * b / 2 + chunk.len() / 2];
+            for (pair, byte) in chunk.chunks_exact_mut(2).zip(cb) {
+                let d = &lut[*byte as usize];
+                pair[0] = d[0] * s;
+                pair[1] = d[1] * s;
             }
+        };
+        if out.len() < par::PAR_MIN_LEN {
+            for (bi, chunk) in out.chunks_mut(b).enumerate() {
+                do_block(bi, chunk);
+            }
+        } else {
+            par::for_each_chunk(out, b, do_block);
         }
     }
 
@@ -90,6 +139,7 @@ impl PackedMx {
 mod tests {
     use super::*;
     use crate::mx::quantize::mx_qdq;
+    use crate::mx::reference;
     use crate::util::Pcg64;
 
     #[test]
@@ -123,5 +173,54 @@ mod tests {
         let x = mx_qdq(&rng.normal_vec(64, 2.0), 64, &cfg);
         let p = PackedMx::pack(&x, cfg);
         assert_eq!(p.unpack(), x);
+    }
+
+    #[test]
+    fn matches_scalar_reference_bits() {
+        let mut rng = Pcg64::seed(13);
+        for name in ["mxfp4", "mxint4"] {
+            let cfg = MxConfig::from_name(name, Some(32)).unwrap();
+            let x = rng.normal_vec(2048, 3.0);
+            let p = PackedMx::pack(&x, cfg);
+            let (scales, codes) = reference::pack_ref(&x, &cfg);
+            assert_eq!(p.scales, scales, "{name} scales");
+            assert_eq!(p.codes, codes, "{name} codes");
+            let un = p.unpack();
+            let un_ref = reference::unpack_ref(&cfg, x.len(), &scales, &codes);
+            for (i, (a, b)) in un.iter().zip(&un_ref).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{name} idx {i}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn odd_block_size_still_packs() {
+        // pre-existing behavior: odd block sizes straddle code bytes
+        let mut rng = Pcg64::seed(14);
+        let mut cfg = MxConfig::from_name("mxfp4", Some(32)).unwrap();
+        cfg.block_size = 31;
+        let x = rng.normal_vec(31 * 5, 2.0);
+        let p = PackedMx::pack(&x, cfg);
+        let (scales, codes) = reference::pack_ref(&x, &cfg);
+        assert_eq!(p.scales, scales);
+        assert_eq!(p.codes, codes);
+        let un_ref = reference::unpack_ref(&cfg, x.len(), &scales, &codes);
+        for (a, b) in p.unpack().iter().zip(&un_ref) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "4-bit")]
+    fn six_bit_formats_rejected() {
+        let cfg = MxConfig::from_name("mxfp6", Some(32)).unwrap();
+        PackedMx::pack(&[0.0; 32], cfg);
+    }
+
+    #[test]
+    #[should_panic(expected = "4-bit")]
+    fn nvfp4_two_level_rejected() {
+        let cfg = MxConfig::from_name("nvfp4", Some(16)).unwrap();
+        PackedMx::pack(&[0.0; 32], cfg);
     }
 }

@@ -1,7 +1,8 @@
 //! Block quantize-dequantize (Eq. 1): shared power-of-two (E8M0) scale per
 //! block + element codec, plus the NVFP4 two-level variant.
 
-use super::formats::{element_qdq, floor_log2, fp_qdq, ElementFormat, FP4_E2M1, FP8_E4M3, INT4, FP6_E2M3};
+use super::formats::{element_qdq, exp2i, exp2i_ext, floor_log2, fp_qdq, ElementFormat, FP4_E2M1, FP8_E4M3, INT4, FP6_E2M3};
+use crate::util::par;
 
 pub const SCALE_EMIN: i32 = -127;
 pub const SCALE_EMAX: i32 = 127;
@@ -38,9 +39,10 @@ impl MxConfig {
     }
 }
 
+/// Shared E8M0 scale exponent of one block from its abs-max (Eq. 1).
 #[inline]
-fn exp2i(e: i32) -> f32 {
-    f32::from_bits((((e + 127) as u32) & 0xff) << 23)
+pub fn block_scale_exp(amax: f32, emax: i32) -> i32 {
+    (floor_log2(amax) - emax).clamp(SCALE_EMIN, SCALE_EMAX)
 }
 
 /// Shared E8M0 scale of one block from its abs-max (Eq. 1).
@@ -49,24 +51,45 @@ pub fn block_scale(amax: f32, emax: i32) -> f32 {
     if amax <= 0.0 {
         return 1.0;
     }
-    let e = (floor_log2(amax) - emax).clamp(SCALE_EMIN, SCALE_EMAX);
-    exp2i(e)
+    exp2i(block_scale_exp(amax, emax))
 }
 
 /// QDQ one contiguous block in place.
+///
+/// Hot path: the per-element `v / s` division is replaced with a multiply
+/// by the exact power-of-two inverse `2^-e` — bit-identical (both are the
+/// correctly-rounded value of the same real quotient) and ~4x cheaper per
+/// element. The reference division loop survives in `mx::reference` and is
+/// property-tested against this.
 pub fn qdq_block(x: &mut [f32], cfg: &MxConfig, nv_tensor_scale: f32) {
     let amax = x.iter().fold(0.0f32, |m, v| m.max(v.abs()));
     if cfg.nv {
+        // non-power-of-two scale: division semantics must stay as-is
         let ts = nv_tensor_scale;
         let s0 = fp_qdq(amax / (FP4_E2M1.maxval() * ts), FP8_E4M3);
         let s = if s0 > 0.0 { s0 } else { 1.0 } * ts;
         for v in x.iter_mut() {
             *v = s * fp_qdq(*v / s, FP4_E2M1);
         }
+        return;
+    }
+    let (e, s) = if amax > 0.0 {
+        let e = block_scale_exp(amax, cfg.element.emax);
+        (e, exp2i(e))
     } else {
-        let s = block_scale(amax, cfg.element.emax);
+        (0, 1.0)
+    };
+    if s == 0.0 {
+        // e == SCALE_EMIN: 2^-127 underflows the E8M0 bit construction to
+        // 0.0; keep the reference division-by-zero semantics for this
+        // denormal-range block (rare, off any real hot path).
         for v in x.iter_mut() {
             *v = s * element_qdq(*v / s, cfg.element);
+        }
+    } else {
+        let s_inv = exp2i_ext(-e);
+        for v in x.iter_mut() {
+            *v = s * element_qdq(*v * s_inv, cfg.element);
         }
     }
 }
@@ -82,6 +105,10 @@ pub fn nv_tensor_scale(x: &[f32]) -> f32 {
 }
 
 /// QDQ a flat tensor whose last axis is `row_len`, blocks along that axis.
+///
+/// Blocks are independent given the (tensor-wide) NVFP4 scale, so large
+/// tensors fan blocks out over the scoped thread pool; the contiguous
+/// partition makes the result bit-identical for any worker count.
 pub fn mx_qdq_rows(x: &mut [f32], row_len: usize, cfg: &MxConfig) {
     if cfg.name == "none" {
         return;
@@ -89,10 +116,12 @@ pub fn mx_qdq_rows(x: &mut [f32], row_len: usize, cfg: &MxConfig) {
     assert_eq!(x.len() % row_len, 0);
     assert_eq!(row_len % cfg.block_size, 0, "row {row_len} vs block {}", cfg.block_size);
     let ts = if cfg.nv { nv_tensor_scale(x) } else { 1.0 };
-    for row in x.chunks_mut(row_len) {
-        for block in row.chunks_mut(cfg.block_size) {
+    if x.len() < par::PAR_MIN_LEN {
+        for block in x.chunks_mut(cfg.block_size) {
             qdq_block(block, cfg, ts);
         }
+    } else {
+        par::for_each_chunk(x, cfg.block_size, |_, block| qdq_block(block, cfg, ts));
     }
 }
 

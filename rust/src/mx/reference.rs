@@ -1,0 +1,135 @@
+//! Retained scalar reference codec — the pre-LUT, pre-thread-pool
+//! implementation kept verbatim as the bit-exactness oracle for the
+//! optimized hot path (`rust/tests/codec_props.rs` asserts the fast codec
+//! agrees bit-for-bit on every format, block size, and edge input).
+//!
+//! Nothing here runs on a hot path (the fast codec only delegates here for
+//! odd block sizes, which real MX configs never use); do not "optimize"
+//! this module — its value is that it stays the naive per-element
+//! division/branch code the Python mirror was validated against.
+
+use super::formats::{element_qdq, exp2i, floor_log2, fp4_decode, fp_qdq, int4_decode, int_qdq, ElementFormat, FP4_E2M1, FP8_E4M3, INT4};
+use super::quantize::{block_scale, nv_tensor_scale, MxConfig, SCALE_EMAX, SCALE_EMIN};
+
+/// Scalar compare-chain FP4 encoder (original implementation).
+pub fn fp4_encode_ref(v: f32) -> u8 {
+    let q = fp_qdq(v, FP4_E2M1);
+    let sign = if q.is_sign_negative() && q != 0.0 { 8u8 } else { 0 };
+    let a = q.abs();
+    // grid: 0, .5, 1, 1.5, 2, 3, 4, 6 -> codes 0..7
+    let code = match a {
+        x if x < 0.25 => 0,
+        x if x < 0.75 => 1,
+        x if x < 1.25 => 2,
+        x if x < 1.75 => 3,
+        x if x < 2.5 => 4,
+        x if x < 3.5 => 5,
+        x if x < 5.0 => 6,
+        _ => 7,
+    };
+    sign | code
+}
+
+/// Scalar INT4 encoder (original implementation).
+pub fn int4_encode_ref(v: f32) -> u8 {
+    (int_qdq(v, INT4) as i32 & 0xf) as u8
+}
+
+/// QDQ one block, per-element division by the block scale (original).
+pub fn qdq_block_ref(x: &mut [f32], cfg: &MxConfig, nv_tensor_scale: f32) {
+    let amax = x.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    if cfg.nv {
+        let ts = nv_tensor_scale;
+        let s0 = fp_qdq(amax / (FP4_E2M1.maxval() * ts), FP8_E4M3);
+        let s = if s0 > 0.0 { s0 } else { 1.0 } * ts;
+        for v in x.iter_mut() {
+            *v = s * fp_qdq(*v / s, FP4_E2M1);
+        }
+    } else {
+        let s = block_scale(amax, cfg.element.emax);
+        for v in x.iter_mut() {
+            *v = s * element_qdq(*v / s, cfg.element);
+        }
+    }
+}
+
+/// Serial row/block QDQ loop (original).
+pub fn mx_qdq_rows_ref(x: &mut [f32], row_len: usize, cfg: &MxConfig) {
+    if cfg.name == "none" {
+        return;
+    }
+    assert_eq!(x.len() % row_len, 0);
+    assert_eq!(row_len % cfg.block_size, 0, "row {row_len} vs block {}", cfg.block_size);
+    let ts = if cfg.nv { nv_tensor_scale(x) } else { 1.0 };
+    for row in x.chunks_mut(row_len) {
+        for block in row.chunks_mut(cfg.block_size) {
+            qdq_block_ref(block, cfg, ts);
+        }
+    }
+}
+
+/// QDQ a copy through the scalar reference.
+pub fn mx_qdq_ref(x: &[f32], row_len: usize, cfg: &MxConfig) -> Vec<f32> {
+    let mut out = x.to_vec();
+    mx_qdq_rows_ref(&mut out, row_len, cfg);
+    out
+}
+
+#[inline]
+fn encode_ref(v: f32, fmt: ElementFormat) -> u8 {
+    if fmt.is_fp {
+        fp4_encode_ref(v)
+    } else {
+        int4_encode_ref(v)
+    }
+}
+
+/// Per-element scalar bit-pack (original `PackedMx::pack` loop):
+/// returns `(scales, codes)`, one E8M0 byte per block, two nibbles per
+/// code byte with the `idx % 2` selection.
+pub fn pack_ref(x: &[f32], cfg: &MxConfig) -> (Vec<u8>, Vec<u8>) {
+    assert_eq!(x.len() % cfg.block_size, 0);
+    let nb = x.len() / cfg.block_size;
+    let mut scales = Vec::with_capacity(nb);
+    let mut codes = vec![0u8; (x.len() + 1) / 2];
+    for (bi, block) in x.chunks(cfg.block_size).enumerate() {
+        let amax = block.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        let e = if amax > 0.0 {
+            (floor_log2(amax) - cfg.element.emax).clamp(SCALE_EMIN, SCALE_EMAX)
+        } else {
+            0
+        };
+        scales.push((e + 127) as u8);
+        let s = exp2i(e);
+        let base = bi * cfg.block_size;
+        for (j, &v) in block.iter().enumerate() {
+            let code = encode_ref(v / s, cfg.element);
+            let idx = base + j;
+            if idx % 2 == 0 {
+                codes[idx / 2] |= code;
+            } else {
+                codes[idx / 2] |= code << 4;
+            }
+        }
+    }
+    (scales, codes)
+}
+
+/// Per-element scalar unpack (original `PackedMx::unpack_into` loop).
+pub fn unpack_ref(cfg: &MxConfig, len: usize, scales: &[u8], codes: &[u8]) -> Vec<f32> {
+    let mut out = vec![0.0f32; len];
+    let b = cfg.block_size;
+    let is_fp = cfg.element.is_fp;
+    for (bi, chunk) in out.chunks_mut(b).enumerate() {
+        let s = exp2i(scales[bi] as i32 - 127);
+        let base = bi * b;
+        for (j, o) in chunk.iter_mut().enumerate() {
+            let idx = base + j;
+            let byte = codes[idx / 2];
+            let code = if idx % 2 == 0 { byte & 0xf } else { byte >> 4 };
+            let v = if is_fp { fp4_decode(code) } else { int4_decode(code) };
+            *o = v * s;
+        }
+    }
+    out
+}

@@ -3,8 +3,9 @@
 //! upper-Cholesky of the damped inverse Hessian, per-MX-block scale refresh).
 
 use crate::linalg::Mat;
-use crate::mx::formats::{element_qdq, floor_log2};
-use crate::mx::quantize::{MxConfig, SCALE_EMAX, SCALE_EMIN};
+use crate::mx::formats::element_qdq;
+use crate::mx::quantize::{block_scale, MxConfig};
+use crate::util::par;
 
 /// Cholesky factor (lower) of a symmetric positive-definite matrix, f64.
 fn cholesky_lower(a: &[f64], n: usize) -> Option<Vec<f64>> {
@@ -79,15 +80,15 @@ fn hinv_upper(h: &Mat, percdamp: f64) -> Option<Vec<f64>> {
     Some(out)
 }
 
-fn mx_scale(amax: f32, emax: i32) -> f32 {
-    if amax <= 0.0 {
-        return 1.0;
-    }
-    let e = (floor_log2(amax) - emax).clamp(SCALE_EMIN, SCALE_EMAX);
-    f32::from_bits((((e + 127) as u32) & 0xff) << 23)
-}
-
 /// GPTQ-quantize `W (d_in x d_out, row-major)` given Hessian `H = X^T X`.
+///
+/// The error propagation runs strictly down one column — columns never
+/// interact once `hinv` is fixed — so the solve is restructured
+/// column-major: transpose in, run each column's quantize/propagate lane
+/// independently (fanned out over the scoped thread pool for large
+/// weights), transpose back. Per-column arithmetic order is unchanged from
+/// the original interleaved loop, so results are bit-identical to it and
+/// invariant to the worker count.
 pub fn gptq_quantize(
     w: &[f32],
     d_in: usize,
@@ -100,37 +101,53 @@ pub fn gptq_quantize(
     assert_eq!(h.rows, d_in);
     let b = cfg.block_size;
     let hinv = hinv_upper(h, percdamp).expect("Hessian not SPD after damping");
-    let mut wf: Vec<f64> = w.iter().map(|x| *x as f64).collect();
-    // dead inputs
-    for i in 0..d_in {
-        if h[(i, i)] == 0.0 {
-            for c in 0..d_out {
-                wf[i * d_out + c] = 0.0;
-            }
+    // transpose to column-major: each column is a contiguous lane
+    let mut wt = vec![0.0f64; d_in * d_out];
+    for r in 0..d_in {
+        for c in 0..d_out {
+            wt[c * d_in + r] = w[r * d_out + c] as f64;
         }
     }
-    let mut q = vec![0.0f32; d_in * d_out];
-    let mut scales = vec![1.0f32; d_out];
-    for i in 0..d_in {
-        if i % b == 0 {
-            // refresh per-column scales from current residual block
-            for c in 0..d_out {
-                let mut amax = 0.0f32;
-                for r in i..(i + b).min(d_in) {
-                    amax = amax.max((wf[r * d_out + c] as f32).abs());
-                }
-                scales[c] = mx_scale(amax, cfg.element.emax);
+    let dead: Vec<bool> = (0..d_in).map(|i| h[(i, i)] == 0.0).collect();
+    let mut qt = vec![0.0f32; d_in * d_out];
+    let hinv_ref = &hinv;
+    let dead_ref = &dead;
+    let do_col = |_ci: usize, wcol: &mut [f64], qcol: &mut [f32]| {
+        for i in 0..d_in {
+            if dead_ref[i] {
+                wcol[i] = 0.0;
             }
         }
-        let dinv = hinv[i * d_in + i];
-        for c in 0..d_out {
-            let s = scales[c];
-            let qi = s * element_qdq(wf[i * d_out + c] as f32 / s, cfg.element);
-            q[i * d_out + c] = qi;
-            let err = (wf[i * d_out + c] - qi as f64) / dinv;
-            for r in i + 1..d_in {
-                wf[r * d_out + c] -= hinv[i * d_in + r] * err;
+        let mut scale = 1.0f32;
+        for i in 0..d_in {
+            if i % b == 0 {
+                // refresh the scale from the current residual block
+                let mut amax = 0.0f32;
+                for r in i..(i + b).min(d_in) {
+                    amax = amax.max((wcol[r] as f32).abs());
+                }
+                scale = block_scale(amax, cfg.element.emax);
             }
+            let qi = scale * element_qdq(wcol[i] as f32 / scale, cfg.element);
+            qcol[i] = qi;
+            let err = (wcol[i] - qi as f64) / hinv_ref[i * d_in + i];
+            for r in i + 1..d_in {
+                wcol[r] -= hinv_ref[i * d_in + r] * err;
+            }
+        }
+    };
+    if d_in * d_out < par::PAR_MIN_LEN {
+        for (ci, (wcol, qcol)) in wt.chunks_mut(d_in).zip(qt.chunks_mut(d_in)).enumerate() {
+            do_col(ci, wcol, qcol);
+        }
+    } else {
+        par::for_each_chunk2(&mut wt, d_in, &mut qt, d_in, do_col);
+    }
+    // transpose back to row-major
+    let mut q = vec![0.0f32; d_in * d_out];
+    for c in 0..d_out {
+        for r in 0..d_in {
+            q[r * d_out + c] = qt[c * d_in + r];
         }
     }
     q

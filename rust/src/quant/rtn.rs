@@ -2,26 +2,39 @@
 //! with blocks along the input (reduction) dimension.
 
 use crate::mx::quantize::{qdq_block, nv_tensor_scale, MxConfig};
+use crate::util::par;
 
 /// QDQ `w` (row-major, `d_in x d_out`) with one shared scale per
 /// (input-block, output-column) pair — mirrors `gptq.rtn_quantize` in python.
+///
+/// Each group of `block_size` input rows is a contiguous `b * d_out` span
+/// of `w` and every (group, column) tile quantizes independently, so large
+/// weights fan the groups out over the scoped thread pool (bit-identical
+/// to the serial loop for any worker count).
 pub fn rtn_quantize(w: &[f32], d_in: usize, d_out: usize, cfg: &MxConfig) -> Vec<f32> {
     assert_eq!(w.len(), d_in * d_out);
     assert_eq!(d_in % cfg.block_size, 0);
     let ts = if cfg.nv { nv_tensor_scale(w) } else { 1.0 };
     let mut out = w.to_vec();
     let b = cfg.block_size;
-    let mut col_block = vec![0.0f32; b];
-    for g in (0..d_in).step_by(b) {
+    let do_group = |_gi: usize, rows: &mut [f32]| {
+        let mut col_block = vec![0.0f32; b];
         for c in 0..d_out {
             for j in 0..b {
-                col_block[j] = out[(g + j) * d_out + c];
+                col_block[j] = rows[j * d_out + c];
             }
             qdq_block(&mut col_block, cfg, ts);
             for j in 0..b {
-                out[(g + j) * d_out + c] = col_block[j];
+                rows[j * d_out + c] = col_block[j];
             }
         }
+    };
+    if out.len() < par::PAR_MIN_LEN {
+        for rows in out.chunks_mut(b * d_out) {
+            do_group(0, rows);
+        }
+    } else {
+        par::for_each_chunk(&mut out, b * d_out, do_group);
     }
     out
 }

@@ -1,5 +1,7 @@
-//! Small utilities: deterministic RNG and summary statistics.
+//! Small utilities: deterministic RNG, summary statistics, and the scoped
+//! thread pool used by the quantization hot paths.
 
+pub mod par;
 pub mod rng;
 pub mod stats;
 

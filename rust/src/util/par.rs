@@ -1,0 +1,182 @@
+//! Scoped data-parallel substrate (rayon is not vendorable offline).
+//!
+//! The quantization hot paths (MX QDQ, pack/unpack, RTN/GPTQ, KV
+//! gather/scatter) all reduce to "apply an independent kernel to disjoint
+//! chunks of one buffer". [`for_each_chunk`] and [`for_each_chunk2`] fan
+//! those chunks out over `std::thread::scope` workers. The partition is
+//! deterministic and each chunk's computation is self-contained, so results
+//! are bit-identical for any worker count — property-tested in
+//! `rust/tests/codec_props.rs`.
+
+use std::cell::Cell;
+
+/// Buffers smaller than this (in elements) are not worth a thread spawn;
+/// callers use it to keep tiny inputs on the serial path.
+pub const PAR_MIN_LEN: usize = 1 << 12;
+
+thread_local! {
+    static THREAD_OVERRIDE: Cell<Option<usize>> = Cell::new(None);
+}
+
+/// Worker count: [`with_threads`] override > `LATMIX_THREADS` env >
+/// available parallelism.
+pub fn num_threads() -> usize {
+    if let Some(n) = THREAD_OVERRIDE.with(|c| c.get()) {
+        return n.max(1);
+    }
+    if let Ok(s) = std::env::var("LATMIX_THREADS") {
+        if let Ok(n) = s.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f` with the worker count pinned to `n` on the calling thread.
+/// Tests use this to compare 1-thread vs N-thread runs without the races
+/// of mutating process-global environment variables.
+pub fn with_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    THREAD_OVERRIDE.with(|c| {
+        let prev = c.replace(Some(n));
+        let out = f();
+        c.set(prev);
+        out
+    })
+}
+
+#[inline]
+fn ceil_div(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+/// Apply `f(chunk_index, chunk)` to consecutive `chunk_len`-sized chunks of
+/// `data` (the last chunk may be shorter), fanned out over scoped worker
+/// threads. Workers own contiguous runs of chunks, so side effects equal
+/// the serial loop exactly for any worker count.
+pub fn for_each_chunk<T, F>(data: &mut [T], chunk_len: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(chunk_len > 0);
+    let n_chunks = ceil_div(data.len(), chunk_len);
+    let threads = num_threads().min(n_chunks);
+    if threads <= 1 {
+        for (ci, chunk) in data.chunks_mut(chunk_len).enumerate() {
+            f(ci, chunk);
+        }
+        return;
+    }
+    let per = ceil_div(n_chunks, threads);
+    let f = &f;
+    std::thread::scope(|s| {
+        for (ti, span) in data.chunks_mut(per * chunk_len).enumerate() {
+            s.spawn(move || {
+                for (ci, chunk) in span.chunks_mut(chunk_len).enumerate() {
+                    f(ti * per + ci, chunk);
+                }
+            });
+        }
+    });
+}
+
+/// Two-buffer variant: chunk `a` by `ca` and `b` by `cb` (equal chunk
+/// counts required) and apply `f(chunk_index, a_chunk, b_chunk)` to each
+/// pair. Used where one logical work item spans two output buffers, e.g.
+/// `PackedMx::pack` writing one scale byte + `block/2` code bytes per block.
+pub fn for_each_chunk2<A, B, F>(a: &mut [A], ca: usize, b: &mut [B], cb: usize, f: F)
+where
+    A: Send,
+    B: Send,
+    F: Fn(usize, &mut [A], &mut [B]) + Sync,
+{
+    assert!(ca > 0 && cb > 0);
+    let n_chunks = ceil_div(a.len(), ca);
+    assert_eq!(n_chunks, ceil_div(b.len(), cb), "chunk count mismatch");
+    let threads = num_threads().min(n_chunks);
+    if threads <= 1 {
+        for (ci, (x, y)) in a.chunks_mut(ca).zip(b.chunks_mut(cb)).enumerate() {
+            f(ci, x, y);
+        }
+        return;
+    }
+    let per = ceil_div(n_chunks, threads);
+    let f = &f;
+    std::thread::scope(|s| {
+        for (ti, (sa, sb)) in a.chunks_mut(per * ca).zip(b.chunks_mut(per * cb)).enumerate() {
+            s.spawn(move || {
+                for (ci, (x, y)) in sa.chunks_mut(ca).zip(sb.chunks_mut(cb)).enumerate() {
+                    f(ti * per + ci, x, y);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_matches_serial() {
+        let n = 10_000usize;
+        let mut par: Vec<u64> = (0..n as u64).collect();
+        let mut ser = par.clone();
+        for (ci, chunk) in ser.chunks_mut(7).enumerate() {
+            for v in chunk.iter_mut() {
+                *v = v.wrapping_mul(31).wrapping_add(ci as u64);
+            }
+        }
+        with_threads(5, || {
+            for_each_chunk(&mut par, 7, |ci, chunk| {
+                for v in chunk.iter_mut() {
+                    *v = v.wrapping_mul(31).wrapping_add(ci as u64);
+                }
+            });
+        });
+        assert_eq!(par, ser);
+    }
+
+    #[test]
+    fn chunk2_pairs_align() {
+        // a: 1 item per chunk; b: 4 items per chunk, last short
+        let mut a = vec![0usize; 10];
+        let mut b = vec![0u8; 38];
+        with_threads(3, || {
+            for_each_chunk2(&mut a, 1, &mut b, 4, |ci, x, y| {
+                x[0] = ci * 100 + y.len();
+                for v in y.iter_mut() {
+                    *v = ci as u8;
+                }
+            });
+        });
+        for (ci, x) in a.iter().enumerate() {
+            let expect_len = if ci == 9 { 2 } else { 4 };
+            assert_eq!(*x, ci * 100 + expect_len);
+        }
+        assert!(b.chunks(4).enumerate().all(|(ci, c)| c.iter().all(|v| *v == ci as u8)));
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let mut empty: Vec<u32> = Vec::new();
+        for_each_chunk(&mut empty, 4, |_, _| panic!("no chunks expected"));
+        let mut one = vec![1u32; 3];
+        with_threads(8, || {
+            for_each_chunk(&mut one, 8, |ci, c| {
+                assert_eq!(ci, 0);
+                for v in c.iter_mut() {
+                    *v += 1;
+                }
+            });
+        });
+        assert_eq!(one, vec![2, 2, 2]);
+    }
+
+    #[test]
+    fn override_pins_count() {
+        assert_eq!(with_threads(3, num_threads), 3);
+        assert_eq!(with_threads(0, num_threads), 1); // clamped
+        assert!(num_threads() >= 1);
+    }
+}

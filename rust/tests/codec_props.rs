@@ -1,0 +1,220 @@
+//! Bit-exactness and determinism properties for the optimized MX codec.
+//!
+//! The fast path (LUT decode, branchless encode, multiply-by-exact-inverse
+//! scales, scoped-pool parallelism) must agree bit-for-bit with the
+//! retained scalar reference (`latmix::mx::reference`) on every format,
+//! block size, and adversarial edge input — all-zero blocks, negative
+//! zeros, denormal-range magnitudes, saturating magnitudes — and must be
+//! invariant to the worker count.
+
+use latmix::coordinator::KvCache;
+use latmix::mx::pack::PackedMx;
+use latmix::mx::reference;
+use latmix::mx::{mx_qdq, MxConfig};
+use latmix::quant::{gptq_quantize, rtn_quantize};
+use latmix::testing::{forall, VecGen};
+use latmix::util::{par, Pcg64};
+
+const ALL_FORMATS: [&str; 5] = ["mxfp4", "mxint4", "mxfp6", "mxfp8", "nvfp4"];
+const PACK_FORMATS: [&str; 2] = ["mxfp4", "mxint4"];
+
+fn bits_eq(fast: &[f32], reference: &[f32]) -> Result<(), String> {
+    if fast.len() != reference.len() {
+        return Err(format!("len {} vs {}", fast.len(), reference.len()));
+    }
+    for (i, (a, b)) in fast.iter().zip(reference).enumerate() {
+        if a.to_bits() != b.to_bits() {
+            return Err(format!(
+                "idx {i}: fast {a} ({:#010x}) vs ref {b} ({:#010x})",
+                a.to_bits(),
+                b.to_bits()
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Hand-built adversarial inputs: all zeros, negative zeros, denormal-range
+/// magnitudes with mixed signs, and a normal/denormal/saturating mix.
+fn edge_inputs(block: usize) -> Vec<Vec<f32>> {
+    let n = 2 * block;
+    let mut cases = vec![vec![0.0f32; n], vec![-0.0f32; n]];
+    let denorm: Vec<f32> = (0..n)
+        .map(|i| {
+            let v = f32::from_bits(1 + i as u32); // smallest subnormals
+            if i % 2 == 0 {
+                v
+            } else {
+                -v
+            }
+        })
+        .collect();
+    cases.push(denorm);
+    let mut mixed = vec![0.0f32; n];
+    mixed[0] = -0.0;
+    mixed[1] = f32::MIN_POSITIVE; // smallest normal
+    mixed[2] = -f32::MIN_POSITIVE / 2.0; // subnormal
+    mixed[3] = f32::MAX;
+    mixed[4] = -1.5e-39; // subnormal
+    mixed[5] = 1e-44; // near-bottom subnormal
+    mixed[block] = 1.0; // second block is ordinary
+    mixed[block + 1] = -3.25;
+    cases.push(mixed);
+    cases
+}
+
+#[test]
+fn qdq_bit_exact_vs_reference() {
+    for fmt in ALL_FORMATS {
+        for block in [16usize, 32] {
+            let cfg = MxConfig::from_name(fmt, Some(block)).unwrap();
+            // log-magnitude spread down into the denormal range and up to
+            // overflow-adjacent scales
+            let gen = VecGen {
+                min_len: block,
+                max_len: block * 64,
+                multiple_of: block,
+                log_scale_range: (-140.0, 30.0),
+            };
+            forall(&format!("qdq_exact_{fmt}_{block}"), 50, &gen, |v| {
+                let fast = mx_qdq(v, v.len(), &cfg);
+                let reff = reference::mx_qdq_ref(v, v.len(), &cfg);
+                bits_eq(&fast, &reff)
+            });
+            for (ei, v) in edge_inputs(block).into_iter().enumerate() {
+                let fast = mx_qdq(&v, v.len(), &cfg);
+                let reff = reference::mx_qdq_ref(&v, v.len(), &cfg);
+                bits_eq(&fast, &reff)
+                    .unwrap_or_else(|e| panic!("{fmt} b{block} edge case {ei}: {e}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn pack_bit_exact_vs_reference() {
+    for fmt in PACK_FORMATS {
+        for block in [16usize, 32] {
+            let cfg = MxConfig::from_name(fmt, Some(block)).unwrap();
+            let gen = VecGen {
+                min_len: block,
+                max_len: block * 64,
+                multiple_of: block,
+                log_scale_range: (-140.0, 30.0),
+            };
+            let check = |v: &Vec<f32>| -> Result<(), String> {
+                let fast = PackedMx::pack(v, cfg);
+                let (scales, codes) = reference::pack_ref(v, &cfg);
+                if fast.scales != scales {
+                    return Err("scale bytes differ from scalar reference".into());
+                }
+                if fast.codes != codes {
+                    return Err("code bytes differ from scalar reference".into());
+                }
+                let un = fast.unpack();
+                let un_ref = reference::unpack_ref(&cfg, v.len(), &scales, &codes);
+                bits_eq(&un, &un_ref)
+            };
+            forall(&format!("pack_exact_{fmt}_{block}"), 50, &gen, &check);
+            for (ei, v) in edge_inputs(block).into_iter().enumerate() {
+                check(&v).unwrap_or_else(|e| panic!("{fmt} b{block} edge case {ei}: {e}"));
+            }
+        }
+    }
+}
+
+/// The parallel fan-out must not change a single bit: 1 worker vs N.
+#[test]
+fn qdq_thread_count_invariant() {
+    let mut rng = Pcg64::seed(77);
+    let n = 1 << 15; // above PAR_MIN_LEN -> parallel path engaged
+    let x = rng.normal_vec(n, 3.0);
+    for fmt in ALL_FORMATS {
+        let cfg = MxConfig::from_name(fmt, Some(32)).unwrap();
+        let one = par::with_threads(1, || mx_qdq(&x, n, &cfg));
+        for t in [2usize, 3, 7, 16] {
+            let many = par::with_threads(t, || mx_qdq(&x, n, &cfg));
+            bits_eq(&many, &one).unwrap_or_else(|e| panic!("{fmt} threads={t}: {e}"));
+        }
+    }
+}
+
+#[test]
+fn pack_thread_count_invariant() {
+    let mut rng = Pcg64::seed(78);
+    let n = 1 << 15;
+    let x = rng.normal_vec(n, 2.0);
+    for fmt in PACK_FORMATS {
+        let cfg = MxConfig::from_name(fmt, Some(32)).unwrap();
+        let p1 = par::with_threads(1, || PackedMx::pack(&x, cfg));
+        for t in [2usize, 5, 16] {
+            let pt = par::with_threads(t, || PackedMx::pack(&x, cfg));
+            assert_eq!(p1.scales, pt.scales, "{fmt} threads={t} scales");
+            assert_eq!(p1.codes, pt.codes, "{fmt} threads={t} codes");
+            let mut u1 = vec![0.0f32; n];
+            let mut ut = vec![0.0f32; n];
+            par::with_threads(1, || p1.unpack_into(&mut u1));
+            par::with_threads(t, || pt.unpack_into(&mut ut));
+            bits_eq(&ut, &u1).unwrap_or_else(|e| panic!("{fmt} threads={t}: {e}"));
+        }
+    }
+}
+
+#[test]
+fn rtn_gptq_thread_count_invariant() {
+    let mut rng = Pcg64::seed(79);
+    let cfg = MxConfig::from_name("mxfp4", Some(32)).unwrap();
+    // rtn: 128x64 = 8192 elements -> parallel path
+    let (d_in, d_out) = (128usize, 64usize);
+    let w = rng.normal_vec(d_in * d_out, 0.5);
+    let r1 = par::with_threads(1, || rtn_quantize(&w, d_in, d_out, &cfg));
+    let rn = par::with_threads(6, || rtn_quantize(&w, d_in, d_out, &cfg));
+    bits_eq(&rn, &r1).unwrap_or_else(|e| panic!("rtn: {e}"));
+    // gptq: 64x96 = 6144 elements -> parallel path
+    let (d_in, d_out) = (64usize, 96usize);
+    let w = rng.normal_vec(d_in * d_out, 0.5);
+    let mut h = latmix::linalg::Mat::eye(d_in);
+    for i in 0..d_in {
+        h[(i, i)] += 5.0 + (i % 3) as f32;
+    }
+    let g1 = par::with_threads(1, || gptq_quantize(&w, d_in, d_out, &h, &cfg, 0.01));
+    let gn = par::with_threads(6, || gptq_quantize(&w, d_in, d_out, &h, &cfg, 0.01));
+    bits_eq(&gn, &g1).unwrap_or_else(|e| panic!("gptq: {e}"));
+}
+
+/// KV gather/scatter above the parallel threshold round-trips exactly and
+/// matches the small-cache serial semantics (positions bumped once each).
+#[test]
+fn kv_batch_ops_parallel_roundtrip() {
+    let (layers, seq, row) = (3usize, 64usize, 32usize);
+    let mut kv = KvCache::new(6, layers, seq, row);
+    let mut rng = Pcg64::seed(80);
+    let ids: Vec<u64> = (0..6).collect();
+    for &id in &ids {
+        kv.alloc(id).unwrap();
+        let filler = rng.normal_vec(seq * row, 1.0);
+        for li in 0..layers * 2 {
+            kv.get_mut(id).unwrap().data[li].copy_from_slice(&filler);
+        }
+    }
+    // batch * plane * planes = 6*2048*6 = 73728 >= PAR_MIN_LEN -> parallel
+    let g = par::with_threads(4, || kv.gather_batch(&ids, 6));
+    let g_serial = par::with_threads(1, || kv.gather_batch(&ids, 6));
+    for (a, b) in g.iter().zip(&g_serial) {
+        assert_eq!(a, b);
+    }
+    let mut g2 = g.clone();
+    for plane in g2.iter_mut() {
+        for v in plane.iter_mut() {
+            *v += 1.0;
+        }
+    }
+    par::with_threads(4, || kv.scatter_batch(&ids, 6, &g2));
+    for &id in &ids {
+        assert_eq!(kv.get(id).unwrap().pos, 1, "pos bumped exactly once");
+    }
+    let g3 = kv.gather_batch(&ids, 6);
+    for (a, b) in g3.iter().zip(&g2) {
+        assert_eq!(a, b, "scatter/gather round-trip");
+    }
+}

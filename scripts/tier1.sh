@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# Tier-1 gate: release build + full test suite + a smoke microbench run
+# that emits the machine-readable perf snapshot (BENCH_microbench.json at
+# the repo root). See README.md §Perf methodology.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+cargo build --release
+cargo test -q
+
+# Smoke perf run: reduced iteration counts, still emits the full JSON.
+LATMIX_BENCH_SMOKE=1 cargo bench --bench microbench
+
+test -f BENCH_microbench.json
+echo "tier1 OK: build + tests passed, BENCH_microbench.json written"
