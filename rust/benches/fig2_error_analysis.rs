@@ -153,14 +153,15 @@ fn fig2b() {
     use latmix::data::load_ppl_corpus;
     use latmix::eval::perplexity;
     use latmix::model::{ModelDesc, WeightSet};
-    use latmix::runtime::Runtime;
+    use latmix::runtime::{default_backend, Backend};
 
     let art = latmix::artifacts_dir();
     let Ok(desc) = ModelDesc::load(&art) else {
         eprintln!("fig2b: no manifest; skipping ppl-vs-B");
         return;
     };
-    let Ok(rt) = Runtime::new(desc) else { return };
+    let Ok(rt) = default_backend(desc) else { return };
+    println!("fig2b: eval backend = {}", rt.id());
     let Ok((corpus, n, t)) = load_ppl_corpus(&art) else { return };
     let mut tab = Table::new(
         "fig2b_ppl",
@@ -177,7 +178,7 @@ fn fig2b() {
         for b in [8usize, 16, 32, 64] {
             let wtag = format!("{method}_mxfp4_b{b}");
             let gtag = format!("mxfp4_b{b}{}", if t3 { "_t3" } else { "" });
-            let cell = match WeightSet::load(&rt.desc, &wtag) {
+            let cell = match WeightSet::load(rt.desc(), &wtag) {
                 Ok(ws) => match perplexity(&rt, &gtag, &ws, &corpus, n, t) {
                     Ok(p) => format!("{p:.2}"),
                     Err(e) => format!("err:{e}"),

@@ -9,8 +9,53 @@
 
 use latmix::bench::Table;
 use latmix::model::ModelDesc;
-use latmix::runtime::Runtime;
-use latmix::server::run_serving;
+
+/// Backend shim: PJRT on `backend-xla` builds, the pure-Rust executor
+/// otherwise — the sweep body is identical either way.
+#[cfg(feature = "backend-xla")]
+mod srv {
+    use latmix::model::ModelDesc;
+    use latmix::runtime::Runtime;
+    use latmix::server::{run_serving, ServeReport};
+
+    pub const LABEL: &str = "xla";
+
+    pub struct Srv(Runtime);
+
+    impl Srv {
+        pub fn new(desc: ModelDesc) -> Srv {
+            Srv(Runtime::new(desc).unwrap())
+        }
+
+        pub fn run(
+            &self, g: &str, w: &str, n: usize, m: usize, s: usize, seed: u64,
+        ) -> anyhow::Result<ServeReport> {
+            run_serving(&self.0, g, w, n, m, s, seed)
+        }
+    }
+}
+
+#[cfg(not(feature = "backend-xla"))]
+mod srv {
+    use latmix::model::ModelDesc;
+    use latmix::server::{run_serving_native, ServeReport};
+
+    pub const LABEL: &str = "native";
+
+    pub struct Srv(ModelDesc);
+
+    impl Srv {
+        pub fn new(desc: ModelDesc) -> Srv {
+            Srv(desc)
+        }
+
+        pub fn run(
+            &self, g: &str, w: &str, n: usize, m: usize, s: usize, seed: u64,
+        ) -> anyhow::Result<ServeReport> {
+            run_serving_native(&self.0, g, w, n, m, s, seed)
+        }
+    }
+}
 
 fn main() {
     let art = latmix::artifacts_dir();
@@ -21,7 +66,8 @@ fn main() {
             return;
         }
     };
-    let rt = Runtime::new(desc).unwrap();
+    println!("fig4: serving backend = {}", srv::LABEL);
+    let rt = srv::Srv::new(desc);
     // (display, graph tag, weights tag)
     let q = "mxfp4_b32_t3";
     let methods: Vec<(&str, &str, String)> = vec![
@@ -43,13 +89,13 @@ fn main() {
     for (_, gtag, wtag) in &methods {
         for s in slots {
             // enough requests that every (prefill, decode) bucket compiles
-            let _ = run_serving(&rt, gtag, wtag, s, 2, s, 1);
+            let _ = rt.run(gtag, wtag, s, 2, s, 1);
         }
     }
     for (name, gtag, wtag) in &methods {
         let mut cells = vec![name.to_string()];
         for s in slots {
-            match run_serving(&rt, gtag, wtag, requests, max_new, s, 42) {
+            match rt.run(gtag, wtag, requests, max_new, s, 42) {
                 Ok(rep) => cells.push(format!("{:.1}", rep.decode_tok_per_s)),
                 Err(e) => {
                     eprintln!("  {name} b={s}: {e}");
@@ -68,7 +114,7 @@ fn main() {
         &["method", "ttft p50 ms", "ttft p99 ms", "req latency p50 ms", "p99 ms"],
     );
     for (name, gtag, wtag) in &methods {
-        if let Ok(rep) = run_serving(&rt, gtag, wtag, requests, max_new, 4, 43) {
+        if let Ok(rep) = rt.run(gtag, wtag, requests, max_new, 4, 43) {
             lat.row(vec![
                 name.to_string(),
                 format!("{:.1}", rep.ttft_p50_ms),

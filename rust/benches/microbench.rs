@@ -1,22 +1,26 @@
 //! Microbenchmarks for the perf pass (EXPERIMENTS.md §Perf): MX codec
 //! pack/unpack throughput, FWHT, RTN/GPTQ, coordinator ops (batcher admit,
-//! KV gather/scatter), and — when artifacts exist — PJRT decode-step
-//! latency per compiled batch size.
+//! KV gather/scatter), the native-executor decode step + engine loop, and —
+//! on `backend-xla` builds with artifacts — PJRT decode-step latency per
+//! compiled batch size.
 //!
 //! Every timed section lands in two places:
 //! - the human-readable markdown table (stdout + `artifacts/results/`);
-//! - `BENCH_microbench.json` at the repo root (schema in README.md §Perf
-//!   methodology), the machine-readable perf trajectory tracked per PR.
+//! - `BENCH_microbench.json` at the repo root (schema 2 in README.md §Perf
+//!   methodology, incl. a per-row `backend` field), the machine-readable
+//!   perf trajectory tracked per PR.
 //!
 //! The `* scalar-ref` rows time the retained reference codec
 //! (`latmix::mx::reference`) in the same process, so each JSON snapshot
 //! carries its own baseline-vs-optimized comparison. `LATMIX_BENCH_SMOKE=1`
-//! shrinks iteration counts for the tier-1 CI smoke run.
+//! shrinks iteration counts for the CI smoke runs (both the no-XLA `core`
+//! lane and tier-1).
 
 use latmix::bench::{fmt_time, Bencher, JsonReport, Table};
-use latmix::coordinator::engine::{Engine, EngineConfig, MockExecutor};
+use latmix::coordinator::engine::{Engine, EngineConfig, MockExecutor, NativeExecutor, StepExecutor};
 use latmix::coordinator::{Batcher, GenRequest, KvCache};
 use latmix::linalg::{block_hadamard_apply, Mat};
+use latmix::model::NativeDims;
 use latmix::mx::{mx_qdq_rows, pack::PackedMx, reference, MxConfig};
 use latmix::quant::{gptq_quantize, rtn_quantize};
 use latmix::util::Pcg64;
@@ -168,17 +172,84 @@ fn main() {
     json.push(&r, Some(("tok/s", 128.0)));
 
     tab.emit();
+
+    native_decode_bench(&mut json, smoke);
+    if !smoke {
+        pjrt_decode_bench(&mut json);
+    }
+
     let path = json.emit();
     println!("json -> {}", path.display());
-
-    if !smoke {
-        pjrt_decode_bench();
-    }
 }
 
+/// Native-executor decode-step latency + full engine loop at latmix-tiny
+/// dims — runs everywhere, no artifacts or XLA toolchain needed.
+fn native_decode_bench(json: &mut JsonReport, smoke: bool) {
+    let dims = NativeDims::latmix_tiny();
+    let mut tab = Table::new(
+        "microbench_native",
+        "Native decode-step latency (fp vs quantized spec, synthetic weights)",
+        &["graph", "batch", "step mean", "step p99", "tok/s"],
+    );
+    let iters = if smoke { (1usize, 3usize) } else { (3, 15) };
+    for tag in ["fp", "mxfp4_b32_t3"] {
+        let exec = NativeExecutor::synthetic(dims, tag, vec![1, 2, 4, 8], 42).unwrap();
+        let kvdims = exec.n_layers() * 2;
+        for b in [1usize, 4, 8] {
+            let plane = exec.kv_seq() * exec.kv_row();
+            let kv: Vec<Vec<f32>> = vec![vec![0.0f32; b * plane]; kvdims];
+            let tokens = vec![5i32; b];
+            let pos = vec![3i32; b];
+            let r = Bencher::new(&format!("native decode {tag} b={b}"))
+                .with_iters(iters.0, iters.1)
+                .run(|| exec.decode(&tokens, &pos, &kv, b).unwrap());
+            tab.row(vec![
+                tag.into(),
+                b.to_string(),
+                fmt_time(r.mean_s),
+                fmt_time(r.p99_s),
+                format!("{:.1}", b as f64 / r.mean_s),
+            ]);
+            json.push(&r, Some(("tok/s", b as f64)));
+        }
+    }
+    // full continuous-batching loop on the native executor: Batcher +
+    // Scheduler + KvCache + prefill/decode, end to end
+    let n_req = 8u64;
+    let max_new = 4usize;
+    let fp_exec = NativeExecutor::synthetic(dims, "fp", vec![1, 2, 4, 8], 42).unwrap();
+    let r = Bencher::new("native engine 8reqx4tok")
+        .with_iters(iters.0, iters.1)
+        .run(|| {
+            let mut e = Engine::new(
+                fp_exec.clone(),
+                EngineConfig { max_slots: 4, eos: -1, ..Default::default() },
+            );
+            for i in 0..n_req {
+                e.submit(GenRequest::new(i, vec![1, 40 + i as i32, 50], max_new));
+            }
+            e.run_to_completion().unwrap().len()
+        });
+    let toks = (n_req as usize * max_new) as f64;
+    tab.row(vec![
+        r.name.clone(),
+        "-".into(),
+        fmt_time(r.mean_s),
+        fmt_time(r.p99_s),
+        format!("{:.1}", toks / r.mean_s),
+    ]);
+    json.push(&r, Some(("tok/s", toks)));
+    tab.emit();
+}
+
+/// No PJRT on this build: the core lane carries native rows only.
+#[cfg(not(feature = "backend-xla"))]
+fn pjrt_decode_bench(_json: &mut JsonReport) {}
+
 /// PJRT decode-step latency per batch size (needs artifacts).
-fn pjrt_decode_bench() {
-    use latmix::coordinator::engine::{StepExecutor, XlaExecutor};
+#[cfg(feature = "backend-xla")]
+fn pjrt_decode_bench(json: &mut JsonReport) {
+    use latmix::coordinator::engine::XlaExecutor;
     use latmix::model::{ModelDesc, WeightSet};
     use latmix::runtime::Runtime;
 
@@ -199,7 +270,7 @@ fn pjrt_decode_bench() {
             let kv: Vec<Vec<f32>> = vec![vec![0.0f32; b * plane]; kvdims];
             let tokens = vec![5i32; b];
             let pos = vec![3i32; b];
-            let r = Bencher::new("step").with_iters(3, 15).run(|| {
+            let r = Bencher::new(&format!("pjrt decode {tag} b={b}")).with_iters(3, 15).run(|| {
                 exec.decode(&tokens, &pos, &kv, b).unwrap()
             });
             tab.row(vec![
@@ -209,6 +280,7 @@ fn pjrt_decode_bench() {
                 fmt_time(r.p99_s),
                 format!("{:.1}", b as f64 / r.mean_s),
             ]);
+            json.push_for(&r, Some(("tok/s", b as f64)), "xla");
         }
     }
     tab.emit();

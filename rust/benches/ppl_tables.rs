@@ -4,17 +4,18 @@
 //! 12 (lambda), 13 (temperature), 14 (drop-one-transform).
 //!
 //! All rows evaluate precomputed weight variants (python build path) on the
-//! PJRT runtime. Zero-shot averages are added where the paper reports them;
-//! pass --ppl-only to skip them (faster).
+//! build's default execution backend — PJRT with `backend-xla`, the
+//! pure-Rust interpreter otherwise. Zero-shot averages are added where the
+//! paper reports them; pass --ppl-only to skip them (faster).
 
 use latmix::bench::Table;
 use latmix::data::{load_ppl_corpus, load_tasks, TaskSet};
 use latmix::eval::{perplexity, zero_shot};
 use latmix::model::{ModelDesc, WeightSet};
-use latmix::runtime::Runtime;
+use latmix::runtime::{default_backend, Backend, DefaultBackend};
 
 struct Ctx {
-    rt: Runtime,
+    rt: DefaultBackend,
     corpus: Vec<i32>,
     n: usize,
     t: usize,
@@ -24,7 +25,7 @@ struct Ctx {
 
 impl Ctx {
     fn ppl(&self, wtag: &str, gtag: &str) -> Option<f64> {
-        let ws = WeightSet::load(&self.rt.desc, wtag).ok()?;
+        let ws = WeightSet::load(self.rt.desc(), wtag).ok()?;
         match perplexity(&self.rt, gtag, &ws, &self.corpus, self.n, self.t) {
             Ok(p) => Some(p),
             Err(e) => {
@@ -39,7 +40,7 @@ impl Ctx {
             return None;
         }
         let gtag = gtag.replace("logits_ppl_", "");
-        let ws = WeightSet::load(&self.rt.desc, wtag).ok()?;
+        let ws = WeightSet::load(self.rt.desc(), wtag).ok()?;
         zero_shot(&self.rt, &gtag, &ws, &self.tasks)
             .ok()
             .map(|a| a.last().unwrap().1)
@@ -74,7 +75,8 @@ fn main() {
             return;
         }
     };
-    let rt = Runtime::new(desc).unwrap();
+    let rt = default_backend(desc).unwrap();
+    println!("ppl_tables: eval backend = {}", rt.id());
     let (corpus, n, t) = load_ppl_corpus(&art).unwrap();
     let tasks = load_tasks(&art).unwrap();
     let ctx = Ctx { rt, corpus, n, t, tasks, with_acc: !ppl_only };

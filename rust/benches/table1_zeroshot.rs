@@ -9,7 +9,7 @@ use latmix::bench::Table;
 use latmix::data::load_tasks;
 use latmix::eval::{recovery, zero_shot};
 use latmix::model::{ModelDesc, WeightSet};
-use latmix::runtime::Runtime;
+use latmix::runtime::{default_backend, Backend, DefaultBackend};
 
 /// (display name, weights tag prefix, uses online T3)
 const METHODS: &[(&str, &str, bool)] = &[
@@ -39,11 +39,12 @@ fn main() {
             return;
         }
     };
-    let rt = Runtime::new(desc).unwrap();
+    let rt = default_backend(desc).unwrap();
+    println!("table1: eval backend = {}", rt.id());
     let tasks = load_tasks(&art).unwrap();
 
     // FP16 reference
-    let fp_ws = WeightSet::load(&rt.desc, "fp_raw").expect("fp_raw weights");
+    let fp_ws = WeightSet::load(rt.desc(), "fp_raw").expect("fp_raw weights");
     let fp_accs = zero_shot(&rt, "fp", &fp_ws, &tasks).unwrap();
     let fp_avg = fp_accs.last().unwrap().1;
 
@@ -107,12 +108,12 @@ fn main() {
 }
 
 fn eval_variant(
-    rt: &Runtime,
+    rt: &DefaultBackend,
     wtag: &str,
     gtag: &str,
     tasks: &[latmix::data::TaskSet],
 ) -> Option<Vec<(String, f64)>> {
-    let ws = WeightSet::load(&rt.desc, wtag).ok()?;
+    let ws = WeightSet::load(rt.desc(), wtag).ok()?;
     match zero_shot(rt, gtag, &ws, tasks) {
         Ok(a) => Some(a),
         Err(e) => {

@@ -110,15 +110,16 @@ impl Table {
 
 /// Machine-readable bench report: collects [`BenchResult`]s and writes
 /// `BENCH_<id>.json` at the repo root so every PR's perf trajectory is
-/// diffable in version control. Schema (documented in README.md §Perf
-/// methodology):
+/// diffable in version control. Schema v2 (documented in README.md §Perf
+/// methodology) — every row records which executor produced it:
 ///
 /// ```json
 /// {
 ///   "bench": "microbench",
-///   "schema": 1,
+///   "schema": 2,
 ///   "results": [
-///     {"op": "mx_qdq 64K f32", "mean_s": 1.2e-4, "p50_s": ..., "p99_s": ...,
+///     {"op": "mx_qdq 64K f32", "backend": "native",
+///      "mean_s": 1.2e-4, "p50_s": ..., "p99_s": ...,
 ///      "std_s": ..., "iters": 20,
 ///      "throughput": 5.4e8, "throughput_unit": "elem/s"}
 ///   ]
@@ -134,11 +135,19 @@ impl JsonReport {
         JsonReport { id: id.to_string(), entries: Vec::new() }
     }
 
-    /// Record one result; `throughput` is `(unit, units_per_iter)`.
+    /// Record one result from the pure-Rust ("native") execution path;
+    /// `throughput` is `(unit, units_per_iter)`.
     pub fn push(&mut self, r: &BenchResult, throughput: Option<(&str, f64)>) {
+        self.push_for(r, throughput, "native");
+    }
+
+    /// Record one result, stating which backend produced it ("native" for
+    /// pure-Rust kernels/executors, "xla" for PJRT-measured rows).
+    pub fn push_for(&mut self, r: &BenchResult, throughput: Option<(&str, f64)>, backend: &str) {
         let mut s = format!(
-            "{{\"op\": {}, \"mean_s\": {:e}, \"p50_s\": {:e}, \"p99_s\": {:e}, \"std_s\": {:e}, \"iters\": {}",
+            "{{\"op\": {}, \"backend\": {}, \"mean_s\": {:e}, \"p50_s\": {:e}, \"p99_s\": {:e}, \"std_s\": {:e}, \"iters\": {}",
             json_str(&r.name),
+            json_str(backend),
             r.mean_s,
             r.p50_s,
             r.p99_s,
@@ -157,7 +166,7 @@ impl JsonReport {
     }
 
     pub fn render(&self) -> String {
-        let mut out = format!("{{\n  \"bench\": {},\n  \"schema\": 1,\n  \"results\": [\n", json_str(&self.id));
+        let mut out = format!("{{\n  \"bench\": {},\n  \"schema\": 2,\n  \"results\": [\n", json_str(&self.id));
         out += &self
             .entries
             .iter()
@@ -272,10 +281,13 @@ mod tests {
         };
         let mut j = JsonReport::new("unit");
         j.push(&r, Some(("elem/s", 1000.0)));
-        j.push(&r, None);
+        j.push_for(&r, None, "xla");
         let s = j.render();
         assert!(s.contains("\"bench\": \"unit\""));
+        assert!(s.contains("\"schema\": 2"));
         assert!(s.contains("\"op\": \"op \\\"x\\\"\""));
+        assert!(s.contains("\"backend\": \"native\""));
+        assert!(s.contains("\"backend\": \"xla\""));
         assert!(s.contains("\"iters\": 7"));
         assert!(s.contains("\"throughput_unit\": \"elem/s\""));
         // numbers must be bare JSON literals, not NaN/inf

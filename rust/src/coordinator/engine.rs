@@ -1,7 +1,10 @@
 //! The serving engine: continuous-batching generation loop over an abstract
-//! [`StepExecutor`] (the real one backed by PJRT in [`XlaExecutor`]; unit
-//! and property tests use [`MockExecutor`]).
-
+//! [`StepExecutor`]. Two real backends implement it — `XlaExecutor` (PJRT,
+//! behind the `backend-xla` feature) and [`NativeExecutor`] (pure-Rust
+//! interpreter, always available) — while unit and property tests use
+//! [`MockExecutor`]. Both real executors discover their compiled batch
+//! sizes through the shared [`crate::runtime::decode_batch_sizes`] parser,
+//! so batch selection can never disagree across backends.
 
 use std::time::Instant;
 
@@ -11,7 +14,9 @@ use super::batcher::Batcher;
 use super::kv_cache::KvCache;
 use super::request::{GenRequest, GenResult, RequestId};
 use super::scheduler::{plan_step, SchedulerPolicy};
-use crate::model::{ModelDesc, WeightSet};
+use crate::model::{GraphSpec, ModelDesc, NativeDims, NativeWeights, WeightSet};
+use crate::runtime::decode_batch_sizes;
+#[cfg(feature = "backend-xla")]
 use crate::runtime::{f32_literal, i32_literal, literal_to_f32, Runtime};
 
 /// One model-step backend: prefill a batch of prompts / decode one token.
@@ -43,6 +48,7 @@ pub trait StepExecutor {
 // ---------------------------------------------------------------------------
 
 /// PJRT-backed executor for one (graph tag, weight set) pair.
+#[cfg(feature = "backend-xla")]
 pub struct XlaExecutor<'rt> {
     pub rt: &'rt Runtime,
     pub tag: String,
@@ -50,20 +56,12 @@ pub struct XlaExecutor<'rt> {
     batches: Vec<usize>,
 }
 
+#[cfg(feature = "backend-xla")]
 impl<'rt> XlaExecutor<'rt> {
     /// `tag` is the graph quant tag, e.g. "fp" or "mxfp4_b32_t3".
     pub fn new(rt: &'rt Runtime, tag: &str, ws: &WeightSet) -> Result<Self> {
         let weights = rt.stage_weights(ws)?;
-        let mut batches: Vec<usize> = rt
-            .desc
-            .graphs
-            .iter()
-            .filter_map(|g| {
-                g.strip_prefix(&format!("decode_{tag}_b"))
-                    .and_then(|b| b.parse().ok())
-            })
-            .collect();
-        batches.sort_unstable();
+        let batches = decode_batch_sizes(&rt.desc.graphs, tag);
         anyhow::ensure!(!batches.is_empty(), "no decode graphs for tag {tag}");
         Ok(XlaExecutor { rt, tag: tag.to_string(), weights, batches })
     }
@@ -73,6 +71,7 @@ impl<'rt> XlaExecutor<'rt> {
     }
 }
 
+#[cfg(feature = "backend-xla")]
 impl StepExecutor for XlaExecutor<'_> {
     fn vocab(&self) -> usize {
         self.desc().vocab
@@ -134,12 +133,115 @@ impl StepExecutor for XlaExecutor<'_> {
     }
 }
 
+#[cfg(feature = "backend-xla")]
 fn split_logits_kv(mut parts: Vec<xla::Literal>) -> Result<(Vec<f32>, Vec<Vec<f32>>)> {
     anyhow::ensure!(!parts.is_empty(), "empty result tuple");
     let rest = parts.split_off(1);
     let logits = literal_to_f32(&parts[0])?;
     let kv = rest.iter().map(literal_to_f32).collect::<Result<Vec<_>>>()?;
     Ok((logits, kv))
+}
+
+// ---------------------------------------------------------------------------
+
+/// Pure-Rust executor: the same `.lxt` weights and compiled-batch-size
+/// discipline as `XlaExecutor`, with prefill/decode interpreted by
+/// [`NativeWeights`] (`linalg::Mat` matmuls, `transform`/Hadamard ops, MX
+/// QDQ kernels) instead of PJRT. This is the serving path on machines
+/// without the XLA toolchain — stock CI runners included.
+#[derive(Clone)]
+pub struct NativeExecutor {
+    pub tag: String,
+    weights: NativeWeights,
+    spec: GraphSpec,
+    batches: Vec<usize>,
+}
+
+impl NativeExecutor {
+    /// Artifact-backed constructor: same signature shape as
+    /// `XlaExecutor::new` — manifest dims + graph inventory + `.lxt`
+    /// weight set, batch sizes parsed from `decode_<tag>_b*` names.
+    pub fn new(desc: &ModelDesc, tag: &str, ws: &WeightSet) -> Result<Self> {
+        let spec = GraphSpec::from_tag(tag)?;
+        let dims = NativeDims::from_desc(desc);
+        spec.validate(&dims)?;
+        let weights = NativeWeights::from_weight_set(dims, &desc.weight_order, ws)?;
+        let batches = decode_batch_sizes(&desc.graphs, tag);
+        anyhow::ensure!(!batches.is_empty(), "no decode graphs for tag {tag}");
+        Ok(NativeExecutor { tag: tag.to_string(), weights, spec, batches })
+    }
+
+    /// Artifact-free constructor (tests, smoke benches): deterministic
+    /// random-init weights and an explicit compiled-batch list.
+    pub fn synthetic(dims: NativeDims, tag: &str, batches: Vec<usize>, seed: u64) -> Result<Self> {
+        let spec = GraphSpec::from_tag(tag)?;
+        spec.validate(&dims)?;
+        let batches = normalize_batches(batches)?;
+        Ok(NativeExecutor {
+            tag: tag.to_string(),
+            weights: NativeWeights::synthetic(dims, seed),
+            spec,
+            batches,
+        })
+    }
+
+    /// Wrap pre-built weights (e.g. parsed from an in-memory weight set).
+    pub fn from_weights(weights: NativeWeights, tag: &str, batches: Vec<usize>) -> Result<Self> {
+        let spec = GraphSpec::from_tag(tag)?;
+        spec.validate(&weights.dims)?;
+        let batches = normalize_batches(batches)?;
+        Ok(NativeExecutor { tag: tag.to_string(), weights, spec, batches })
+    }
+}
+
+/// Sort/dedup an explicit compiled-batch list, enforcing the same `> 0`
+/// discipline as the shared `decode_<tag>_b*` parser (a 0 bucket would
+/// panic deep inside the engine's prefill sizing instead of erroring here).
+fn normalize_batches(mut batches: Vec<usize>) -> Result<Vec<usize>> {
+    anyhow::ensure!(!batches.is_empty(), "batch list must be non-empty");
+    anyhow::ensure!(
+        batches.iter().all(|b| *b > 0),
+        "batch sizes must be positive: {batches:?}"
+    );
+    batches.sort_unstable();
+    batches.dedup();
+    Ok(batches)
+}
+
+impl StepExecutor for NativeExecutor {
+    fn vocab(&self) -> usize {
+        self.weights.dims.vocab
+    }
+    fn n_layers(&self) -> usize {
+        self.weights.dims.n_layers
+    }
+    fn kv_seq(&self) -> usize {
+        self.weights.dims.kv_seq
+    }
+    fn kv_row(&self) -> usize {
+        self.weights.dims.d_model
+    }
+    fn prefill_len(&self) -> usize {
+        self.weights.dims.prefill_len
+    }
+    fn batch_sizes(&self) -> Vec<usize> {
+        self.batches.clone()
+    }
+
+    fn prefill(&self, tokens: &[i32], lens: &[i32], batch: usize)
+        -> Result<(Vec<f32>, Vec<Vec<f32>>)> {
+        self.weights.forward_prefill(tokens, lens, batch, &self.spec)
+    }
+
+    fn decode(
+        &self,
+        tokens: &[i32],
+        pos: &[i32],
+        kv: &[Vec<f32>],
+        batch: usize,
+    ) -> Result<(Vec<f32>, Vec<Vec<f32>>)> {
+        self.weights.forward_decode(tokens, pos, kv, batch, &self.spec)
+    }
 }
 
 // ---------------------------------------------------------------------------

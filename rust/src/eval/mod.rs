@@ -1,6 +1,8 @@
-//! Evaluation harness over the PJRT runtime: perplexity and zero-shot task
-//! accuracy — the Rust mirror of `python/compile/evaluate.py`, operating on
-//! AOT `logits_*` graphs with any weight variant as arguments.
+//! Evaluation harness over an execution [`Backend`]: perplexity and
+//! zero-shot task accuracy — the Rust mirror of
+//! `python/compile/evaluate.py`, operating on the `logits_*` graphs with
+//! any weight variant as arguments. Generic over the backend, so the same
+//! harness runs on PJRT (`backend-xla`) and on the pure-Rust interpreter.
 //!
 //! Scoring protocol (LM-eval-harness style): for each instance, score all
 //! four `BOS + prompt + choice` sequences by mean per-token log-likelihood
@@ -10,12 +12,12 @@ use anyhow::{Context, Result};
 
 use crate::data::TaskSet;
 use crate::model::WeightSet;
-use crate::runtime::{i32_literal, literal_to_f32, Runtime};
+use crate::runtime::Backend;
 
 /// Evaluate perplexity of a weight variant under a quant graph tag
 /// (`fp`, `mxfp4_b32_t3`, ...). Corpus: flat (n, t) tokens.
-pub fn perplexity(
-    rt: &Runtime,
+pub fn perplexity<B: Backend>(
+    rt: &B,
     tag: &str,
     ws: &WeightSet,
     corpus: &[i32],
@@ -23,10 +25,10 @@ pub fn perplexity(
     t: usize,
 ) -> Result<f64> {
     let graph = format!("logits_ppl_{tag}");
-    let (gb, gt) = rt.desc.ppl_shape;
+    let (gb, gt) = rt.desc().ppl_shape;
     anyhow::ensure!(t == gt, "corpus seq len {t} != graph {gt}");
-    let weights = rt.stage_weights(ws)?;
-    let vocab = rt.desc.vocab;
+    let weights = rt.stage(ws)?;
+    let vocab = rt.desc().vocab;
     let mut total_nll = 0.0f64;
     let mut count = 0usize;
     let mut batch_tokens = vec![0i32; gb * gt];
@@ -36,11 +38,7 @@ pub fn perplexity(
         batch_tokens.fill(0);
         batch_tokens[..rows * gt]
             .copy_from_slice(&corpus[rows_done * gt..(rows_done + rows) * gt]);
-        let tok_lit = i32_literal(&batch_tokens, &[gb as i64, gt as i64])?;
-        let mut inputs: Vec<&xla::Literal> = vec![&tok_lit];
-        inputs.extend(weights.iter());
-        let parts = rt.execute(&graph, &inputs)?;
-        let logits = literal_to_f32(&parts[0])?;
+        let logits = rt.logits(&graph, &weights, &batch_tokens, gb, gt)?;
         for r in 0..rows {
             for pos in 0..gt - 1 {
                 let tgt = batch_tokens[r * gt + pos + 1] as usize;
@@ -62,16 +60,16 @@ fn nll_of(logits: &[f32], target: usize) -> f64 {
 }
 
 /// Zero-shot accuracy per task + macro average.
-pub fn zero_shot(
-    rt: &Runtime,
+pub fn zero_shot<B: Backend>(
+    rt: &B,
     tag: &str,
     ws: &WeightSet,
     tasks: &[TaskSet],
 ) -> Result<Vec<(String, f64)>> {
     let graph = format!("logits_score_{tag}");
-    let (gb, gt) = rt.desc.score_shape;
-    let weights = rt.stage_weights(ws)?;
-    let vocab = rt.desc.vocab;
+    let (gb, gt) = rt.desc().score_shape;
+    let weights = rt.stage(ws)?;
+    let vocab = rt.desc().vocab;
     let mut out = Vec::new();
     let mut sum = 0.0;
     for task in tasks {
@@ -85,11 +83,7 @@ pub fn zero_shot(
             batch_tokens.fill(0);
             batch_tokens[..rows * gt]
                 .copy_from_slice(&task.tokens[done * gt..(done + rows) * gt]);
-            let tok_lit = i32_literal(&batch_tokens, &[gb as i64, gt as i64])?;
-            let mut inputs: Vec<&xla::Literal> = vec![&tok_lit];
-            inputs.extend(weights.iter());
-            let parts = rt.execute(&graph, &inputs)?;
-            let logits = literal_to_f32(&parts[0])?;
+            let logits = rt.logits(&graph, &weights, &batch_tokens, gb, gt)?;
             for r in 0..rows {
                 let flat = done + r;
                 let inst = flat / 4;

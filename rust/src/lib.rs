@@ -17,6 +17,14 @@
 //! everything usually pulled from crates.io (CLI parsing, config, RNG,
 //! property testing, bench harness, async runtime) is implemented in-repo —
 //! see `DESIGN.md` §3.1.
+//!
+//! The `xla` dependency sits behind the default-on **`backend-xla`** cargo
+//! feature. `--no-default-features` builds the pure-Rust core — the
+//! `runtime::NativeBackend` eval path and the `coordinator`'s
+//! `NativeExecutor` serving path interpret the same `.lxt` artifacts with
+//! in-repo kernels, so every machine (stock CI runners included) can
+//! build, test, and bench the quantization stack. See README §Feature
+//! matrix.
 
 pub mod bench;
 pub mod cli;

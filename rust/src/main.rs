@@ -2,10 +2,14 @@
 //!
 //! Subcommands:
 //!   info                          artifact + model summary
-//!   eval   --weights TAG --quant TAG [--ppl-only]
-//!   serve  --weights TAG --quant TAG [--requests N] [--slots N] [--max-new N]
+//!   eval   --weights TAG --quant TAG [--ppl-only] [--backend B]
+//!   serve  --weights TAG --quant TAG [--requests N] [--slots N] [--max-new N] [--backend B]
 //!   quantize-info --weights TAG   MX footprint accounting
 //!   variants                      list available weight variants
+//!
+//! `--backend` picks the execution backend: `xla` (PJRT, needs the
+//! `backend-xla` build feature — the default when available) or `native`
+//! (pure-Rust interpreter, works on any machine).
 
 use anyhow::{Context, Result};
 
@@ -14,8 +18,13 @@ use latmix::data::{load_ppl_corpus, load_tasks};
 use latmix::eval::{perplexity, zero_shot};
 use latmix::model::{ModelDesc, WeightSet};
 use latmix::mx::{MxConfig, pack::PackedMx};
+use latmix::runtime::{Backend, NativeBackend};
+#[cfg(feature = "backend-xla")]
 use latmix::runtime::Runtime;
+use latmix::server::run_serving_native;
+#[cfg(feature = "backend-xla")]
 use latmix::server::run_serving;
+use latmix::server::ServeReport;
 
 fn main() -> Result<()> {
     let args = Args::from_env();
@@ -29,8 +38,8 @@ fn main() -> Result<()> {
             eprintln!(
                 "usage: latmix <info|variants|eval|serve|quantize-info> [options]\n\
                  \n\
-                 eval   --weights TAG --quant TAG [--ppl-only]\n\
-                 serve  --weights TAG --quant TAG [--requests N] [--slots N] [--max-new N]\n\
+                 eval   --weights TAG --quant TAG [--ppl-only] [--backend xla|native]\n\
+                 serve  --weights TAG --quant TAG [--requests N] [--slots N] [--max-new N] [--backend xla|native]\n\
                  quantize-info --weights TAG [--format mxfp4]"
             );
             Ok(())
@@ -43,10 +52,31 @@ fn desc() -> Result<ModelDesc> {
     ModelDesc::load(&art).with_context(|| format!("load manifest from {art:?} (run `make artifacts` first)"))
 }
 
+/// The backend to use: explicit `--backend`, else XLA when compiled in.
+fn backend_name(args: &Args) -> &str {
+    args.opt("backend").unwrap_or(if cfg!(feature = "backend-xla") {
+        "xla"
+    } else {
+        "native"
+    })
+}
+
+fn unknown_backend(name: &str) -> anyhow::Error {
+    anyhow::anyhow!(
+        "unknown backend {name:?} (this build supports: native{})",
+        if cfg!(feature = "backend-xla") { ", xla" } else { "" }
+    )
+}
+
 fn info() -> Result<()> {
     let d = desc()?;
     println!("latmix-tiny: d_model={} layers={} heads={} d_ff={} vocab={}", d.d_model, d.n_layers, d.n_heads, d.d_ff, d.vocab);
     println!("kv_seq={} prefill_len={} graphs={}", d.kv_seq, d.prefill_len, d.graphs.len());
+    if cfg!(feature = "backend-xla") {
+        println!("backends: xla (default), native");
+    } else {
+        println!("backends: native (built without backend-xla)");
+    }
     for g in &d.graphs {
         println!("  graph {g}");
     }
@@ -63,17 +93,25 @@ fn variants() -> Result<()> {
 
 fn eval(args: &Args) -> Result<()> {
     let d = desc()?;
+    match backend_name(args) {
+        "native" => eval_on(&NativeBackend::new(d), args),
+        #[cfg(feature = "backend-xla")]
+        "xla" => eval_on(&Runtime::new(d)?, args),
+        other => Err(unknown_backend(other)),
+    }
+}
+
+fn eval_on<B: Backend>(rt: &B, args: &Args) -> Result<()> {
     let wtag = args.opt("weights").context("--weights required")?;
     let qtag = args.opt("quant").unwrap_or("fp");
-    let rt = Runtime::new(d)?;
-    let ws = WeightSet::load(&rt.desc, wtag)?;
+    let ws = WeightSet::load(rt.desc(), wtag)?;
     let art = latmix::artifacts_dir();
     let (corpus, n, t) = load_ppl_corpus(&art)?;
-    let ppl = perplexity(&rt, qtag, &ws, &corpus, n, t)?;
-    println!("weights={wtag} quant={qtag} ppl={ppl:.3}");
+    let ppl = perplexity(rt, qtag, &ws, &corpus, n, t)?;
+    println!("backend={} weights={wtag} quant={qtag} ppl={ppl:.3}", rt.id());
     if !args.flag("ppl-only") {
         let tasks = load_tasks(&art)?;
-        for (name, acc) in zero_shot(&rt, qtag, &ws, &tasks)? {
+        for (name, acc) in zero_shot(rt, qtag, &ws, &tasks)? {
             println!("  {name}: {:.2}%", acc * 100.0);
         }
     }
@@ -87,8 +125,15 @@ fn serve(args: &Args) -> Result<()> {
     let requests = args.opt_usize("requests", 16);
     let slots = args.opt_usize("slots", 8);
     let max_new = args.opt_usize("max-new", 32);
-    let rt = Runtime::new(d)?;
-    let rep = run_serving(&rt, &qtag, &wtag, requests, max_new, slots, 42)?;
+    let rep: ServeReport = match backend_name(args) {
+        "native" => run_serving_native(&d, &qtag, &wtag, requests, max_new, slots, 42)?,
+        #[cfg(feature = "backend-xla")]
+        "xla" => {
+            let rt = Runtime::new(d)?;
+            run_serving(&rt, &qtag, &wtag, requests, max_new, slots, 42)?
+        }
+        other => return Err(unknown_backend(other)),
+    };
     println!(
         "graph={} weights={} requests={} wall={:.2}s decode_tok/s={:.1} total_tok/s={:.1}",
         rep.tag, rep.weights, rep.requests, rep.wall_s, rep.decode_tok_per_s, rep.total_tok_per_s

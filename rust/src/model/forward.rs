@@ -1,0 +1,844 @@
+//! Pure-Rust transformer interpreter — the XLA-free execution path.
+//!
+//! Mirrors `python/compile/model.py` op for op (pre-RMSNorm Llama-style
+//! blocks, RoPE, SiLU-gated FFN, activation QDQ at every linear input,
+//! optional online T3 block-Hadamard on the down-proj input) over the same
+//! `.lxt` weight sets and the same `(batch, kv_seq, n_heads, head_dim)` KV
+//! plane layout as the AOT graphs. `NativeExecutor` (serving) and
+//! `NativeBackend` (eval) are thin wrappers over [`NativeWeights`], so the
+//! whole continuous-batching loop and the perplexity/zero-shot harness run
+//! on machines without the XLA toolchain.
+//!
+//! Numerics note: this path is float-faithful to the model definition but
+//! not bit-identical to the compiled HLO (different summation orders inside
+//! XLA fusions). Internal consistency — prefill+decode vs full-sequence —
+//! is property-tested below; cross-backend agreement with PJRT is covered
+//! by the artifact-gated integration tests.
+
+use std::collections::HashMap;
+
+use anyhow::{Context, Result};
+
+use crate::io::lxt::Tensor;
+use crate::linalg::{block_hadamard_apply, Mat};
+use crate::mx::{mx_qdq_rows, MxConfig};
+use crate::util::Pcg64;
+
+use super::{ModelDesc, WeightSet};
+
+/// RMSNorm epsilon (mirror of python `model.EPS`).
+pub const EPS: f32 = 1e-5;
+/// RoPE base (mirror of python `ModelConfig.rope_theta`; not in the
+/// manifest because every artifact set uses the default).
+pub const ROPE_THETA: f32 = 10000.0;
+
+/// Static model dimensions the interpreter needs — a [`ModelDesc`] without
+/// the artifact inventory, so executors can exist with no artifacts on disk.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NativeDims {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub kv_seq: usize,
+    pub prefill_len: usize,
+}
+
+impl NativeDims {
+    pub fn from_desc(d: &ModelDesc) -> NativeDims {
+        NativeDims {
+            vocab: d.vocab,
+            d_model: d.d_model,
+            n_layers: d.n_layers,
+            n_heads: d.n_heads,
+            d_ff: d.d_ff,
+            kv_seq: d.kv_seq,
+            prefill_len: d.prefill_len,
+        }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// The dimensions of the real latmix-tiny artifact set — the default
+    /// for artifact-free benches so native numbers are comparable.
+    pub fn latmix_tiny() -> NativeDims {
+        NativeDims {
+            vocab: 256,
+            d_model: 128,
+            n_layers: 4,
+            n_heads: 4,
+            d_ff: 384,
+            kv_seq: 160,
+            prefill_len: 32,
+        }
+    }
+}
+
+/// Activation-side quantization spec parsed from a graph quant tag
+/// (`fp` | `<fmt>_b<bs>` | `<fmt>_b<bs>_t3`, see `quant_tag` in
+/// `python/compile/aot.py`). What differs per compiled graph is exactly
+/// this: the activation QDQ config and the online T3 Hadamard.
+#[derive(Clone, Copy, Debug)]
+pub struct GraphSpec {
+    pub act: Option<MxConfig>,
+    /// Online T3 block-Hadamard block size applied to the down-proj input.
+    pub t3: Option<usize>,
+}
+
+impl GraphSpec {
+    /// The T3 block size every artifact set uses (python `t3=32`).
+    pub const T3_BLOCK: usize = 32;
+
+    pub fn fp() -> GraphSpec {
+        GraphSpec { act: None, t3: None }
+    }
+
+    pub fn from_tag(tag: &str) -> Result<GraphSpec> {
+        if tag == "fp" {
+            return Ok(GraphSpec::fp());
+        }
+        let (base, t3) = match tag.strip_suffix("_t3") {
+            Some(b) => (b, Some(Self::T3_BLOCK)),
+            None => (tag, None),
+        };
+        let (fmt, bs) = base
+            .rsplit_once("_b")
+            .with_context(|| format!("malformed quant tag {tag:?} (want fp or <fmt>_b<bs>[_t3])"))?;
+        let bs: usize = bs
+            .parse()
+            .with_context(|| format!("malformed block size in quant tag {tag:?}"))?;
+        let act = MxConfig::from_name(fmt, Some(bs))?;
+        Ok(GraphSpec { act: Some(act), t3 })
+    }
+
+    /// Parse the tag out of a full-sequence logits graph name
+    /// (`logits_ppl_<tag>` / `logits_score_<tag>`).
+    pub fn from_graph_name(graph: &str) -> Result<GraphSpec> {
+        let tag = graph
+            .strip_prefix("logits_ppl_")
+            .or_else(|| graph.strip_prefix("logits_score_"))
+            .with_context(|| format!("{graph:?} is not a logits graph"))?;
+        GraphSpec::from_tag(tag)
+    }
+
+    /// Check the spec is runnable at these dimensions (MX blocks must tile
+    /// both linear-input widths; T3 must tile the FFN width).
+    pub fn validate(&self, dims: &NativeDims) -> Result<()> {
+        if let Some(cfg) = &self.act {
+            anyhow::ensure!(
+                dims.d_model % cfg.block_size == 0 && dims.d_ff % cfg.block_size == 0,
+                "act block {} does not tile d_model {} / d_ff {}",
+                cfg.block_size,
+                dims.d_model,
+                dims.d_ff
+            );
+        }
+        if let Some(b) = self.t3 {
+            anyhow::ensure!(
+                b.is_power_of_two() && dims.d_ff % b == 0,
+                "t3 block {b} does not tile d_ff {}",
+                dims.d_ff
+            );
+        }
+        Ok(())
+    }
+}
+
+/// One transformer block's parameters (row-vector convention: `y = x W + b`,
+/// `W: (in, out)` — identical to the python pytree).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerWeights {
+    pub ln1: Vec<f32>,
+    pub wq: Mat,
+    pub bq: Vec<f32>,
+    pub wk: Mat,
+    pub bk: Vec<f32>,
+    pub wv: Mat,
+    pub bv: Vec<f32>,
+    pub wo: Mat,
+    pub bo: Vec<f32>,
+    pub ln2: Vec<f32>,
+    pub wg: Mat,
+    pub bg: Vec<f32>,
+    pub wu: Mat,
+    pub bu: Vec<f32>,
+    pub wd: Mat,
+    pub bd: Vec<f32>,
+}
+
+/// A full parsed weight set plus its dimensions — the native analogue of a
+/// staged PJRT literal vector.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NativeWeights {
+    pub dims: NativeDims,
+    pub embed: Mat,
+    pub layers: Vec<LayerWeights>,
+    pub lnf: Vec<f32>,
+    pub head: Mat,
+    pub bhead: Vec<f32>,
+}
+
+impl NativeWeights {
+    /// Parse an `.lxt` weight set using the manifest's canonical argument
+    /// order (`aot.weight_names`). Shape-checks every tensor.
+    pub fn from_weight_set(
+        dims: NativeDims,
+        order: &[String],
+        ws: &WeightSet,
+    ) -> Result<NativeWeights> {
+        anyhow::ensure!(
+            order.len() == ws.tensors.len(),
+            "weight order has {} names but weight set {:?} has {} tensors",
+            order.len(),
+            ws.tag,
+            ws.tensors.len()
+        );
+        let map: HashMap<&str, &Tensor> = order
+            .iter()
+            .map(String::as_str)
+            .zip(ws.tensors.iter())
+            .collect();
+        let vec1 = |name: &str, len: usize| -> Result<Vec<f32>> {
+            let t = *map
+                .get(name)
+                .with_context(|| format!("weight set {:?} missing {name}", ws.tag))?;
+            let v = t.as_f32().with_context(|| format!("{name} is not f32"))?;
+            anyhow::ensure!(v.len() == len, "{name}: len {} != expected {len}", v.len());
+            Ok(v.to_vec())
+        };
+        let mat2 = |name: &str, rows: usize, cols: usize| -> Result<Mat> {
+            let t = *map
+                .get(name)
+                .with_context(|| format!("weight set {:?} missing {name}", ws.tag))?;
+            let v = t.as_f32().with_context(|| format!("{name} is not f32"))?;
+            anyhow::ensure!(
+                t.dims == [rows, cols],
+                "{name}: dims {:?} != expected [{rows}, {cols}]",
+                t.dims
+            );
+            Ok(Mat::from_vec(rows, cols, v.to_vec()))
+        };
+        let (d, f, v) = (dims.d_model, dims.d_ff, dims.vocab);
+        let mut layers = Vec::with_capacity(dims.n_layers);
+        for i in 0..dims.n_layers {
+            let p = |k: &str| format!("layers.{i}.{k}");
+            layers.push(LayerWeights {
+                ln1: vec1(&p("ln1"), d)?,
+                wq: mat2(&p("wq"), d, d)?,
+                bq: vec1(&p("bq"), d)?,
+                wk: mat2(&p("wk"), d, d)?,
+                bk: vec1(&p("bk"), d)?,
+                wv: mat2(&p("wv"), d, d)?,
+                bv: vec1(&p("bv"), d)?,
+                wo: mat2(&p("wo"), d, d)?,
+                bo: vec1(&p("bo"), d)?,
+                ln2: vec1(&p("ln2"), d)?,
+                wg: mat2(&p("wg"), d, f)?,
+                bg: vec1(&p("bg"), f)?,
+                wu: mat2(&p("wu"), d, f)?,
+                bu: vec1(&p("bu"), f)?,
+                wd: mat2(&p("wd"), f, d)?,
+                bd: vec1(&p("bd"), d)?,
+            });
+        }
+        Ok(NativeWeights {
+            dims,
+            embed: mat2("embed", v, d)?,
+            layers,
+            lnf: vec1("lnf", d)?,
+            head: mat2("head", d, v)?,
+            bhead: vec1("bhead", v)?,
+        })
+    }
+
+    /// Deterministic random-init weights (scaled-normal matrices, unit
+    /// norms, zero biases — mirror of python `init_params`) for
+    /// artifact-free tests and benches.
+    pub fn synthetic(dims: NativeDims, seed: u64) -> NativeWeights {
+        let mut rng = Pcg64::seed(seed);
+        let (d, f, v) = (dims.d_model, dims.d_ff, dims.vocab);
+        let mut mat = |r: usize, c: usize, scale: f32| -> Mat {
+            Mat::from_vec(r, c, rng.normal_vec(r * c, scale))
+        };
+        let d_scale = (d as f32).powf(-0.5);
+        let o_scale = (2 * d * dims.n_layers) as f32;
+        let o_scale = o_scale.powf(-0.5);
+        let dn_scale = (2 * f * dims.n_layers) as f32;
+        let dn_scale = dn_scale.powf(-0.5);
+        let embed = mat(v, d, 1.0);
+        let mut layers = Vec::with_capacity(dims.n_layers);
+        for _ in 0..dims.n_layers {
+            layers.push(LayerWeights {
+                ln1: vec![1.0; d],
+                wq: mat(d, d, d_scale),
+                bq: vec![0.0; d],
+                wk: mat(d, d, d_scale),
+                bk: vec![0.0; d],
+                wv: mat(d, d, d_scale),
+                bv: vec![0.0; d],
+                wo: mat(d, d, o_scale),
+                bo: vec![0.0; d],
+                ln2: vec![1.0; d],
+                wg: mat(d, f, d_scale),
+                bg: vec![0.0; f],
+                wu: mat(d, f, d_scale),
+                bu: vec![0.0; f],
+                wd: mat(f, d, dn_scale),
+                bd: vec![0.0; d],
+            });
+        }
+        let head = mat(d, v, d_scale);
+        NativeWeights {
+            dims,
+            embed,
+            layers,
+            lnf: vec![1.0; d],
+            head,
+            bhead: vec![0.0; v],
+        }
+    }
+
+    /// Serialize back into the canonical argument order — gives tests a
+    /// real [`WeightSet`] (and its `weight_order`) without any artifacts.
+    pub fn to_weight_set(&self, tag: &str) -> (Vec<String>, WeightSet) {
+        let dims = &self.dims;
+        let (d, f, v) = (dims.d_model, dims.d_ff, dims.vocab);
+        let mut items: Vec<(String, Tensor)> = Vec::new();
+        items.push(("embed".into(), Tensor::f32(vec![v, d], self.embed.data.clone())));
+        for (i, lw) in self.layers.iter().enumerate() {
+            let p = |k: &str| format!("layers.{i}.{k}");
+            items.extend([
+                (p("ln1"), Tensor::f32(vec![d], lw.ln1.clone())),
+                (p("wq"), Tensor::f32(vec![d, d], lw.wq.data.clone())),
+                (p("bq"), Tensor::f32(vec![d], lw.bq.clone())),
+                (p("wk"), Tensor::f32(vec![d, d], lw.wk.data.clone())),
+                (p("bk"), Tensor::f32(vec![d], lw.bk.clone())),
+                (p("wv"), Tensor::f32(vec![d, d], lw.wv.data.clone())),
+                (p("bv"), Tensor::f32(vec![d], lw.bv.clone())),
+                (p("wo"), Tensor::f32(vec![d, d], lw.wo.data.clone())),
+                (p("bo"), Tensor::f32(vec![d], lw.bo.clone())),
+                (p("ln2"), Tensor::f32(vec![d], lw.ln2.clone())),
+                (p("wg"), Tensor::f32(vec![d, f], lw.wg.data.clone())),
+                (p("bg"), Tensor::f32(vec![f], lw.bg.clone())),
+                (p("wu"), Tensor::f32(vec![d, f], lw.wu.data.clone())),
+                (p("bu"), Tensor::f32(vec![f], lw.bu.clone())),
+                (p("wd"), Tensor::f32(vec![f, d], lw.wd.data.clone())),
+                (p("bd"), Tensor::f32(vec![d], lw.bd.clone())),
+            ]);
+        }
+        items.push(("lnf".into(), Tensor::f32(vec![d], self.lnf.clone())));
+        items.push(("head".into(), Tensor::f32(vec![d, v], self.head.data.clone())));
+        items.push(("bhead".into(), Tensor::f32(vec![v], self.bhead.clone())));
+        let mut order = Vec::with_capacity(items.len());
+        let mut tensors = Vec::with_capacity(items.len());
+        for (name, t) in items {
+            order.push(name);
+            tensors.push(t);
+        }
+        let param_count = tensors.iter().map(|t| t.len()).sum();
+        (
+            order,
+            WeightSet { tag: tag.to_string(), tensors, param_count },
+        )
+    }
+
+    // -- entry points -------------------------------------------------------
+
+    /// Full-sequence causal logits: tokens (batch, t) -> flat
+    /// (batch * t * vocab). The native form of the `logits_*` graphs.
+    pub fn forward_seq(
+        &self,
+        tokens: &[i32],
+        batch: usize,
+        t: usize,
+        spec: &GraphSpec,
+    ) -> Result<Vec<f32>> {
+        anyhow::ensure!(tokens.len() == batch * t, "tokens len != batch * t");
+        spec.validate(&self.dims)?;
+        let mut x = self.embed_rows(tokens);
+        let lens = vec![t; batch];
+        for lw in &self.layers {
+            self.block_full(lw, &mut x, batch, t, &lens, spec);
+        }
+        let xf = rmsnorm_rows(&x, self.dims.d_model, &self.lnf);
+        Ok(linear(&xf, &self.head, &self.bhead))
+    }
+
+    /// Prefill: tokens (batch, prefill_len) padded, `lens` true prompt
+    /// lengths. Returns (last-position logits (batch, vocab), KV planes —
+    /// one `(batch, kv_seq, d_model)` buffer per (layer, k/v), k before v).
+    pub fn forward_prefill(
+        &self,
+        tokens: &[i32],
+        lens: &[i32],
+        batch: usize,
+        spec: &GraphSpec,
+    ) -> Result<(Vec<f32>, Vec<Vec<f32>>)> {
+        let dims = &self.dims;
+        let (t, d, s_max, v) = (dims.prefill_len, dims.d_model, dims.kv_seq, dims.vocab);
+        anyhow::ensure!(tokens.len() == batch * t, "tokens len != batch * prefill_len");
+        anyhow::ensure!(lens.len() == batch, "lens len != batch");
+        anyhow::ensure!(t <= s_max, "prefill_len {t} exceeds kv_seq {s_max}");
+        spec.validate(dims)?;
+        let lens_u: Vec<usize> = lens.iter().map(|l| (*l).clamp(0, t as i32) as usize).collect();
+        let mut x = self.embed_rows(tokens);
+        let mut kv = Vec::with_capacity(self.layers.len() * 2);
+        for lw in &self.layers {
+            let (k_rows, v_rows) = self.block_full(lw, &mut x, batch, t, &lens_u, spec);
+            kv.push(export_plane(&k_rows, batch, t, s_max, d));
+            kv.push(export_plane(&v_rows, batch, t, s_max, d));
+        }
+        let xf = rmsnorm_rows(&x, d, &self.lnf);
+        let all = linear(&xf, &self.head, &self.bhead);
+        let mut logits = vec![0.0f32; batch * v];
+        for b in 0..batch {
+            // python: last = clip(len - 1, 0, t - 1)
+            let last = lens_u[b].max(1).min(t) - 1;
+            logits[b * v..(b + 1) * v]
+                .copy_from_slice(&all[(b * t + last) * v..(b * t + last + 1) * v]);
+        }
+        Ok((logits, kv))
+    }
+
+    /// One decode step at per-lane positions over cached KV planes (same
+    /// layout as [`Self::forward_prefill`] emits). Returns updated planes.
+    pub fn forward_decode(
+        &self,
+        tokens: &[i32],
+        pos: &[i32],
+        kv: &[Vec<f32>],
+        batch: usize,
+        spec: &GraphSpec,
+    ) -> Result<(Vec<f32>, Vec<Vec<f32>>)> {
+        let dims = &self.dims;
+        let (d, s_max, h) = (dims.d_model, dims.kv_seq, dims.n_heads);
+        let dh = dims.head_dim();
+        anyhow::ensure!(tokens.len() == batch && pos.len() == batch, "decode batch mismatch");
+        anyhow::ensure!(kv.len() == dims.n_layers * 2, "kv plane count mismatch");
+        for plane in kv {
+            anyhow::ensure!(plane.len() == batch * s_max * d, "kv plane size mismatch");
+        }
+        spec.validate(dims)?;
+        let mut out_kv: Vec<Vec<f32>> = kv.to_vec();
+        let mut x = self.embed_rows(tokens);
+        let scale = 1.0 / (dh as f32).sqrt();
+        for (li, lw) in self.layers.iter().enumerate() {
+            let (left, right) = out_kv.split_at_mut(2 * li + 1);
+            let kc = &mut left[2 * li];
+            let vc = &mut right[0];
+            let mut hq = rmsnorm_rows(&x, d, &lw.ln1);
+            qdq_rows(&mut hq, d, spec);
+            let mut q = linear(&hq, &lw.wq, &lw.bq);
+            let mut kn = linear(&hq, &lw.wk, &lw.bk);
+            let vn = linear(&hq, &lw.wv, &lw.bv);
+            apply_rope_rows(&mut q, h, dh, pos);
+            apply_rope_rows(&mut kn, h, dh, pos);
+            let mut o = vec![0.0f32; batch * d];
+            let mut scores = vec![0.0f32; s_max];
+            for b in 0..batch {
+                let p = pos[b];
+                // scatter the new K/V row (one-hot in the graph: an
+                // out-of-range position writes nothing)
+                if p >= 0 && (p as usize) < s_max {
+                    let at = b * s_max * d + (p as usize) * d;
+                    kc[at..at + d].copy_from_slice(&kn[b * d..(b + 1) * d]);
+                    vc[at..at + d].copy_from_slice(&vn[b * d..(b + 1) * d]);
+                }
+                for hh in 0..h {
+                    let qrow = &q[b * d + hh * dh..b * d + hh * dh + dh];
+                    for (s, sc) in scores.iter_mut().enumerate() {
+                        *sc = if (s as i32) <= p {
+                            let at = b * s_max * d + s * d + hh * dh;
+                            dot(qrow, &kc[at..at + dh]) * scale
+                        } else {
+                            -1e9
+                        };
+                    }
+                    softmax_inplace(&mut scores);
+                    let orow = &mut o[b * d + hh * dh..b * d + hh * dh + dh];
+                    for (s, w) in scores.iter().enumerate() {
+                        let at = b * s_max * d + s * d + hh * dh;
+                        axpy(orow, *w, &vc[at..at + dh]);
+                    }
+                }
+            }
+            qdq_rows(&mut o, d, spec);
+            add_in_place(&mut x, &linear(&o, &lw.wo, &lw.bo));
+            self.ffn(lw, &mut x, spec);
+        }
+        let xf = rmsnorm_rows(&x, d, &self.lnf);
+        Ok((linear(&xf, &self.head, &self.bhead), out_kv))
+    }
+
+    // -- internals ----------------------------------------------------------
+
+    fn embed_rows(&self, tokens: &[i32]) -> Vec<f32> {
+        let d = self.dims.d_model;
+        let mut x = vec![0.0f32; tokens.len() * d];
+        for (i, &tk) in tokens.iter().enumerate() {
+            // XLA gather clamps out-of-range indices; mirror that.
+            let row = (tk.max(0) as usize).min(self.dims.vocab - 1);
+            x[i * d..(i + 1) * d].copy_from_slice(self.embed.row(row));
+        }
+        x
+    }
+
+    /// One block over (batch * t, d) rows with causal + `s < lens[lane]`
+    /// masking; returns the RoPE'd (batch * t, d) K and V rows.
+    fn block_full(
+        &self,
+        lw: &LayerWeights,
+        x: &mut Vec<f32>,
+        batch: usize,
+        t: usize,
+        lens: &[usize],
+        spec: &GraphSpec,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let dims = &self.dims;
+        let (d, h) = (dims.d_model, dims.n_heads);
+        let dh = dims.head_dim();
+        let n = batch * t;
+        let mut hq = rmsnorm_rows(x, d, &lw.ln1);
+        qdq_rows(&mut hq, d, spec);
+        let mut q = linear(&hq, &lw.wq, &lw.bq);
+        let mut k = linear(&hq, &lw.wk, &lw.bk);
+        let v = linear(&hq, &lw.wv, &lw.bv);
+        let pos: Vec<i32> = (0..n).map(|i| (i % t) as i32).collect();
+        apply_rope_rows(&mut q, h, dh, &pos);
+        apply_rope_rows(&mut k, h, dh, &pos);
+        let scale = 1.0 / (dh as f32).sqrt();
+        let mut o = vec![0.0f32; n * d];
+        let mut scores = vec![0.0f32; t];
+        for b in 0..batch {
+            let len = lens[b];
+            let base = b * t * d;
+            for hh in 0..h {
+                for tq in 0..t {
+                    let qrow = &q[base + tq * d + hh * dh..base + tq * d + hh * dh + dh];
+                    for (s, sc) in scores.iter_mut().enumerate() {
+                        *sc = if s <= tq && s < len {
+                            let at = base + s * d + hh * dh;
+                            dot(qrow, &k[at..at + dh]) * scale
+                        } else {
+                            -1e9
+                        };
+                    }
+                    softmax_inplace(&mut scores);
+                    let orow = &mut o[base + tq * d + hh * dh..base + tq * d + hh * dh + dh];
+                    for (s, w) in scores.iter().enumerate() {
+                        let at = base + s * d + hh * dh;
+                        axpy(orow, *w, &v[at..at + dh]);
+                    }
+                }
+            }
+        }
+        qdq_rows(&mut o, d, spec);
+        add_in_place(x, &linear(&o, &lw.wo, &lw.bo));
+        self.ffn(lw, x, spec);
+        (k, v)
+    }
+
+    /// Pre-norm SiLU-gated FFN with optional online T3 Hadamard, in place.
+    fn ffn(&self, lw: &LayerWeights, x: &mut Vec<f32>, spec: &GraphSpec) {
+        let d = self.dims.d_model;
+        let mut hq = rmsnorm_rows(x, d, &lw.ln2);
+        qdq_rows(&mut hq, d, spec);
+        let mut ff = linear(&hq, &lw.wg, &lw.bg);
+        silu_in_place(&mut ff);
+        let up = linear(&hq, &lw.wu, &lw.bu);
+        for (g, u) in ff.iter_mut().zip(&up) {
+            *g *= *u;
+        }
+        if let Some(tb) = spec.t3 {
+            block_hadamard_apply(&mut ff, tb);
+        }
+        qdq_rows(&mut ff, self.dims.d_ff, spec);
+        add_in_place(x, &linear(&ff, &lw.wd, &lw.bd));
+    }
+}
+
+// -- free helpers -----------------------------------------------------------
+
+fn rmsnorm_rows(x: &[f32], d: usize, g: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; x.len()];
+    for (row_in, row_out) in x.chunks(d).zip(out.chunks_mut(d)) {
+        let ms = row_in.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let r = 1.0 / (ms + EPS).sqrt();
+        for ((o, v), gg) in row_out.iter_mut().zip(row_in).zip(g) {
+            *o = v * r * gg;
+        }
+    }
+    out
+}
+
+/// `x @ w + b` for row-major `x` with `x.len() / w.rows` rows.
+fn linear(x: &[f32], w: &Mat, b: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(x.len() % w.rows, 0);
+    let n = x.len() / w.rows;
+    let mut out = Mat::from_vec(n, w.rows, x.to_vec()).matmul(w).data;
+    for row in out.chunks_mut(w.cols) {
+        for (o, bb) in row.iter_mut().zip(b) {
+            *o += *bb;
+        }
+    }
+    out
+}
+
+fn qdq_rows(x: &mut [f32], row_len: usize, spec: &GraphSpec) {
+    if let Some(cfg) = &spec.act {
+        mx_qdq_rows(x, row_len, cfg);
+    }
+}
+
+/// RoPE over head-major rows: `x` is (n, n_heads * dh), `pos` gives the
+/// sequence position of each row. Pairs (even, odd) rotate exactly as
+/// python `apply_rope`.
+fn apply_rope_rows(x: &mut [f32], n_heads: usize, dh: usize, pos: &[i32]) {
+    let half = dh / 2;
+    let d = n_heads * dh;
+    // position-independent inverse frequencies, hoisted out of the row loop
+    let inv: Vec<f32> = (0..half)
+        .map(|i| 1.0 / ROPE_THETA.powf((2 * i) as f32 / dh as f32))
+        .collect();
+    for (row, &p) in x.chunks_mut(d).zip(pos) {
+        for (i, &invf) in inv.iter().enumerate() {
+            let ang = p as f32 * invf;
+            let (sin, cos) = ang.sin_cos();
+            for hh in 0..n_heads {
+                let at = hh * dh + 2 * i;
+                let x1 = row[at];
+                let x2 = row[at + 1];
+                row[at] = x1 * cos - x2 * sin;
+                row[at + 1] = x1 * sin + x2 * cos;
+            }
+        }
+    }
+}
+
+fn softmax_inplace(s: &mut [f32]) {
+    let m = s.iter().fold(f32::NEG_INFINITY, |a, b| a.max(*b));
+    let mut z = 0.0f32;
+    for v in s.iter_mut() {
+        *v = (*v - m).exp();
+        z += *v;
+    }
+    let inv = 1.0 / z;
+    for v in s.iter_mut() {
+        *v *= inv;
+    }
+}
+
+fn silu_in_place(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v /= 1.0 + (-*v).exp();
+    }
+}
+
+#[inline]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+#[inline]
+fn axpy(out: &mut [f32], a: f32, x: &[f32]) {
+    for (o, v) in out.iter_mut().zip(x) {
+        *o += a * v;
+    }
+}
+
+fn add_in_place(x: &mut [f32], y: &[f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (a, b) in x.iter_mut().zip(y) {
+        *a += *b;
+    }
+}
+
+/// Copy per-lane (t, d) K/V rows into a zero-padded (batch, s_max, d) plane.
+fn export_plane(rows: &[f32], batch: usize, t: usize, s_max: usize, d: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; batch * s_max * d];
+    for b in 0..batch {
+        out[b * s_max * d..b * s_max * d + t * d]
+            .copy_from_slice(&rows[b * t * d..(b + 1) * t * d]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> NativeDims {
+        NativeDims {
+            vocab: 32,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 32,
+            kv_seq: 24,
+            prefill_len: 8,
+        }
+    }
+
+    fn quantizable() -> NativeDims {
+        NativeDims {
+            vocab: 32,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 64,
+            kv_seq: 24,
+            prefill_len: 8,
+        }
+    }
+
+    fn argmax(v: &[f32]) -> i32 {
+        let mut best = 0usize;
+        let mut bv = f32::NEG_INFINITY;
+        for (i, x) in v.iter().enumerate() {
+            if *x > bv {
+                bv = *x;
+                best = i;
+            }
+        }
+        best as i32
+    }
+
+    #[test]
+    fn spec_parse() {
+        let fp = GraphSpec::from_tag("fp").unwrap();
+        assert!(fp.act.is_none() && fp.t3.is_none());
+        let q = GraphSpec::from_tag("mxfp4_b32_t3").unwrap();
+        let cfg = q.act.unwrap();
+        assert_eq!(cfg.name, "mxfp4");
+        assert_eq!(cfg.block_size, 32);
+        assert_eq!(q.t3, Some(32));
+        let nv = GraphSpec::from_tag("nvfp4_b16").unwrap();
+        assert!(nv.act.unwrap().nv && nv.t3.is_none());
+        assert!(GraphSpec::from_tag("bogus").is_err());
+        assert!(GraphSpec::from_tag("mxfp4_bXX").is_err());
+        let g = GraphSpec::from_graph_name("logits_ppl_mxfp4_b32").unwrap();
+        assert_eq!(g.act.unwrap().block_size, 32);
+        assert!(GraphSpec::from_graph_name("decode_fp_b1").is_err());
+    }
+
+    #[test]
+    fn spec_validate_blocks() {
+        let spec = GraphSpec::from_tag("mxfp4_b32").unwrap();
+        assert!(spec.validate(&quantizable()).is_ok());
+        // d_model 16 is not tiled by block 32
+        assert!(spec.validate(&tiny()).is_err());
+        assert!(GraphSpec::fp().validate(&tiny()).is_ok());
+    }
+
+    #[test]
+    fn weight_set_roundtrip() {
+        let w = NativeWeights::synthetic(tiny(), 11);
+        let (order, ws) = w.to_weight_set("fp_test");
+        assert_eq!(order.len(), 1 + 16 * 2 + 3);
+        let back = NativeWeights::from_weight_set(tiny(), &order, &ws).unwrap();
+        assert_eq!(w, back);
+    }
+
+    #[test]
+    fn prefill_ignores_padding() {
+        let w = NativeWeights::synthetic(tiny(), 3);
+        let spec = GraphSpec::fp();
+        let t = tiny().prefill_len;
+        let mut a = vec![0i32; 2 * t];
+        a[..4].copy_from_slice(&[1, 5, 9, 2]);
+        a[t..t + 3].copy_from_slice(&[7, 7, 7]);
+        let mut b = a.clone();
+        // scribble over the padding region of both lanes
+        for x in b[4..t].iter_mut() {
+            *x = 31;
+        }
+        for x in b[t + 3..].iter_mut() {
+            *x = 13;
+        }
+        let lens = [4i32, 3];
+        let (la, _) = w.forward_prefill(&a, &lens, 2, &spec).unwrap();
+        let (lb, _) = w.forward_prefill(&b, &lens, 2, &spec).unwrap();
+        assert_eq!(la, lb, "padding tokens leaked into last-position logits");
+    }
+
+    #[test]
+    fn prefill_decode_matches_forward_seq() {
+        // Greedy continuation through the KV path must match argmax
+        // chaining on full-sequence logits — the native mirror of the
+        // artifact-gated `decode_matches_logits_graph` integration test.
+        let dims = tiny();
+        let w = NativeWeights::synthetic(dims, 21);
+        let spec = GraphSpec::fp();
+        let prompt = [1i32, 4, 9, 2];
+        let t = dims.prefill_len;
+        let v = dims.vocab;
+
+        // KV path
+        let mut tokens = vec![0i32; t];
+        tokens[..prompt.len()].copy_from_slice(&prompt);
+        let (logits, mut kv) = w
+            .forward_prefill(&tokens, &[prompt.len() as i32], 1, &spec)
+            .unwrap();
+        let mut via_kv = vec![argmax(&logits)];
+        let mut pos = prompt.len() as i32;
+        for _ in 0..3 {
+            let (lg, kv2) = w
+                .forward_decode(&[*via_kv.last().unwrap()], &[pos], &kv, 1, &spec)
+                .unwrap();
+            via_kv.push(argmax(&lg));
+            kv = kv2;
+            pos += 1;
+        }
+
+        // full-sequence reference
+        let mut seq: Vec<i32> = prompt.to_vec();
+        let mut via_seq = Vec::new();
+        for _ in 0..4 {
+            let n = seq.len();
+            let lg = w.forward_seq(&seq, 1, n, &spec).unwrap();
+            let next = argmax(&lg[(n - 1) * v..n * v]);
+            via_seq.push(next);
+            seq.push(next);
+        }
+        assert_eq!(via_kv, via_seq, "KV decode path diverges from full-seq path");
+    }
+
+    #[test]
+    fn quant_spec_changes_logits() {
+        // The activation-QDQ and T3 paths must actually be live.
+        let dims = quantizable();
+        let w = NativeWeights::synthetic(dims, 5);
+        let toks: Vec<i32> = (0..6).collect();
+        let fp = w.forward_seq(&toks, 1, 6, &GraphSpec::fp()).unwrap();
+        let q = w
+            .forward_seq(&toks, 1, 6, &GraphSpec::from_tag("mxfp4_b32").unwrap())
+            .unwrap();
+        let qt3 = w
+            .forward_seq(&toks, 1, 6, &GraphSpec::from_tag("mxfp4_b32_t3").unwrap())
+            .unwrap();
+        assert_ne!(fp, q, "activation QDQ had no effect");
+        assert_ne!(q, qt3, "online T3 Hadamard had no effect");
+        for x in fp.iter().chain(&q).chain(&qt3) {
+            assert!(x.is_finite());
+        }
+    }
+
+    #[test]
+    fn decode_scatters_at_position() {
+        let dims = tiny();
+        let w = NativeWeights::synthetic(dims, 8);
+        let spec = GraphSpec::fp();
+        let d = dims.d_model;
+        let plane = dims.kv_seq * d;
+        let kv: Vec<Vec<f32>> = vec![vec![0.0; plane]; dims.n_layers * 2];
+        let (_, kv2) = w.forward_decode(&[3], &[5], &kv, 1, &spec).unwrap();
+        // position 5 must now hold a nonzero K row in layer 0, others stay 0
+        let krow = &kv2[0][5 * d..6 * d];
+        assert!(krow.iter().any(|x| *x != 0.0));
+        assert!(kv2[0][..5 * d].iter().all(|x| *x == 0.0));
+        assert!(kv2[0][6 * d..].iter().all(|x| *x == 0.0));
+    }
+}

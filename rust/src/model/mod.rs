@@ -3,9 +3,13 @@
 //! [`WeightSet`] is one `.lxt` file reordered into the canonical
 //! argument order shared with `python/compile/aot.py`.
 
+pub mod forward;
+
 use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
+
+pub use forward::{GraphSpec, LayerWeights, NativeDims, NativeWeights};
 
 use crate::io::{load_lxt, Manifest, Tensor};
 

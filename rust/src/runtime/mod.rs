@@ -1,113 +1,141 @@
-//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from the
-//! request path. Wraps the `xla` crate (xla_extension 0.5.1, CPU plugin).
+//! Execution backends for the AOT'd model graphs.
 //!
-//! Design notes:
-//! - **HLO text** is the interchange format (see `python/compile/aot.py`).
-//! - Executables are compiled lazily and cached per graph name — the serving
-//!   engine touches only `execute`.
-//! - Weights are staged as `Literal`s once per [`WeightSet`] and reused
-//!   across calls; per-step inputs (tokens, positions, KV) are the only
-//!   per-call allocations. (PJRT buffer donation is not exposed by the
-//!   0.1.6 crate, so KV round-trips host memory — acceptable at this scale
-//!   and measured in EXPERIMENTS.md §Perf.)
+//! Two implementations of the [`Backend`] trait:
+//!
+//! - [`NativeBackend`] (always compiled) — the pure-Rust interpreter over
+//!   `model::forward`, no native libraries required.
+//! - [`Runtime`] (behind the default-on `backend-xla` cargo feature) — the
+//!   PJRT/XLA runtime that compiles and executes the HLO-text artifacts.
+//!
+//! The serving engine abstracts one step further ([`StepExecutor`] in
+//! `coordinator::engine`); this trait covers the full-sequence logits path
+//! the evaluation harness needs, plus weight staging so the XLA side keeps
+//! its stage-once / borrow-per-call discipline.
+//!
+//! [`StepExecutor`]: crate::coordinator::engine::StepExecutor
 
-use std::collections::HashMap;
-use std::path::Path;
-use std::sync::Mutex;
+mod native;
+#[cfg(feature = "backend-xla")]
+mod pjrt;
 
-use anyhow::{Context, Result};
+pub use native::NativeBackend;
+#[cfg(feature = "backend-xla")]
+pub use pjrt::{f32_literal, i32_literal, literal_to_f32, tensor_to_literal, Runtime};
 
-use crate::io::lxt::{Tensor, TensorData};
+use anyhow::Result;
+
 use crate::model::{ModelDesc, WeightSet};
 
-/// Lazily-compiled executable cache over a single PJRT client.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
-    pub desc: ModelDesc,
-}
+/// A graph-execution backend: stages weight sets once, then runs the
+/// full-sequence `logits_*` graphs the eval harness consumes.
+pub trait Backend {
+    /// Backend-specific staged weight representation (PJRT literals for
+    /// XLA, parsed [`crate::model::NativeWeights`] for the interpreter).
+    type Staged;
 
-impl Runtime {
-    pub fn new(desc: ModelDesc) -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
-        Ok(Runtime { client, cache: Mutex::new(HashMap::new()), desc })
-    }
+    fn desc(&self) -> &ModelDesc;
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
+    /// Human-readable platform name (e.g. PJRT's "cpu", or "native-cpu").
+    fn platform(&self) -> String;
 
-    /// Compile (or fetch) the executable for a graph name.
-    pub fn executable(&self, graph: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.cache.lock().unwrap().get(graph) {
-            return Ok(e.clone());
-        }
-        let path = self.desc.graph_path(graph);
-        let exe = self.compile_path(&path)?;
-        let exe = std::sync::Arc::new(exe);
-        self.cache
-            .lock()
-            .unwrap()
-            .insert(graph.to_string(), exe.clone());
-        Ok(exe)
-    }
+    /// Short backend id recorded in bench snapshots: "xla" | "native".
+    fn id(&self) -> &'static str;
 
-    fn compile_path(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 path")?,
-        )
-        .with_context(|| format!("parse HLO text {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        self.client
-            .compile(&comp)
-            .with_context(|| format!("compile {path:?}"))
-    }
+    /// Stage a weight set for repeated graph calls.
+    fn stage(&self, ws: &WeightSet) -> Result<Self::Staged>;
 
-    /// Execute a graph on literal inputs; returns the flattened tuple leaves.
-    ///
-    /// Accepts anything that borrows `Literal` — pass `&[&Literal]` on hot
-    /// paths to avoid cloning staged weights per call (EXPERIMENTS.md §Perf:
-    /// the per-step weight re-staging was the top L3 bottleneck).
-    pub fn execute<L: std::borrow::Borrow<xla::Literal>>(
+    /// Run a full-sequence logits graph (`logits_ppl_<tag>` /
+    /// `logits_score_<tag>`) on a (rows, seq) token batch; returns flat
+    /// (rows * seq * vocab) logits.
+    fn logits(
         &self,
         graph: &str,
-        inputs: &[L],
-    ) -> Result<Vec<xla::Literal>> {
-        let exe = self.executable(graph)?;
-        let result = exe.execute::<L>(inputs)?;
-        let lit = result[0][0].to_literal_sync()?;
-        // aot.py lowers with return_tuple=True: decompose the tuple.
-        let parts = lit.to_tuple()?;
-        Ok(parts)
+        weights: &Self::Staged,
+        tokens: &[i32],
+        rows: usize,
+        seq: usize,
+    ) -> Result<Vec<f32>>;
+}
+
+/// The backend this build evaluates on by default: PJRT when `backend-xla`
+/// is enabled, the pure-Rust interpreter otherwise. Benches use this so one
+/// source runs on both kinds of machine.
+#[cfg(feature = "backend-xla")]
+pub type DefaultBackend = Runtime;
+#[cfg(not(feature = "backend-xla"))]
+pub type DefaultBackend = NativeBackend;
+
+#[cfg(feature = "backend-xla")]
+pub fn default_backend(desc: ModelDesc) -> Result<DefaultBackend> {
+    Runtime::new(desc)
+}
+
+#[cfg(not(feature = "backend-xla"))]
+pub fn default_backend(desc: ModelDesc) -> Result<DefaultBackend> {
+    Ok(NativeBackend::new(desc))
+}
+
+/// Compiled decode batch sizes for `tag`, parsed from the manifest graph
+/// inventory (`decode_<tag>_b<batch>`). Shared by both executors so batch
+/// selection always agrees across backends. Malformed batch suffixes are
+/// reported with a warning instead of being silently dropped (they used to
+/// vanish through `parse().ok()`), so a corrupted manifest is visible.
+pub fn decode_batch_sizes(graphs: &[String], tag: &str) -> Vec<usize> {
+    let prefix = format!("decode_{tag}_b");
+    let mut out = Vec::new();
+    for g in graphs {
+        if let Some(suffix) = g.strip_prefix(prefix.as_str()) {
+            match suffix.parse::<usize>() {
+                Ok(b) if b > 0 => out.push(b),
+                _ => eprintln!(
+                    "warning: decode graph {g:?} for tag {tag:?} has malformed batch \
+                     suffix {suffix:?}; ignoring it for batch selection"
+                ),
+            }
+        }
+    }
+    out.sort_unstable();
+    out.dedup();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn graphs(names: &[&str]) -> Vec<String> {
+        names.iter().map(|s| s.to_string()).collect()
     }
 
-    /// Stage a weight set as literals (done once per variant).
-    pub fn stage_weights(&self, ws: &WeightSet) -> Result<Vec<xla::Literal>> {
-        ws.tensors.iter().map(tensor_to_literal).collect()
+    #[test]
+    fn batch_sizes_parsed_sorted_deduped() {
+        let g = graphs(&[
+            "decode_fp_b8",
+            "decode_fp_b1",
+            "decode_fp_b2",
+            "decode_fp_b2",
+            "prefill_fp_b4",
+            "logits_ppl_fp",
+        ]);
+        assert_eq!(decode_batch_sizes(&g, "fp"), vec![1, 2, 8]);
     }
-}
 
-/// Convert an `.lxt` tensor to an XLA literal with the right shape.
-pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
-    let dims: Vec<i64> = t.dims.iter().map(|d| *d as i64).collect();
-    let lit = match &t.data {
-        TensorData::F32(v) => xla::Literal::vec1(v).reshape(&dims)?,
-        TensorData::I32(v) => xla::Literal::vec1(v).reshape(&dims)?,
-    };
-    Ok(lit)
-}
+    #[test]
+    fn malformed_suffixes_dropped_with_warning() {
+        let g = graphs(&["decode_fp_b1", "decode_fp_bXX", "decode_fp_b0", "decode_fp_b"]);
+        // bXX / b0 / trailing-empty are surfaced (stderr) but never selected
+        assert_eq!(decode_batch_sizes(&g, "fp"), vec![1]);
+    }
 
-/// Make an i32 literal from a slice with shape.
-pub fn i32_literal(v: &[i32], dims: &[i64]) -> Result<xla::Literal> {
-    Ok(xla::Literal::vec1(v).reshape(dims)?)
-}
-
-/// Make an f32 literal from a slice with shape.
-pub fn f32_literal(v: &[f32], dims: &[i64]) -> Result<xla::Literal> {
-    Ok(xla::Literal::vec1(v).reshape(dims)?)
-}
-
-/// Extract f32 data from a literal.
-pub fn literal_to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
-    Ok(lit.to_vec::<f32>()?)
+    #[test]
+    fn tags_do_not_cross_match() {
+        let g = graphs(&[
+            "decode_mxfp4_b32_t3_b4",
+            "decode_mxfp4_b32_t3_b1",
+            "decode_mxfp4_b32_b2",
+        ]);
+        assert_eq!(decode_batch_sizes(&g, "mxfp4_b32_t3"), vec![1, 4]);
+        assert_eq!(decode_batch_sizes(&g, "mxfp4_b32"), vec![2]);
+        assert_eq!(decode_batch_sizes(&g, "fp"), Vec::<usize>::new());
+    }
 }

@@ -1,0 +1,64 @@
+//! Pure-Rust backend: runs the evaluation logits path through the
+//! `model::forward` interpreter instead of compiled HLO. Always available —
+//! this is what makes the eval harness and its benches runnable on machines
+//! without the XLA toolchain (stock CI runners included).
+
+use anyhow::Result;
+
+use crate::model::{GraphSpec, ModelDesc, NativeDims, NativeWeights, WeightSet};
+
+use super::Backend;
+
+/// Interpreter-backed [`Backend`]. "Staging" a weight set parses it into
+/// [`NativeWeights`] once; graph names select only the quant spec (the
+/// activation QDQ config and online T3 Hadamard), exactly as the compiled
+/// graph inventory does.
+pub struct NativeBackend {
+    pub desc: ModelDesc,
+}
+
+impl NativeBackend {
+    pub fn new(desc: ModelDesc) -> NativeBackend {
+        NativeBackend { desc }
+    }
+}
+
+impl Backend for NativeBackend {
+    type Staged = NativeWeights;
+
+    fn desc(&self) -> &ModelDesc {
+        &self.desc
+    }
+
+    fn platform(&self) -> String {
+        "native-cpu".to_string()
+    }
+
+    fn id(&self) -> &'static str {
+        "native"
+    }
+
+    fn stage(&self, ws: &WeightSet) -> Result<NativeWeights> {
+        NativeWeights::from_weight_set(NativeDims::from_desc(&self.desc), &self.desc.weight_order, ws)
+    }
+
+    fn logits(
+        &self,
+        graph: &str,
+        weights: &Self::Staged,
+        tokens: &[i32],
+        rows: usize,
+        seq: usize,
+    ) -> Result<Vec<f32>> {
+        // Stay faithful to the compiled-graph inventory: the XLA backend
+        // errors on graphs the artifact set never lowered, so the native
+        // lane must too — otherwise the two lanes silently publish tables
+        // over different variant sets.
+        anyhow::ensure!(
+            self.desc.graphs.iter().any(|g| g == graph),
+            "graph {graph:?} not in the artifact manifest"
+        );
+        let spec = GraphSpec::from_graph_name(graph)?;
+        weights.forward_seq(tokens, rows, seq, &spec)
+    }
+}

@@ -1,0 +1,151 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from the
+//! request path. Wraps the `xla` crate (xla_extension 0.5.1, CPU plugin).
+//! Compiled only with the `backend-xla` cargo feature (default-on).
+//!
+//! Design notes:
+//! - **HLO text** is the interchange format (see `python/compile/aot.py`).
+//! - Executables are compiled lazily and cached per graph name — the serving
+//!   engine touches only `execute`.
+//! - Weights are staged as `Literal`s once per [`WeightSet`] and reused
+//!   across calls; per-step inputs (tokens, positions, KV) are the only
+//!   per-call allocations. (PJRT buffer donation is not exposed by the
+//!   0.1.6 crate, so KV round-trips host memory — acceptable at this scale
+//!   and measured in EXPERIMENTS.md §Perf.)
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::io::lxt::{Tensor, TensorData};
+use crate::model::{ModelDesc, WeightSet};
+
+use super::Backend;
+
+/// Lazily-compiled executable cache over a single PJRT client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    pub desc: ModelDesc,
+}
+
+impl Runtime {
+    pub fn new(desc: ModelDesc) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Runtime { client, cache: Mutex::new(HashMap::new()), desc })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch) the executable for a graph name.
+    pub fn executable(&self, graph: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(graph) {
+            return Ok(e.clone());
+        }
+        let path = self.desc.graph_path(graph);
+        let exe = self.compile_path(&path)?;
+        let exe = std::sync::Arc::new(exe);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(graph.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    fn compile_path(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parse HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compile {path:?}"))
+    }
+
+    /// Execute a graph on literal inputs; returns the flattened tuple leaves.
+    ///
+    /// Accepts anything that borrows `Literal` — pass `&[&Literal]` on hot
+    /// paths to avoid cloning staged weights per call (EXPERIMENTS.md §Perf:
+    /// the per-step weight re-staging was the top L3 bottleneck).
+    pub fn execute<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        graph: &str,
+        inputs: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(graph)?;
+        let result = exe.execute::<L>(inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: decompose the tuple.
+        let parts = lit.to_tuple()?;
+        Ok(parts)
+    }
+
+    /// Stage a weight set as literals (done once per variant).
+    pub fn stage_weights(&self, ws: &WeightSet) -> Result<Vec<xla::Literal>> {
+        ws.tensors.iter().map(tensor_to_literal).collect()
+    }
+}
+
+impl Backend for Runtime {
+    type Staged = Vec<xla::Literal>;
+
+    fn desc(&self) -> &ModelDesc {
+        &self.desc
+    }
+
+    fn platform(&self) -> String {
+        Runtime::platform(self)
+    }
+
+    fn id(&self) -> &'static str {
+        "xla"
+    }
+
+    fn stage(&self, ws: &WeightSet) -> Result<Vec<xla::Literal>> {
+        self.stage_weights(ws)
+    }
+
+    fn logits(
+        &self,
+        graph: &str,
+        weights: &Self::Staged,
+        tokens: &[i32],
+        rows: usize,
+        seq: usize,
+    ) -> Result<Vec<f32>> {
+        let tok = i32_literal(tokens, &[rows as i64, seq as i64])?;
+        let mut inputs: Vec<&xla::Literal> = vec![&tok];
+        inputs.extend(weights.iter());
+        let parts = self.execute(graph, &inputs)?;
+        literal_to_f32(&parts[0])
+    }
+}
+
+/// Convert an `.lxt` tensor to an XLA literal with the right shape.
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.dims.iter().map(|d| *d as i64).collect();
+    let lit = match &t.data {
+        TensorData::F32(v) => xla::Literal::vec1(v).reshape(&dims)?,
+        TensorData::I32(v) => xla::Literal::vec1(v).reshape(&dims)?,
+    };
+    Ok(lit)
+}
+
+/// Make an i32 literal from a slice with shape.
+pub fn i32_literal(v: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(v).reshape(dims)?)
+}
+
+/// Make an f32 literal from a slice with shape.
+pub fn f32_literal(v: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(v).reshape(dims)?)
+}
+
+/// Extract f32 data from a literal.
+pub fn literal_to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}

@@ -1,13 +1,18 @@
 //! Serving front-end: drives the engine with a synthetic request workload
 //! and reports throughput/latency — the Fig. 4 measurement path and the
-//! `latmix serve` subcommand.
+//! `latmix serve` subcommand. The measurement loop is generic over
+//! [`StepExecutor`], so the same closed-loop benchmark runs on the PJRT
+//! executor (`backend-xla` feature) and the pure-Rust [`NativeExecutor`].
 
 use anyhow::Result;
 
+use crate::coordinator::engine::{NativeExecutor, StepExecutor};
+#[cfg(feature = "backend-xla")]
+use crate::coordinator::engine::XlaExecutor;
 use crate::coordinator::{Engine, EngineConfig, GenRequest, GenResult};
-use crate::coordinator::engine::{StepExecutor, XlaExecutor};
 use crate::data::serving_workload;
 use crate::model::{ModelDesc, WeightSet};
+#[cfg(feature = "backend-xla")]
 use crate::runtime::Runtime;
 use crate::util::Summary;
 
@@ -56,10 +61,10 @@ impl ServeReport {
     }
 }
 
-/// Run a closed-loop serving benchmark: submit `n_requests` prompts, run the
-/// engine to completion, report throughput.
-pub fn run_serving(
-    rt: &Runtime,
+/// Closed-loop serving benchmark over any step executor: submit
+/// `n_requests` prompts, run the engine to completion, report throughput.
+pub fn serve_with_executor<E: StepExecutor>(
+    exec: E,
     graph_tag: &str,
     weights_tag: &str,
     n_requests: usize,
@@ -67,9 +72,6 @@ pub fn run_serving(
     max_slots: usize,
     seed: u64,
 ) -> Result<ServeReport> {
-    let desc: &ModelDesc = &rt.desc;
-    let ws = WeightSet::load(desc, weights_tag)?;
-    let exec = XlaExecutor::new(rt, graph_tag, &ws)?;
     let max_prompt = exec.prefill_len();
     let mut engine = Engine::new(
         exec,
@@ -83,4 +85,36 @@ pub fn run_serving(
     }
     let results = engine.run_to_completion()?;
     Ok(ServeReport::from_results(graph_tag, weights_tag, &results, &engine.stats))
+}
+
+/// Run the serving benchmark on the PJRT executor.
+#[cfg(feature = "backend-xla")]
+pub fn run_serving(
+    rt: &Runtime,
+    graph_tag: &str,
+    weights_tag: &str,
+    n_requests: usize,
+    max_new: usize,
+    max_slots: usize,
+    seed: u64,
+) -> Result<ServeReport> {
+    let ws = WeightSet::load(&rt.desc, weights_tag)?;
+    let exec = XlaExecutor::new(rt, graph_tag, &ws)?;
+    serve_with_executor(exec, graph_tag, weights_tag, n_requests, max_new, max_slots, seed)
+}
+
+/// Run the serving benchmark on the pure-Rust executor (no XLA toolchain
+/// needed; same `.lxt` weights and compiled-batch discipline).
+pub fn run_serving_native(
+    desc: &ModelDesc,
+    graph_tag: &str,
+    weights_tag: &str,
+    n_requests: usize,
+    max_new: usize,
+    max_slots: usize,
+    seed: u64,
+) -> Result<ServeReport> {
+    let ws = WeightSet::load(desc, weights_tag)?;
+    let exec = NativeExecutor::new(desc, graph_tag, &ws)?;
+    serve_with_executor(exec, graph_tag, weights_tag, n_requests, max_new, max_slots, seed)
 }

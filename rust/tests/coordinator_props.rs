@@ -1,12 +1,29 @@
 //! Property tests on the coordinator invariants (routing, batching, KV
 //! state) and the MX codecs, using the in-repo `testing` framework
-//! (proptest is not vendorable offline; DESIGN.md §3.1).
+//! (proptest is not vendorable offline; DESIGN.md §3.1). The engine
+//! properties run over both `StepExecutor` backends that exist on every
+//! build: the mock and the pure-Rust `NativeExecutor`.
 
-use latmix::coordinator::engine::{Engine, EngineConfig, MockExecutor};
+use latmix::coordinator::engine::{Engine, EngineConfig, MockExecutor, NativeExecutor};
 use latmix::coordinator::{Batcher, GenRequest, KvCache, Router, SchedulerPolicy};
+use latmix::model::NativeDims;
 use latmix::mx::{mx_qdq, pack::PackedMx, MxConfig};
 use latmix::testing::{forall, ScriptGen, UsizeGen, VecGen};
 use latmix::util::Pcg64;
+
+/// Small native executor with the same shape knobs as the default mock.
+fn native_exec(seed: u64) -> NativeExecutor {
+    let dims = NativeDims {
+        vocab: 64,
+        d_model: 4,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 8,
+        kv_seq: 32,
+        prefill_len: 8,
+    };
+    NativeExecutor::synthetic(dims, "fp", vec![1, 2, 4], seed).unwrap()
+}
 
 #[test]
 fn prop_mx_qdq_idempotent_fp_formats() {
@@ -202,6 +219,70 @@ fn prop_engine_completes_all() {
             if r.tokens.len() != *w {
                 return Err(format!("req {} got {} tokens, want {w}", r.id, r.tokens.len()));
             }
+        }
+        Ok(())
+    });
+}
+
+/// Same completion property over the pure-Rust executor: the engine loop
+/// must not care which real backend is underneath.
+#[test]
+fn prop_engine_completes_all_native() {
+    let gen = ScriptGen { max_len: 8, ops: 1, max_value: 6 };
+    forall("engine_completion_native", 10, &gen, |script| {
+        let mut e = Engine::new(
+            native_exec(5),
+            EngineConfig { max_slots: 3, policy: SchedulerPolicy::PrefillPriority, eos: -1 },
+        );
+        let mut rng = Pcg64::seed(script.len() as u64);
+        let mut want = Vec::new();
+        for (i, (_, val)) in script.iter().enumerate() {
+            let plen = 1 + (*val as usize % 6);
+            let gen_len = 1 + rng.below(5) as usize;
+            let prompt: Vec<i32> = (0..plen as i32).collect();
+            e.submit(GenRequest::new(i as u64, prompt, gen_len));
+            want.push(gen_len);
+        }
+        let out = e.run_to_completion().map_err(|e| e.to_string())?;
+        if out.len() != script.len() {
+            return Err(format!("{} of {} completed", out.len(), script.len()));
+        }
+        for (r, w) in out.iter().zip(&want) {
+            if r.tokens.len() != *w {
+                return Err(format!("req {} got {} tokens, want {w}", r.id, r.tokens.len()));
+            }
+            for t in &r.tokens {
+                if *t < 0 || *t >= 64 {
+                    return Err(format!("req {} emitted out-of-vocab token {t}", r.id));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Native-engine determinism: same workload -> same tokens (the interpreter
+/// plus gather/scatter must be free of cross-lane state bleed too).
+#[test]
+fn prop_engine_deterministic_native() {
+    let gen = UsizeGen(1, 6);
+    forall("engine_deterministic_native", 6, &gen, |n| {
+        let run = || {
+            let mut e = Engine::new(
+                native_exec(9),
+                EngineConfig { max_slots: 4, policy: SchedulerPolicy::PrefillPriority, eos: -1 },
+            );
+            for i in 0..*n {
+                e.submit(GenRequest::new(i as u64, vec![i as i32, 7], 5));
+            }
+            e.run_to_completion()
+                .unwrap()
+                .into_iter()
+                .map(|r| r.tokens)
+                .collect::<Vec<_>>()
+        };
+        if run() != run() {
+            return Err("nondeterministic generation".into());
         }
         Ok(())
     });

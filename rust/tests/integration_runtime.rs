@@ -1,8 +1,12 @@
 //! Integration tests over the real PJRT runtime + AOT artifacts.
 //!
-//! These need `make artifacts` (graphs + fp_raw weights); they self-skip
-//! with a notice when artifacts are absent so `cargo test` stays green on a
-//! fresh clone.
+//! These need the `backend-xla` build feature (the whole file is
+//! feature-gated) plus `make artifacts` (graphs + fp_raw weights); they
+//! self-skip with a notice when artifacts are absent so `cargo test` stays
+//! green on a fresh clone. The artifact-free engine coverage lives in
+//! `backend_parity.rs` and runs on every build.
+
+#![cfg(feature = "backend-xla")]
 
 use latmix::coordinator::engine::StepExecutor;
 use latmix::coordinator::{Engine, EngineConfig, GenRequest};
@@ -80,6 +84,39 @@ fn serving_engine_end_to_end() {
         }
     }
     assert!(engine.stats.decode_tokens >= 30);
+}
+
+#[test]
+fn native_executor_agrees_with_xla_on_artifacts() {
+    // Cross-backend check on real artifacts: identical compiled-batch
+    // discovery, and the same request stream produces the same scheduling
+    // shape (token counts + engine stats) through both executors.
+    let Some(rt) = runtime() else { return };
+    let ws = WeightSet::load(&rt.desc, "fp_raw").unwrap();
+    let xla_exec = latmix::coordinator::engine::XlaExecutor::new(&rt, "fp", &ws).unwrap();
+    let native_exec =
+        latmix::coordinator::engine::NativeExecutor::new(&rt.desc, "fp", &ws).unwrap();
+    assert_eq!(
+        xla_exec.batch_sizes(),
+        native_exec.batch_sizes(),
+        "backends disagree on compiled batch sizes"
+    );
+
+    fn run_stream<E: StepExecutor>(
+        mut engine: Engine<E>,
+    ) -> (Vec<usize>, u64, u64, u64, u64) {
+        for i in 0..6u64 {
+            engine.submit(GenRequest::new(i, vec![1, 40 + i as i32, 50], 5));
+        }
+        let out = engine.run_to_completion().unwrap();
+        let counts: Vec<usize> = out.iter().map(|r| r.tokens.len()).collect();
+        let s = engine.stats.clone();
+        (counts, s.prefill_batches, s.decode_steps, s.decode_lanes, s.decode_tokens)
+    }
+    let cfg = EngineConfig { max_slots: 4, eos: -1, ..Default::default() };
+    let a = run_stream(Engine::new(xla_exec, cfg.clone()));
+    let b = run_stream(Engine::new(native_exec, cfg));
+    assert_eq!(a, b, "scheduling diverged between XLA and native executors");
 }
 
 #[test]

@@ -1,0 +1,97 @@
+#!/usr/bin/env python3
+"""Bench-trajectory diff: compare a fresh BENCH_microbench.json against the
+committed baseline and emit a per-kernel ns/unit comparison table.
+
+Usage: bench_diff.py <baseline.json> <fresh.json>
+
+- The markdown table goes to $GITHUB_STEP_SUMMARY when set, else stdout.
+- Regressions > 25% ns/unit emit GitHub `::warning::` annotations on
+  stdout — warn, never fail (CI perf is noisy; the table is the signal).
+- Missing/empty baseline is fine: every row reports as `new` and the fresh
+  snapshot becomes the first real baseline once committed.
+
+Rows are keyed on (op, backend) — schema 2 records which executor produced
+each row (see README.md §Perf methodology). For rows with a throughput
+unit, ns/unit = 1e9 / throughput; otherwise mean iteration time is used.
+Stdlib only.
+"""
+
+import json
+import os
+import sys
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return None
+
+
+def keyed(snap):
+    out = {}
+    for r in (snap or {}).get("results", []):
+        out[(r.get("op", "?"), r.get("backend", "?"))] = r
+    return out
+
+
+def ns_per_unit(row):
+    tp = row.get("throughput")
+    if tp:
+        return 1e9 / tp, row.get("throughput_unit", "unit")
+    return row.get("mean_s", 0.0) * 1e9, "iter"
+
+
+def main():
+    if len(sys.argv) != 3:
+        print(__doc__, file=sys.stderr)
+        return 2
+    base, fresh = load(sys.argv[1]), load(sys.argv[2])
+
+    lines = ["## Bench trajectory — microbench (ns per unit, lower is better)", ""]
+    warnings = []
+    if not fresh or not fresh.get("results"):
+        lines.append("_no fresh BENCH_microbench.json rows — did the smoke bench run?_")
+    else:
+        brows = keyed(base)
+        lines.append("| op | backend | unit | baseline | fresh | delta |")
+        lines.append("|---|---|---|---|---|---|")
+        for row in fresh["results"]:
+            key = (row.get("op", "?"), row.get("backend", "?"))
+            f_ns, unit = ns_per_unit(row)
+            b = brows.get(key)
+            if b is None:
+                lines.append(f"| {key[0]} | {key[1]} | {unit} | - | {f_ns:.2f} | new |")
+                continue
+            b_ns, _ = ns_per_unit(b)
+            delta = (f_ns - b_ns) / b_ns * 100.0 if b_ns > 0 else 0.0
+            mark = " :warning:" if delta > 25.0 else ""
+            lines.append(
+                f"| {key[0]} | {key[1]} | {unit} | {b_ns:.2f} | {f_ns:.2f} | {delta:+.1f}%{mark} |"
+            )
+            if delta > 25.0:
+                warnings.append((key, delta))
+        if not (base and base.get("results")):
+            lines.append("")
+            lines.append(
+                "_no committed baseline rows — commit this run's "
+                "BENCH_microbench.json as the first real baseline_"
+            )
+
+    text = "\n".join(lines) + "\n"
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as f:
+            f.write(text)
+    print(text)
+    for (op, backend), delta in warnings:
+        print(
+            f"::warning::microbench regression >25% on {op!r} [{backend}]: "
+            f"{delta:+.1f}% ns/unit vs committed baseline"
+        )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# Core (no-XLA) gate — exactly what CI's always-on `core` job runs:
+# build + full test suite with the default `backend-xla` feature disabled,
+# then a smoke microbench on the native executor that refreshes
+# BENCH_microbench.json (schema 2, per-row `backend` field). Run this
+# locally to reproduce the enforced CI lane on any machine; no XLA
+# toolchain required.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+cargo build --no-default-features
+cargo test --no-default-features -q
+
+# Smoke perf run: reduced iteration counts, still emits the full JSON.
+LATMIX_BENCH_SMOKE=1 cargo bench --no-default-features --bench microbench
+
+test -f BENCH_microbench.json
+grep -q '"backend"' BENCH_microbench.json
+echo "core OK: no-XLA build + tests passed, BENCH_microbench.json written"

@@ -1,14 +1,19 @@
 #!/usr/bin/env bash
-# Tier-1 gate: release build + full test suite + a smoke microbench run
-# that emits the machine-readable perf snapshot (BENCH_microbench.json at
-# the repo root). See README.md §Perf methodology.
+# Tier-1 gate: the always-on core lane first (scripts/core.sh — no-XLA
+# build + tests + native smoke bench), then the XLA-backed release build,
+# full test suite, and the default-features smoke microbench that refreshes
+# BENCH_microbench.json. See README.md §Perf methodology.
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+# Core lane first: the pure-Rust gate must hold wherever tier-1 runs.
+./scripts/core.sh
 
 cargo build --release
 cargo test -q
 
-# Smoke perf run: reduced iteration counts, still emits the full JSON.
+# Smoke perf run: reduced iteration counts, still emits the full JSON
+# (overwrites the core lane's snapshot with the default-features run).
 LATMIX_BENCH_SMOKE=1 cargo bench --bench microbench
 
 test -f BENCH_microbench.json
