@@ -1,6 +1,7 @@
 //! Microbenchmarks for the perf pass (EXPERIMENTS.md §Perf): MX codec
-//! pack/unpack throughput, FWHT, RTN/GPTQ, coordinator ops (batcher admit,
-//! KV gather/scatter), the native-executor decode step + engine loop, and —
+//! pack/unpack throughput, FWHT, RTN/GPTQ, the Fig. 2 transform-learning
+//! step loop (`fig2_learned`), coordinator ops (batcher admit, KV
+//! gather/scatter), the native-executor decode step + engine loop, and —
 //! on `backend-xla` builds with artifacts — PJRT decode-step latency per
 //! compiled batch size.
 //!
@@ -19,6 +20,7 @@
 use latmix::bench::{fmt_time, Bencher, JsonReport, Table};
 use latmix::coordinator::engine::{Engine, EngineConfig, MockExecutor, NativeExecutor, StepExecutor};
 use latmix::coordinator::{Batcher, GenRequest, KvCache};
+use latmix::latmix::{learn_feature_transform, outlier_features, LearnConfig};
 use latmix::linalg::{block_hadamard_apply, Mat};
 use latmix::model::NativeDims;
 use latmix::mx::{mx_qdq_rows, pack::PackedMx, reference, MxConfig};
@@ -125,6 +127,21 @@ fn main() {
     tab.row(vec![r.name.clone(), fmt_time(r.mean_s), fmt_time(r.p99_s),
         format!("{:.2} GFLOP/s", r.throughput(flops) / 1e9)]);
     json.push(&r, Some(("flop/s", flops)));
+
+    // Fig. 2 transform learning (latmix::learn_feature_transform): a short
+    // run of the E(T) optimizer — matmul + inverse + fake-quant + hand
+    // backward per step; throughput in optimizer steps/s.
+    let steps = if smoke { 5 } else { 25 };
+    let feats = outlier_features(48, 64, 0.05, 7);
+    let lcfg = LearnConfig { steps, trace_every: 0, ..Default::default() };
+    let fig2_cfg = MxConfig::from_name("mxfp4", Some(32)).unwrap();
+    let (wu, iu) = it(1, 5);
+    let r = Bencher::new("fig2_learned d=64").with_iters(wu, iu).run(|| {
+        learn_feature_transform(&feats, 64, &fig2_cfg, &lcfg).unwrap()
+    });
+    tab.row(vec![r.name.clone(), fmt_time(r.mean_s), fmt_time(r.p99_s),
+        format!("{:.0} step/s", r.throughput(steps as f64))]);
+    json.push(&r, Some(("step/s", steps as f64)));
 
     // batcher admit
     let (wu, iu) = it(3, 20);

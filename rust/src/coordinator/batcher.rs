@@ -1,4 +1,7 @@
 //! Continuous batcher: FIFO admission queue + batch-size bucketing.
+//! Method-agnostic by the paper's Sec. 4.1 design: every quantized
+//! transform shares one decode executable per batch size, so bucketing
+//! never depends on which transform produced the weights.
 //!
 //! The AOT artifacts are compiled at fixed batch sizes (1/2/4/8); the
 //! batcher picks, for a given number of ready lanes, the bucket that

@@ -1,5 +1,7 @@
 //! The serving engine: continuous-batching generation loop over an abstract
-//! [`StepExecutor`]. Two real backends implement it — `XlaExecutor` (PJRT,
+//! [`StepExecutor`] — the measurement loop behind the paper's Fig. 4
+//! claim that all MX methods serve at indistinguishable throughput.
+//! Two real backends implement it — `XlaExecutor` (PJRT,
 //! behind the `backend-xla` feature) and [`NativeExecutor`] (pure-Rust
 //! interpreter, always available) — while unit and property tests use
 //! [`MockExecutor`]. Both real executors discover their compiled batch

@@ -1,7 +1,9 @@
 //! KV-cache slot manager.
 //!
 //! The decode graph's KV tensors have a fixed batch dimension (one lane per
-//! slot); this module owns the host-side KV state per *sequence* and the
+//! slot — the Sec. 4.1 AOT deployment model, where graphs are compiled at
+//! fixed batch sizes); this module owns the host-side KV state per
+//! *sequence* and the
 //! slot accounting. Because PJRT literals round-trip host memory on this
 //! testbed, the cache holds each sequence's K/V rows as flat `f32` vectors
 //! (`n_layers * 2 * kv_seq * n_heads * head_dim`) that the engine gathers

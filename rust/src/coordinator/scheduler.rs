@@ -1,6 +1,7 @@
 //! Step scheduler: decides, per engine iteration, whether to run a prefill
 //! (admit waiting requests into free KV slots) and which running sequences
-//! join the decode step.
+//! join the decode step — the loop whose step latency the Fig. 4
+//! throughput measurements bound.
 //!
 //! Policy: **prefill-priority with decode fairness** — admit waiting work
 //! whenever slots are free (prefill batches amortize well), then decode all

@@ -1,0 +1,244 @@
+//! Hand-derived reverse-mode gradients for the Sec. 3.2 feature objective:
+//! the transformation MSE `E(T)` (Eq. 2) differentiated through the affine
+//! map, the matrix inverse, and the MX fake quantizer with a *clipped*
+//! straight-through estimator, plus the log-volume regularizer (Eq. 7/9).
+//!
+//! The forward graph (row-vector convention, `X` is `(n, d)` feature rows):
+//!
+//! ```text
+//! Y    = X A + v                      (transform)
+//! Q    = mx_qdq_rows(Y)               (Eq. 1 fake quant, value-exact)
+//! back = (Q_ste - v) A^{-1}           (inverse transform)
+//! E    = ||back - X||_F^2 / (n d)     (Eq. 2)
+//! loss = E + w_of * overflow + lam * (log|det A|)^2
+//! ```
+//!
+//! where `Q_ste` is the clipped STE surrogate: on elements within the
+//! per-block clipping knee (`|y| <= scale * maxval`, see
+//! [`crate::mx::quantize::block_clip_threshold`]) the quantizer
+//! backpropagates as the identity; clipped elements are treated as
+//! constants. Plain STE is *degenerate* for `E(T)`: its differentiable
+//! path reconstructs `X` exactly (`A` and `A^{-1}` cancel), leaving no
+//! signal. Gating on the clipping knee restores the outlier-reduction
+//! gradient, and the soft `overflow` penalty
+//! (`mean relu(|y| - knee)^2`) steers energy below the knee — the same
+//! surrogate as `python/compile/latmix.py::learn_feature_transform`.
+//!
+//! With `G = dE/d(back)`, `B = A^{-1}` and `M` the not-clipped mask, the
+//! closed-form gradients implemented here are:
+//!
+//! ```text
+//! dE/dA = X^T [(G B^T) . M]  -  B^T (Q - v)^T G B^T
+//! dE/dv = colsum[(G B^T) . M] - colsum[G B^T]
+//! d/dA lam (log|det A|)^2 = 2 lam log|det A| * B^T
+//! ```
+//!
+//! (`.` is elementwise; the overflow term adds
+//! `w_of * 2/(nd) * relu(|y| - knee) * sign(y)` into the `Y`-cotangent.)
+//! The formulas are finite-difference-checked against the frozen STE
+//! surrogate in `rust/tests/latmix_props.rs`.
+
+use crate::linalg::Mat;
+use crate::mx::quantize::{block_clip_threshold, nv_tensor_scale};
+use crate::mx::{mx_qdq_rows, MxConfig};
+
+/// One evaluation of the Sec. 3.2 objective and its gradients.
+#[derive(Clone, Debug)]
+pub struct EtGrads {
+    /// `E(T)` (Eq. 2) of the current iterate on the batch — the *true*
+    /// quantization MSE (the STE changes gradients, not values).
+    pub mse: f64,
+    /// Full objective: `mse + w_of * overflow + lam * (log|det A|)^2`.
+    pub loss: f64,
+    /// Cotangent of the transform matrix `A`.
+    pub grad_a: Mat,
+    /// Cotangent of the bias `v`.
+    pub grad_v: Vec<f32>,
+}
+
+/// Evaluate loss and hand-derived gradients at `(a, v)` on feature rows
+/// `x` (flat, `d` columns). Returns `None` when `a` is numerically
+/// singular (the caller should stop and keep its best iterate).
+pub fn et_loss_and_grads(
+    x: &[f32],
+    d: usize,
+    a: &Mat,
+    v: &[f32],
+    cfg: &MxConfig,
+    lam: f32,
+    overflow_weight: f32,
+) -> Option<EtGrads> {
+    assert_eq!(a.rows, d, "A dim mismatch");
+    assert_eq!(a.cols, d, "A must be square");
+    assert_eq!(v.len(), d, "v dim mismatch");
+    assert!(d > 0 && x.len() % d == 0, "features not (n, {d})");
+    assert!(cfg.block_size > 0 && d % cfg.block_size == 0, "MX block must tile d");
+    let n = x.len() / d;
+    // one LU factorization yields both the inverse and log|det|
+    let (b, logdet) = a.inverse_logdet()?;
+
+    // forward: Y = X A + v, Q = fake-quant(Y), back = (Q - v) B
+    let xm = Mat::from_vec(n, d, x.to_vec());
+    let mut y = xm.matmul(a);
+    for row in y.data.chunks_mut(d) {
+        for (yi, vi) in row.iter_mut().zip(v) {
+            *yi += *vi;
+        }
+    }
+    let nv_ts = if cfg.nv { nv_tensor_scale(&y.data) } else { 1.0 };
+    let bs = cfg.block_size;
+    let thr: Vec<f32> = y
+        .data
+        .chunks(bs)
+        .map(|blk| {
+            let amax = blk.iter().fold(0.0f32, |m, t| m.max(t.abs()));
+            block_clip_threshold(amax, cfg, nv_ts)
+        })
+        .collect();
+    let mut q = y.data.clone();
+    mx_qdq_rows(&mut q, d, cfg);
+    let mut qmv = Mat::from_vec(n, d, q);
+    for row in qmv.data.chunks_mut(d) {
+        for (qi, vi) in row.iter_mut().zip(v) {
+            *qi -= *vi;
+        }
+    }
+    let back = qmv.matmul(&b);
+
+    // E(T) and its cotangent G = 2/(nd) * (back - X)
+    let scale = 2.0 / (n as f64 * d as f64);
+    let mut mse = 0.0f64;
+    let mut g = Mat::zeros(n, d);
+    for ((gi, bi), xi) in g.data.iter_mut().zip(&back.data).zip(&xm.data) {
+        let r = (*bi - *xi) as f64;
+        mse += r * r;
+        *gi = (scale * r) as f32;
+    }
+    mse /= n as f64 * d as f64;
+
+    let bt = b.t();
+    // path through B = A^{-1}: dL/dA = -B^T (Q - v)^T G B^T
+    let dldb = qmv.t().matmul(&g);
+    let mut grad_a = bt.matmul(&dldb).matmul(&bt).scale(-1.0);
+    // path through Q_ste and the overflow penalty: Y-cotangent
+    let gq = g.matmul(&bt); // dL/dQ_ste, also the direct -v path below
+    let mut gy = Mat::zeros(n, d);
+    let mut overflow = 0.0f64;
+    let of_scale = (overflow_weight as f64 * scale) as f32;
+    for i in 0..y.data.len() {
+        let yi = y.data[i];
+        let t = thr[i / bs];
+        if yi.abs() <= t {
+            gy.data[i] = gq.data[i];
+        }
+        let over = yi.abs() - t;
+        if over > 0.0 {
+            overflow += (over as f64) * (over as f64);
+            gy.data[i] += of_scale * over * yi.signum();
+        }
+    }
+    overflow /= n as f64 * d as f64;
+    grad_a = grad_a.add(&xm.t().matmul(&gy));
+    // volume regularizer (Eq. 7/9, log form): d/dA (log|det A|)^2 = 2 log|det A| B^T
+    let reg_coeff = (2.0 * lam as f64 * logdet) as f32;
+    grad_a = grad_a.add(&bt.scale(reg_coeff));
+
+    // dL/dv: + colsum(Gy) from the Y path, - colsum(G B^T) from `back`
+    let mut grad_v = vec![0.0f32; d];
+    for (gy_row, gq_row) in gy.data.chunks(d).zip(gq.data.chunks(d)) {
+        for ((gv, gyi), gqi) in grad_v.iter_mut().zip(gy_row).zip(gq_row) {
+            *gv += gyi - gqi;
+        }
+    }
+
+    let loss = mse + overflow_weight as f64 * overflow + lam as f64 * logdet * logdet;
+    Some(EtGrads { mse, loss, grad_a, grad_v })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn setup(d: usize, n: usize, seed: u64) -> (Vec<f32>, Mat, Vec<f32>) {
+        let mut rng = Pcg64::seed(seed);
+        let mut x = rng.normal_vec(n * d, 1.0);
+        for r in 0..n {
+            x[r * d + 2] += 8.0; // force clipping structure
+        }
+        let mut a = Mat::eye(d);
+        for e in a.data.iter_mut() {
+            *e += 0.05 * rng.normal();
+        }
+        let v = rng.normal_vec(d, 0.1);
+        (x, a, v)
+    }
+
+    #[test]
+    fn mse_matches_transformation_mse() {
+        // The value path of the STE surrogate is the true E(T).
+        let (x, a, v) = setup(8, 12, 1);
+        let cfg = MxConfig::from_name("mxfp4", Some(4)).unwrap();
+        let g = et_loss_and_grads(&x, 8, &a, &v, &cfg, 0.1, 0.1).unwrap();
+        let t = crate::transform::Affine::new(a, v).unwrap();
+        let direct = crate::transform::transformation_mse(&x, 8, &t, &cfg);
+        assert!((g.mse - direct).abs() < 1e-4 * direct.max(1e-6), "{} vs {direct}", g.mse);
+    }
+
+    #[test]
+    fn singular_matrix_returns_none() {
+        let (x, _, v) = setup(8, 4, 2);
+        let cfg = MxConfig::from_name("mxfp4", Some(4)).unwrap();
+        let a = Mat::zeros(8, 8);
+        assert!(et_loss_and_grads(&x, 8, &a, &v, &cfg, 0.1, 0.1).is_none());
+    }
+
+    #[test]
+    fn exactly_representable_input_gives_regularizer_only_gradient() {
+        // x in {-0.25, +0.25}: block amax is a power of two, 0.25/s = 4 is
+        // on the FP4 grid, and the knee (6s) is not reached — so Q == Y,
+        // E(T) == 0, and the degenerate-STE cancellation (A against
+        // A^{-1}) is exact: every gradient except the regularizer's is 0.
+        let mut rng = Pcg64::seed(3);
+        let d = 8;
+        let x: Vec<f32> = (0..d * 6)
+            .map(|_| if rng.below(2) == 0 { 0.25 } else { -0.25 })
+            .collect();
+        let a = Mat::eye(d);
+        let v = vec![0.0f32; d];
+        let cfg = MxConfig::from_name("mxfp4", Some(4)).unwrap();
+        let g = et_loss_and_grads(&x, d, &a, &v, &cfg, 0.0, 0.1).unwrap();
+        assert!(g.mse == 0.0, "grid points must round-trip: {}", g.mse);
+        for gv in &g.grad_v {
+            assert!(gv.abs() < 1e-7, "bias grad should cancel: {gv}");
+        }
+        for ga in &g.grad_a.data {
+            assert!(ga.abs() < 1e-6, "lam = 0: A grad should cancel: {ga}");
+        }
+    }
+
+    #[test]
+    fn volume_regularizer_gradient_only() {
+        // On an exactly-reconstructing config (no clipping, lam > 0) the A
+        // gradient reduces to 2 lam log|det A| A^{-T}; check against the
+        // closed form for a diagonal matrix.
+        let d = 4;
+        let x = vec![0.01f32; d * 4];
+        let mut a = Mat::eye(d);
+        a[(0, 0)] = 2.0; // log|det| = ln 2
+        let v = vec![0.0f32; d];
+        let cfg = MxConfig::from_name("mxfp4", Some(4)).unwrap();
+        let lam = 0.5f32;
+        let g = et_loss_and_grads(&x, d, &a, &v, &cfg, lam, 0.0).unwrap();
+        let logdet = 2.0f64.ln();
+        // A^{-T} diagonal: [1/2, 1, 1, 1]
+        let expect00 = (2.0 * lam as f64 * logdet * 0.5) as f32;
+        let expect11 = (2.0 * lam as f64 * logdet) as f32;
+        assert!((g.grad_a[(0, 0)] - expect00).abs() < 1e-4, "{}", g.grad_a[(0, 0)]);
+        assert!((g.grad_a[(1, 1)] - expect11).abs() < 1e-4, "{}", g.grad_a[(1, 1)]);
+        assert!(g.grad_a[(0, 1)].abs() < 1e-4);
+        // with overflow_weight = 0 the objective decomposes exactly
+        assert!((g.loss - (g.mse + lam as f64 * logdet * logdet)).abs() < 1e-12);
+        assert!(g.mse < 1e-4, "tiny inputs: residual quant error only, got {}", g.mse);
+    }
+}

@@ -1,0 +1,318 @@
+//! Rust-native LATMiX transform learning (Sec. 3.2, Fig. 2): learn an
+//! invertible affine transformation `T(x) = x A + v` that minimizes the
+//! transformation MSE `E(T)` (Eq. 2) on captured features, with MX
+//! fake quantization in the loop.
+//!
+//! This is the request-path port of
+//! `python/compile/latmix.py::learn_feature_transform` — the part of the
+//! paper's method that *produces* transforms, complementing the analysis
+//! substrate in [`crate::transform`] which applies and measures them:
+//!
+//! - [`grad`] — hand-derived reverse-mode gradients of the Eq. 2 objective
+//!   through the affine map, the matrix inverse, and the MX fake quantizer
+//!   (clipped straight-through estimator), plus the Eq. 7/9 volume
+//!   regularizer in log-det form.
+//! - [`optim`] — AdamW + cosine LR with linear warmup (App. D.1), the
+//!   mirror of `python/compile/optim.py`.
+//! - [`synthetic`] — the Sec. 3.1 Dirac-delta and Fig. 2 outlier feature
+//!   generators shared by tests, benches, and the CLI.
+//! - [`learn_feature_transform`] — the optimization driver (direct dense
+//!   parameterization of `A`, App. D block-Hadamard-plus-noise init,
+//!   best-iterate selection by true `E(T)`).
+//! - [`learn_from_model`] — the end-to-end Fig. 2 path: capture
+//!   residual-stream activations from the pure-Rust interpreter
+//!   (`model::forward`) and learn `T` directly on them.
+//!
+//! Remaining python-only surfaces (named follow-ups in ROADMAP.md): the
+//! full-model KL distillation objective (Eq. 8) and per-head T2 learning.
+
+pub mod grad;
+pub mod optim;
+pub mod synthetic;
+
+pub use grad::{et_loss_and_grads, EtGrads};
+pub use optim::{cosine_lr, AdamW};
+pub use synthetic::{dirac_features, outlier_features};
+
+use anyhow::{Context, Result};
+
+use crate::linalg::{block_diag, hadamard, Mat};
+use crate::model::{GraphSpec, NativeWeights};
+use crate::mx::MxConfig;
+use crate::transform::Affine;
+use crate::util::Pcg64;
+
+/// Initial `A0` for the learning loop (Table 7 strategies).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum InitStrategy {
+    /// `A0 = I` — the no-transform start.
+    Identity,
+    /// Full `d x d` randomized Hadamard (`H diag(+-1)`).
+    Hadamard,
+    /// App. D default: block-diagonal randomized Hadamard blocks with
+    /// small Gaussian noise on the off-block zeros, so gradients can grow
+    /// cross-block structure.
+    BdHadamardNoise {
+        /// Sub-block size (a power of two dividing `d`).
+        block: usize,
+        /// Noise scale on the zero entries.
+        noise: f32,
+    },
+}
+
+/// Hyperparameters of [`learn_feature_transform`] (defaults follow
+/// App. D.1 and `python/compile/latmix.py`).
+#[derive(Clone, Copy, Debug)]
+pub struct LearnConfig {
+    /// Optimizer steps (default 300).
+    pub steps: usize,
+    /// Peak AdamW learning rate (default 3e-3).
+    pub lr: f32,
+    /// Volume-regularizer weight `lam` of Eq. 7/9 (default 0.1).
+    pub lam: f32,
+    /// Weight of the soft clipped-mass penalty (default 0.1).
+    pub overflow_weight: f32,
+    /// Initialization strategy (default 32-block Hadamard + 1e-3 noise).
+    pub init: InitStrategy,
+    /// RNG seed for the init.
+    pub seed: u64,
+    /// Record a [`TraceRow`] every this many steps (0 disables tracing).
+    pub trace_every: usize,
+}
+
+impl Default for LearnConfig {
+    fn default() -> LearnConfig {
+        LearnConfig {
+            steps: 300,
+            lr: 3e-3,
+            lam: 0.1,
+            overflow_weight: 0.1,
+            init: InitStrategy::BdHadamardNoise { block: 32, noise: 1e-3 },
+            seed: 0,
+            trace_every: 25,
+        }
+    }
+}
+
+/// One logged optimization state (the Fig. 2 learning curves).
+#[derive(Clone, Copy, Debug)]
+pub struct TraceRow {
+    /// Step index the row was recorded at (before that step's update).
+    pub step: usize,
+    /// True `E(T)` (Eq. 2) of the iterate on the training features.
+    pub mse: f64,
+    /// Full objective (E(T) + overflow penalty + volume regularizer).
+    pub loss: f64,
+    /// Learning rate applied at this step.
+    pub lr: f32,
+}
+
+/// Result of a learning run: the best iterate by true `E(T)`.
+#[derive(Clone, Debug)]
+pub struct LearnedTransform {
+    /// Learned transform matrix.
+    pub a: Mat,
+    /// Learned bias.
+    pub v: Vec<f32>,
+    /// `E(T)` of `(a, v)` on the training features.
+    pub best_mse: f64,
+    /// Logged learning curve (empty when `trace_every == 0`).
+    pub trace: Vec<TraceRow>,
+    /// Steps actually run (< `steps` only if an iterate went singular).
+    pub steps_run: usize,
+}
+
+impl LearnedTransform {
+    /// Validate and convert into an [`Affine`] (see
+    /// [`Affine::from_learned`] for the conditioning gate).
+    pub fn into_affine(self) -> Result<Affine> {
+        Affine::from_learned(self.a, self.v)
+    }
+}
+
+/// Full `d x d` randomized Hadamard `H diag(+-1)` — the paper's strongest
+/// *fixed* baseline (the "random Hadamard" rows of Fig. 2 / Table 2).
+/// `d` must be a power of two.
+pub fn randomized_hadamard(d: usize, rng: &mut Pcg64) -> Mat {
+    let mut h = hadamard(d);
+    for j in 0..d {
+        if rng.below(2) == 1 {
+            for i in 0..d {
+                h[(i, j)] = -h[(i, j)];
+            }
+        }
+    }
+    h
+}
+
+/// Build the initial `A0` for a strategy (mirror of
+/// `python/compile/transforms.py::init_matrix`).
+pub fn init_matrix(d: usize, init: InitStrategy, rng: &mut Pcg64) -> Result<Mat> {
+    match init {
+        InitStrategy::Identity => Ok(Mat::eye(d)),
+        InitStrategy::Hadamard => {
+            anyhow::ensure!(d.is_power_of_two(), "Hadamard init needs power-of-two d, got {d}");
+            Ok(randomized_hadamard(d, rng))
+        }
+        InitStrategy::BdHadamardNoise { block, noise } => {
+            let block = block.min(d);
+            anyhow::ensure!(
+                block.is_power_of_two() && d % block == 0,
+                "init block {block} must be a power of two dividing d = {d}"
+            );
+            let blocks: Vec<Mat> =
+                (0..d / block).map(|_| randomized_hadamard(block, rng)).collect();
+            let mut a = block_diag(&blocks);
+            if noise > 0.0 {
+                for e in a.data.iter_mut() {
+                    if *e == 0.0 {
+                        *e = noise * rng.normal();
+                    }
+                }
+            }
+            Ok(a)
+        }
+    }
+}
+
+/// Learn an affine transform minimizing `E(T)` (Eq. 2) on feature rows
+/// `feats` (flat, `d` columns) under the MX config `cfg` — the Fig. 2
+/// "learned" curves, ported from
+/// `python/compile/latmix.py::learn_feature_transform`.
+///
+/// STE gradients through the quantizer are noisy, so the returned iterate
+/// is the *best by true `E(T)`* seen during the run, not the last one; a
+/// numerically singular iterate stops the run early with the best so far.
+pub fn learn_feature_transform(
+    feats: &[f32],
+    d: usize,
+    cfg: &MxConfig,
+    lc: &LearnConfig,
+) -> Result<LearnedTransform> {
+    anyhow::ensure!(d > 0 && feats.len() % d == 0, "features are not rows of dim {d}");
+    anyhow::ensure!(!feats.is_empty(), "no feature rows");
+    anyhow::ensure!(cfg.name != "none", "cannot learn against the identity quantizer");
+    anyhow::ensure!(
+        cfg.block_size > 0 && d % cfg.block_size == 0,
+        "MX block {} does not tile feature dim {d}",
+        cfg.block_size
+    );
+    let mut rng = Pcg64::seed(lc.seed);
+    let mut a = init_matrix(d, lc.init, &mut rng)?;
+    let mut v = vec![0.0f32; d];
+    let mut opt_a = AdamW::new(d * d);
+    let mut opt_v = AdamW::new(d);
+    let warmup = (lc.steps / 10).max(1);
+    let mut best: Option<(f64, Mat, Vec<f32>)> = None;
+    fn better(mse: f64, a: &Mat, v: &[f32], best: &mut Option<(f64, Mat, Vec<f32>)>) {
+        if best.as_ref().map_or(true, |b| mse < b.0) {
+            *best = Some((mse, a.clone(), v.to_vec()));
+        }
+    }
+    let mut trace = Vec::new();
+    let mut steps_run = 0;
+    for step in 0..lc.steps {
+        let Some(g) = et_loss_and_grads(feats, d, &a, &v, cfg, lc.lam, lc.overflow_weight)
+        else {
+            break; // singular iterate: stop and keep the best seen
+        };
+        better(g.mse, &a, &v, &mut best);
+        let lr = cosine_lr(step, lc.steps, lc.lr, warmup);
+        if lc.trace_every > 0 && (step % lc.trace_every == 0 || step + 1 == lc.steps) {
+            trace.push(TraceRow { step, mse: g.mse, loss: g.loss, lr });
+        }
+        opt_a.update(&mut a.data, &g.grad_a.data, lr, 0.0);
+        opt_v.update(&mut v, &g.grad_v, lr, 0.0);
+        steps_run = step + 1;
+    }
+    // the post-update final iterate may be the best one
+    if let Some(g) = et_loss_and_grads(feats, d, &a, &v, cfg, lc.lam, lc.overflow_weight) {
+        better(g.mse, &a, &v, &mut best);
+    }
+    let (best_mse, a, v) = best.context("every iterate was singular (bad init?)")?;
+    anyhow::ensure!(best_mse.is_finite(), "learning diverged (E(T) = {best_mse})");
+    Ok(LearnedTransform { a, v, best_mse, trace, steps_run })
+}
+
+/// End-to-end Fig. 2 driver: run the pure-Rust interpreter over `tokens`
+/// (`(batch, t)`, full precision), capture the residual stream entering
+/// block `layer`, and learn `T` on those rows. Returns the captured
+/// features alongside the result so callers can evaluate baselines on the
+/// same data.
+pub fn learn_from_model(
+    w: &NativeWeights,
+    layer: usize,
+    tokens: &[i32],
+    batch: usize,
+    t: usize,
+    cfg: &MxConfig,
+    lc: &LearnConfig,
+) -> Result<(Vec<f32>, LearnedTransform)> {
+    let feats = w.capture_residual(tokens, batch, t, &GraphSpec::fp(), layer)?;
+    let lt = learn_feature_transform(&feats, w.dims.d_model, cfg, lc)?;
+    Ok((feats, lt))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_matrices_are_orthogonal_ish() {
+        let mut rng = Pcg64::seed(1);
+        let id = init_matrix(16, InitStrategy::Identity, &mut rng).unwrap();
+        assert_eq!(id, Mat::eye(16));
+        let h = init_matrix(16, InitStrategy::Hadamard, &mut rng).unwrap();
+        assert!(h.t().matmul(&h).sub(&Mat::eye(16)).max_abs() < 1e-4);
+        let bd = init_matrix(
+            64,
+            InitStrategy::BdHadamardNoise { block: 32, noise: 1e-3 },
+            &mut rng,
+        )
+        .unwrap();
+        // near-orthogonal: off-block noise is tiny
+        assert!(bd.t().matmul(&bd).sub(&Mat::eye(64)).max_abs() < 0.1);
+        // noise actually planted off the blocks
+        assert!(bd[(0, 40)] != 0.0 && bd[(0, 40)].abs() < 0.01);
+    }
+
+    #[test]
+    fn init_rejects_bad_shapes() {
+        let mut rng = Pcg64::seed(2);
+        assert!(init_matrix(24, InitStrategy::Hadamard, &mut rng).is_err());
+        assert!(init_matrix(
+            48,
+            InitStrategy::BdHadamardNoise { block: 32, noise: 0.0 },
+            &mut rng
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn learn_rejects_bad_configs() {
+        let cfg = MxConfig::from_name("mxfp4", Some(32)).unwrap();
+        let lc = LearnConfig::default();
+        // d not a multiple of the MX block
+        assert!(learn_feature_transform(&[0.0; 48], 16, &cfg, &lc).is_err());
+        // ragged rows
+        assert!(learn_feature_transform(&[0.0; 33], 32, &cfg, &lc).is_err());
+        // identity quantizer: E(T) trivially 0, nothing to learn
+        let none = MxConfig::from_name("none", Some(32)).unwrap();
+        assert!(learn_feature_transform(&[0.0; 64], 32, &none, &lc).is_err());
+        // zero block size (e.g. a mis-parsed --block flag) errors, no panic
+        let zero = MxConfig::from_name("mxfp4", Some(0)).unwrap();
+        assert!(learn_feature_transform(&[0.0; 64], 32, &zero, &lc).is_err());
+    }
+
+    #[test]
+    fn zero_steps_returns_validated_init() {
+        let cfg = MxConfig::from_name("mxfp4", Some(32)).unwrap();
+        let lc = LearnConfig { steps: 0, ..Default::default() };
+        let x = outlier_features(8, 32, 0.05, 3);
+        let lt = learn_feature_transform(&x, 32, &cfg, &lc).unwrap();
+        assert_eq!(lt.steps_run, 0);
+        assert!(lt.best_mse.is_finite());
+        // init is a (noised) Hadamard: invertible
+        lt.into_affine().unwrap();
+    }
+}

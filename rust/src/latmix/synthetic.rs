@@ -1,0 +1,65 @@
+//! Synthetic feature generators for the paper's numerical studies: the
+//! Sec. 3.1 Dirac-delta illustration and the Fig. 2 outlier-channel
+//! setting. Shared by the property tests, the microbench `fig2_learned`
+//! row, and the `latmix learn --features dirac|outlier` CLI path, so all
+//! three exercise the same distributions.
+
+use crate::util::Pcg64;
+
+/// Fig. 2-style features: i.i.d. `N(0, sigma^2)` rows with two planted
+/// massive-outlier channels (the residual-stream pattern Sec. 3.1 argues
+/// breaks per-block scaling) — channel `3 mod d` at `+20` and channel
+/// `5d/8` at `-12`.
+pub fn outlier_features(rows: usize, d: usize, sigma: f32, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg64::seed(seed);
+    let mut x = rng.normal_vec(rows * d, sigma);
+    let (c1, c2) = (3 % d, 5 * d / 8);
+    for r in 0..rows {
+        x[r * d + c1] = 20.0 + rng.normal();
+        if c2 != c1 {
+            x[r * d + c2] = -12.0 + 0.5 * rng.normal();
+        }
+    }
+    x
+}
+
+/// Sec. 3.1 Dirac-delta features: near-zero rows with a single spike
+/// channel at magnitude 10 — the worked example where one outlier forces
+/// the whole block's scale up and flushes every small element to zero.
+pub fn dirac_features(rows: usize, d: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg64::seed(seed);
+    let mut x = rng.normal_vec(rows * d, 0.05);
+    for r in 0..rows {
+        x[r * d] = 10.0 + 0.1 * rng.normal();
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn outlier_channels_are_planted() {
+        let d = 64;
+        let x = outlier_features(16, d, 0.05, 1);
+        assert_eq!(x.len(), 16 * d);
+        for r in 0..16 {
+            assert!(x[r * d + 3] > 15.0);
+            assert!(x[r * d + 40] < -9.0);
+            assert!(x[r * d + 10].abs() < 1.0);
+        }
+    }
+
+    #[test]
+    fn dirac_spike_dominates() {
+        let d = 32;
+        let x = dirac_features(8, d, 2);
+        for r in 0..8 {
+            let row = &x[r * d..(r + 1) * d];
+            let amax = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            assert!((amax - row[0].abs()).abs() < 1e-6, "spike must be the max");
+            assert!(row[0] > 9.0);
+        }
+    }
+}

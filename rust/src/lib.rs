@@ -7,11 +7,16 @@
 //! - **L3 (this crate)** — the request-path coordinator: PJRT runtime,
 //!   continuous-batching serving engine, KV-cache manager, evaluation
 //!   harness, plus every substrate the paper's evaluation needs (MX format
-//!   codecs, dense linear algebra, affine-transform analysis, RTN/GPTQ).
+//!   codecs, dense linear algebra, affine-transform analysis, RTN/GPTQ,
+//!   and — since the `latmix` module — the Sec. 3.2 transform-learning
+//!   loop itself, so transforms can be learned without Python).
 //! - **L2/L1 (python/, build-time only)** — the JAX transformer, the Pallas
-//!   MX kernels, transform learning, and the AOT lowering that produces
-//!   `artifacts/` (HLO text + `.lxt` weight sets). Python never runs on the
-//!   request path.
+//!   MX kernels, full-model KL-distillation transform learning, and the
+//!   AOT lowering that produces `artifacts/` (HLO text + `.lxt` weight
+//!   sets). Python never runs on the request path.
+//!
+//! See `ARCHITECTURE.md` at the repo root for the module map and data
+//! flow.
 //!
 //! The offline build environment vendors only the `xla` + `anyhow` crates;
 //! everything usually pulled from crates.io (CLI parsing, config, RNG,
@@ -33,6 +38,7 @@ pub mod coordinator;
 pub mod data;
 pub mod eval;
 pub mod io;
+pub mod latmix;
 pub mod linalg;
 pub mod model;
 pub mod mx;

@@ -119,6 +119,15 @@ impl Mat {
         Mat::from_vec(self.rows, self.cols, self.data.iter().map(|x| x * s).collect())
     }
 
+    pub fn add(&self, o: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (o.rows, o.cols));
+        Mat::from_vec(
+            self.rows,
+            self.cols,
+            self.data.iter().zip(&o.data).map(|(a, b)| a + b).collect(),
+        )
+    }
+
     pub fn sub(&self, o: &Mat) -> Mat {
         assert_eq!((self.rows, self.cols), (o.rows, o.cols));
         Mat::from_vec(
@@ -210,6 +219,40 @@ impl Mat {
 
     pub fn inverse(&self) -> Option<Mat> {
         self.solve(&Mat::eye(self.rows))
+    }
+
+    /// Inverse and `ln|det|` from a single LU factorization — the
+    /// transform-learning loop needs both every optimizer step, and one
+    /// O(n^3) factorization covers the two. Bit-identical to
+    /// [`Mat::inverse`] (same factorization, same solve loops).
+    pub fn inverse_logdet(&self) -> Option<(Mat, f64)> {
+        let n = self.rows;
+        let (lu, perm, _) = self.lu()?;
+        let mut logdet = 0.0f64;
+        for i in 0..n {
+            logdet += (lu[(i, i)].abs() as f64).ln();
+        }
+        // solve A X = I with the factorization (the loops of `solve`,
+        // with the permuted identity column inlined)
+        let mut x = Mat::zeros(n, n);
+        for c in 0..n {
+            let mut y = vec![0.0f32; n];
+            for i in 0..n {
+                let mut s = if perm[i] == c { 1.0 } else { 0.0 };
+                for j in 0..i {
+                    s -= lu[(i, j)] * y[j];
+                }
+                y[i] = s;
+            }
+            for i in (0..n).rev() {
+                let mut s = y[i];
+                for j in i + 1..n {
+                    s -= lu[(i, j)] * x[(j, c)];
+                }
+                x[(i, c)] = s / lu[(i, i)];
+            }
+        }
+        Some((x, logdet))
     }
 
     pub fn det(&self) -> f32 {
@@ -368,6 +411,15 @@ mod tests {
         let b = rand_mat(12, 4);
         let x = a.solve(&b).unwrap();
         assert!(a.matmul(&x).sub(&b).max_abs() < 1e-3);
+    }
+
+    #[test]
+    fn inverse_logdet_matches_separate_calls() {
+        let a = rand_mat(24, 2);
+        let (inv, logdet) = a.inverse_logdet().unwrap();
+        assert_eq!(inv, a.inverse().unwrap(), "must be bit-identical to inverse()");
+        assert!((logdet - (a.det().abs() as f64).ln()).abs() < 1e-3, "{logdet}");
+        assert!(Mat::zeros(8, 8).inverse_logdet().is_none());
     }
 
     #[test]

@@ -4,12 +4,15 @@
 //!   info                          artifact + model summary
 //!   eval   --weights TAG --quant TAG [--ppl-only] [--backend B]
 //!   serve  --weights TAG --quant TAG [--requests N] [--slots N] [--max-new N] [--backend B]
+//!   learn  [--steps N] [--lr F] [--block N] [--bits N] [--features model|outlier|dirac]
 //!   quantize-info --weights TAG   MX footprint accounting
 //!   variants                      list available weight variants
 //!
 //! `--backend` picks the execution backend: `xla` (PJRT, needs the
 //! `backend-xla` build feature — the default when available) or `native`
-//! (pure-Rust interpreter, works on any machine).
+//! (pure-Rust interpreter, works on any machine). `learn` runs the
+//! Sec. 3.2 / Fig. 2 transform-learning loop (`latmix::latmix`) on the
+//! native backend — no artifacts or XLA toolchain required.
 
 use anyhow::{Context, Result};
 
@@ -33,13 +36,17 @@ fn main() -> Result<()> {
         Some("variants") => variants(),
         Some("eval") => eval(&args),
         Some("serve") => serve(&args),
+        Some("learn") => learn(&args),
         Some("quantize-info") => quantize_info(&args),
         _ => {
             eprintln!(
-                "usage: latmix <info|variants|eval|serve|quantize-info> [options]\n\
+                "usage: latmix <info|variants|eval|serve|learn|quantize-info> [options]\n\
                  \n\
                  eval   --weights TAG --quant TAG [--ppl-only] [--backend xla|native]\n\
                  serve  --weights TAG --quant TAG [--requests N] [--slots N] [--max-new N] [--backend xla|native]\n\
+                 learn  [--steps N] [--lr F] [--block N] [--bits 4|6|8] [--format FMT]\n\
+                 \x20       [--features model|outlier|dirac] [--layer N] [--d N] [--rows N]\n\
+                 \x20       [--init bd_hadamard|hadamard|identity] [--seed N]\n\
                  quantize-info --weights TAG [--format mxfp4]"
             );
             Ok(())
@@ -142,6 +149,118 @@ fn serve(args: &Args) -> Result<()> {
         "ttft p50={:.1}ms p99={:.1}ms  latency p50={:.1}ms p99={:.1}ms",
         rep.ttft_p50_ms, rep.ttft_p99_ms, rep.latency_p50_ms, rep.latency_p99_ms
     );
+    Ok(())
+}
+
+/// `latmix learn` — the Sec. 3.2 / Fig. 2 transform-learning loop, fully
+/// in Rust on the native backend. Learns `T` on residual-stream features
+/// captured from a synthetic latmix-tiny model (`--features model`, the
+/// default) or on the paper's synthetic distributions
+/// (`--features outlier|dirac`), then reports `E(T)` (Eq. 2) and the
+/// Theorem 3.3 bound against the identity and random-Hadamard baselines.
+fn learn(args: &Args) -> Result<()> {
+    use latmix::latmix::{
+        dirac_features, learn_feature_transform, outlier_features, InitStrategy, LearnConfig,
+    };
+    use latmix::transform::{bound::theorem_bound, transformation_mse, Affine};
+
+    // only override the block size when given: each format keeps its
+    // canonical default otherwise (32 for mx*, 16 for nvfp4)
+    let block: Option<usize> = args.opt("block").and_then(|b| b.parse().ok());
+    let fmt = match args.opt("format") {
+        Some(f) => f.to_string(),
+        None => match args.opt_usize("bits", 4) {
+            4 => "mxfp4".to_string(),
+            6 => "mxfp6".to_string(),
+            8 => "mxfp8".to_string(),
+            other => anyhow::bail!("--bits {other} unsupported (4|6|8; use --format for more)"),
+        },
+    };
+    let cfg = MxConfig::from_name(&fmt, block)?;
+    let seed = args.opt_usize("seed", 0) as u64;
+    let mut lc = LearnConfig {
+        steps: args.opt_usize("steps", 300),
+        lr: args.opt_f64("lr", 3e-3) as f32,
+        seed,
+        ..Default::default()
+    };
+    let features = args.opt("features").unwrap_or("model");
+    let (feats, d, source) = match features {
+        "model" => {
+            let dims = latmix::model::NativeDims::latmix_tiny();
+            let w = latmix::model::NativeWeights::synthetic(dims, seed ^ 0x6c61746d);
+            let layer = args.opt_usize("layer", 2).min(dims.n_layers);
+            let (batch, t) = (8usize, dims.prefill_len);
+            let mut rng = latmix::util::Pcg64::seed(seed);
+            let tokens: Vec<i32> =
+                (0..batch * t).map(|_| rng.below(dims.vocab as u64) as i32).collect();
+            let spec = latmix::model::GraphSpec::fp();
+            let feats = w.capture_residual(&tokens, batch, t, &spec, layer)?;
+            (feats, dims.d_model, format!("residual stream, layer {layer} (native backend)"))
+        }
+        "outlier" => {
+            let d = args.opt_usize("d", 64);
+            let rows = args.opt_usize("rows", 128);
+            (outlier_features(rows, d, 0.05, seed), d, "synthetic outlier channels".into())
+        }
+        "dirac" => {
+            let d = args.opt_usize("d", 32);
+            let rows = args.opt_usize("rows", 128);
+            (dirac_features(rows, d, seed), d, "Sec. 3.1 Dirac-delta".into())
+        }
+        other => anyhow::bail!("unknown --features {other:?} (model|outlier|dirac)"),
+    };
+    lc.init = match args.opt("init").unwrap_or("bd_hadamard") {
+        "bd_hadamard" => InitStrategy::BdHadamardNoise { block: 32.min(d), noise: 1e-3 },
+        "hadamard" => InitStrategy::Hadamard,
+        "identity" => InitStrategy::Identity,
+        other => anyhow::bail!("unknown --init {other:?} (bd_hadamard|hadamard|identity)"),
+    };
+
+    println!(
+        "learn: {} rows x {d} dims ({source}), {} b{}, steps={} lr={}",
+        feats.len() / d,
+        cfg.name,
+        cfg.block_size,
+        lc.steps,
+        lc.lr
+    );
+    let lt = learn_feature_transform(&feats, d, &cfg, &lc)?;
+    for row in &lt.trace {
+        println!(
+            "  step {:4}  E(T) {:.6}  loss {:.6}  lr {:.2e}",
+            row.step, row.mse, row.loss, row.lr
+        );
+    }
+    let best_mse = lt.best_mse;
+    let learned = lt.into_affine()?;
+
+    let mut table = latmix::bench::Table::new(
+        "fig2_learn",
+        "E(T) and Theorem 3.3 bound: learned vs fixed baselines",
+        &["transform", "E(T)", "thm 3.3 bound", "vs identity"],
+    );
+    let id = Affine::identity(d);
+    let e_id = transformation_mse(&feats, d, &id, &cfg);
+    let mut report = |name: &str, t: &Affine| {
+        let e = transformation_mse(&feats, d, t, &cfg);
+        let b = theorem_bound(&feats, d, t, cfg.block_size);
+        table.row(vec![
+            name.into(),
+            format!("{e:.6}"),
+            format!("{b:.4}"),
+            format!("{:.2}x", e_id / e.max(1e-12)),
+        ]);
+    };
+    report("identity", &id);
+    if d.is_power_of_two() {
+        let mut hrng = latmix::util::Pcg64::seed(seed.wrapping_add(1));
+        let h = latmix::latmix::randomized_hadamard(d, &mut hrng);
+        report("random hadamard", &Affine::new(h, vec![0.0; d])?);
+    }
+    report("learned (this run)", &learned);
+    table.emit();
+    println!("learned transform: cond = {:.2}, best E(T) = {best_mse:.6}", learned.a.condition());
     Ok(())
 }
 

@@ -1,7 +1,8 @@
 //! Pure-Rust transformer interpreter — the XLA-free execution path.
 //!
 //! Mirrors `python/compile/model.py` op for op (pre-RMSNorm Llama-style
-//! blocks, RoPE, SiLU-gated FFN, activation QDQ at every linear input,
+//! blocks, RoPE, SiLU-gated FFN, activation QDQ at every linear input —
+//! the paper's Sec. 4.1 deployment graph with Eq. 1 fake quantization —
 //! optional online T3 block-Hadamard on the down-proj input) over the same
 //! `.lxt` weight sets and the same `(batch, kv_seq, n_heads, head_dim)` KV
 //! plane layout as the AOT graphs. `NativeExecutor` (serving) and
@@ -346,6 +347,34 @@ impl NativeWeights {
     }
 
     // -- entry points -------------------------------------------------------
+
+    /// Residual-stream capture for transform learning (Sec. 3.2 / Fig. 2):
+    /// run the full-sequence forward and return the `(batch * t, d_model)`
+    /// residual rows *entering* block `layer` (`0` = post-embedding,
+    /// `n_layers` = input to the final norm) — the features the paper
+    /// learns `T1` on. `latmix::learn_from_model` drives this.
+    pub fn capture_residual(
+        &self,
+        tokens: &[i32],
+        batch: usize,
+        t: usize,
+        spec: &GraphSpec,
+        layer: usize,
+    ) -> Result<Vec<f32>> {
+        anyhow::ensure!(tokens.len() == batch * t, "tokens len != batch * t");
+        anyhow::ensure!(
+            layer <= self.dims.n_layers,
+            "layer {layer} out of range (model has {} blocks)",
+            self.dims.n_layers
+        );
+        spec.validate(&self.dims)?;
+        let mut x = self.embed_rows(tokens);
+        let lens = vec![t; batch];
+        for lw in &self.layers[..layer] {
+            self.block_full(lw, &mut x, batch, t, &lens, spec);
+        }
+        Ok(x)
+    }
 
     /// Full-sequence causal logits: tokens (batch, t) -> flat
     /// (batch * t * vocab). The native form of the `logits_*` graphs.
@@ -804,6 +833,29 @@ mod tests {
             seq.push(next);
         }
         assert_eq!(via_kv, via_seq, "KV decode path diverges from full-seq path");
+    }
+
+    #[test]
+    fn capture_residual_layers() {
+        let dims = tiny();
+        let w = NativeWeights::synthetic(dims, 13);
+        let spec = GraphSpec::fp();
+        let toks: Vec<i32> = (0..8).collect();
+        // layer 0 is exactly the embedding rows
+        let l0 = w.capture_residual(&toks, 2, 4, &spec, 0).unwrap();
+        assert_eq!(l0.len(), 8 * dims.d_model);
+        for (i, &tk) in toks.iter().enumerate() {
+            let d = dims.d_model;
+            assert_eq!(&l0[i * d..(i + 1) * d], w.embed.row(tk as usize));
+        }
+        // deeper captures change and stay finite
+        let l1 = w.capture_residual(&toks, 2, 4, &spec, 1).unwrap();
+        let l2 = w.capture_residual(&toks, 2, 4, &spec, dims.n_layers).unwrap();
+        assert_ne!(l0, l1);
+        assert_ne!(l1, l2);
+        assert!(l2.iter().all(|v| v.is_finite()));
+        // out of range rejected
+        assert!(w.capture_residual(&toks, 2, 4, &spec, dims.n_layers + 1).is_err());
     }
 
     #[test]

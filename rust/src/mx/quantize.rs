@@ -8,6 +8,18 @@ pub const SCALE_EMIN: i32 = -127;
 pub const SCALE_EMAX: i32 = 127;
 
 /// Full MX tensor-quantization configuration (mirror of python `MXConfig`).
+///
+/// ```
+/// use latmix::mx::{mx_qdq, MxConfig};
+/// let cfg = MxConfig::from_name("mxfp4", None).unwrap();
+/// assert_eq!((cfg.block_size, cfg.element.bits), (32, 4));
+/// // 4-bit elements + one shared 8-bit scale per 32-element block (Eq. 1)
+/// assert!((cfg.bits_per_element() - 4.25).abs() < 1e-12);
+/// // quantization is idempotent: the representable grid maps to itself
+/// let x: Vec<f32> = (0..32).map(|i| i as f32 / 7.0).collect();
+/// let q = mx_qdq(&x, 32, &cfg);
+/// assert_eq!(mx_qdq(&q, 32, &cfg), q);
+/// ```
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct MxConfig {
     pub name: &'static str,
@@ -65,9 +77,7 @@ pub fn qdq_block(x: &mut [f32], cfg: &MxConfig, nv_tensor_scale: f32) {
     let amax = x.iter().fold(0.0f32, |m, v| m.max(v.abs()));
     if cfg.nv {
         // non-power-of-two scale: division semantics must stay as-is
-        let ts = nv_tensor_scale;
-        let s0 = fp_qdq(amax / (FP4_E2M1.maxval() * ts), FP8_E4M3);
-        let s = if s0 > 0.0 { s0 } else { 1.0 } * ts;
+        let s = nv_block_scale(amax, nv_tensor_scale);
         for v in x.iter_mut() {
             *v = s * fp_qdq(*v / s, FP4_E2M1);
         }
@@ -92,6 +102,32 @@ pub fn qdq_block(x: &mut [f32], cfg: &MxConfig, nv_tensor_scale: f32) {
             *v = s * element_qdq(*v * s_inv, cfg.element);
         }
     }
+}
+
+/// NVFP4 per-block scale: the E4M3-quantized ratio of the block abs-max
+/// to the FP4 range, times the second-level per-tensor scale. The single
+/// source of truth shared by [`qdq_block`]'s NVFP4 branch and
+/// [`block_clip_threshold`].
+#[inline]
+pub fn nv_block_scale(amax: f32, tensor_scale: f32) -> f32 {
+    let s0 = fp_qdq(amax / (FP4_E2M1.maxval() * tensor_scale), FP8_E4M3);
+    let s = if s0 > 0.0 { s0 } else { 1.0 };
+    s * tensor_scale
+}
+
+/// Per-block clipping knee of the Eq. 1 quantizer, from the block's
+/// abs-max: elements with `|v| <= threshold` land on the in-range part of
+/// the element grid; larger magnitudes saturate to `scale * maxval`. Used
+/// by the `latmix` clipped-STE backward (Sec. 3.2) to gate gradient flow
+/// through the fake quantizer; built from the same scale helpers
+/// ([`block_scale`] / [`nv_block_scale`]) as [`qdq_block`], so knee and
+/// quantizer cannot drift apart (pass `nv_tensor_scale(x)` for NVFP4,
+/// `1.0` otherwise).
+pub fn block_clip_threshold(amax: f32, cfg: &MxConfig, nv_tensor_scale: f32) -> f32 {
+    if cfg.nv {
+        return nv_block_scale(amax, nv_tensor_scale) * FP4_E2M1.maxval();
+    }
+    block_scale(amax, cfg.element.emax) * cfg.element.maxval()
 }
 
 /// NVFP4 second-level per-tensor scale (mirror of python `nv_tensor_scale`).
@@ -172,6 +208,28 @@ mod tests {
                 let amax = block_x.iter().fold(0.0f32, |m, v| m.max(v.abs()));
                 for (a, b) in block_x.iter().zip(block_q) {
                     assert!((a - b).abs() <= amax * 0.5 + 1e-6);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn clip_threshold_bounds_qdq_output() {
+        // |Q(v)| never exceeds the block's clipping knee, and the knee is
+        // itself representable (saturating inputs hit it exactly).
+        let mut rng = Pcg64::seed(11);
+        for name in ["mxfp4", "mxint4", "mxfp6", "mxfp8", "nvfp4"] {
+            let cfg = MxConfig::from_name(name, Some(16)).unwrap();
+            let x = rng.normal_vec(256, 8.0);
+            let ts = if cfg.nv { nv_tensor_scale(&x) } else { 1.0 };
+            let q = mx_qdq(&x, 256, &cfg);
+            for (bx, bq) in x.chunks(16).zip(q.chunks(16)) {
+                let amax = bx.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+                let thr = block_clip_threshold(amax, &cfg, ts);
+                // int formats reach -(maxval + 1) on the negative side
+                let slack = if cfg.element.is_fp { 1.0 } else { 8.0 / 7.0 };
+                for v in bq {
+                    assert!(v.abs() <= thr * slack * (1.0 + 1e-6), "{v} vs {thr} ({name})");
                 }
             }
         }

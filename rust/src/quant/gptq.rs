@@ -1,4 +1,6 @@
-//! GPTQ (Frantar et al. 2023) with MX-block-aware scales — Rust port of
+//! GPTQ (Frantar et al. 2023) with MX-block-aware scales — the paper's
+//! stronger weight quantizer (Sec. 4.2, the Table 2 "GPTQ" rows, applied
+//! after folding the learned transforms into the weights). Rust port of
 //! `python/compile/gptq.py::gptq_quantize` (same algorithm, f64 accumulation,
 //! upper-Cholesky of the damped inverse Hessian, per-MX-block scale refresh).
 

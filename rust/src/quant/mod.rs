@@ -1,4 +1,7 @@
-//! Weight quantization substrate (Rust side): RTN and the GPTQ port.
+//! Weight quantization substrate (Rust side): RTN and the GPTQ port —
+//! the weight-side half of the paper's W4A4 recipe (Sec. 4.2; the Table 2
+//! "RTN" and "GPTQ" baseline rows and the MR-GPTQ-style block-aware
+//! refresh).
 //!
 //! The canonical weight quantization happens at build time in
 //! `python/compile/gptq.py`; this mirror exists so (a) the error-analysis

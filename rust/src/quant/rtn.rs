@@ -1,5 +1,6 @@
-//! Round-to-nearest weight quantization: plain MX QDQ of `W (d_in, d_out)`
-//! with blocks along the input (reduction) dimension.
+//! Round-to-nearest weight quantization: plain MX QDQ (Eq. 1) of
+//! `W (d_in, d_out)` with blocks along the input (reduction) dimension —
+//! the paper's simplest weight-side baseline (Table 2 "RTN" rows).
 
 use crate::mx::quantize::{qdq_block, nv_tensor_scale, MxConfig};
 use crate::util::par;

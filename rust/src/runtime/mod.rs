@@ -1,10 +1,14 @@
-//! Execution backends for the AOT'd model graphs.
+//! Execution backends for the AOT'd model graphs — the deployment seam of
+//! the paper's Sec. 4.1 serving claim: every quantized method runs the
+//! same decode executable, so backend choice and transform choice are
+//! orthogonal.
 //!
 //! Two implementations of the [`Backend`] trait:
 //!
 //! - [`NativeBackend`] (always compiled) — the pure-Rust interpreter over
 //!   `model::forward`, no native libraries required.
-//! - [`Runtime`] (behind the default-on `backend-xla` cargo feature) — the
+//! - `Runtime` (in `runtime::pjrt`, behind the default-on `backend-xla`
+//!   cargo feature — not linkable from no-default-feature docs) — the
 //!   PJRT/XLA runtime that compiles and executes the HLO-text artifacts.
 //!
 //! The serving engine abstracts one step further ([`StepExecutor`] in

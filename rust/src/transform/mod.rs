@@ -8,7 +8,22 @@ use crate::linalg::Mat;
 use crate::mx::{mx_qdq_rows, MxConfig};
 
 /// An invertible affine transformation `T(x) = x A + v` (row-vector
-/// convention, matching `python/compile/transforms.py`).
+/// convention, matching `python/compile/transforms.py`), with its inverse
+/// factored once at construction.
+///
+/// ```
+/// use latmix::linalg::Mat;
+/// use latmix::transform::Affine;
+/// let t = Affine::new(Mat::eye(4).scale(2.0), vec![0.5; 4]).unwrap();
+/// // forward: y = x A + v
+/// let y = t.forward_rows(&[1.0, 2.0, 3.0, 4.0]);
+/// assert_eq!(y, vec![2.5, 4.5, 6.5, 8.5]);
+/// // backward: x = (y - v) A^{-1} — an exact round-trip here
+/// let x = t.backward_rows(&y);
+/// for (got, want) in x.iter().zip([1.0f32, 2.0, 3.0, 4.0]) {
+///     assert!((got - want).abs() < 1e-6);
+/// }
+/// ```
 #[derive(Clone, Debug)]
 pub struct Affine {
     pub a: Mat,
@@ -24,6 +39,24 @@ impl Affine {
             .inverse()
             .ok_or_else(|| anyhow::anyhow!("transform matrix is singular"))?;
         Ok(Affine { a, v, a_inv })
+    }
+
+    /// Build from a learned `(A, v)` pair (the output of
+    /// `latmix::learn_feature_transform`), additionally rejecting
+    /// ill-conditioned matrices: a transform with a huge condition number
+    /// has a huge `||A^{-1}||_sigma`, so the Theorem 3.3 error bound —
+    /// and the deployed dequantization path — would amplify quantization
+    /// noise instead of reducing it.
+    pub fn from_learned(a: Mat, v: Vec<f32>) -> anyhow::Result<Affine> {
+        const MAX_COND: f32 = 1e4;
+        let t = Affine::new(a, v)?;
+        // condition number from the inverse `new` already factored
+        let cond = t.a.spectral_norm() * t.a_inv.spectral_norm();
+        anyhow::ensure!(
+            cond.is_finite() && cond < MAX_COND,
+            "learned transform is ill-conditioned (cond {cond:.1} >= {MAX_COND})"
+        );
+        Ok(t)
     }
 
     pub fn identity(d: usize) -> Affine {
@@ -144,6 +177,17 @@ mod tests {
             / 16.0
             / d as f64;
         assert!((e - direct).abs() < 1e-9);
+    }
+
+    #[test]
+    fn from_learned_gates_on_conditioning() {
+        let mut rng = Pcg64::seed(25);
+        let q = random_orthogonal(16, &mut rng);
+        assert!(Affine::from_learned(q, vec![0.0; 16]).is_ok());
+        let mut bad = Mat::eye(16);
+        bad[(0, 0)] = 1e-6; // cond ~ 1e6
+        assert!(Affine::from_learned(bad, vec![0.0; 16]).is_err());
+        assert!(Affine::from_learned(Mat::zeros(16, 16), vec![0.0; 16]).is_err());
     }
 
     #[test]

@@ -4,7 +4,8 @@
 # then a smoke microbench on the native executor that refreshes
 # BENCH_microbench.json (schema 2, per-row `backend` field). Run this
 # locally to reproduce the enforced CI lane on any machine; no XLA
-# toolchain required.
+# toolchain required. (CI's lint steps — clippy, rustfmt, and the
+# `RUSTDOCFLAGS="-D warnings" cargo doc` docs gate — live in ci.yml.)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
