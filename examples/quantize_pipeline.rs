@@ -88,7 +88,12 @@ fn main() -> anyhow::Result<()> {
         "End-to-end driver: MXFP4 W+A quantization",
         &["variant", "ppl", "avg acc %", "recovery %"],
     );
-    tab.row(vec!["FP16".into(), format!("{fp_ppl:.2}"), format!("{:.2}", fp_acc * 100.0), "100.00".into()]);
+    tab.row(vec![
+        "FP16".into(),
+        format!("{fp_ppl:.2}"),
+        format!("{:.2}", fp_acc * 100.0),
+        "100.00".into(),
+    ]);
     for (label, wtag, gtag) in [
         ("RTN", "rtn_mxfp4_b32", "mxfp4_b32"),
         ("GPTQ", "gptq_mxfp4_b32", "mxfp4_b32"),

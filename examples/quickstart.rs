@@ -46,7 +46,8 @@ fn main() -> anyhow::Result<()> {
 
     // --- generate through the serving engine ------------------------------
     let exec = XlaExecutor::new(&rt, "fp", &fp)?;
-    let mut engine = Engine::new(exec, EngineConfig { max_slots: 2, eos: -1, ..Default::default() });
+    let mut engine =
+        Engine::new(exec, EngineConfig { max_slots: 2, eos: -1, ..Default::default() });
     // prompt: BOS + COPY-task marker + three words + SEP — the model should copy
     let prompt = vec![1i32, 14, 100, 101, 102, 2];
     engine.submit(GenRequest::new(0, prompt.clone(), 4));

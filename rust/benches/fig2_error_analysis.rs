@@ -31,6 +31,18 @@ fn learned_transform(b: usize, which: &str, d: usize) -> Option<Affine> {
     let p = latmix::artifacts_dir()
         .join("transforms")
         .join(format!("fig2_learned_b{b}.lxt"));
+    // new-style: a TransformSpec written by `latmix learn --save-spec`
+    // (its Residual site is the learned affine)
+    if which == "aff" {
+        if let Ok(spec) = latmix::transform::TransformSpec::load(&p) {
+            if let Some(t) = spec.residual() {
+                if t.dim() == d {
+                    return Some(t.clone());
+                }
+            }
+        }
+    }
+    // legacy python export: flat `{which}_a` / `{which}_v` tensors
     let map = load_lxt(&p).ok()?;
     let a = map.get(&format!("{which}_a"))?.as_f32().ok()?.to_vec();
     let v = map.get(&format!("{which}_v"))?.as_f32().ok()?.to_vec();
@@ -49,7 +61,8 @@ fn main() {
     };
     let mut rng = Pcg64::seed(7);
     let full_h = Affine::new(hadamard(d), vec![0.0; d]).unwrap();
-    let rand_rot = Affine::new(latmix::linalg::random_orthogonal(d, &mut rng), vec![0.0; d]).unwrap();
+    let rand_rot =
+        Affine::new(latmix::linalg::random_orthogonal(d, &mut rng), vec![0.0; d]).unwrap();
     let identity = Affine::identity(d);
 
     // ---- Fig. 2a: E(T) vs block size ------------------------------------
@@ -72,9 +85,9 @@ fn main() {
         for &b in &blocks {
             let cfg = MxConfig::from_name("mxfp4", Some(b)).unwrap();
             let t = match (name, make) {
-                ("vanilla", _) => identity.clone_affine(),
-                ("hadamard (full)", _) => full_h.clone_affine(),
-                ("random rotation", _) => rand_rot.clone_affine(),
+                ("vanilla", _) => identity.clone(),
+                ("hadamard (full)", _) => full_h.clone(),
+                ("random rotation", _) => rand_rot.clone(),
                 ("block hadamard", _) => {
                     Affine::new(block_hadamard_mat(d, b.min(d)), vec![0.0; d]).unwrap()
                 }
@@ -109,8 +122,8 @@ fn main() {
     );
     let cfg32 = MxConfig::from_name("mxfp4", Some(32)).unwrap();
     for (name, t) in [
-        ("vanilla", identity.clone_affine()),
-        ("hadamard (full)", full_h.clone_affine()),
+        ("vanilla", identity.clone()),
+        ("hadamard (full)", full_h.clone()),
         ("block hadamard", Affine::new(block_hadamard_mat(d, 32), vec![0.0; d]).unwrap()),
     ]
     .into_iter()
@@ -132,8 +145,8 @@ fn main() {
         &["transform", "blocks (low->high index)"],
     );
     for (name, t) in [
-        ("vanilla", identity.clone_affine()),
-        ("hadamard (full)", full_h.clone_affine()),
+        ("vanilla", identity.clone()),
+        ("hadamard (full)", full_h.clone()),
         ("block hadamard", Affine::new(block_hadamard_mat(d, 32), vec![0.0; d]).unwrap()),
     ]
     .into_iter()
@@ -190,15 +203,4 @@ fn fig2b() {
         tab.row(cells);
     }
     tab.emit();
-}
-
-/// Affine lacks Clone (holds a cached inverse) — tiny helper for benches.
-trait CloneAffine {
-    fn clone_affine(&self) -> Affine;
-}
-
-impl CloneAffine for Affine {
-    fn clone_affine(&self) -> Affine {
-        Affine::new(self.a.clone(), self.v.clone()).unwrap()
-    }
 }

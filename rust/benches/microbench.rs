@@ -44,15 +44,16 @@ fn main() {
     let mut json = JsonReport::new("microbench");
     let mut rng = Pcg64::seed(99);
 
-    let elem_row = |tab: &mut Table, json: &mut JsonReport, r: &latmix::bench::BenchResult, n: f64| {
-        tab.row(vec![
-            r.name.clone(),
-            fmt_time(r.mean_s),
-            fmt_time(r.p99_s),
-            format!("{:.0} Melem/s", r.throughput(n) / 1e6),
-        ]);
-        json.push(r, Some(("elem/s", n)));
-    };
+    let elem_row =
+        |tab: &mut Table, json: &mut JsonReport, r: &latmix::bench::BenchResult, n: f64| {
+            tab.row(vec![
+                r.name.clone(),
+                fmt_time(r.mean_s),
+                fmt_time(r.p99_s),
+                format!("{:.0} Melem/s", r.throughput(n) / 1e6),
+            ]);
+            json.push(r, Some(("elem/s", n)));
+        };
 
     // MX QDQ (f32 in/out) — the activation-quant inner loop analog.
     // scalar-ref = retained per-element division codec (the pre-PR
@@ -75,7 +76,9 @@ fn main() {
     elem_row(&mut tab, &mut json, &r, n as f64);
 
     // bit-pack + unpack: scalar-ref baseline, then the LUT/parallel codec
-    let r = Bencher::new("mxfp4 pack 64K scalar-ref").with_iters(w, i).run(|| reference::pack_ref(&x, &cfg));
+    let r = Bencher::new("mxfp4 pack 64K scalar-ref")
+        .with_iters(w, i)
+        .run(|| reference::pack_ref(&x, &cfg));
     elem_row(&mut tab, &mut json, &r, n as f64);
     let r = Bencher::new("mxfp4 pack 64K").with_iters(w, i).run(|| PackedMx::pack(&x, cfg));
     elem_row(&mut tab, &mut json, &r, n as f64);
@@ -100,7 +103,8 @@ fn main() {
     let (din, dout) = (128usize, 384usize);
     let wq = rng.normal_vec(din * dout, 0.2);
     let (wu, iu) = it(2, 10);
-    let r = Bencher::new("rtn 128x384").with_iters(wu, iu).run(|| rtn_quantize(&wq, din, dout, &cfg));
+    let r =
+        Bencher::new("rtn 128x384").with_iters(wu, iu).run(|| rtn_quantize(&wq, din, dout, &cfg));
     tab.row(vec![r.name.clone(), fmt_time(r.mean_s), fmt_time(r.p99_s),
         format!("{:.0} Melem/s", r.throughput((din * dout) as f64) / 1e6)]);
     json.push(&r, Some(("elem/s", (din * dout) as f64)));
@@ -115,7 +119,9 @@ fn main() {
         m
     };
     let (wu, iu) = it(1, 5);
-    let r = Bencher::new("gptq 128x384").with_iters(wu, iu).run(|| gptq_quantize(&wq, din, dout, &hmat, &cfg, 0.01));
+    let r = Bencher::new("gptq 128x384")
+        .with_iters(wu, iu)
+        .run(|| gptq_quantize(&wq, din, dout, &hmat, &cfg, 0.01));
     tab.row(vec![r.name.clone(), fmt_time(r.mean_s), fmt_time(r.p99_s), "-".into()]);
     json.push(&r, None);
 
@@ -178,7 +184,10 @@ fn main() {
     // mock engine step loop (coordinator overhead without PJRT)
     let (wu, iu) = it(2, 10);
     let r = Bencher::new("mock engine 16reqx8tok").with_iters(wu, iu).run(|| {
-        let mut e = Engine::new(MockExecutor::default(), EngineConfig { max_slots: 4, eos: -1, ..Default::default() });
+        let mut e = Engine::new(
+            MockExecutor::default(),
+            EngineConfig { max_slots: 4, eos: -1, ..Default::default() },
+        );
         for i in 0..16u64 {
             e.submit(GenRequest::new(i, vec![1, 2, 3], 8));
         }
@@ -230,6 +239,73 @@ fn native_decode_bench(json: &mut JsonReport, smoke: bool) {
             json.push(&r, Some(("tok/s", b as f64)));
         }
     }
+    // transform-spec pipeline at latmix-tiny dims: folding cost (one-time,
+    // deploy path) and the per-step overhead of the unfolded reference
+    // executor (T1 + per-head T2 + FfnDown applied on the fly) — the
+    // gap between these two is the case for `latmix fold`.
+    {
+        use latmix::linalg::random_orthogonal;
+        use latmix::model::NativeWeights;
+        use latmix::transform::{Affine, TransformMode, TransformSite, TransformSpec};
+        use latmix::util::Pcg64;
+        let w = NativeWeights::synthetic(dims, 42);
+        let mut rng = Pcg64::seed(7);
+        let site = |d: usize, rng: &mut Pcg64| {
+            Affine::new(random_orthogonal(d, rng), vec![0.0; d]).unwrap()
+        };
+        let mut spec = TransformSpec::new();
+        spec.insert(TransformSite::Residual, site(dims.d_model, &mut rng));
+        spec.insert(
+            TransformSite::PerHeadValue { layer: 0, head: 0 },
+            site(dims.head_dim(), &mut rng),
+        );
+        spec.insert(
+            TransformSite::PerHeadValue { layer: 1, head: 1 },
+            site(dims.head_dim(), &mut rng),
+        );
+        // d_ff 384 is not a power of two: use a near-identity dense affine
+        spec.insert(TransformSite::FfnDown { layer: 0 }, {
+            let mut a = latmix::linalg::Mat::eye(dims.d_ff);
+            for e in a.data.iter_mut() {
+                *e += 0.01 * rng.normal();
+            }
+            Affine::new(a, vec![0.0; dims.d_ff]).unwrap()
+        });
+        let r = Bencher::new("spec fold latmix-tiny (4 sites)")
+            .with_iters(iters.0, iters.1)
+            .run(|| spec.fold_into(&w).unwrap());
+        tab.row(vec![
+            r.name.clone(),
+            "-".into(),
+            fmt_time(r.mean_s),
+            fmt_time(r.p99_s),
+            "-".into(),
+        ]);
+        json.push(&r, None);
+        let exec = NativeExecutor::from_weights_with_spec(
+            w,
+            spec,
+            TransformMode::Unfolded,
+            "fp",
+            vec![1, 2, 4, 8],
+        )
+        .unwrap();
+        let b = 4usize;
+        let plane = exec.kv_seq() * exec.kv_row();
+        let kv: Vec<Vec<f32>> = vec![vec![0.0f32; b * plane]; exec.n_layers() * 2];
+        let r = Bencher::new("native decode fp+spec-unfolded b=4")
+            .with_iters(iters.0, iters.1)
+            .run(|| exec.decode(&[5, 6, 7, 8], &[3, 3, 3, 3], &kv, b).unwrap());
+        tab.row(vec![
+            "fp+spec".into(),
+            b.to_string(),
+            fmt_time(r.mean_s),
+            fmt_time(r.p99_s),
+            format!("{:.1}", b as f64 / r.mean_s),
+        ]);
+        json.push(&r, Some(("tok/s", b as f64)));
+    }
+
     // full continuous-batching loop on the native executor: Batcher +
     // Scheduler + KvCache + prefill/decode, end to end
     let n_req = 8u64;

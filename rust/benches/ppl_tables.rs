@@ -95,7 +95,8 @@ fn main() {
 }
 
 fn table6(ctx: &Ctx) {
-    let mut tab = Table::new("table6_ppl", "Perplexity, MXFP4 W+A (paper Table 6)", &["method", "ppl"]);
+    let mut tab =
+        Table::new("table6_ppl", "Perplexity, MXFP4 W+A (paper Table 6)", &["method", "ppl"]);
     ctx.row(&mut tab, "FP16", "fp_raw", "fp", false);
     for (name, wtag, t3) in [
         ("RTN", "rtn", false),
@@ -180,7 +181,14 @@ fn table7(ctx: &Ctx) {
         &["init", "LU", "QR"],
     );
     let gtag = format!("{Q}_t3");
-    for init in ["identity", "orthogonal", "bd_orthogonal_noise", "hadamard", "bd_hadamard", "bd_hadamard_noise"] {
+    for init in [
+        "identity",
+        "orthogonal",
+        "bd_orthogonal_noise",
+        "hadamard",
+        "bd_hadamard",
+        "bd_hadamard_noise",
+    ] {
         let lu = ctx.ppl(&format!("t7_lu_{init}_{Q}"), &gtag);
         let qr = ctx.ppl(&format!("t7_qr_{init}_{Q}"), &gtag);
         tab.row(vec![

@@ -16,8 +16,9 @@ use super::batcher::Batcher;
 use super::kv_cache::KvCache;
 use super::request::{GenRequest, GenResult, RequestId};
 use super::scheduler::{plan_step, SchedulerPolicy};
-use crate::model::{GraphSpec, ModelDesc, NativeDims, NativeWeights, WeightSet};
+use crate::model::{GraphSpec, ModelDesc, NativeDims, NativeWeights, SpecRun, WeightSet};
 use crate::runtime::decode_batch_sizes;
+use crate::transform::{TransformMode, TransformSpec};
 #[cfg(feature = "backend-xla")]
 use crate::runtime::{f32_literal, i32_literal, literal_to_f32, Runtime};
 
@@ -150,19 +151,27 @@ fn split_logits_kv(mut parts: Vec<xla::Literal>) -> Result<(Vec<f32>, Vec<Vec<f3
 /// discipline as `XlaExecutor`, with prefill/decode interpreted by
 /// [`NativeWeights`] (`linalg::Mat` matmuls, `transform`/Hadamard ops, MX
 /// QDQ kernels) instead of PJRT. This is the serving path on machines
-/// without the XLA toolchain — stock CI runners included.
+/// without the XLA toolchain — stock CI runners included — and the serving
+/// path for `latmix fold` output: [`NativeExecutor::new`] picks up a
+/// version-2 manifest's online transform remainder automatically, and
+/// [`NativeExecutor::from_weights_with_spec`] runs the unfolded reference
+/// semantics for parity gates.
 #[derive(Clone)]
 pub struct NativeExecutor {
     pub tag: String,
     weights: NativeWeights,
     spec: GraphSpec,
     batches: Vec<usize>,
+    transforms: Option<(TransformSpec, TransformMode)>,
 }
 
 impl NativeExecutor {
     /// Artifact-backed constructor: same signature shape as
     /// `XlaExecutor::new` — manifest dims + graph inventory + `.lxt`
-    /// weight set, batch sizes parsed from `decode_<tag>_b*` names.
+    /// weight set, batch sizes parsed from `decode_<tag>_b*` names. Loads
+    /// the manifest's online transform spec (`transform.online`) when one
+    /// is declared, so folded artifact directories serve correctly with no
+    /// further plumbing.
     pub fn new(desc: &ModelDesc, tag: &str, ws: &WeightSet) -> Result<Self> {
         let spec = GraphSpec::from_tag(tag)?;
         let dims = NativeDims::from_desc(desc);
@@ -170,21 +179,14 @@ impl NativeExecutor {
         let weights = NativeWeights::from_weight_set(dims, &desc.weight_order, ws)?;
         let batches = decode_batch_sizes(&desc.graphs, tag);
         anyhow::ensure!(!batches.is_empty(), "no decode graphs for tag {tag}");
-        Ok(NativeExecutor { tag: tag.to_string(), weights, spec, batches })
+        let transforms = TransformSpec::load_online(desc)?;
+        Ok(NativeExecutor { tag: tag.to_string(), weights, spec, batches, transforms })
     }
 
     /// Artifact-free constructor (tests, smoke benches): deterministic
     /// random-init weights and an explicit compiled-batch list.
     pub fn synthetic(dims: NativeDims, tag: &str, batches: Vec<usize>, seed: u64) -> Result<Self> {
-        let spec = GraphSpec::from_tag(tag)?;
-        spec.validate(&dims)?;
-        let batches = normalize_batches(batches)?;
-        Ok(NativeExecutor {
-            tag: tag.to_string(),
-            weights: NativeWeights::synthetic(dims, seed),
-            spec,
-            batches,
-        })
+        NativeExecutor::from_weights(NativeWeights::synthetic(dims, seed), tag, batches)
     }
 
     /// Wrap pre-built weights (e.g. parsed from an in-memory weight set).
@@ -192,7 +194,41 @@ impl NativeExecutor {
         let spec = GraphSpec::from_tag(tag)?;
         spec.validate(&weights.dims)?;
         let batches = normalize_batches(batches)?;
-        Ok(NativeExecutor { tag: tag.to_string(), weights, spec, batches })
+        Ok(NativeExecutor {
+            tag: tag.to_string(),
+            weights,
+            spec,
+            batches,
+            transforms: None,
+        })
+    }
+
+    /// Wrap pre-built weights with an explicit transform spec:
+    /// [`TransformMode::Unfolded`] runs the reference transformed model on
+    /// original weights, [`TransformMode::Folded`] applies an online
+    /// remainder over folded weights.
+    pub fn from_weights_with_spec(
+        weights: NativeWeights,
+        transforms: TransformSpec,
+        mode: TransformMode,
+        tag: &str,
+        batches: Vec<usize>,
+    ) -> Result<Self> {
+        transforms.validate(&weights.dims)?;
+        if mode == TransformMode::Folded {
+            anyhow::ensure!(
+                transforms.online_only(),
+                "folded-mode executor spec must contain online sites only, got [{}]",
+                transforms.site_list()
+            );
+        }
+        let mut exec = NativeExecutor::from_weights(weights, tag, batches)?;
+        exec.transforms = Some((transforms, mode));
+        Ok(exec)
+    }
+
+    fn spec_run(&self) -> SpecRun<'_> {
+        self.transforms.as_ref().map(|(s, m)| (s, *m))
     }
 }
 
@@ -232,7 +268,7 @@ impl StepExecutor for NativeExecutor {
 
     fn prefill(&self, tokens: &[i32], lens: &[i32], batch: usize)
         -> Result<(Vec<f32>, Vec<Vec<f32>>)> {
-        self.weights.forward_prefill(tokens, lens, batch, &self.spec)
+        self.weights.forward_prefill_spec(tokens, lens, batch, &self.spec, self.spec_run())
     }
 
     fn decode(
@@ -242,7 +278,7 @@ impl StepExecutor for NativeExecutor {
         kv: &[Vec<f32>],
         batch: usize,
     ) -> Result<(Vec<f32>, Vec<Vec<f32>>)> {
-        self.weights.forward_decode(tokens, pos, kv, batch, &self.spec)
+        self.weights.forward_decode_spec(tokens, pos, kv, batch, &self.spec, self.spec_run())
     }
 }
 
@@ -261,7 +297,14 @@ pub struct MockExecutor {
 
 impl Default for MockExecutor {
     fn default() -> Self {
-        MockExecutor { vocab: 64, n_layers: 2, kv_seq: 32, kv_row: 4, prefill_len: 8, batches: vec![1, 2, 4] }
+        MockExecutor {
+            vocab: 64,
+            n_layers: 2,
+            kv_seq: 32,
+            kv_row: 4,
+            prefill_len: 8,
+            batches: vec![1, 2, 4],
+        }
     }
 }
 
@@ -386,7 +429,15 @@ impl<E: StepExecutor> Engine<E> {
     pub fn new(exec: E, cfg: EngineConfig) -> Self {
         let batcher = Batcher::new(exec.batch_sizes());
         let kv = KvCache::new(cfg.max_slots, exec.n_layers(), exec.kv_seq(), exec.kv_row());
-        Engine { exec, cfg, batcher, kv, running: Vec::new(), stats: EngineStats::default(), results: Vec::new() }
+        Engine {
+            exec,
+            cfg,
+            batcher,
+            kv,
+            running: Vec::new(),
+            stats: EngineStats::default(),
+            results: Vec::new(),
+        }
     }
 
     pub fn submit(&mut self, req: GenRequest) {
@@ -541,7 +592,10 @@ mod tests {
     use super::*;
 
     fn engine() -> Engine<MockExecutor> {
-        Engine::new(MockExecutor::default(), EngineConfig { max_slots: 4, policy: SchedulerPolicy::PrefillPriority, eos: -1 })
+        Engine::new(
+            MockExecutor::default(),
+            EngineConfig { max_slots: 4, policy: SchedulerPolicy::PrefillPriority, eos: -1 },
+        )
     }
 
     #[test]

@@ -1,10 +1,23 @@
-//! `artifacts/manifest.txt` parser: model dimensions, graph inventory, and
-//! the canonical weight-argument order shared with `python/compile/aot.py`.
+//! `artifacts/manifest.txt` parser/writer: model dimensions, graph
+//! inventory, the canonical weight-argument order shared with
+//! `python/compile/aot.py`, and — since manifest version 2 — the
+//! transform-deployment annotations written by `latmix fold`
+//! (`transform.folded`, `transform.online`).
 
 use std::collections::BTreeMap;
+use std::io::Write;
 use std::path::Path;
 
 use anyhow::{Context, Result};
+
+/// Highest manifest version this build reads and the version it writes.
+/// Version history:
+/// - 1 (implicit): python AOT output — dims, graphs, weight_order.
+/// - 2: adds `manifest.version` plus the optional `transform.folded`
+///   (comma-joined folded site keys) and `transform.online`
+///   (artifacts-relative path of the online-remainder transform spec)
+///   annotations produced by `latmix fold`.
+pub const MANIFEST_VERSION: usize = 2;
 
 #[derive(Clone, Debug)]
 pub struct Manifest {
@@ -35,7 +48,22 @@ impl Manifest {
                 }
             }
         }
-        Ok(Manifest { values, graphs, weight_order })
+        let m = Manifest { values, graphs, weight_order };
+        anyhow::ensure!(
+            m.version() <= MANIFEST_VERSION,
+            "{path:?}: manifest version {} is newer than this build reads ({MANIFEST_VERSION})",
+            m.version()
+        );
+        Ok(m)
+    }
+
+    /// Manifest format version (`manifest.version`; absent = 1, the
+    /// original python AOT layout).
+    pub fn version(&self) -> usize {
+        self.values
+            .get("manifest.version")
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(1)
     }
 
     pub fn int(&self, key: &str) -> Result<usize> {
@@ -48,6 +76,27 @@ impl Manifest {
 
     pub fn has_graph(&self, name: &str) -> bool {
         self.graphs.iter().any(|g| g == name)
+    }
+
+    /// Write the manifest back out (always stamps the current
+    /// [`MANIFEST_VERSION`]). Round-trips through [`Manifest::load`].
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path).with_context(|| format!("create {path:?}"))?,
+        );
+        writeln!(f, "manifest.version={MANIFEST_VERSION}")?;
+        for (k, v) in &self.values {
+            if k != "manifest.version" {
+                writeln!(f, "{k}={v}")?;
+            }
+        }
+        if !self.weight_order.is_empty() {
+            writeln!(f, "weight_order={}", self.weight_order.join(","))?;
+        }
+        for g in &self.graphs {
+            writeln!(f, "graph={g}")?;
+        }
+        Ok(())
     }
 }
 
@@ -68,6 +117,38 @@ mod tests {
         assert_eq!(m.weight_order, vec!["embed", "lnf"]);
         assert!(m.has_graph("decode_fp_b1"));
         assert!(!m.has_graph("nope"));
+        // no manifest.version key: the original python layout, version 1
+        assert_eq!(m.version(), 1);
+        std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn save_load_roundtrip_stamps_version() {
+        let tmp = std::env::temp_dir().join("latmix_manifest_rt_test.txt");
+        let mut values = BTreeMap::new();
+        values.insert("model.d_model".to_string(), "64".to_string());
+        values.insert("transform.folded".to_string(), "t1,t2.0.1".to_string());
+        let m = Manifest {
+            values,
+            graphs: vec!["decode_fp_b1".to_string(), "decode_fp_b4".to_string()],
+            weight_order: vec!["embed".to_string(), "lnf".to_string()],
+        };
+        m.save(&tmp).unwrap();
+        let back = Manifest::load(&tmp).unwrap();
+        assert_eq!(back.version(), MANIFEST_VERSION);
+        assert_eq!(back.int("model.d_model").unwrap(), 64);
+        assert_eq!(back.values.get("transform.folded").unwrap(), "t1,t2.0.1");
+        assert_eq!(back.weight_order, m.weight_order);
+        assert_eq!(back.graphs, m.graphs);
+        std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn future_version_rejected() {
+        let tmp = std::env::temp_dir().join("latmix_manifest_future_test.txt");
+        std::fs::write(&tmp, format!("manifest.version={}\n", MANIFEST_VERSION + 1)).unwrap();
+        let err = Manifest::load(&tmp).unwrap_err();
+        assert!(err.to_string().contains("newer"), "{err}");
         std::fs::remove_file(&tmp).ok();
     }
 }

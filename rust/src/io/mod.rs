@@ -4,4 +4,4 @@ pub mod lxt;
 pub mod manifest;
 
 pub use lxt::{load_lxt, save_lxt, Tensor};
-pub use manifest::Manifest;
+pub use manifest::{Manifest, MANIFEST_VERSION};

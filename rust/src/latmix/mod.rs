@@ -22,9 +22,16 @@
 //! - [`learn_from_model`] — the end-to-end Fig. 2 path: capture
 //!   residual-stream activations from the pure-Rust interpreter
 //!   (`model::forward`) and learn `T` directly on them.
+//! - [`learn_spec`] — the per-site generalization (Sec. 3.2, Table 1):
+//!   learn a whole [`TransformSpec`] — global T1 on the residual stream,
+//!   per-layer per-head `dh x dh` T2 on the attention values, per-layer
+//!   FfnDown on the down-proj input — each site against its own captured
+//!   features, reusing the same Eq. 2 objective and [`grad`] machinery at
+//!   the site's dimensionality. The result feeds `latmix fold` and the
+//!   native serving path.
 //!
-//! Remaining python-only surfaces (named follow-ups in ROADMAP.md): the
-//! full-model KL distillation objective (Eq. 8) and per-head T2 learning.
+//! Remaining python-only surface (named follow-up in ROADMAP.md): the
+//! full-model KL distillation objective (Eq. 8).
 
 pub mod grad;
 pub mod optim;
@@ -39,7 +46,7 @@ use anyhow::{Context, Result};
 use crate::linalg::{block_diag, hadamard, Mat};
 use crate::model::{GraphSpec, NativeWeights};
 use crate::mx::MxConfig;
-use crate::transform::Affine;
+use crate::transform::{Affine, TransformSite, TransformSpec};
 use crate::util::Pcg64;
 
 /// Initial `A0` for the learning loop (Table 7 strategies).
@@ -253,6 +260,147 @@ pub fn learn_from_model(
     Ok((feats, lt))
 }
 
+/// Per-site learning outcome: the learned `E(T)` next to the fixed
+/// baselines evaluated on the *same* captured features (the Fig. 2 / Table
+/// 2 comparison, per site).
+#[derive(Clone, Debug)]
+pub struct SiteReport {
+    pub site: TransformSite,
+    /// Feature/transform dimensionality of the site.
+    pub dim: usize,
+    /// MX block size the site was learned against (the deployment block
+    /// clamped into the site dim, see [`site_block`]).
+    pub block: usize,
+    /// `E(T)` of the learned transform on the training features.
+    pub e_learned: f64,
+    /// `E(I)` — no transform.
+    pub e_identity: f64,
+    /// `E(H D)` for a randomized Hadamard (`None` when `dim` is not a
+    /// power of two).
+    pub e_hadamard: Option<f64>,
+    /// Optimizer steps actually run.
+    pub steps_run: usize,
+    /// Condition number of the learned `A`.
+    pub cond: f32,
+}
+
+/// The MX block size a site is learned against: the deployment block
+/// clamped to the site's dimensionality via gcd, so it always tiles the
+/// site features (per-head `dh` may be smaller than the deployment block —
+/// `gcd` keeps powers of two intact: `gcd(32, dh=16) = 16`).
+pub fn site_block(deploy_block: usize, dim: usize) -> usize {
+    gcd(deploy_block, dim)
+}
+
+fn gcd(a: usize, b: usize) -> usize {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+/// Learn a full [`TransformSpec`] on features captured from `w` — the
+/// per-site generalization of [`learn_feature_transform`]: the same Eq. 2
+/// objective, STE gradients, and AdamW loop run once per site at that
+/// site's dimensionality (`d_model` for the residual T1, `head_dim` for
+/// each per-head T2, `d_ff` for FfnDown).
+///
+/// - `sites` — which transforms to learn. Per-head captures are shared
+///   across sites in the same layer.
+/// - `residual_layer` — which block's input residual stream the
+///   `Residual` site trains on (the paper captures mid-depth).
+/// - `capture` — the graph spec features are captured under; use
+///   [`GraphSpec::fp`] with the deployment T3 flag so FfnDown sites see
+///   the post-rotation rows they will reshape when served.
+/// - `cfg`/`lc` — the deployment MX config and base hyperparameters; the
+///   per-site seed is offset by the site index so sites don't share RNG
+///   streams.
+///
+/// Returns the learned spec (validated invertible/conditioned via
+/// [`Affine::from_learned`]) plus one [`SiteReport`] per site.
+#[allow(clippy::too_many_arguments)]
+pub fn learn_spec(
+    w: &NativeWeights,
+    sites: &[TransformSite],
+    tokens: &[i32],
+    batch: usize,
+    t: usize,
+    residual_layer: usize,
+    capture: &GraphSpec,
+    cfg: &MxConfig,
+    lc: &LearnConfig,
+) -> Result<(TransformSpec, Vec<SiteReport>)> {
+    anyhow::ensure!(!sites.is_empty(), "no transform sites requested");
+    let dims = w.dims;
+    let mut head_cache: std::collections::BTreeMap<usize, Vec<Vec<f32>>> =
+        std::collections::BTreeMap::new();
+    let mut spec = TransformSpec::new();
+    let mut reports = Vec::with_capacity(sites.len());
+    for (idx, site) in sites.iter().enumerate() {
+        site.validate(&dims)?;
+        let dim = site.dim(&dims);
+        let feats: Vec<f32> = match *site {
+            TransformSite::Residual => {
+                w.capture_residual(tokens, batch, t, capture, residual_layer)?
+            }
+            TransformSite::PerHeadValue { layer, head } => {
+                let heads = match head_cache.entry(layer) {
+                    std::collections::btree_map::Entry::Occupied(e) => e.into_mut(),
+                    std::collections::btree_map::Entry::Vacant(e) => {
+                        e.insert(w.capture_head_values(tokens, batch, t, capture, layer)?)
+                    }
+                };
+                heads[head].clone()
+            }
+            TransformSite::FfnDown { layer } => {
+                w.capture_ffn_input(tokens, batch, t, capture, layer)?
+            }
+        };
+        let block = site_block(cfg.block_size, dim);
+        anyhow::ensure!(
+            block > 1,
+            "deployment block {} shares no usable factor with site {site} dim {dim}",
+            cfg.block_size
+        );
+        let dcfg = MxConfig { block_size: block, ..*cfg };
+        let mut site_lc = *lc;
+        site_lc.seed = lc.seed.wrapping_add(idx as u64);
+        if let InitStrategy::BdHadamardNoise { block: ib, noise } = site_lc.init {
+            site_lc.init = InitStrategy::BdHadamardNoise { block: gcd(ib, dim).max(1), noise };
+        }
+        let lt = learn_feature_transform(&feats, dim, &dcfg, &site_lc)
+            .with_context(|| format!("learning site {site}"))?;
+        let e_learned = lt.best_mse;
+        let steps_run = lt.steps_run;
+        let learned = lt.into_affine().with_context(|| format!("site {site}"))?;
+        let e_identity =
+            crate::transform::transformation_mse(&feats, dim, &Affine::identity(dim), &dcfg);
+        let e_hadamard = if dim.is_power_of_two() {
+            // offset into a stream disjoint from every site's learning
+            // seed (those are lc.seed + idx), so the baseline draw is
+            // independent of the next site's init
+            let mut hrng = Pcg64::seed(site_lc.seed.wrapping_add(0x4841_4441));
+            let h = Affine::new(randomized_hadamard(dim, &mut hrng), vec![0.0; dim])?;
+            Some(crate::transform::transformation_mse(&feats, dim, &h, &dcfg))
+        } else {
+            None
+        };
+        reports.push(SiteReport {
+            site: *site,
+            dim,
+            block,
+            e_learned,
+            e_identity,
+            e_hadamard,
+            steps_run,
+            cond: learned.a.condition(),
+        });
+        spec.insert(*site, learned);
+    }
+    Ok((spec, reports))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -302,6 +450,58 @@ mod tests {
         // zero block size (e.g. a mis-parsed --block flag) errors, no panic
         let zero = MxConfig::from_name("mxfp4", Some(0)).unwrap();
         assert!(learn_feature_transform(&[0.0; 64], 32, &zero, &lc).is_err());
+    }
+
+    #[test]
+    fn site_block_clamps_into_dim() {
+        assert_eq!(site_block(32, 64), 32);
+        assert_eq!(site_block(32, 16), 16); // per-head dh below deploy block
+        assert_eq!(site_block(32, 48), 16);
+        assert_eq!(site_block(16, 384), 16);
+    }
+
+    #[test]
+    fn learn_spec_covers_all_requested_sites() {
+        let dims = crate::model::NativeDims {
+            vocab: 32,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 64,
+            kv_seq: 24,
+            prefill_len: 8,
+        };
+        let w = NativeWeights::synthetic(dims, 41);
+        let mut rng = Pcg64::seed(42);
+        let tokens: Vec<i32> = (0..2 * 8).map(|_| rng.below(32) as i32).collect();
+        let cfg = MxConfig::from_name("mxfp4", Some(32)).unwrap();
+        let lc = LearnConfig { steps: 8, trace_every: 0, ..Default::default() };
+        let sites = [
+            TransformSite::Residual,
+            TransformSite::PerHeadValue { layer: 0, head: 0 },
+            TransformSite::PerHeadValue { layer: 0, head: 1 },
+            TransformSite::FfnDown { layer: 1 },
+        ];
+        let capture = GraphSpec::fp();
+        let (spec, reports) =
+            learn_spec(&w, &sites, &tokens, 2, 8, 1, &capture, &cfg, &lc).unwrap();
+        assert_eq!(spec.len(), 4);
+        assert_eq!(reports.len(), 4);
+        spec.validate(&dims).unwrap();
+        for r in &reports {
+            assert_eq!(r.dim, r.site.dim(&dims));
+            assert!(r.block > 1 && r.dim % r.block == 0);
+            assert!(r.e_learned.is_finite() && r.e_identity.is_finite());
+            assert!(r.cond.is_finite() && r.cond > 0.5, "cond {}", r.cond);
+        }
+        // per-head sites learned at head_dim against a clamped block
+        assert_eq!(reports[1].dim, 16);
+        assert_eq!(reports[1].block, 16);
+        // out-of-range site rejected
+        let bad = [TransformSite::PerHeadValue { layer: 9, head: 0 }];
+        assert!(learn_spec(&w, &bad, &tokens, 2, 8, 1, &capture, &cfg, &lc).is_err());
+        // empty site list rejected
+        assert!(learn_spec(&w, &[], &tokens, 2, 8, 1, &capture, &cfg, &lc).is_err());
     }
 
     #[test]

@@ -9,7 +9,9 @@
 //!   harness, plus every substrate the paper's evaluation needs (MX format
 //!   codecs, dense linear algebra, affine-transform analysis, RTN/GPTQ,
 //!   and — since the `latmix` module — the Sec. 3.2 transform-learning
-//!   loop itself, so transforms can be learned without Python).
+//!   loop itself, generalized to per-site `TransformSpec`s (global T1,
+//!   per-head T2, FfnDown) that fold natively into `.lxt` weight sets:
+//!   the whole learn → fold → serve loop runs without Python).
 //! - **L2/L1 (python/, build-time only)** — the JAX transformer, the Pallas
 //!   MX kernels, full-model KL-distillation transform learning, and the
 //!   AOT lowering that produces `artifacts/` (HLO text + `.lxt` weight

@@ -5,6 +5,8 @@
 //!   eval   --weights TAG --quant TAG [--ppl-only] [--backend B]
 //!   serve  --weights TAG --quant TAG [--requests N] [--slots N] [--max-new N] [--backend B]
 //!   learn  [--steps N] [--lr F] [--block N] [--bits N] [--features model|outlier|dirac]
+//!          [--sites residual,t2,ffn] [--heads 0,1] [--save-spec PATH]
+//!   fold   --weights TAG --spec PATH --out DIR [--tag TAG]
 //!   quantize-info --weights TAG   MX footprint accounting
 //!   variants                      list available weight variants
 //!
@@ -12,14 +14,21 @@
 //! `backend-xla` build feature — the default when available) or `native`
 //! (pure-Rust interpreter, works on any machine). `learn` runs the
 //! Sec. 3.2 / Fig. 2 transform-learning loop (`latmix::latmix`) on the
-//! native backend — no artifacts or XLA toolchain required.
+//! native backend — no artifacts or XLA toolchain required. With
+//! `--sites` it learns a full per-site `TransformSpec` (T1 + per-head T2 +
+//! FfnDown); `fold` bakes a saved spec into an `.lxt` weight set and
+//! writes a version-2 artifact directory that `serve --backend native`
+//! serves directly — the whole learn → fold → serve loop with zero
+//! Python.
+
+use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
 use latmix::cli::Args;
 use latmix::data::{load_ppl_corpus, load_tasks};
 use latmix::eval::{perplexity, zero_shot};
-use latmix::model::{ModelDesc, WeightSet};
+use latmix::model::{ModelDesc, NativeDims, NativeWeights, WeightSet};
 use latmix::mx::{MxConfig, pack::PackedMx};
 use latmix::runtime::{Backend, NativeBackend};
 #[cfg(feature = "backend-xla")]
@@ -28,6 +37,7 @@ use latmix::server::run_serving_native;
 #[cfg(feature = "backend-xla")]
 use latmix::server::run_serving;
 use latmix::server::ServeReport;
+use latmix::transform::{TransformSite, TransformSpec};
 
 fn main() -> Result<()> {
     let args = Args::from_env();
@@ -37,16 +47,20 @@ fn main() -> Result<()> {
         Some("eval") => eval(&args),
         Some("serve") => serve(&args),
         Some("learn") => learn(&args),
+        Some("fold") => fold(&args),
         Some("quantize-info") => quantize_info(&args),
         _ => {
             eprintln!(
-                "usage: latmix <info|variants|eval|serve|learn|quantize-info> [options]\n\
+                "usage: latmix <info|variants|eval|serve|learn|fold|quantize-info> [options]\n\
                  \n\
                  eval   --weights TAG --quant TAG [--ppl-only] [--backend xla|native]\n\
                  serve  --weights TAG --quant TAG [--requests N] [--slots N] [--max-new N] [--backend xla|native]\n\
                  learn  [--steps N] [--lr F] [--block N] [--bits 4|6|8] [--format FMT]\n\
                  \x20       [--features model|outlier|dirac] [--layer N] [--d N] [--rows N]\n\
                  \x20       [--init bd_hadamard|hadamard|identity] [--seed N]\n\
+                 \x20       [--sites residual,t2,ffn|t2:L:H|ffn:L] [--heads 0,1] [--t3]\n\
+                 \x20       [--save-spec PATH]\n\
+                 fold   --weights TAG --spec PATH --out DIR [--tag TAG]\n\
                  quantize-info --weights TAG [--format mxfp4]"
             );
             Ok(())
@@ -56,7 +70,8 @@ fn main() -> Result<()> {
 
 fn desc() -> Result<ModelDesc> {
     let art = latmix::artifacts_dir();
-    ModelDesc::load(&art).with_context(|| format!("load manifest from {art:?} (run `make artifacts` first)"))
+    ModelDesc::load(&art)
+        .with_context(|| format!("load manifest from {art:?} (run `make artifacts` first)"))
 }
 
 /// The backend to use: explicit `--backend`, else XLA when compiled in.
@@ -77,7 +92,10 @@ fn unknown_backend(name: &str) -> anyhow::Error {
 
 fn info() -> Result<()> {
     let d = desc()?;
-    println!("latmix-tiny: d_model={} layers={} heads={} d_ff={} vocab={}", d.d_model, d.n_layers, d.n_heads, d.d_ff, d.vocab);
+    println!(
+        "latmix-tiny: d_model={} layers={} heads={} d_ff={} vocab={}",
+        d.d_model, d.n_layers, d.n_heads, d.d_ff, d.vocab
+    );
     println!("kv_seq={} prefill_len={} graphs={}", d.kv_seq, d.prefill_len, d.graphs.len());
     if cfg!(feature = "backend-xla") {
         println!("backends: xla (default), native");
@@ -101,7 +119,9 @@ fn variants() -> Result<()> {
 fn eval(args: &Args) -> Result<()> {
     let d = desc()?;
     match backend_name(args) {
-        "native" => eval_on(&NativeBackend::new(d), args),
+        // from_desc: folded artifact sets carry an online transform
+        // remainder the eval path must apply
+        "native" => eval_on(&NativeBackend::from_desc(d)?, args),
         #[cfg(feature = "backend-xla")]
         "xla" => eval_on(&Runtime::new(d)?, args),
         other => Err(unknown_backend(other)),
@@ -158,11 +178,22 @@ fn serve(args: &Args) -> Result<()> {
 /// default) or on the paper's synthetic distributions
 /// (`--features outlier|dirac`), then reports `E(T)` (Eq. 2) and the
 /// Theorem 3.3 bound against the identity and random-Hadamard baselines.
+///
+/// With `--sites` it learns a per-site `TransformSpec` instead of a single
+/// transform: `residual` (T1 at `--layer`'s input stream), `t2` (per-head
+/// value transforms at `--layer`, heads from `--heads`, or explicit
+/// `t2:L:H`), `ffn` (down-proj input at `--layer`, or explicit `ffn:L`).
+/// `--t3` captures the FfnDown features after the online T3 Hadamard, and
+/// `--save-spec` writes the learned spec as `.lxt` for `latmix fold`.
 fn learn(args: &Args) -> Result<()> {
     use latmix::latmix::{
         dirac_features, learn_feature_transform, outlier_features, InitStrategy, LearnConfig,
     };
     use latmix::transform::{bound::theorem_bound, transformation_mse, Affine};
+
+    if args.opt("sites").is_some() {
+        return learn_sites(args);
+    }
 
     // only override the block size when given: each format keeps its
     // canonical default otherwise (32 for mx*, 16 for nvfp4)
@@ -261,6 +292,200 @@ fn learn(args: &Args) -> Result<()> {
     report("learned (this run)", &learned);
     table.emit();
     println!("learned transform: cond = {:.2}, best E(T) = {best_mse:.6}", learned.a.condition());
+    Ok(())
+}
+
+/// The validated `--layer` target (default: mid-depth). Used both for the
+/// `Residual` capture depth and the layer of `t2`/`ffn` site tokens, so
+/// one consistent block index governs the whole spec.
+fn site_layer(args: &Args, dims: &NativeDims) -> Result<usize> {
+    let layer = args.opt_usize("layer", dims.n_layers / 2);
+    anyhow::ensure!(
+        layer < dims.n_layers,
+        "--layer {layer} out of range (model has {} blocks)",
+        dims.n_layers
+    );
+    Ok(layer)
+}
+
+/// Parse `--sites` / `--heads` / `--layer` into concrete transform sites.
+fn parse_sites(args: &Args, dims: &NativeDims) -> Result<Vec<TransformSite>> {
+    let layer = site_layer(args, dims)?;
+    let heads: Vec<usize> = match args.opt("heads") {
+        Some(spec) => spec
+            .split(',')
+            .map(|h| h.trim().parse().with_context(|| format!("bad --heads entry {h:?}")))
+            .collect::<Result<_>>()?,
+        None => (0..dims.n_heads).collect(),
+    };
+    let mut sites = Vec::new();
+    for tok in args.opt("sites").unwrap_or("residual").split(',') {
+        match tok.trim() {
+            "residual" | "t1" => sites.push(TransformSite::Residual),
+            "t2" => {
+                for &head in &heads {
+                    sites.push(TransformSite::PerHeadValue { layer, head });
+                }
+            }
+            "ffn" => sites.push(TransformSite::FfnDown { layer }),
+            other => {
+                // explicit forms t2:L:H / ffn:L reuse the spec key syntax
+                let key = other.replace(':', ".");
+                sites.push(TransformSite::parse_key(&key).with_context(|| {
+                    format!("bad --sites entry {other:?} (residual | t2 | ffn | t2:L:H | ffn:L)")
+                })?);
+            }
+        }
+    }
+    Ok(sites)
+}
+
+/// The `--sites` path of `latmix learn`: learn a per-site spec on the
+/// synthetic latmix-tiny model and report each site against its fixed
+/// baselines.
+fn learn_sites(args: &Args) -> Result<()> {
+    use latmix::latmix::{learn_spec, InitStrategy, LearnConfig};
+    use latmix::model::GraphSpec;
+
+    // same format/init flag semantics as the single-transform learn path
+    let block: Option<usize> = args.opt("block").and_then(|b| b.parse().ok());
+    let fmt = match args.opt("format") {
+        Some(f) => f.to_string(),
+        None => match args.opt_usize("bits", 4) {
+            4 => "mxfp4".to_string(),
+            6 => "mxfp6".to_string(),
+            8 => "mxfp8".to_string(),
+            other => anyhow::bail!("--bits {other} unsupported (4|6|8; use --format for more)"),
+        },
+    };
+    let cfg = MxConfig::from_name(&fmt, block)?;
+    let seed = args.opt_usize("seed", 0) as u64;
+    let init = match args.opt("init").unwrap_or("bd_hadamard") {
+        // learn_spec clamps the init block into each site's dim via gcd
+        "bd_hadamard" => InitStrategy::BdHadamardNoise { block: 32, noise: 1e-3 },
+        "hadamard" => InitStrategy::Hadamard,
+        "identity" => InitStrategy::Identity,
+        other => anyhow::bail!("unknown --init {other:?} (bd_hadamard|hadamard|identity)"),
+    };
+    let lc = LearnConfig {
+        steps: args.opt_usize("steps", 300),
+        lr: args.opt_f64("lr", 3e-3) as f32,
+        seed,
+        init,
+        trace_every: 0,
+        ..Default::default()
+    };
+    let dims = NativeDims::latmix_tiny();
+    let w = NativeWeights::synthetic(dims, seed ^ 0x6c61746d);
+    let sites = parse_sites(args, &dims)?;
+    let residual_layer = site_layer(args, &dims)?;
+    let capture = GraphSpec {
+        act: None,
+        t3: args.flag("t3").then_some(GraphSpec::T3_BLOCK),
+    };
+    let (batch, t) = (8usize, dims.prefill_len);
+    let mut rng = latmix::util::Pcg64::seed(seed);
+    let tokens: Vec<i32> = (0..batch * t).map(|_| rng.below(dims.vocab as u64) as i32).collect();
+    println!(
+        "learn_spec: {} sites on latmix-tiny ({} b{}), steps={} lr={}",
+        sites.len(),
+        cfg.name,
+        cfg.block_size,
+        lc.steps,
+        lc.lr
+    );
+    let (spec, reports) =
+        learn_spec(&w, &sites, &tokens, batch, t, residual_layer, &capture, &cfg, &lc)?;
+    let mut table = latmix::bench::Table::new(
+        "learn_spec",
+        "Per-site E(T): learned vs fixed baselines",
+        &["site", "dim", "block", "learned", "identity", "hadamard", "vs identity", "cond"],
+    );
+    for r in &reports {
+        table.row(vec![
+            r.site.key(),
+            r.dim.to_string(),
+            r.block.to_string(),
+            format!("{:.6}", r.e_learned),
+            format!("{:.6}", r.e_identity),
+            r.e_hadamard.map_or("-".into(), |e| format!("{e:.6}")),
+            format!("{:.2}x", r.e_identity / r.e_learned.max(1e-12)),
+            format!("{:.1}", r.cond),
+        ]);
+    }
+    table.emit();
+    if let Some(path) = args.opt("save-spec") {
+        spec.save(Path::new(path))?;
+        println!("spec ({} sites: {}) -> {path}", spec.len(), spec.site_list());
+        println!("next: latmix fold --weights TAG --spec {path} --out DIR");
+    }
+    Ok(())
+}
+
+/// `latmix fold` — bake a learned `TransformSpec` into an `.lxt` weight
+/// set (App. B/C algebra, `TransformSpec::fold_into`) and write a
+/// version-2 artifact directory: folded weights, a manifest annotated with
+/// the folded sites, and the online transform remainder (FfnDown forwards)
+/// the native serving path applies. `serve --backend native` against the
+/// output directory serves logits matching the unfolded reference to float
+/// association error — the parity gate in `rust/tests/spec_pipeline.rs`.
+fn fold(args: &Args) -> Result<()> {
+    let d = desc()?;
+    let wtag = args.opt("weights").context("--weights required")?;
+    let spec_path = args
+        .opt("spec")
+        .context("--spec required (an .lxt from `latmix learn --sites ... --save-spec`)")?;
+    let out = args.opt("out").context("--out required")?;
+    let out_tag = args.opt("tag").unwrap_or(wtag);
+    let ws = WeightSet::load(&d, wtag)?;
+    let dims = NativeDims::from_desc(&d);
+    let weights = NativeWeights::from_weight_set(dims, &d.weight_order, &ws)?;
+    let spec = TransformSpec::load(Path::new(spec_path))?;
+    spec.validate(&dims)?;
+    let (folded, online) = spec.fold_into(&weights)?;
+
+    let out_dir = PathBuf::from(out);
+    std::fs::create_dir_all(out_dir.join("weights"))
+        .with_context(|| format!("create {out_dir:?}/weights"))?;
+    let (order, fws) = folded.to_weight_set(out_tag);
+    let wpath = out_dir.join("weights").join(format!("{out_tag}.lxt"));
+    fws.save(&wpath, &order)?;
+    let mut out_desc = d.clone();
+    out_desc.artifacts = out_dir.clone();
+    out_desc.weight_order = order;
+    out_desc.transform_folded = Some(spec.site_list());
+    out_desc.transform_online = if online.is_empty() {
+        None
+    } else {
+        std::fs::create_dir_all(out_dir.join("transforms"))?;
+        online.save(&out_dir.join("transforms").join("online.lxt"))?;
+        Some("transforms/online.lxt".to_string())
+    };
+    out_desc.write_manifest(&out_dir)?;
+    // carry the eval datasets over (when present) so `latmix eval` works
+    // against the folded directory too
+    let eval_src = d.artifacts.join("eval");
+    if eval_src.is_dir() {
+        std::fs::create_dir_all(out_dir.join("eval"))?;
+        for e in std::fs::read_dir(&eval_src)?.flatten() {
+            std::fs::copy(e.path(), out_dir.join("eval").join(e.file_name()))?;
+        }
+    }
+    println!(
+        "folded {} site(s) [{}] of {spec_path} into {}",
+        spec.len(),
+        spec.site_list(),
+        wpath.display()
+    );
+    if online.is_empty() {
+        println!("online remainder: none (fully folded)");
+    } else {
+        println!("online remainder: [{}] -> transforms/online.lxt", online.site_list());
+    }
+    println!(
+        "serve it: LATMIX_ARTIFACTS={} latmix serve --weights {out_tag} --quant <TAG> --backend native",
+        out_dir.display()
+    );
     Ok(())
 }
 

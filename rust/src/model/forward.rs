@@ -15,6 +15,24 @@
 //! XLA fusions). Internal consistency — prefill+decode vs full-sequence —
 //! is property-tested below; cross-backend agreement with PJRT is covered
 //! by the artifact-gated integration tests.
+//!
+//! ## Transform-spec execution
+//!
+//! Every entry point has a `*_spec` variant taking an optional
+//! `(&TransformSpec, TransformMode)` pair (see `transform::spec`):
+//!
+//! - `Unfolded` runs the *reference* transformed model on original
+//!   weights — T1 forward at the embedding / backward at every linear
+//!   input / A-only forward at block outputs, per-head T2 forward on the
+//!   value rows (so the KV cache holds transformed values, exactly as a
+//!   folded `wv` would produce) / backward on the attention output after
+//!   its QDQ, and FfnDown forward before / backward after the down-proj
+//!   QDQ.
+//! - `Folded` runs *deployment* semantics on folded weights: only the
+//!   online remainder (FfnDown forwards) is applied.
+//!
+//! The two modes compute the same function up to f32 association error —
+//! the end-to-end gate in `rust/tests/spec_pipeline.rs`.
 
 use std::collections::HashMap;
 
@@ -23,7 +41,12 @@ use anyhow::{Context, Result};
 use crate::io::lxt::Tensor;
 use crate::linalg::{block_hadamard_apply, Mat};
 use crate::mx::{mx_qdq_rows, MxConfig};
+use crate::transform::spec::{TransformMode, TransformSpec};
+use crate::transform::Affine;
 use crate::util::Pcg64;
+
+/// Optional spec-application argument of the `*_spec` entry points.
+pub type SpecRun<'a> = Option<(&'a TransformSpec, TransformMode)>;
 
 use super::{ModelDesc, WeightSet};
 
@@ -370,10 +393,90 @@ impl NativeWeights {
         spec.validate(&self.dims)?;
         let mut x = self.embed_rows(tokens);
         let lens = vec![t; batch];
-        for lw in &self.layers[..layer] {
-            self.block_full(lw, &mut x, batch, t, &lens, spec);
+        for (li, lw) in self.layers[..layer].iter().enumerate() {
+            self.block_full(li, lw, &mut x, batch, t, &lens, spec, None);
         }
         Ok(x)
+    }
+
+    /// Per-head feature capture for T2 learning (Sec. 3.2): run blocks
+    /// `0..layer` untransformed, then return the per-head attention-output
+    /// rows of block `layer` — one `(batch * t, head_dim)` flat buffer per
+    /// head, taken *before* the output QDQ. These are convex mixes of the
+    /// value rows (softmax rows sum to 1), i.e. exactly the per-head
+    /// coordinates the deployed model quantizes at the `wo` input, which a
+    /// `PerHeadValue` transform reshapes. `latmix::learn_spec` drives this.
+    pub fn capture_head_values(
+        &self,
+        tokens: &[i32],
+        batch: usize,
+        t: usize,
+        spec: &GraphSpec,
+        layer: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        let dims = &self.dims;
+        anyhow::ensure!(tokens.len() == batch * t, "tokens len != batch * t");
+        anyhow::ensure!(
+            layer < dims.n_layers,
+            "layer {layer} out of range (model has {} blocks)",
+            dims.n_layers
+        );
+        spec.validate(dims)?;
+        let (d, h) = (dims.d_model, dims.n_heads);
+        let dh = dims.head_dim();
+        let mut x = self.embed_rows(tokens);
+        let lens = vec![t; batch];
+        for (li, lw) in self.layers[..layer].iter().enumerate() {
+            self.block_full(li, lw, &mut x, batch, t, &lens, spec, None);
+        }
+        let lw = &self.layers[layer];
+        let mut hq = rmsnorm_rows(&x, d, &lw.ln1);
+        qdq_rows(&mut hq, d, spec);
+        let mut q = linear(&hq, &lw.wq, &lw.bq);
+        let mut k = linear(&hq, &lw.wk, &lw.bk);
+        let v = linear(&hq, &lw.wv, &lw.bv);
+        let pos: Vec<i32> = (0..batch * t).map(|i| (i % t) as i32).collect();
+        apply_rope_rows(&mut q, h, dh, &pos);
+        apply_rope_rows(&mut k, h, dh, &pos);
+        let o = attention_full(&q, &k, &v, batch, t, &lens, h, dh);
+        let mut out = vec![Vec::new(); h];
+        for row in o.chunks(d) {
+            for (head, buf) in out.iter_mut().enumerate() {
+                buf.extend_from_slice(&row[head * dh..(head + 1) * dh]);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Down-proj input capture for `FfnDown` learning: run blocks
+    /// `0..layer` plus block `layer`'s attention untransformed, then return
+    /// the gated FFN activation rows `(batch * t, d_ff)` after the online
+    /// T3 Hadamard (when `spec.t3` is set) and before the down-proj QDQ —
+    /// the tensor an `FfnDown` transform reshapes.
+    pub fn capture_ffn_input(
+        &self,
+        tokens: &[i32],
+        batch: usize,
+        t: usize,
+        spec: &GraphSpec,
+        layer: usize,
+    ) -> Result<Vec<f32>> {
+        let dims = &self.dims;
+        anyhow::ensure!(tokens.len() == batch * t, "tokens len != batch * t");
+        anyhow::ensure!(
+            layer < dims.n_layers,
+            "layer {layer} out of range (model has {} blocks)",
+            dims.n_layers
+        );
+        spec.validate(dims)?;
+        let mut x = self.embed_rows(tokens);
+        let lens = vec![t; batch];
+        for (li, lw) in self.layers[..layer].iter().enumerate() {
+            self.block_full(li, lw, &mut x, batch, t, &lens, spec, None);
+        }
+        let lw = &self.layers[layer];
+        self.attn_block(layer, lw, &mut x, batch, t, &lens, spec, None);
+        Ok(self.ffn_gate(lw, &x, spec, None))
     }
 
     /// Full-sequence causal logits: tokens (batch, t) -> flat
@@ -385,14 +488,33 @@ impl NativeWeights {
         t: usize,
         spec: &GraphSpec,
     ) -> Result<Vec<f32>> {
+        self.forward_seq_spec(tokens, batch, t, spec, None)
+    }
+
+    /// [`Self::forward_seq`] with optional transform-spec application.
+    pub fn forward_seq_spec(
+        &self,
+        tokens: &[i32],
+        batch: usize,
+        t: usize,
+        spec: &GraphSpec,
+        tf: SpecRun,
+    ) -> Result<Vec<f32>> {
         anyhow::ensure!(tokens.len() == batch * t, "tokens len != batch * t");
         spec.validate(&self.dims)?;
+        validate_spec_run(&self.dims, tf)?;
         let mut x = self.embed_rows(tokens);
-        let lens = vec![t; batch];
-        for lw in &self.layers {
-            self.block_full(lw, &mut x, batch, t, &lens, spec);
+        if let Some(t1) = residual_of(tf) {
+            x = t1.forward_rows(&x);
         }
-        let xf = rmsnorm_rows(&x, self.dims.d_model, &self.lnf);
+        let lens = vec![t; batch];
+        for (li, lw) in self.layers.iter().enumerate() {
+            self.block_full(li, lw, &mut x, batch, t, &lens, spec, tf);
+        }
+        let mut xf = rmsnorm_rows(&x, self.dims.d_model, &self.lnf);
+        if let Some(t1) = residual_of(tf) {
+            xf = t1.backward_rows(&xf);
+        }
         Ok(linear(&xf, &self.head, &self.bhead))
     }
 
@@ -406,21 +528,43 @@ impl NativeWeights {
         batch: usize,
         spec: &GraphSpec,
     ) -> Result<(Vec<f32>, Vec<Vec<f32>>)> {
+        self.forward_prefill_spec(tokens, lens, batch, spec, None)
+    }
+
+    /// [`Self::forward_prefill`] with optional transform-spec application.
+    /// Under a spec the exported V planes hold *transformed* values —
+    /// exactly what a folded `wv` would write — so folded and unfolded
+    /// executors exchange bit-compatible caches.
+    pub fn forward_prefill_spec(
+        &self,
+        tokens: &[i32],
+        lens: &[i32],
+        batch: usize,
+        spec: &GraphSpec,
+        tf: SpecRun,
+    ) -> Result<(Vec<f32>, Vec<Vec<f32>>)> {
         let dims = &self.dims;
         let (t, d, s_max, v) = (dims.prefill_len, dims.d_model, dims.kv_seq, dims.vocab);
         anyhow::ensure!(tokens.len() == batch * t, "tokens len != batch * prefill_len");
         anyhow::ensure!(lens.len() == batch, "lens len != batch");
         anyhow::ensure!(t <= s_max, "prefill_len {t} exceeds kv_seq {s_max}");
         spec.validate(dims)?;
+        validate_spec_run(dims, tf)?;
         let lens_u: Vec<usize> = lens.iter().map(|l| (*l).clamp(0, t as i32) as usize).collect();
         let mut x = self.embed_rows(tokens);
+        if let Some(t1) = residual_of(tf) {
+            x = t1.forward_rows(&x);
+        }
         let mut kv = Vec::with_capacity(self.layers.len() * 2);
-        for lw in &self.layers {
-            let (k_rows, v_rows) = self.block_full(lw, &mut x, batch, t, &lens_u, spec);
+        for (li, lw) in self.layers.iter().enumerate() {
+            let (k_rows, v_rows) = self.block_full(li, lw, &mut x, batch, t, &lens_u, spec, tf);
             kv.push(export_plane(&k_rows, batch, t, s_max, d));
             kv.push(export_plane(&v_rows, batch, t, s_max, d));
         }
-        let xf = rmsnorm_rows(&x, d, &self.lnf);
+        let mut xf = rmsnorm_rows(&x, d, &self.lnf);
+        if let Some(t1) = residual_of(tf) {
+            xf = t1.backward_rows(&xf);
+        }
         let all = linear(&xf, &self.head, &self.bhead);
         let mut logits = vec![0.0f32; batch * v];
         for b in 0..batch {
@@ -442,6 +586,21 @@ impl NativeWeights {
         batch: usize,
         spec: &GraphSpec,
     ) -> Result<(Vec<f32>, Vec<Vec<f32>>)> {
+        self.forward_decode_spec(tokens, pos, kv, batch, spec, None)
+    }
+
+    /// [`Self::forward_decode`] with optional transform-spec application
+    /// (new V rows are scattered into the cache already transformed, see
+    /// [`Self::forward_prefill_spec`]).
+    pub fn forward_decode_spec(
+        &self,
+        tokens: &[i32],
+        pos: &[i32],
+        kv: &[Vec<f32>],
+        batch: usize,
+        spec: &GraphSpec,
+        tf: SpecRun,
+    ) -> Result<(Vec<f32>, Vec<Vec<f32>>)> {
         let dims = &self.dims;
         let (d, s_max, h) = (dims.d_model, dims.kv_seq, dims.n_heads);
         let dh = dims.head_dim();
@@ -451,8 +610,12 @@ impl NativeWeights {
             anyhow::ensure!(plane.len() == batch * s_max * d, "kv plane size mismatch");
         }
         spec.validate(dims)?;
+        validate_spec_run(dims, tf)?;
         let mut out_kv: Vec<Vec<f32>> = kv.to_vec();
         let mut x = self.embed_rows(tokens);
+        if let Some(t1) = residual_of(tf) {
+            x = t1.forward_rows(&x);
+        }
         let scale = 1.0 / (dh as f32).sqrt();
         for (li, lw) in self.layers.iter().enumerate() {
             let (left, right) = out_kv.split_at_mut(2 * li + 1);
@@ -460,9 +623,14 @@ impl NativeWeights {
             let vc = &mut right[0];
             let mut hq = rmsnorm_rows(&x, d, &lw.ln1);
             qdq_rows(&mut hq, d, spec);
-            let mut q = linear(&hq, &lw.wq, &lw.bq);
-            let mut kn = linear(&hq, &lw.wk, &lw.bk);
-            let vn = linear(&hq, &lw.wv, &lw.bv);
+            let hb = match residual_of(tf) {
+                Some(t1) => t1.backward_rows(&hq),
+                None => hq,
+            };
+            let mut q = linear(&hb, &lw.wq, &lw.bq);
+            let mut kn = linear(&hb, &lw.wk, &lw.bk);
+            let mut vn = linear(&hb, &lw.wv, &lw.bv);
+            per_head_forward(&mut vn, d, dh, li, tf);
             apply_rope_rows(&mut q, h, dh, pos);
             apply_rope_rows(&mut kn, h, dh, pos);
             let mut o = vec![0.0f32; batch * d];
@@ -495,10 +663,15 @@ impl NativeWeights {
                 }
             }
             qdq_rows(&mut o, d, spec);
-            add_in_place(&mut x, &linear(&o, &lw.wo, &lw.bo));
-            self.ffn(lw, &mut x, spec);
+            per_head_backward(&mut o, d, dh, li, tf);
+            let y = linear(&o, &lw.wo, &lw.bo);
+            add_block_output(&mut x, &y, tf);
+            self.ffn(li, lw, &mut x, spec, tf);
         }
-        let xf = rmsnorm_rows(&x, d, &self.lnf);
+        let mut xf = rmsnorm_rows(&x, d, &self.lnf);
+        if let Some(t1) = residual_of(tf) {
+            xf = t1.backward_rows(&xf);
+        }
         Ok((linear(&xf, &self.head, &self.bhead), out_kv))
     }
 
@@ -517,14 +690,36 @@ impl NativeWeights {
 
     /// One block over (batch * t, d) rows with causal + `s < lens[lane]`
     /// masking; returns the RoPE'd (batch * t, d) K and V rows.
+    #[allow(clippy::too_many_arguments)]
     fn block_full(
         &self,
+        li: usize,
         lw: &LayerWeights,
         x: &mut Vec<f32>,
         batch: usize,
         t: usize,
         lens: &[usize],
         spec: &GraphSpec,
+        tf: SpecRun,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let (k, v) = self.attn_block(li, lw, x, batch, t, lens, spec, tf);
+        self.ffn(li, lw, x, spec, tf);
+        (k, v)
+    }
+
+    /// The attention sub-block (pre-norm attention + residual add), in
+    /// place; returns the RoPE'd K and (possibly T2-transformed) V rows.
+    #[allow(clippy::too_many_arguments)]
+    fn attn_block(
+        &self,
+        li: usize,
+        lw: &LayerWeights,
+        x: &mut Vec<f32>,
+        batch: usize,
+        t: usize,
+        lens: &[usize],
+        spec: &GraphSpec,
+        tf: SpecRun,
     ) -> (Vec<f32>, Vec<f32>) {
         let dims = &self.dims;
         let (d, h) = (dims.d_model, dims.n_heads);
@@ -532,64 +727,172 @@ impl NativeWeights {
         let n = batch * t;
         let mut hq = rmsnorm_rows(x, d, &lw.ln1);
         qdq_rows(&mut hq, d, spec);
-        let mut q = linear(&hq, &lw.wq, &lw.bq);
-        let mut k = linear(&hq, &lw.wk, &lw.bk);
-        let v = linear(&hq, &lw.wv, &lw.bv);
+        let hb = match residual_of(tf) {
+            Some(t1) => t1.backward_rows(&hq),
+            None => hq,
+        };
+        let mut q = linear(&hb, &lw.wq, &lw.bq);
+        let mut k = linear(&hb, &lw.wk, &lw.bk);
+        let mut v = linear(&hb, &lw.wv, &lw.bv);
+        per_head_forward(&mut v, d, dh, li, tf);
         let pos: Vec<i32> = (0..n).map(|i| (i % t) as i32).collect();
         apply_rope_rows(&mut q, h, dh, &pos);
         apply_rope_rows(&mut k, h, dh, &pos);
-        let scale = 1.0 / (dh as f32).sqrt();
-        let mut o = vec![0.0f32; n * d];
-        let mut scores = vec![0.0f32; t];
-        for b in 0..batch {
-            let len = lens[b];
-            let base = b * t * d;
-            for hh in 0..h {
-                for tq in 0..t {
-                    let qrow = &q[base + tq * d + hh * dh..base + tq * d + hh * dh + dh];
-                    for (s, sc) in scores.iter_mut().enumerate() {
-                        *sc = if s <= tq && s < len {
-                            let at = base + s * d + hh * dh;
-                            dot(qrow, &k[at..at + dh]) * scale
-                        } else {
-                            -1e9
-                        };
-                    }
-                    softmax_inplace(&mut scores);
-                    let orow = &mut o[base + tq * d + hh * dh..base + tq * d + hh * dh + dh];
-                    for (s, w) in scores.iter().enumerate() {
-                        let at = base + s * d + hh * dh;
-                        axpy(orow, *w, &v[at..at + dh]);
-                    }
-                }
-            }
-        }
+        let mut o = attention_full(&q, &k, &v, batch, t, lens, h, dh);
         qdq_rows(&mut o, d, spec);
-        add_in_place(x, &linear(&o, &lw.wo, &lw.bo));
-        self.ffn(lw, x, spec);
+        per_head_backward(&mut o, d, dh, li, tf);
+        let y = linear(&o, &lw.wo, &lw.bo);
+        add_block_output(x, &y, tf);
         (k, v)
     }
 
-    /// Pre-norm SiLU-gated FFN with optional online T3 Hadamard, in place.
-    fn ffn(&self, lw: &LayerWeights, x: &mut Vec<f32>, spec: &GraphSpec) {
+    /// Pre-norm SiLU-gated FFN with optional online T3 Hadamard and
+    /// optional `FfnDown` transform, in place.
+    fn ffn(&self, li: usize, lw: &LayerWeights, x: &mut Vec<f32>, spec: &GraphSpec, tf: SpecRun) {
+        let mut ff = self.ffn_gate(lw, x, spec, tf);
+        let tfd = tf.and_then(|(s, _)| s.ffn_down(li));
+        if let Some(tfd) = tfd {
+            ff = tfd.forward_rows(&ff);
+        }
+        qdq_rows(&mut ff, self.dims.d_ff, spec);
+        // in Folded mode the inverse is baked into wd; the forward above is
+        // the online remainder (same split as the fixed T3 Hadamard, whose
+        // inverse lives in pre-folded artifact weights)
+        if let (Some(tfd), Some((_, TransformMode::Unfolded))) = (tfd, tf) {
+            ff = tfd.backward_rows(&ff);
+        }
+        let y = linear(&ff, &lw.wd, &lw.bd);
+        add_block_output(x, &y, tf);
+    }
+
+    /// The FFN up to (and including) the online T3 Hadamard: the rows an
+    /// `FfnDown` transform — and `capture_ffn_input` — operate on.
+    fn ffn_gate(&self, lw: &LayerWeights, x: &[f32], spec: &GraphSpec, tf: SpecRun) -> Vec<f32> {
         let d = self.dims.d_model;
         let mut hq = rmsnorm_rows(x, d, &lw.ln2);
         qdq_rows(&mut hq, d, spec);
-        let mut ff = linear(&hq, &lw.wg, &lw.bg);
+        let hb = match residual_of(tf) {
+            Some(t1) => t1.backward_rows(&hq),
+            None => hq,
+        };
+        let mut ff = linear(&hb, &lw.wg, &lw.bg);
         silu_in_place(&mut ff);
-        let up = linear(&hq, &lw.wu, &lw.bu);
+        let up = linear(&hb, &lw.wu, &lw.bu);
         for (g, u) in ff.iter_mut().zip(&up) {
             *g *= *u;
         }
         if let Some(tb) = spec.t3 {
             block_hadamard_apply(&mut ff, tb);
         }
-        qdq_rows(&mut ff, self.dims.d_ff, spec);
-        add_in_place(x, &linear(&ff, &lw.wd, &lw.bd));
+        ff
     }
 }
 
 // -- free helpers -----------------------------------------------------------
+
+/// Causal multi-head attention over flat (batch * t, n_heads * dh) q/k/v
+/// rows (lane `b` owns rows `b*t..(b+1)*t`); key positions `s` attend iff
+/// `s <= tq && s < lens[b]`. Returns the (batch * t, d) output rows.
+#[allow(clippy::too_many_arguments)]
+fn attention_full(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    batch: usize,
+    t: usize,
+    lens: &[usize],
+    h: usize,
+    dh: usize,
+) -> Vec<f32> {
+    let d = h * dh;
+    let n = batch * t;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut o = vec![0.0f32; n * d];
+    let mut scores = vec![0.0f32; t];
+    for b in 0..batch {
+        let len = lens[b];
+        let base = b * t * d;
+        for hh in 0..h {
+            for tq in 0..t {
+                let qrow = &q[base + tq * d + hh * dh..base + tq * d + hh * dh + dh];
+                for (s, sc) in scores.iter_mut().enumerate() {
+                    *sc = if s <= tq && s < len {
+                        let at = base + s * d + hh * dh;
+                        dot(qrow, &k[at..at + dh]) * scale
+                    } else {
+                        -1e9
+                    };
+                }
+                softmax_inplace(&mut scores);
+                let orow = &mut o[base + tq * d + hh * dh..base + tq * d + hh * dh + dh];
+                for (s, w) in scores.iter().enumerate() {
+                    let at = base + s * d + hh * dh;
+                    axpy(orow, *w, &v[at..at + dh]);
+                }
+            }
+        }
+    }
+    o
+}
+
+/// The residual (T1) transform of a spec run, when present.
+fn residual_of<'a>(tf: SpecRun<'a>) -> Option<&'a Affine> {
+    tf.and_then(|(s, _)| s.residual())
+}
+
+/// Reject dimension/range-invalid specs, and non-online sites in
+/// [`TransformMode::Folded`] runs (their inverses must already be folded —
+/// applying them again would silently double-transform).
+fn validate_spec_run(dims: &NativeDims, tf: SpecRun) -> Result<()> {
+    let Some((s, mode)) = tf else { return Ok(()) };
+    s.validate(dims)?;
+    if mode == TransformMode::Folded {
+        anyhow::ensure!(
+            s.online_only(),
+            "folded-mode spec must contain online sites only, got [{}]",
+            s.site_list()
+        );
+    }
+    Ok(())
+}
+
+/// Apply each present per-head T2 *forward* (`v' = v A2 + v2`) to its head
+/// segment of every (n, d) row, in place.
+fn per_head_forward(rows: &mut [f32], d: usize, dh: usize, layer: usize, tf: SpecRun) {
+    let Some((spec, _)) = tf else { return };
+    for head in 0..d / dh {
+        let Some(t2) = spec.per_head(layer, head) else { continue };
+        let (c0, c1) = (head * dh, (head + 1) * dh);
+        for row in rows.chunks_mut(d) {
+            let seg = t2.a.apply_affine(&row[c0..c1], Some(&t2.v));
+            row[c0..c1].copy_from_slice(&seg);
+        }
+    }
+}
+
+/// Apply each present per-head T2 *backward* (`o = (o' - v2) A2^-1`) to its
+/// head segment of every (n, d) row, in place.
+fn per_head_backward(rows: &mut [f32], d: usize, dh: usize, layer: usize, tf: SpecRun) {
+    let Some((spec, _)) = tf else { return };
+    for head in 0..d / dh {
+        let Some(t2) = spec.per_head(layer, head) else { continue };
+        let (c0, c1) = (head * dh, (head + 1) * dh);
+        for row in rows.chunks_mut(d) {
+            let seg = t2.backward_rows(&row[c0..c1]);
+            row[c0..c1].copy_from_slice(&seg);
+        }
+    }
+}
+
+/// Add a block output into the residual stream — through the T1 `A`-part
+/// when a residual transform is in play (the stream lives in transformed
+/// coordinates; `v1` entered once, at the embedding).
+fn add_block_output(x: &mut [f32], y: &[f32], tf: SpecRun) {
+    match residual_of(tf) {
+        Some(t1) => add_in_place(x, &t1.linear_rows(y)),
+        None => add_in_place(x, y),
+    }
+}
 
 fn rmsnorm_rows(x: &[f32], d: usize, g: &[f32]) -> Vec<f32> {
     let mut out = vec![0.0f32; x.len()];
@@ -856,6 +1159,133 @@ mod tests {
         assert!(l2.iter().all(|v| v.is_finite()));
         // out of range rejected
         assert!(w.capture_residual(&toks, 2, 4, &spec, dims.n_layers + 1).is_err());
+    }
+
+    fn head_spec(dims: &NativeDims, seed: u64) -> TransformSpec {
+        use crate::linalg::random_orthogonal;
+        let mut rng = Pcg64::seed(seed);
+        let dh = dims.head_dim();
+        let mut spec = TransformSpec::new();
+        let site = |d: usize, rng: &mut Pcg64| {
+            let mut a = random_orthogonal(d, rng);
+            for e in a.data.iter_mut() {
+                *e += 0.02 * rng.normal();
+            }
+            Affine::new(a, rng.normal_vec(d, 0.05)).unwrap()
+        };
+        spec.insert(crate::transform::TransformSite::Residual, site(dims.d_model, &mut rng));
+        spec.insert(
+            crate::transform::TransformSite::PerHeadValue { layer: 0, head: 0 },
+            site(dh, &mut rng),
+        );
+        spec.insert(
+            crate::transform::TransformSite::FfnDown { layer: 1 },
+            site(dims.d_ff, &mut rng),
+        );
+        spec
+    }
+
+    #[test]
+    fn capture_head_values_shapes_and_range() {
+        let dims = tiny();
+        let w = NativeWeights::synthetic(dims, 19);
+        let spec = GraphSpec::fp();
+        let toks: Vec<i32> = (0..8).collect();
+        let heads = w.capture_head_values(&toks, 2, 4, &spec, 1).unwrap();
+        assert_eq!(heads.len(), dims.n_heads);
+        for h in &heads {
+            assert_eq!(h.len(), 8 * dims.head_dim());
+            assert!(h.iter().all(|v| v.is_finite()));
+        }
+        assert_ne!(heads[0], heads[1], "distinct heads must produce distinct features");
+        assert!(w.capture_head_values(&toks, 2, 4, &spec, dims.n_layers).is_err());
+    }
+
+    #[test]
+    fn capture_ffn_input_respects_t3() {
+        let dims = quantizable();
+        let w = NativeWeights::synthetic(dims, 23);
+        let toks: Vec<i32> = (0..6).collect();
+        let plain = w.capture_ffn_input(&toks, 1, 6, &GraphSpec::fp(), 0).unwrap();
+        assert_eq!(plain.len(), 6 * dims.d_ff);
+        let t3 = GraphSpec { act: None, t3: Some(GraphSpec::T3_BLOCK) };
+        let rotated = w.capture_ffn_input(&toks, 1, 6, &t3, 0).unwrap();
+        assert_ne!(plain, rotated, "T3 must rotate the captured down-proj input");
+        assert!(w.capture_ffn_input(&toks, 1, 6, &GraphSpec::fp(), dims.n_layers).is_err());
+    }
+
+    #[test]
+    fn unfolded_t2_ffn_cancel_in_fp_but_t1_does_not() {
+        // T2 and FfnDown have no nonlinearity between their forward and
+        // inverse applications, so in full precision they cancel exactly:
+        // the unfolded run computes the base model's function up to f32
+        // association error. T1 is different by design: RMSNorm does not
+        // commute with a non-orthogonal, biased affine
+        // (rmsnorm(xA1 + v1) != rmsnorm(x)A1 + v1), so a Residual site
+        // defines a *transformed model* — equivalent to the base only in
+        // the orthogonal zero-bias case. What the pipeline guarantees for
+        // T1 is folded == unfolded (spec_pipeline.rs), not == base.
+        let dims = quantizable();
+        let w = NativeWeights::synthetic(dims, 29);
+        let full = head_spec(&dims, 3);
+        let mut no_t1 = TransformSpec::new();
+        for (site, t) in full.iter() {
+            if *site != crate::transform::TransformSite::Residual {
+                no_t1.insert(*site, t.clone());
+            }
+        }
+        assert_eq!(no_t1.len(), 2);
+        let toks: Vec<i32> = (0..6).collect();
+        let base = w.forward_seq(&toks, 1, 6, &GraphSpec::fp()).unwrap();
+        let tf = w
+            .forward_seq_spec(
+                &toks,
+                1,
+                6,
+                &GraphSpec::fp(),
+                Some((&no_t1, TransformMode::Unfolded)),
+            )
+            .unwrap();
+        for (a, b) in base.iter().zip(&tf) {
+            assert!((a - b).abs() < 1e-3, "fp T2/FfnDown run must cancel: {a} vs {b}");
+        }
+        // and the T1-bearing spec must NOT silently equal the base model —
+        // if it did, the transform would be a no-op and folding pointless
+        let with_t1 = w
+            .forward_seq_spec(&toks, 1, 6, &GraphSpec::fp(), Some((&full, TransformMode::Unfolded)))
+            .unwrap();
+        let max: f32 =
+            base.iter().zip(&with_t1).map(|(a, b)| (a - b).abs()).fold(0.0, f32::max);
+        assert!(max > 1e-3, "a biased non-orthogonal T1 must change the fp function ({max})");
+    }
+
+    #[test]
+    fn unfolded_spec_changes_quantized_logits() {
+        // Under activation QDQ the transforms reshape what the quantizer
+        // sees — the spec path must be live, not a silent no-op.
+        let dims = quantizable();
+        let w = NativeWeights::synthetic(dims, 31);
+        let spec = head_spec(&dims, 5);
+        let g = GraphSpec::from_tag("mxfp4_b32").unwrap();
+        let toks: Vec<i32> = (0..6).collect();
+        let base = w.forward_seq(&toks, 1, 6, &g).unwrap();
+        let tf = w
+            .forward_seq_spec(&toks, 1, 6, &g, Some((&spec, TransformMode::Unfolded)))
+            .unwrap();
+        assert_ne!(base, tf, "spec application had no effect under QDQ");
+        assert!(tf.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn folded_mode_rejects_non_online_sites() {
+        let dims = quantizable();
+        let w = NativeWeights::synthetic(dims, 37);
+        let spec = head_spec(&dims, 7); // contains Residual + PerHeadValue
+        let toks: Vec<i32> = (0..6).collect();
+        let err = w
+            .forward_seq_spec(&toks, 1, 6, &GraphSpec::fp(), Some((&spec, TransformMode::Folded)))
+            .unwrap_err();
+        assert!(err.to_string().contains("online"), "{err}");
     }
 
     #[test]

@@ -9,12 +9,15 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
-pub use forward::{GraphSpec, LayerWeights, NativeDims, NativeWeights};
+pub use forward::{GraphSpec, LayerWeights, NativeDims, NativeWeights, SpecRun};
 
-use crate::io::{load_lxt, Manifest, Tensor};
+use std::collections::BTreeMap;
+
+use crate::io::{load_lxt, save_lxt, Manifest, Tensor};
 
 /// Static model + artifact dimensions (mirror of python `ModelConfig` plus
-/// the AOT shapes).
+/// the AOT shapes), and — for version-2 manifests written by `latmix
+/// fold` — the transform-deployment annotations.
 #[derive(Clone, Debug)]
 pub struct ModelDesc {
     pub vocab: usize,
@@ -29,6 +32,16 @@ pub struct ModelDesc {
     pub weight_order: Vec<String>,
     pub graphs: Vec<String>,
     pub artifacts: PathBuf,
+    /// Manifest format version (1 = original python AOT layout).
+    pub version: usize,
+    /// Comma-joined site keys folded into the weight sets (informational;
+    /// `transform.folded`).
+    pub transform_folded: Option<String>,
+    /// Artifacts-relative path of the online-remainder transform spec the
+    /// serving path must apply (`transform.online`). Folded artifact sets
+    /// with online sites are native-only: the AOT HLO graphs predate the
+    /// fold, so the XLA lane refuses them.
+    pub transform_online: Option<String>,
 }
 
 impl ModelDesc {
@@ -55,6 +68,9 @@ impl ModelDesc {
             weight_order: m.weight_order.clone(),
             graphs: m.graphs.clone(),
             artifacts: artifacts.to_path_buf(),
+            version: m.version(),
+            transform_folded: m.values.get("transform.folded").cloned(),
+            transform_online: m.values.get("transform.online").cloned(),
         })
     }
 
@@ -68,6 +84,40 @@ impl ModelDesc {
 
     pub fn weights_path(&self, tag: &str) -> PathBuf {
         self.artifacts.join("weights").join(format!("{tag}.lxt"))
+    }
+
+    /// Artifacts-absolute path of the online transform spec, if any.
+    pub fn transform_online_path(&self) -> Option<PathBuf> {
+        self.transform_online.as_ref().map(|p| self.artifacts.join(p))
+    }
+
+    /// Write `manifest.txt` for this descriptor into `dir` (always at the
+    /// current `MANIFEST_VERSION`). Used by `latmix fold` to emit a folded
+    /// artifact directory that [`ModelDesc::load`] reads back.
+    pub fn write_manifest(&self, dir: &Path) -> Result<()> {
+        let mut values = BTreeMap::new();
+        let mut put = |k: &str, v: String| values.insert(k.to_string(), v);
+        put("model.vocab", self.vocab.to_string());
+        put("model.d_model", self.d_model.to_string());
+        put("model.n_layers", self.n_layers.to_string());
+        put("model.n_heads", self.n_heads.to_string());
+        put("model.d_ff", self.d_ff.to_string());
+        put("kv_seq", self.kv_seq.to_string());
+        put("prefill_len", self.prefill_len.to_string());
+        put("ppl_shape", format!("{}x{}", self.ppl_shape.0, self.ppl_shape.1));
+        put("score_shape", format!("{}x{}", self.score_shape.0, self.score_shape.1));
+        if let Some(folded) = &self.transform_folded {
+            put("transform.folded", folded.clone());
+        }
+        if let Some(online) = &self.transform_online {
+            put("transform.online", online.clone());
+        }
+        let m = Manifest {
+            values,
+            graphs: self.graphs.clone(),
+            weight_order: self.weight_order.clone(),
+        };
+        m.save(&dir.join("manifest.txt"))
     }
 }
 
@@ -95,6 +145,25 @@ impl WeightSet {
             tensors.push(t);
         }
         Ok(WeightSet { tag: tag.to_string(), tensors, param_count: count })
+    }
+
+    /// Write this weight set as `.lxt` under tensor names `order` (the
+    /// inverse of [`WeightSet::load`]'s reordering).
+    pub fn save(&self, path: &Path, order: &[String]) -> Result<()> {
+        anyhow::ensure!(
+            order.len() == self.tensors.len(),
+            "weight order has {} names but weight set {:?} has {} tensors",
+            order.len(),
+            self.tag,
+            self.tensors.len()
+        );
+        let map: BTreeMap<String, Tensor> = order
+            .iter()
+            .cloned()
+            .zip(self.tensors.iter().cloned())
+            .collect();
+        anyhow::ensure!(map.len() == order.len(), "duplicate names in weight order");
+        save_lxt(path, &map)
     }
 
     /// Names of weight variants currently present under artifacts/weights.

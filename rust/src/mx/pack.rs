@@ -14,7 +14,9 @@
 //! - blocks fan out over the scoped thread pool (`util::par`) above
 //!   [`crate::util::par::PAR_MIN_LEN`] elements.
 
-use super::formats::{exp2i, exp2i_ext, floor_log2, fp4_encode, fp4_pair_lut, int4_encode, int4_pair_lut};
+use super::formats::{
+    exp2i, exp2i_ext, floor_log2, fp4_encode, fp4_pair_lut, int4_encode, int4_pair_lut,
+};
 use super::quantize::{MxConfig, SCALE_EMAX, SCALE_EMIN};
 use crate::util::par;
 

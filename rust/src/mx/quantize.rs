@@ -1,7 +1,10 @@
 //! Block quantize-dequantize (Eq. 1): shared power-of-two (E8M0) scale per
 //! block + element codec, plus the NVFP4 two-level variant.
 
-use super::formats::{element_qdq, exp2i, exp2i_ext, floor_log2, fp_qdq, ElementFormat, FP4_E2M1, FP8_E4M3, INT4, FP6_E2M3};
+use super::formats::{
+    element_qdq, exp2i, exp2i_ext, floor_log2, fp_qdq, ElementFormat, FP4_E2M1, FP6_E2M3,
+    FP8_E4M3, INT4,
+};
 use crate::util::par;
 
 pub const SCALE_EMIN: i32 = -127;
@@ -31,13 +34,14 @@ pub struct MxConfig {
 impl MxConfig {
     pub fn from_name(name: &str, block_size: Option<usize>) -> anyhow::Result<MxConfig> {
         let bs = block_size;
+        let cfg = |name, element, block_size, nv| MxConfig { name, element, block_size, nv };
         Ok(match name {
-            "none" => MxConfig { name: "none", element: FP4_E2M1, block_size: bs.unwrap_or(32), nv: false },
-            "mxfp4" => MxConfig { name: "mxfp4", element: FP4_E2M1, block_size: bs.unwrap_or(32), nv: false },
-            "mxint4" => MxConfig { name: "mxint4", element: INT4, block_size: bs.unwrap_or(32), nv: false },
-            "mxfp6" => MxConfig { name: "mxfp6", element: FP6_E2M3, block_size: bs.unwrap_or(32), nv: false },
-            "mxfp8" => MxConfig { name: "mxfp8", element: FP8_E4M3, block_size: bs.unwrap_or(32), nv: false },
-            "nvfp4" => MxConfig { name: "nvfp4", element: FP4_E2M1, block_size: bs.unwrap_or(16), nv: true },
+            "none" => cfg("none", FP4_E2M1, bs.unwrap_or(32), false),
+            "mxfp4" => cfg("mxfp4", FP4_E2M1, bs.unwrap_or(32), false),
+            "mxint4" => cfg("mxint4", INT4, bs.unwrap_or(32), false),
+            "mxfp6" => cfg("mxfp6", FP6_E2M3, bs.unwrap_or(32), false),
+            "mxfp8" => cfg("mxfp8", FP8_E4M3, bs.unwrap_or(32), false),
+            "nvfp4" => cfg("nvfp4", FP4_E2M1, bs.unwrap_or(16), true),
             other => anyhow::bail!("unknown quant format {other:?}"),
         })
     }

@@ -8,7 +8,10 @@
 //! this module — its value is that it stays the naive per-element
 //! division/branch code the Python mirror was validated against.
 
-use super::formats::{element_qdq, exp2i, floor_log2, fp4_decode, fp_qdq, int4_decode, int_qdq, ElementFormat, FP4_E2M1, FP8_E4M3, INT4};
+use super::formats::{
+    element_qdq, exp2i, floor_log2, fp4_decode, fp_qdq, int4_decode, int_qdq, ElementFormat,
+    FP4_E2M1, FP8_E4M3, INT4,
+};
 use super::quantize::{block_scale, nv_tensor_scale, MxConfig, SCALE_EMAX, SCALE_EMIN};
 
 /// Scalar compare-chain FP4 encoder (original implementation).

@@ -76,7 +76,7 @@ pub fn default_backend(desc: ModelDesc) -> Result<DefaultBackend> {
 
 #[cfg(not(feature = "backend-xla"))]
 pub fn default_backend(desc: ModelDesc) -> Result<DefaultBackend> {
-    Ok(NativeBackend::new(desc))
+    NativeBackend::from_desc(desc)
 }
 
 /// Compiled decode batch sizes for `tag`, parsed from the manifest graph

@@ -1,25 +1,54 @@
 //! Pure-Rust backend: runs the evaluation logits path through the
 //! `model::forward` interpreter instead of compiled HLO. Always available —
 //! this is what makes the eval harness and its benches runnable on machines
-//! without the XLA toolchain (stock CI runners included).
+//! without the XLA toolchain (stock CI runners included) — and the only
+//! backend that can serve *folded* artifact sets carrying an online
+//! transform remainder (`transform.online` in a version-2 manifest).
 
 use anyhow::Result;
 
-use crate::model::{GraphSpec, ModelDesc, NativeDims, NativeWeights, WeightSet};
+use crate::model::{GraphSpec, ModelDesc, NativeDims, NativeWeights, SpecRun, WeightSet};
+use crate::transform::{TransformMode, TransformSpec};
 
 use super::Backend;
 
 /// Interpreter-backed [`Backend`]. "Staging" a weight set parses it into
 /// [`NativeWeights`] once; graph names select only the quant spec (the
 /// activation QDQ config and online T3 Hadamard), exactly as the compiled
-/// graph inventory does.
+/// graph inventory does. When the artifact manifest names an online
+/// transform spec, it is applied in [`TransformMode::Folded`] — construct
+/// via [`NativeBackend::from_desc`] so it gets loaded.
 pub struct NativeBackend {
     pub desc: ModelDesc,
+    transforms: Option<(TransformSpec, TransformMode)>,
 }
 
 impl NativeBackend {
+    /// Wrap a descriptor with no transform application. Artifact sets that
+    /// declare `transform.online` refuse to run through this constructor's
+    /// backend (see [`Backend::logits`]) — use [`NativeBackend::from_desc`].
     pub fn new(desc: ModelDesc) -> NativeBackend {
-        NativeBackend { desc }
+        NativeBackend { desc, transforms: None }
+    }
+
+    /// Load the descriptor's online transform spec (when present) so
+    /// folded artifact sets evaluate with their FfnDown remainder applied.
+    pub fn from_desc(desc: ModelDesc) -> Result<NativeBackend> {
+        let transforms = TransformSpec::load_online(&desc)?;
+        Ok(NativeBackend { desc, transforms })
+    }
+
+    /// Explicit transform application (tests, unfolded reference runs).
+    pub fn with_transforms(
+        desc: ModelDesc,
+        spec: TransformSpec,
+        mode: TransformMode,
+    ) -> NativeBackend {
+        NativeBackend { desc, transforms: Some((spec, mode)) }
+    }
+
+    fn spec_run(&self) -> SpecRun<'_> {
+        self.transforms.as_ref().map(|(s, m)| (s, *m))
     }
 }
 
@@ -39,7 +68,8 @@ impl Backend for NativeBackend {
     }
 
     fn stage(&self, ws: &WeightSet) -> Result<NativeWeights> {
-        NativeWeights::from_weight_set(NativeDims::from_desc(&self.desc), &self.desc.weight_order, ws)
+        let dims = NativeDims::from_desc(&self.desc);
+        NativeWeights::from_weight_set(dims, &self.desc.weight_order, ws)
     }
 
     fn logits(
@@ -58,7 +88,14 @@ impl Backend for NativeBackend {
             self.desc.graphs.iter().any(|g| g == graph),
             "graph {graph:?} not in the artifact manifest"
         );
+        // A manifest that declares an online remainder must have it loaded
+        // — running without it would silently drop the FfnDown transforms.
+        anyhow::ensure!(
+            self.desc.transform_online.is_none() || self.transforms.is_some(),
+            "artifact set declares transform.online but this backend was built without it; \
+             construct via NativeBackend::from_desc"
+        );
         let spec = GraphSpec::from_graph_name(graph)?;
-        weights.forward_seq(tokens, rows, seq, &spec)
+        weights.forward_seq_spec(tokens, rows, seq, &spec, self.spec_run())
     }
 }

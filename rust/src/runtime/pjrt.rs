@@ -32,6 +32,15 @@ pub struct Runtime {
 
 impl Runtime {
     pub fn new(desc: ModelDesc) -> Result<Runtime> {
+        // Folded artifact sets with an online transform remainder are
+        // native-only: the AOT HLO graphs predate the fold, so executing
+        // them here would silently skip the online FfnDown transforms.
+        anyhow::ensure!(
+            desc.transform_online.is_none(),
+            "artifact set {:?} carries online transforms ({}); serve it with --backend native",
+            desc.artifacts,
+            desc.transform_online.as_deref().unwrap_or("?")
+        );
         let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
         Ok(Runtime { client, cache: Mutex::new(HashMap::new()), desc })
     }

@@ -21,7 +21,12 @@ pub trait Gen {
 }
 
 /// Run `prop` on `cases` random inputs; panic with the minimal failing case.
-pub fn forall<G: Gen>(name: &str, cases: usize, gen: &G, prop: impl Fn(&G::Value) -> Result<(), String>) {
+pub fn forall<G: Gen>(
+    name: &str,
+    cases: usize,
+    gen: &G,
+    prop: impl Fn(&G::Value) -> Result<(), String>,
+) {
     let seed = std::env::var("LATMIX_PT_SEED")
         .ok()
         .and_then(|s| s.parse().ok())
@@ -158,7 +163,8 @@ mod tests {
 
     #[test]
     fn passing_property() {
-        forall("sum_nonneg", 50, &VecGen { min_len: 8, max_len: 64, multiple_of: 8, log_scale_range: (-4.0, 4.0) }, |v| {
+        let gen = VecGen { min_len: 8, max_len: 64, multiple_of: 8, log_scale_range: (-4.0, 4.0) };
+        forall("sum_nonneg", 50, &gen, |v| {
             let s: f32 = v.iter().map(|x| x * x).sum();
             if s >= 0.0 { Ok(()) } else { Err(format!("negative {s}")) }
         });

@@ -1,8 +1,15 @@
-//! Affine-transform analysis substrate: apply/invert transforms, measure the
-//! transformation MSE E(T) (Eq. 2), and evaluate the Theorem 3.3 bound —
-//! the machinery behind the Fig. 2 benches and `examples/error_analysis.rs`.
+//! Affine-transform substrate: apply/invert transforms, measure the
+//! transformation MSE E(T) (Eq. 2), evaluate the Theorem 3.3 bound — the
+//! machinery behind the Fig. 2 benches and `examples/error_analysis.rs` —
+//! and, since the [`spec`] module, the *per-site* [`spec::TransformSpec`]
+//! pipeline: an [`Affine`] is one leaf of a spec that maps transform sites
+//! (residual stream, per-head values, down-proj input) to transforms, with
+//! fold/unfold algebra and `.lxt` serialization.
 
 pub mod bound;
+pub mod spec;
+
+pub use spec::{TransformMode, TransformSite, TransformSpec};
 
 use crate::linalg::Mat;
 use crate::mx::{mx_qdq_rows, MxConfig};
@@ -78,6 +85,19 @@ impl Affine {
         let mut out = Vec::with_capacity(x.len());
         for row in x.chunks(d) {
             out.extend(self.a.apply_affine(row, Some(&self.v)));
+        }
+        out
+    }
+
+    /// `y = x A` for each row of `x` — the bias-free output-side fold
+    /// application (block outputs re-enter the residual stream with the
+    /// `A`-part only; `v` enters the stream once, at the embedding).
+    pub fn linear_rows(&self, x: &[f32]) -> Vec<f32> {
+        let d = self.dim();
+        assert_eq!(x.len() % d, 0);
+        let mut out = Vec::with_capacity(x.len());
+        for row in x.chunks(d) {
+            out.extend(self.a.apply_affine(row, None));
         }
         out
     }

@@ -1,0 +1,548 @@
+//! Per-site transform specification — the unit the LATMiX method actually
+//! learns and deploys (Sec. 3.2): not one free-floating [`Affine`] but a
+//! typed map from *transform sites* in the model graph to invertible
+//! affines, with fold/unfold algebra and `.lxt` serialization.
+//!
+//! ## Site map
+//!
+//! ```text
+//! site                         dim      applied to                    fold target
+//! ---------------------------  -------  ----------------------------  --------------------------
+//! Residual          (T1)       d_model  the whole residual stream     embed, wq/wk/wv/wg/wu (in),
+//!                                                                     wo/wd (out), lm head
+//! PerHeadValue{l,h} (T2)       head_dim layer l / head h value rows   wv column block (out),
+//!                                       and attention output          wo row block (in)
+//! FfnDown{l}                   d_ff     layer l down-proj input       wd (inverse only — the
+//!                                       (after the online T3)         forward stays ONLINE)
+//! ```
+//!
+//! ## Fold semantics (App. B/C of the paper, row-vector convention)
+//!
+//! [`TransformSpec::fold_into`] rewrites a [`NativeWeights`] so the
+//! transformed model runs with zero per-token transform cost at the
+//! `Residual` and `PerHeadValue` sites:
+//!
+//! - T1: `embed' = E A1 + v1`; block inputs `W' = A1^-1 W`,
+//!   `b' = b - v1 A1^-1 W`; block outputs `W' = W A1`, `b' = b A1`
+//!   (`v1` enters the stream once, at the embedding); lm head like a
+//!   block input.
+//! - T2 (per layer l, head h): value-proj column block
+//!   `Wv[:,h]' = Wv[:,h] A2`, `bv[h]' = bv[h] A2 + v2`; out-proj row
+//!   block `Wo[h]' = A2^-1 Wo[h]`, `bo' = bo - v2 A2^-1 Wo[h]`. The `v2`
+//!   bias passes through attention exactly because softmax rows sum to 1.
+//! - FfnDown: the transform sits behind the SiLU-gating nonlinearity, so
+//!   its *forward* application cannot be folded into any producer weight —
+//!   it stays an online op (exactly like the fixed T3 Hadamard). Only the
+//!   inverse folds: `wd' = Af^-1 wd`, `bd' = bd - vf Af^-1 wd`.
+//!   `fold_into` therefore returns the folded weights *plus* the online
+//!   remainder spec the serving path must keep applying.
+//!
+//! The two execution modes of the same spec are captured by
+//! [`TransformMode`]: `Unfolded` (reference semantics on original weights
+//! — forward before each quantizer, inverse after) and `Folded`
+//! (deployment semantics on folded weights — only the online remainder
+//! runs). `model::forward` implements both; the parity between them is the
+//! end-to-end gate in `rust/tests/spec_pipeline.rs`.
+//!
+//! One semantic caveat, inherited from the paper (and from
+//! QuaRot/SpinQuant before it): a `Residual` transform commutes with
+//! RMSNorm only when `A1` is orthogonal and `v1 = 0`
+//! (`rmsnorm(x A1 + v1) != rmsnorm(x) A1 + v1` in general), so folding a
+//! learned T1 defines a *transformed model* rather than an exact rewrite
+//! of the base model — the thing the paper's KL objective (Eq. 8) trains
+//! toward the teacher. T2 and FfnDown have no norm between forward and
+//! inverse and cancel exactly in full precision. What this module
+//! guarantees unconditionally is folded == unfolded for the same spec.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::Affine;
+use crate::io::lxt::{load_lxt, save_lxt, Tensor};
+use crate::linalg::Mat;
+use crate::model::{NativeDims, NativeWeights};
+
+/// A transform site in the model graph (see the module-level site map).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum TransformSite {
+    /// Global residual-stream transform (the paper's T1), dim `d_model`.
+    Residual,
+    /// Per-layer, per-head transform on the attention values (T2),
+    /// dim `head_dim`.
+    PerHeadValue { layer: usize, head: usize },
+    /// Per-layer transform on the down-projection input (after the online
+    /// T3 block-Hadamard when enabled), dim `d_ff`. Online-forward site.
+    FfnDown { layer: usize },
+}
+
+impl TransformSite {
+    /// Feature/transform dimensionality of this site under `dims`.
+    pub fn dim(&self, dims: &NativeDims) -> usize {
+        match self {
+            TransformSite::Residual => dims.d_model,
+            TransformSite::PerHeadValue { .. } => dims.head_dim(),
+            TransformSite::FfnDown { .. } => dims.d_ff,
+        }
+    }
+
+    /// True when the site's forward transform must stay an online op after
+    /// folding (cannot be absorbed into a producer weight).
+    pub fn is_online(&self) -> bool {
+        matches!(self, TransformSite::FfnDown { .. })
+    }
+
+    /// Stable string key used for `.lxt` tensor names and manifest
+    /// annotations: `t1`, `t2.<layer>.<head>`, `ffn.<layer>`.
+    pub fn key(&self) -> String {
+        match self {
+            TransformSite::Residual => "t1".to_string(),
+            TransformSite::PerHeadValue { layer, head } => format!("t2.{layer}.{head}"),
+            TransformSite::FfnDown { layer } => format!("ffn.{layer}"),
+        }
+    }
+
+    /// Inverse of [`Self::key`].
+    pub fn parse_key(key: &str) -> Result<TransformSite> {
+        if key == "t1" {
+            return Ok(TransformSite::Residual);
+        }
+        if let Some(rest) = key.strip_prefix("t2.") {
+            let (l, h) = rest
+                .split_once('.')
+                .with_context(|| format!("bad per-head site key {key:?}"))?;
+            return Ok(TransformSite::PerHeadValue {
+                layer: l.parse().with_context(|| format!("bad layer in {key:?}"))?,
+                head: h.parse().with_context(|| format!("bad head in {key:?}"))?,
+            });
+        }
+        if let Some(l) = key.strip_prefix("ffn.") {
+            return Ok(TransformSite::FfnDown {
+                layer: l.parse().with_context(|| format!("bad layer in {key:?}"))?,
+            });
+        }
+        anyhow::bail!("unknown transform-site key {key:?} (want t1 | t2.L.H | ffn.L)")
+    }
+
+    /// Bounds-check the site against model dimensions.
+    pub fn validate(&self, dims: &NativeDims) -> Result<()> {
+        match self {
+            TransformSite::Residual => Ok(()),
+            TransformSite::PerHeadValue { layer, head } => {
+                anyhow::ensure!(
+                    *layer < dims.n_layers && *head < dims.n_heads,
+                    "site {self} out of range (model has {} layers x {} heads)",
+                    dims.n_layers,
+                    dims.n_heads
+                );
+                Ok(())
+            }
+            TransformSite::FfnDown { layer } => {
+                anyhow::ensure!(
+                    *layer < dims.n_layers,
+                    "site {self} out of range (model has {} layers)",
+                    dims.n_layers
+                );
+                Ok(())
+            }
+        }
+    }
+}
+
+impl fmt::Display for TransformSite {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.key())
+    }
+}
+
+/// How a spec is applied by the interpreter (`model::forward`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransformMode {
+    /// Reference semantics on *unfolded* weights: every site transform is
+    /// applied forward before its quantizer and inverted after it.
+    Unfolded,
+    /// Deployment semantics on *folded* weights: only the online remainder
+    /// (FfnDown forwards) is applied; all inverses are baked into the
+    /// weights. A spec run in this mode must contain online sites only.
+    Folded,
+}
+
+/// A typed map from [`TransformSite`] to invertible [`Affine`] transforms —
+/// what `latmix learn` produces, `latmix fold` consumes, and the native
+/// serving path applies.
+#[derive(Clone, Debug, Default)]
+pub struct TransformSpec {
+    sites: BTreeMap<TransformSite, Affine>,
+}
+
+impl TransformSpec {
+    pub fn new() -> TransformSpec {
+        TransformSpec::default()
+    }
+
+    /// Insert (or replace) the transform at `site`.
+    pub fn insert(&mut self, site: TransformSite, t: Affine) {
+        self.sites.insert(site, t);
+    }
+
+    pub fn get(&self, site: &TransformSite) -> Option<&Affine> {
+        self.sites.get(site)
+    }
+
+    /// The global residual transform, if present.
+    pub fn residual(&self) -> Option<&Affine> {
+        self.sites.get(&TransformSite::Residual)
+    }
+
+    /// The per-head value transform at `(layer, head)`, if present.
+    pub fn per_head(&self, layer: usize, head: usize) -> Option<&Affine> {
+        self.sites.get(&TransformSite::PerHeadValue { layer, head })
+    }
+
+    /// The down-proj input transform at `layer`, if present.
+    pub fn ffn_down(&self, layer: usize) -> Option<&Affine> {
+        self.sites.get(&TransformSite::FfnDown { layer })
+    }
+
+    pub fn len(&self) -> usize {
+        self.sites.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sites.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&TransformSite, &Affine)> {
+        self.sites.iter()
+    }
+
+    /// True when every site's forward transform is an online op — the only
+    /// kind of spec [`TransformMode::Folded`] execution accepts.
+    pub fn online_only(&self) -> bool {
+        self.sites.keys().all(TransformSite::is_online)
+    }
+
+    /// Comma-joined site keys (manifest annotation, log lines).
+    pub fn site_list(&self) -> String {
+        self.sites.keys().map(TransformSite::key).collect::<Vec<_>>().join(",")
+    }
+
+    /// Check every site is in range and every transform has the site's
+    /// dimensionality.
+    pub fn validate(&self, dims: &NativeDims) -> Result<()> {
+        for (site, t) in &self.sites {
+            site.validate(dims)?;
+            anyhow::ensure!(
+                t.dim() == site.dim(dims),
+                "site {site}: transform dim {} != site dim {}",
+                t.dim(),
+                site.dim(dims)
+            );
+        }
+        Ok(())
+    }
+
+    // -- serialization ------------------------------------------------------
+
+    /// Encode as `.lxt` tensors: `spec.<key>.a` (`d x d`) and
+    /// `spec.<key>.v` (`d`) per site, plus a `spec.version` marker.
+    pub fn to_tensors(&self) -> BTreeMap<String, Tensor> {
+        let mut out = BTreeMap::new();
+        out.insert("spec.version".to_string(), Tensor::i32(vec![1], vec![SPEC_VERSION]));
+        for (site, t) in &self.sites {
+            let d = t.dim();
+            let key = site.key();
+            out.insert(format!("spec.{key}.a"), Tensor::f32(vec![d, d], t.a.data.clone()));
+            out.insert(format!("spec.{key}.v"), Tensor::f32(vec![d], t.v.clone()));
+        }
+        out
+    }
+
+    /// Inverse of [`Self::to_tensors`]. Rejects unknown spec versions and
+    /// singular transform matrices (via [`Affine::new`]).
+    pub fn from_tensors(map: &BTreeMap<String, Tensor>) -> Result<TransformSpec> {
+        if let Some(ver) = map.get("spec.version") {
+            let v = ver.as_i32()?;
+            anyhow::ensure!(
+                v.len() == 1 && v[0] == SPEC_VERSION,
+                "transform spec version {v:?} not supported (this build reads {SPEC_VERSION})"
+            );
+        }
+        let mut spec = TransformSpec::new();
+        for (name, t) in map {
+            let Some(rest) = name.strip_prefix("spec.") else { continue };
+            let Some(key) = rest.strip_suffix(".a") else { continue };
+            let site = TransformSite::parse_key(key)?;
+            anyhow::ensure!(
+                t.dims.len() == 2 && t.dims[0] == t.dims[1],
+                "{name}: expected square matrix, got dims {:?}",
+                t.dims
+            );
+            let d = t.dims[0];
+            let a = Mat::from_vec(d, d, t.as_f32()?.to_vec());
+            let vname = format!("spec.{key}.v");
+            let v = match map.get(&vname) {
+                Some(vt) => {
+                    anyhow::ensure!(vt.dims == [d], "{vname}: dims {:?} != [{d}]", vt.dims);
+                    vt.as_f32()?.to_vec()
+                }
+                None => vec![0.0; d],
+            };
+            spec.insert(site, Affine::new(a, v).with_context(|| format!("site {site}"))?);
+        }
+        Ok(spec)
+    }
+
+    /// Write the spec to an `.lxt` file.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        save_lxt(path, &self.to_tensors())
+    }
+
+    /// Load a spec from an `.lxt` file.
+    pub fn load(path: &Path) -> Result<TransformSpec> {
+        TransformSpec::from_tensors(&load_lxt(path)?)
+            .with_context(|| format!("parse transform spec {path:?}"))
+    }
+
+    /// Load and validate an artifact descriptor's online transform
+    /// remainder (`transform.online` in a version-2 manifest), ready to
+    /// run in [`TransformMode::Folded`]. Returns `None` when the artifact
+    /// set declares no online transforms. The single entry point shared by
+    /// the serving executor and the eval backend, so the two paths can
+    /// never diverge on how folded artifacts are interpreted.
+    pub fn load_online(
+        desc: &crate::model::ModelDesc,
+    ) -> Result<Option<(TransformSpec, TransformMode)>> {
+        let Some(path) = desc.transform_online_path() else {
+            return Ok(None);
+        };
+        let spec = TransformSpec::load(&path)?;
+        spec.validate(&crate::model::NativeDims::from_desc(desc))?;
+        anyhow::ensure!(
+            spec.online_only(),
+            "manifest transform.online spec has non-online sites [{}] — \
+             those must be folded into the weights, not applied at run time",
+            spec.site_list()
+        );
+        Ok(Some((spec, TransformMode::Folded)))
+    }
+
+    // -- fold algebra -------------------------------------------------------
+
+    /// Fold this spec into a weight set (the App. B/C rewrite — see the
+    /// module docs for the per-site algebra). Returns the folded weights
+    /// plus the *online remainder*: the sub-spec of forward transforms the
+    /// serving path must still apply ([`TransformSite::is_online`] sites).
+    pub fn fold_into(&self, w: &NativeWeights) -> Result<(NativeWeights, TransformSpec)> {
+        let dims = w.dims;
+        self.validate(&dims)?;
+        let (d, dh) = (dims.d_model, dims.head_dim());
+        let mut out = w.clone();
+
+        if let Some(t1) = self.residual() {
+            let a1 = &t1.a;
+            let a1_inv = t1.inverse_matrix();
+            // embedding rows: E' = E A1 + v1
+            out.embed = out.embed.matmul(a1);
+            for row in out.embed.data.chunks_mut(d) {
+                for (e, v) in row.iter_mut().zip(&t1.v) {
+                    *e += *v;
+                }
+            }
+            // lm head like a block input: W' = A1^-1 W, b' = b - v1 W'
+            out.head = a1_inv.matmul(&w.head);
+            let shift = out.head.apply_affine(&t1.v, None);
+            for (b, s) in out.bhead.iter_mut().zip(&shift) {
+                *b -= *s;
+            }
+            for lw in out.layers.iter_mut() {
+                for (wm, bv) in [
+                    (&mut lw.wq, &mut lw.bq),
+                    (&mut lw.wk, &mut lw.bk),
+                    (&mut lw.wv, &mut lw.bv),
+                    (&mut lw.wg, &mut lw.bg),
+                    (&mut lw.wu, &mut lw.bu),
+                ] {
+                    *wm = a1_inv.matmul(wm);
+                    let shift = wm.apply_affine(&t1.v, None);
+                    for (b, s) in bv.iter_mut().zip(&shift) {
+                        *b -= *s;
+                    }
+                }
+                // block outputs: A1 only (v1 enters the stream once)
+                lw.wo = lw.wo.matmul(a1);
+                lw.bo = a1.apply_affine(&lw.bo, None);
+                lw.wd = lw.wd.matmul(a1);
+                lw.bd = a1.apply_affine(&lw.bd, None);
+            }
+        }
+
+        for (site, t2) in &self.sites {
+            let TransformSite::PerHeadValue { layer, head } = *site else { continue };
+            let lw = &mut out.layers[layer];
+            let (c0, c1) = (head * dh, (head + 1) * dh);
+            // value-proj column block: Wv[:,h]' = Wv[:,h] A2 (+ v2 on bv)
+            for r in 0..d {
+                let row = lw.wv.row_mut(r);
+                let seg = t2.a.apply_affine(&row[c0..c1], None);
+                row[c0..c1].copy_from_slice(&seg);
+            }
+            let bseg = t2.a.apply_affine(&lw.bv[c0..c1], Some(&t2.v));
+            lw.bv[c0..c1].copy_from_slice(&bseg);
+            // out-proj row block: Wo[h]' = A2^-1 Wo[h], bo' = bo - v2 Wo[h]'
+            let block = Mat::from_vec(dh, d, lw.wo.data[c0 * d..c1 * d].to_vec());
+            let folded = t2.inverse_matrix().matmul(&block);
+            lw.wo.data[c0 * d..c1 * d].copy_from_slice(&folded.data);
+            let shift = folded.apply_affine(&t2.v, None);
+            for (b, s) in lw.bo.iter_mut().zip(&shift) {
+                *b -= *s;
+            }
+        }
+
+        let mut online = TransformSpec::new();
+        for (site, tf) in &self.sites {
+            let TransformSite::FfnDown { layer } = *site else { continue };
+            let lw = &mut out.layers[layer];
+            // inverse only: wd' = Af^-1 wd, bd' = bd - vf wd'
+            lw.wd = tf.inverse_matrix().matmul(&lw.wd);
+            let shift = lw.wd.apply_affine(&tf.v, None);
+            for (b, s) in lw.bd.iter_mut().zip(&shift) {
+                *b -= *s;
+            }
+            // the forward application stays online
+            online.insert(*site, tf.clone());
+        }
+        Ok((out, online))
+    }
+}
+
+/// Spec `.lxt` format version this build reads and writes.
+pub const SPEC_VERSION: i32 = 1;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::random_orthogonal;
+    use crate::util::Pcg64;
+
+    fn dims() -> NativeDims {
+        NativeDims {
+            vocab: 32,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 32,
+            kv_seq: 24,
+            prefill_len: 8,
+        }
+    }
+
+    fn rand_affine(d: usize, rng: &mut Pcg64) -> Affine {
+        let mut a = random_orthogonal(d, rng);
+        for e in a.data.iter_mut() {
+            *e += 0.02 * rng.normal();
+        }
+        Affine::new(a, rng.normal_vec(d, 0.1)).unwrap()
+    }
+
+    #[test]
+    fn site_keys_roundtrip() {
+        for site in [
+            TransformSite::Residual,
+            TransformSite::PerHeadValue { layer: 3, head: 1 },
+            TransformSite::FfnDown { layer: 0 },
+        ] {
+            assert_eq!(TransformSite::parse_key(&site.key()).unwrap(), site);
+        }
+        assert!(TransformSite::parse_key("t2.x.1").is_err());
+        assert!(TransformSite::parse_key("bogus").is_err());
+    }
+
+    #[test]
+    fn site_dims_and_online() {
+        let d = dims();
+        assert_eq!(TransformSite::Residual.dim(&d), 16);
+        assert_eq!(TransformSite::PerHeadValue { layer: 0, head: 0 }.dim(&d), 8);
+        assert_eq!(TransformSite::FfnDown { layer: 0 }.dim(&d), 32);
+        assert!(!TransformSite::Residual.is_online());
+        assert!(TransformSite::FfnDown { layer: 0 }.is_online());
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_and_wrong_dims() {
+        let d = dims();
+        let mut rng = Pcg64::seed(3);
+        let mut spec = TransformSpec::new();
+        spec.insert(TransformSite::PerHeadValue { layer: 9, head: 0 }, rand_affine(8, &mut rng));
+        assert!(spec.validate(&d).is_err());
+        let mut spec = TransformSpec::new();
+        spec.insert(TransformSite::Residual, rand_affine(8, &mut rng)); // want 16
+        assert!(spec.validate(&d).is_err());
+        let mut spec = TransformSpec::new();
+        spec.insert(TransformSite::Residual, rand_affine(16, &mut rng));
+        spec.insert(TransformSite::FfnDown { layer: 1 }, rand_affine(32, &mut rng));
+        assert!(spec.validate(&d).is_ok());
+        assert!(!spec.online_only());
+        assert_eq!(spec.site_list(), "t1,ffn.1");
+    }
+
+    #[test]
+    fn tensor_roundtrip_preserves_sites() {
+        let mut rng = Pcg64::seed(5);
+        let mut spec = TransformSpec::new();
+        spec.insert(TransformSite::Residual, rand_affine(16, &mut rng));
+        spec.insert(TransformSite::PerHeadValue { layer: 1, head: 1 }, rand_affine(8, &mut rng));
+        spec.insert(TransformSite::FfnDown { layer: 0 }, rand_affine(32, &mut rng));
+        let back = TransformSpec::from_tensors(&spec.to_tensors()).unwrap();
+        assert_eq!(back.len(), 3);
+        for (site, t) in spec.iter() {
+            let bt = back.get(site).expect("site lost in round-trip");
+            assert_eq!(bt.a, t.a);
+            assert_eq!(bt.v, t.v);
+        }
+    }
+
+    #[test]
+    fn from_tensors_rejects_future_version_and_singular() {
+        let mut map = BTreeMap::new();
+        map.insert("spec.version".to_string(), Tensor::i32(vec![1], vec![SPEC_VERSION + 1]));
+        assert!(TransformSpec::from_tensors(&map).is_err());
+        let mut map = BTreeMap::new();
+        map.insert("spec.t1.a".to_string(), Tensor::f32(vec![4, 4], vec![0.0; 16]));
+        assert!(TransformSpec::from_tensors(&map).is_err());
+    }
+
+    #[test]
+    fn fold_returns_online_remainder() {
+        let d = dims();
+        let w = NativeWeights::synthetic(d, 7);
+        let mut rng = Pcg64::seed(9);
+        let mut spec = TransformSpec::new();
+        spec.insert(TransformSite::Residual, rand_affine(16, &mut rng));
+        spec.insert(TransformSite::PerHeadValue { layer: 0, head: 1 }, rand_affine(8, &mut rng));
+        spec.insert(TransformSite::FfnDown { layer: 1 }, rand_affine(32, &mut rng));
+        let (folded, online) = spec.fold_into(&w).unwrap();
+        // T1/T2 fold fully; only the FfnDown forward remains online
+        assert_eq!(online.len(), 1);
+        assert!(online.online_only());
+        assert!(online.ffn_down(1).is_some());
+        // folded weights actually changed at every touched tensor
+        assert_ne!(folded.embed, w.embed);
+        assert_ne!(folded.layers[0].wv, w.layers[0].wv);
+        assert_ne!(folded.layers[0].wo, w.layers[0].wo);
+        assert_ne!(folded.layers[1].wd, w.layers[1].wd);
+        // untouched: the other head's wv columns at layer 1
+        assert_eq!(folded.layers[1].wq.rows, 16);
+    }
+
+    #[test]
+    fn empty_spec_fold_is_identity() {
+        let d = dims();
+        let w = NativeWeights::synthetic(d, 8);
+        let (folded, online) = TransformSpec::new().fold_into(&w).unwrap();
+        assert!(online.is_empty());
+        assert_eq!(folded, w);
+    }
+}

@@ -71,7 +71,8 @@ fn serving_engine_end_to_end() {
     let ws = WeightSet::load(&rt.desc, "fp_raw").unwrap();
     let exec =
         latmix::coordinator::engine::XlaExecutor::new(&rt, "fp", &ws).unwrap();
-    let mut engine = Engine::new(exec, EngineConfig { max_slots: 4, eos: -1, ..Default::default() });
+    let mut engine =
+        Engine::new(exec, EngineConfig { max_slots: 4, eos: -1, ..Default::default() });
     for i in 0..5u64 {
         engine.submit(GenRequest::new(i, vec![1, 40 + i as i32, 50], 6));
     }
@@ -128,7 +129,8 @@ fn decode_matches_logits_graph() {
     let exec =
         latmix::coordinator::engine::XlaExecutor::new(&rt, "fp", &ws).unwrap();
     let prompt = vec![1i32, 40, 41, 42];
-    let mut engine = Engine::new(exec, EngineConfig { max_slots: 1, eos: -1, ..Default::default() });
+    let mut engine =
+        Engine::new(exec, EngineConfig { max_slots: 1, eos: -1, ..Default::default() });
     engine.submit(GenRequest::new(0, prompt.clone(), 4));
     let out = engine.run_to_completion().unwrap();
     let via_engine = out[0].tokens.clone();

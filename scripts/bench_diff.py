@@ -24,15 +24,21 @@ import sys
 def load(path):
     try:
         with open(path) as f:
-            return json.load(f)
+            snap = json.load(f)
     except (OSError, ValueError):
         return None
+    # tolerate malformed snapshots (non-dict JSON, results not a list):
+    # treat them as absent rather than crashing the CI step
+    if not isinstance(snap, dict) or not isinstance(snap.get("results", []), list):
+        return None
+    return snap
 
 
 def keyed(snap):
     out = {}
     for r in (snap or {}).get("results", []):
-        out[(r.get("op", "?"), r.get("backend", "?"))] = r
+        if isinstance(r, dict):
+            out[(r.get("op", "?"), r.get("backend", "?"))] = r
     return out
 
 
@@ -51,13 +57,30 @@ def main():
 
     lines = ["## Bench trajectory — microbench (ns per unit, lower is better)", ""]
     warnings = []
-    if not fresh or not fresh.get("results"):
+    brows = keyed(base)
+    fresh_rows = [
+        r for r in (fresh or {}).get("results", []) if isinstance(r, dict)
+    ]
+    if not fresh_rows:
         lines.append("_no fresh BENCH_microbench.json rows — did the smoke bench run?_")
     else:
-        brows = keyed(base)
+        # The committed baseline may be the schema-2 empty-rows stub from a
+        # toolchain-less authoring environment ({"results": []}): say so up
+        # front instead of emitting a table that looks like a comparison.
+        if not brows:
+            note = (
+                "committed stub" if base and base.get("results") == [] else "missing/unreadable"
+            )
+            lines.append(
+                f"_no baseline rows ({note}) — every row below is new; commit this "
+                "run's BENCH_microbench.json as the first real baseline_"
+            )
+            lines.append("")
         lines.append("| op | backend | unit | baseline | fresh | delta |")
         lines.append("|---|---|---|---|---|---|")
-        for row in fresh["results"]:
+        # iterate the raw list (not keyed()) so duplicate (op, backend)
+        # rows stay visible instead of last-one-wins vanishing
+        for row in fresh_rows:
             key = (row.get("op", "?"), row.get("backend", "?"))
             f_ns, unit = ns_per_unit(row)
             b = brows.get(key)
@@ -72,12 +95,6 @@ def main():
             )
             if delta > 25.0:
                 warnings.append((key, delta))
-        if not (base and base.get("results")):
-            lines.append("")
-            lines.append(
-                "_no committed baseline rows — commit this run's "
-                "BENCH_microbench.json as the first real baseline_"
-            )
 
     text = "\n".join(lines) + "\n"
     summary = os.environ.get("GITHUB_STEP_SUMMARY")
