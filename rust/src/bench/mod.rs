@@ -206,7 +206,8 @@ pub fn repo_root() -> std::path::PathBuf {
     }
 }
 
-fn json_str(s: &str) -> String {
+/// Minimal JSON string escaper shared by the bench + serving reports.
+pub(crate) fn json_str(s: &str) -> String {
     let mut out = String::with_capacity(s.len() + 2);
     out.push('"');
     for c in s.chars() {

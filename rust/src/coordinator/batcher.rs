@@ -1,4 +1,5 @@
-//! Continuous batcher: FIFO admission queue + batch-size bucketing.
+//! Admission layer: bounded FIFO queue with backpressure, cancellation,
+//! deadline expiry, and batch-size bucketing.
 //! Method-agnostic by the paper's Sec. 4.1 design: every quantized
 //! transform shares one decode executable per batch size, so bucketing
 //! never depends on which transform produced the weights.
@@ -6,18 +7,34 @@
 //! The AOT artifacts are compiled at fixed batch sizes (1/2/4/8); the
 //! batcher picks, for a given number of ready lanes, the bucket that
 //! maximizes occupancy (smallest compiled size >= lanes, else the largest
-//! size, repeatedly). Invariants (property-tested): no request is lost or
-//! duplicated; admission order is FIFO; a formed batch never exceeds the
-//! requested capacity.
+//! size, repeatedly). The queue is optionally bounded (`queue_depth`):
+//! when full, [`Batcher::try_push`] refuses the request instead of
+//! enqueuing it, and the engine turns that refusal into an explicit
+//! `RejectedQueueFull` outcome — backpressure the client can see.
+//!
+//! Invariants (property-tested): no request is lost or duplicated;
+//! admission order is FIFO; a formed batch never exceeds the requested
+//! capacity; enqueued == admitted + cancelled + expired + still-pending.
 
 use std::collections::VecDeque;
 
 use super::request::GenRequest;
 
+/// Outcome of [`Batcher::try_push`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PushOutcome {
+    /// Request joined the queue.
+    Queued,
+    /// Bounded queue was full; the request was NOT enqueued.
+    Rejected,
+}
+
 pub struct Batcher {
     queue: VecDeque<GenRequest>,
     /// Compiled batch sizes, ascending.
     pub buckets: Vec<usize>,
+    /// Maximum queued requests (None = unbounded).
+    pub queue_depth: Option<usize>,
     admitted: u64,
     enqueued: u64,
 }
@@ -26,12 +43,53 @@ impl Batcher {
     pub fn new(mut buckets: Vec<usize>) -> Self {
         buckets.sort_unstable();
         assert!(!buckets.is_empty());
-        Batcher { queue: VecDeque::new(), buckets, admitted: 0, enqueued: 0 }
+        Batcher { queue: VecDeque::new(), buckets, queue_depth: None, admitted: 0, enqueued: 0 }
     }
 
+    /// Bound the admission queue at `depth` requests.
+    pub fn with_queue_depth(mut self, depth: usize) -> Self {
+        self.queue_depth = Some(depth);
+        self
+    }
+
+    /// Unbounded enqueue (pre-admission-layer API, kept for closed-loop
+    /// drivers that submit their whole workload up front).
     pub fn push(&mut self, req: GenRequest) {
         self.enqueued += 1;
         self.queue.push_back(req);
+    }
+
+    /// Enqueue with backpressure: refuses (without consuming a counter
+    /// slot in `enqueued`) when the bounded queue is full.
+    pub fn try_push(&mut self, req: GenRequest) -> PushOutcome {
+        if self.queue_depth.is_some_and(|d| self.queue.len() >= d) {
+            return PushOutcome::Rejected;
+        }
+        self.push(req);
+        PushOutcome::Queued
+    }
+
+    /// Remove a still-queued request by id (client cancellation before the
+    /// request reached a KV slot). Returns the request if found.
+    pub fn cancel(&mut self, id: u64) -> Option<GenRequest> {
+        let at = self.queue.iter().position(|r| r.id == id)?;
+        self.queue.remove(at)
+    }
+
+    /// Remove every queued request whose deadline has passed, preserving
+    /// FIFO order of the survivors. Returns the expired requests.
+    pub fn expire_deadlines(&mut self) -> Vec<GenRequest> {
+        let mut expired = Vec::new();
+        let mut keep = VecDeque::with_capacity(self.queue.len());
+        for req in self.queue.drain(..) {
+            if req.expired() {
+                expired.push(req);
+            } else {
+                keep.push_back(req);
+            }
+        }
+        self.queue = keep;
+        expired
     }
 
     pub fn pending(&self) -> usize {
@@ -68,6 +126,8 @@ impl Batcher {
 
 #[cfg(test)]
 mod tests {
+    use std::time::Duration;
+
     use super::*;
 
     fn req(id: u64) -> GenRequest {
@@ -119,5 +179,45 @@ mod tests {
         assert_eq!(enq, 7);
         assert_eq!(adm, 7);
         assert_eq!(admitted, 7);
+    }
+
+    #[test]
+    fn bounded_queue_rejects_when_full() {
+        let mut b = Batcher::new(vec![4]).with_queue_depth(2);
+        assert_eq!(b.try_push(req(0)), PushOutcome::Queued);
+        assert_eq!(b.try_push(req(1)), PushOutcome::Queued);
+        assert_eq!(b.try_push(req(2)), PushOutcome::Rejected);
+        assert_eq!(b.pending(), 2);
+        // draining re-opens admission
+        b.admit(1);
+        assert_eq!(b.try_push(req(3)), PushOutcome::Queued);
+        let (enq, _) = b.counters();
+        assert_eq!(enq, 3, "rejected request never counted as enqueued");
+    }
+
+    #[test]
+    fn cancel_mid_queue() {
+        let mut b = Batcher::new(vec![4]);
+        for id in 0..4 {
+            b.push(req(id));
+        }
+        assert_eq!(b.cancel(2).map(|r| r.id), Some(2));
+        assert!(b.cancel(2).is_none());
+        let ids: Vec<_> = b.admit(4).iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 3], "FIFO order preserved for survivors");
+    }
+
+    #[test]
+    fn deadline_sweep_evicts_expired_only() {
+        let mut b = Batcher::new(vec![4]);
+        b.push(req(0).with_deadline(Duration::ZERO));
+        b.push(req(1).with_deadline(Duration::from_secs(3600)));
+        b.push(req(2).with_deadline(Duration::ZERO));
+        b.push(req(3));
+        std::thread::sleep(Duration::from_millis(1));
+        let expired: Vec<_> = b.expire_deadlines().iter().map(|r| r.id).collect();
+        assert_eq!(expired, vec![0, 2]);
+        let ids: Vec<_> = b.admit(4).iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![1, 3]);
     }
 }

@@ -7,15 +7,38 @@
 //! [`MockExecutor`]. Both real executors discover their compiled batch
 //! sizes through the shared [`crate::runtime::decode_batch_sizes`] parser,
 //! so batch selection can never disagree across backends.
+//!
+//! Since the continuous-batching refactor the engine is a three-stage
+//! pipeline driven one [`Engine::step`] at a time:
+//!
+//! 1. **admission** — a bounded queue ([`Batcher`]) with backpressure
+//!    ([`Engine::try_submit`] refuses with `RejectedQueueFull` when full),
+//!    client cancellation, and deadline expiry;
+//! 2. **schedule + decode** — at every step boundary, expired/cancelled
+//!    lanes are evicted and their KV slots reclaimed, waiting requests
+//!    refill the freed slots (prefill), and all running lanes decode one
+//!    token, re-bucketed per step via `Batcher::bucket_for`;
+//! 3. **stream** — each generated token is pushed to an optional
+//!    [`TokenSink`] as it is produced, and every scheduling decision is
+//!    appended to the [`SchedEvent`] log that the cross-backend parity
+//!    fingerprints hash.
+//!
+//! Correctness anchor: because the native forward is lane-independent
+//! (padding lanes are zeroed, per-lane loops), a closed-loop workload with
+//! no cancellations produces **bit-identical per-request token sequences**
+//! to the retained [`super::lockstep::LockstepEngine`] reference — decode
+//! order may differ, tokens may not (gated in
+//! `rust/tests/serving_pipeline.rs`).
 
+use std::collections::HashSet;
 use std::time::Instant;
 
 use anyhow::Result;
 
-use super::batcher::Batcher;
+use super::batcher::{Batcher, PushOutcome};
 use super::kv_cache::KvCache;
-use super::request::{GenRequest, GenResult, RequestId};
-use super::scheduler::{plan_step, SchedulerPolicy};
+use super::request::{FinishReason, GenRequest, GenResult, RequestId, StreamEvent, TokenSink};
+use super::scheduler::{plan_step, SchedEvent, SchedulerPolicy};
 use crate::model::{GraphSpec, ModelDesc, NativeDims, NativeWeights, SpecRun, WeightSet};
 use crate::runtime::decode_batch_sizes;
 use crate::transform::{TransformMode, TransformSpec};
@@ -379,11 +402,19 @@ pub struct EngineConfig {
     pub policy: SchedulerPolicy,
     /// Stop token (EOS); generation also stops at max_new_tokens.
     pub eos: i32,
+    /// Admission-queue bound for [`Engine::try_submit`] backpressure
+    /// (None = unbounded; [`Engine::submit`] always bypasses the bound).
+    pub queue_depth: Option<usize>,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
-        EngineConfig { max_slots: 8, policy: SchedulerPolicy::PrefillPriority, eos: 3 }
+        EngineConfig {
+            max_slots: 8,
+            policy: SchedulerPolicy::PrefillPriority,
+            eos: 3,
+            queue_depth: None,
+        }
     }
 }
 
@@ -411,23 +442,34 @@ struct RunningSeq {
     req: GenRequest,
     prompt_len: usize,
     generated: Vec<i32>,
+    /// Arrival-relative emission time of each generated token.
+    token_s: Vec<f64>,
     ttft_s: Option<f64>,
 }
 
-/// The continuous-batching generation engine.
+/// The continuous-batching generation engine (admission → schedule/decode →
+/// stream; see the module docs for the full state machine).
 pub struct Engine<E: StepExecutor> {
     pub exec: E,
     pub cfg: EngineConfig,
     batcher: Batcher,
     kv: KvCache,
     running: Vec<RunningSeq>,
+    /// Cancellations targeting running lanes, applied at the next step
+    /// boundary (queued requests are cancelled immediately).
+    cancels: HashSet<RequestId>,
     pub stats: EngineStats,
     results: Vec<GenResult>,
+    events: Vec<SchedEvent>,
+    sink: Option<TokenSink>,
 }
 
 impl<E: StepExecutor> Engine<E> {
     pub fn new(exec: E, cfg: EngineConfig) -> Self {
-        let batcher = Batcher::new(exec.batch_sizes());
+        let mut batcher = Batcher::new(exec.batch_sizes());
+        if let Some(d) = cfg.queue_depth {
+            batcher = batcher.with_queue_depth(d);
+        }
         let kv = KvCache::new(cfg.max_slots, exec.n_layers(), exec.kv_seq(), exec.kv_row());
         Engine {
             exec,
@@ -435,17 +477,66 @@ impl<E: StepExecutor> Engine<E> {
             batcher,
             kv,
             running: Vec::new(),
+            cancels: HashSet::new(),
             stats: EngineStats::default(),
             results: Vec::new(),
+            events: Vec::new(),
+            sink: None,
         }
     }
 
+    /// Attach a per-token streaming callback; replaces any previous sink.
+    pub fn set_sink(&mut self, sink: TokenSink) {
+        self.sink = Some(sink);
+    }
+
+    /// Unbounded submit (closed-loop drivers that stage a whole workload).
     pub fn submit(&mut self, req: GenRequest) {
         self.batcher.push(req);
     }
 
+    /// Submit with backpressure: when the bounded queue is full the
+    /// request is refused and a `RejectedQueueFull` result is recorded —
+    /// every submission still yields exactly one result.
+    pub fn try_submit(&mut self, req: GenRequest) -> PushOutcome {
+        let (id, prompt_len, arrived) = (req.id, req.prompt.len(), req.arrived);
+        match self.batcher.try_push(req) {
+            PushOutcome::Queued => PushOutcome::Queued,
+            PushOutcome::Rejected => {
+                self.drop_request(id, prompt_len, arrived, FinishReason::RejectedQueueFull);
+                PushOutcome::Rejected
+            }
+        }
+    }
+
+    /// Cancel a request wherever it is: removed from the queue
+    /// immediately, or evicted from its lane at the next step boundary.
+    /// Returns false if the id is unknown (e.g. already finished).
+    pub fn cancel(&mut self, id: RequestId) -> bool {
+        if let Some(req) = self.batcher.cancel(id) {
+            self.drop_request(req.id, req.prompt.len(), req.arrived, FinishReason::Cancelled);
+            true
+        } else if self.running.iter().any(|r| r.req.id == id) {
+            self.cancels.insert(id);
+            true
+        } else {
+            false
+        }
+    }
+
     pub fn pending(&self) -> usize {
         self.batcher.pending() + self.running.len()
+    }
+
+    /// The scheduling event log so far (admit/evict/drop, in engine order).
+    pub fn events(&self) -> &[SchedEvent] {
+        &self.events
+    }
+
+    /// Drain results finished since the last call (open-loop drivers poll
+    /// this between steps; closed-loop drivers use `run_to_completion`).
+    pub fn take_results(&mut self) -> Vec<GenResult> {
+        std::mem::take(&mut self.results)
     }
 
     /// Run until all submitted requests complete; returns results (sorted
@@ -461,8 +552,11 @@ impl<E: StepExecutor> Engine<E> {
         Ok(out)
     }
 
-    /// One engine iteration: maybe prefill, then one decode step.
+    /// One engine iteration: sweep deadlines/cancellations, refill freed
+    /// slots (prefill), then one decode step over all running lanes.
     pub fn step(&mut self) -> Result<()> {
+        self.sweep_queue();
+        self.evict_running();
         let running_ids: Vec<RequestId> = self.running.iter().map(|r| r.req.id).collect();
         let plan = plan_step(
             self.cfg.policy,
@@ -479,6 +573,31 @@ impl<E: StepExecutor> Engine<E> {
             self.decode_step()?;
         }
         Ok(())
+    }
+
+    /// Queue-side deadline sweep: expired requests never reach a slot.
+    fn sweep_queue(&mut self) {
+        for req in self.batcher.expire_deadlines() {
+            self.drop_request(req.id, req.prompt.len(), req.arrived, FinishReason::TimedOut);
+        }
+    }
+
+    /// Lane-side sweep: evict cancelled/expired running lanes, keeping
+    /// their partial tokens; the freed slots are refilled this same step.
+    fn evict_running(&mut self) {
+        let mut evict: Vec<(usize, FinishReason)> = Vec::new();
+        for (i, rs) in self.running.iter().enumerate() {
+            if self.cancels.contains(&rs.req.id) {
+                evict.push((i, FinishReason::Cancelled));
+            } else if rs.req.expired() {
+                evict.push((i, FinishReason::TimedOut));
+            }
+        }
+        for (i, reason) in evict.into_iter().rev() {
+            let rs = self.running.remove(i);
+            self.cancels.remove(&rs.req.id);
+            self.finish(rs, reason);
+        }
     }
 
     fn prefill_batch(&mut self, reqs: Vec<GenRequest>) -> Result<()> {
@@ -502,7 +621,12 @@ impl<E: StepExecutor> Engine<E> {
         let plane = self.exec.kv_seq() * self.exec.kv_row();
         for (lane, req) in reqs.into_iter().enumerate() {
             let prompt_len = req.prompt.len().min(pl);
-            self.kv.alloc(req.id)?;
+            let alloc = self.kv.alloc(req.id)?;
+            self.events.push(SchedEvent::Admit {
+                id: req.id,
+                slot: alloc.slot,
+                refill: alloc.refill,
+            });
             // copy this lane's planes into the per-seq cache
             let seq = self.kv.get_mut(req.id).unwrap();
             for (li, buf) in kv_planes.iter().enumerate() {
@@ -510,11 +634,20 @@ impl<E: StepExecutor> Engine<E> {
             }
             seq.pos = prompt_len;
             let first = argmax(&logits[lane * vocab..(lane + 1) * vocab]);
-            let ttft = req.arrived.elapsed().as_secs_f64();
-            let rs = RunningSeq { req, prompt_len, generated: vec![first], ttft_s: Some(ttft) };
+            let t = req.arrived.elapsed().as_secs_f64();
+            let rs = RunningSeq {
+                req,
+                prompt_len,
+                generated: vec![first],
+                token_s: vec![t],
+                ttft_s: Some(t),
+            };
             self.stats.decode_tokens += 1;
-            if first == self.cfg.eos || rs.req.max_new_tokens <= 1 {
-                self.finish(rs);
+            self.emit(StreamEvent::Token { id: rs.req.id, index: 0, token: first, t_s: t });
+            if first == self.cfg.eos {
+                self.finish(rs, FinishReason::Eos);
+            } else if rs.req.max_new_tokens <= 1 {
+                self.finish(rs, FinishReason::Length);
             } else {
                 self.running.push(rs);
             }
@@ -523,11 +656,13 @@ impl<E: StepExecutor> Engine<E> {
     }
 
     fn decode_step(&mut self) -> Result<()> {
-        // decode all running lanes, chunked into compiled buckets
+        // decode all running lanes, chunked into per-step re-selected
+        // compiled buckets
         let ids: Vec<RequestId> = self.running.iter().map(|r| r.req.id).collect();
-        let mut finished: Vec<RequestId> = Vec::new();
+        let mut finished: Vec<(RequestId, FinishReason)> = Vec::new();
         let max_bucket = *self.exec.batch_sizes().last().unwrap();
         let vocab = self.exec.vocab();
+        let kv_seq = self.exec.kv_seq();
         for chunk in ids.chunks(max_bucket) {
             let batch = self.batcher.bucket_for(chunk.len());
             let mut tokens = vec![0i32; batch];
@@ -542,40 +677,91 @@ impl<E: StepExecutor> Engine<E> {
             self.kv.scatter_batch(chunk, batch, &kv_out);
             self.stats.decode_steps += 1;
             self.stats.decode_lanes += chunk.len() as u64;
+            let mut stream: Vec<StreamEvent> = Vec::with_capacity(chunk.len());
             for (lane, id) in chunk.iter().enumerate() {
                 let rs = self.running.iter_mut().find(|r| r.req.id == *id).unwrap();
                 let next = argmax(&logits[lane * vocab..(lane + 1) * vocab]);
+                let t = rs.req.arrived.elapsed().as_secs_f64();
                 rs.generated.push(next);
+                rs.token_s.push(t);
                 self.stats.decode_tokens += 1;
-                let done = next == self.cfg.eos
-                    || rs.generated.len() >= rs.req.max_new_tokens
-                    || rs.prompt_len + rs.generated.len() >= self.exec.kv_seq();
-                if done {
-                    finished.push(*id);
+                stream.push(StreamEvent::Token {
+                    id: *id,
+                    index: rs.generated.len() - 1,
+                    token: next,
+                    t_s: t,
+                });
+                if next == self.cfg.eos {
+                    finished.push((*id, FinishReason::Eos));
+                } else if rs.generated.len() >= rs.req.max_new_tokens {
+                    finished.push((*id, FinishReason::Length));
+                } else if rs.prompt_len + rs.generated.len() >= kv_seq {
+                    finished.push((*id, FinishReason::KvLimit));
                 }
             }
+            for ev in stream {
+                self.emit(ev);
+            }
         }
-        for id in finished {
+        for (id, reason) in finished {
             let idx = self.running.iter().position(|r| r.req.id == id).unwrap();
             let rs = self.running.remove(idx);
-            self.finish(rs);
+            self.finish(rs, reason);
         }
         Ok(())
     }
 
-    fn finish(&mut self, rs: RunningSeq) {
-        self.kv.free(rs.req.id);
+    /// Retire a lane: reclaim its KV slot, log the eviction, record the
+    /// result, notify the stream.
+    fn finish(&mut self, rs: RunningSeq, reason: FinishReason) {
+        let slot = self.kv.free(rs.req.id).expect("finishing lane without a slot");
+        self.events.push(SchedEvent::Evict { id: rs.req.id, slot, reason });
+        self.emit(StreamEvent::Finished {
+            id: rs.req.id,
+            outcome: reason,
+            n_tokens: rs.generated.len(),
+        });
         self.results.push(GenResult {
             id: rs.req.id,
             prompt_len: rs.prompt_len,
             tokens: rs.generated,
+            outcome: reason,
+            token_s: rs.token_s,
             ttft_s: rs.ttft_s.unwrap_or(0.0),
             total_s: rs.req.arrived.elapsed().as_secs_f64(),
         });
     }
+
+    /// Record a queue-level terminal outcome (rejected / cancelled /
+    /// expired before reaching a slot): no tokens, no KV slot involved.
+    fn drop_request(
+        &mut self,
+        id: RequestId,
+        prompt_len: usize,
+        arrived: Instant,
+        reason: FinishReason,
+    ) {
+        self.events.push(SchedEvent::Drop { id, reason });
+        self.emit(StreamEvent::Finished { id, outcome: reason, n_tokens: 0 });
+        self.results.push(GenResult {
+            id,
+            prompt_len,
+            tokens: Vec::new(),
+            outcome: reason,
+            token_s: Vec::new(),
+            ttft_s: 0.0,
+            total_s: arrived.elapsed().as_secs_f64(),
+        });
+    }
+
+    fn emit(&mut self, ev: StreamEvent) {
+        if let Some(sink) = self.sink.as_mut() {
+            sink(&ev);
+        }
+    }
 }
 
-fn argmax(v: &[f32]) -> i32 {
+pub(crate) fn argmax(v: &[f32]) -> i32 {
     let mut best = 0usize;
     let mut bv = f32::NEG_INFINITY;
     for (i, x) in v.iter().enumerate() {
@@ -589,12 +775,16 @@ fn argmax(v: &[f32]) -> i32 {
 
 #[cfg(test)]
 mod tests {
+    use std::cell::RefCell;
+    use std::rc::Rc;
+    use std::time::Duration;
+
     use super::*;
 
     fn engine() -> Engine<MockExecutor> {
         Engine::new(
             MockExecutor::default(),
-            EngineConfig { max_slots: 4, policy: SchedulerPolicy::PrefillPriority, eos: -1 },
+            EngineConfig { max_slots: 4, eos: -1, ..Default::default() },
         )
     }
 
@@ -607,6 +797,8 @@ mod tests {
         assert_eq!(out[0].tokens.len(), 4);
         // mock: prefill emits sum%vocab=11, then +1 each step
         assert_eq!(out[0].tokens, vec![11, 12, 13, 14]);
+        assert_eq!(out[0].outcome, FinishReason::Length);
+        assert_eq!(out[0].token_s.len(), 4);
     }
 
     #[test]
@@ -623,17 +815,32 @@ mod tests {
         }
         // slots never exceeded capacity: implied by successful alloc
         assert_eq!(e.stats.decode_tokens, 30);
+        // churn visible in the event log: 10 admits, 10 evictions, and —
+        // with 4 slots for 10 requests — at least one slot refill
+        let admits =
+            e.events().iter().filter(|ev| matches!(ev, SchedEvent::Admit { .. })).count();
+        let refills = e
+            .events()
+            .iter()
+            .filter(|ev| matches!(ev, SchedEvent::Admit { refill: true, .. }))
+            .count();
+        let evicts =
+            e.events().iter().filter(|ev| matches!(ev, SchedEvent::Evict { .. })).count();
+        assert_eq!(admits, 10);
+        assert_eq!(evicts, 10);
+        assert!(refills > 0, "expected slot reuse under churn");
     }
 
     #[test]
     fn eos_stops_generation() {
         let mut e = Engine::new(
             MockExecutor::default(),
-            EngineConfig { max_slots: 2, policy: SchedulerPolicy::PrefillPriority, eos: 12 },
+            EngineConfig { max_slots: 2, eos: 12, ..Default::default() },
         );
         e.submit(GenRequest::new(1, vec![5, 6], 10)); // first token 11, next 12=eos
         let out = e.run_to_completion().unwrap();
         assert_eq!(out[0].tokens, vec![11, 12]);
+        assert_eq!(out[0].outcome, FinishReason::Eos);
     }
 
     #[test]
@@ -646,5 +853,84 @@ mod tests {
         assert!(e.stats.prefill_batches >= 1);
         assert_eq!(e.stats.prefill_tokens, 9);
         assert_eq!(e.stats.decode_tokens, 6);
+    }
+
+    #[test]
+    fn bounded_queue_backpressure() {
+        let mut e = Engine::new(
+            MockExecutor::default(),
+            EngineConfig { max_slots: 2, eos: -1, queue_depth: Some(2), ..Default::default() },
+        );
+        for id in 0..5 {
+            e.try_submit(GenRequest::new(id, vec![1], 2));
+        }
+        let out = e.run_to_completion().unwrap();
+        assert_eq!(out.len(), 5, "every submission yields a result");
+        let rejected: Vec<_> = out
+            .iter()
+            .filter(|r| r.outcome == FinishReason::RejectedQueueFull)
+            .map(|r| r.id)
+            .collect();
+        assert_eq!(rejected, vec![2, 3, 4]);
+        assert!(out
+            .iter()
+            .filter(|r| r.outcome.is_complete())
+            .all(|r| r.tokens.len() == 2));
+    }
+
+    #[test]
+    fn cancel_queued_and_running() {
+        let mut e = Engine::new(
+            MockExecutor::default(),
+            EngineConfig { max_slots: 1, eos: -1, ..Default::default() },
+        );
+        e.submit(GenRequest::new(0, vec![1], 8));
+        e.submit(GenRequest::new(1, vec![2], 8));
+        e.step().unwrap(); // req 0 admitted (slot 0), req 1 still queued
+        assert!(e.cancel(1), "cancel mid-queue");
+        assert!(e.cancel(0), "cancel mid-decode");
+        assert!(!e.cancel(42), "unknown id");
+        let out = e.run_to_completion().unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].outcome, FinishReason::Cancelled);
+        assert!(!out[0].tokens.is_empty(), "partial tokens kept on lane cancel");
+        assert_eq!(out[1].outcome, FinishReason::Cancelled);
+        assert!(out[1].tokens.is_empty());
+    }
+
+    #[test]
+    fn deadline_eviction_mid_decode() {
+        let mut e = engine();
+        e.submit(GenRequest::new(0, vec![1], 1000).with_deadline(Duration::ZERO));
+        e.submit(GenRequest::new(1, vec![2], 3));
+        std::thread::sleep(Duration::from_millis(1));
+        let out = e.run_to_completion().unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].outcome, FinishReason::TimedOut);
+        assert_eq!(out[1].outcome, FinishReason::Length);
+        assert_eq!(out[1].tokens.len(), 3);
+    }
+
+    #[test]
+    fn streaming_sink_sees_every_token() {
+        let seen: Rc<RefCell<Vec<StreamEvent>>> = Rc::default();
+        let seen2 = Rc::clone(&seen);
+        let mut e = engine();
+        e.set_sink(Box::new(move |ev| seen2.borrow_mut().push(ev.clone())));
+        e.submit(GenRequest::new(7, vec![5, 6], 3));
+        let out = e.run_to_completion().unwrap();
+        let evs = seen.borrow();
+        let tokens: Vec<i32> = evs
+            .iter()
+            .filter_map(|ev| match ev {
+                StreamEvent::Token { token, .. } => Some(*token),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(tokens, out[0].tokens, "streamed tokens match the final result");
+        assert!(matches!(
+            evs.last().unwrap(),
+            StreamEvent::Finished { id: 7, outcome: FinishReason::Length, n_tokens: 3 }
+        ));
     }
 }

@@ -1,18 +1,26 @@
-//! KV-cache slot manager.
+//! KV-cache slot manager with a fixed slot pool and a free-list.
 //!
 //! The decode graph's KV tensors have a fixed batch dimension (one lane per
 //! slot — the Sec. 4.1 AOT deployment model, where graphs are compiled at
 //! fixed batch sizes); this module owns the host-side KV state per
-//! *sequence* and the
-//! slot accounting. Because PJRT literals round-trip host memory on this
-//! testbed, the cache holds each sequence's K/V rows as flat `f32` vectors
-//! (`n_layers * 2 * kv_seq * n_heads * head_dim`) that the engine gathers
-//! into batch literals per step.
+//! *sequence* and the slot accounting. Because PJRT literals round-trip
+//! host memory on this testbed, the cache holds each sequence's K/V rows as
+//! flat `f32` vectors (`n_layers * 2 * kv_seq * n_heads * head_dim`) that
+//! the engine gathers into batch literals per step.
+//!
+//! Since the continuous-batching refactor the `capacity` slot buffers are
+//! allocated once up front and *reused*: when a lane finishes, is
+//! cancelled, or times out, its slot returns to the free-list and the next
+//! admitted request takes it over at a step boundary (lowest free slot
+//! first, so slot assignment is deterministic for a given event order).
+//! Reused buffers are zeroed on [`KvCache::alloc`] — a refilled lane must
+//! never see the previous occupant's rows (property-tested).
 //!
 //! Invariants (property-tested in `rust/tests/coordinator_props.rs`):
 //! - a slot is never double-allocated;
 //! - free() returns capacity exactly once;
-//! - the set of live sequence ids equals the set of allocated slots.
+//! - the set of live sequence ids equals the set of allocated slots;
+//! - a reused slot starts fully zeroed (no stale-row leak).
 
 use std::collections::HashMap;
 
@@ -27,61 +35,122 @@ pub struct SeqKv {
     pub pos: usize,
 }
 
+/// Result of a slot allocation: which slot, and whether it is a *refill*
+/// (the slot served a previous occupant since engine start — the
+/// continuous-batching churn signal the scheduling event log records).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SlotAlloc {
+    pub slot: usize,
+    pub refill: bool,
+}
+
 pub struct KvCache {
     pub capacity: usize,
     pub n_layers: usize,
     pub kv_seq: usize,
     pub kv_row: usize, // n_heads * head_dim
-    live: HashMap<RequestId, SeqKv>,
+    /// The fixed slot pool; `slots[i]` is reused across occupants.
+    slots: Vec<SeqKv>,
+    /// Per-slot occupant (None = free).
+    owner: Vec<Option<RequestId>>,
+    /// id -> slot for the live set.
+    index: HashMap<RequestId, usize>,
+    /// Free slot indices, sorted descending so `pop()` yields the lowest.
+    free_list: Vec<usize>,
+    /// Slot has had at least one prior occupant (refill detection).
+    used_before: Vec<bool>,
 }
 
 impl KvCache {
     pub fn new(capacity: usize, n_layers: usize, kv_seq: usize, kv_row: usize) -> Self {
-        KvCache { capacity, n_layers, kv_seq, kv_row, live: HashMap::new() }
+        let plane = kv_seq * kv_row;
+        let slots = (0..capacity)
+            .map(|_| SeqKv { data: vec![vec![0.0f32; plane]; n_layers * 2], pos: 0 })
+            .collect();
+        KvCache {
+            capacity,
+            n_layers,
+            kv_seq,
+            kv_row,
+            slots,
+            owner: vec![None; capacity],
+            index: HashMap::new(),
+            free_list: (0..capacity).rev().collect(),
+            used_before: vec![false; capacity],
+        }
     }
 
     pub fn free_slots(&self) -> usize {
-        self.capacity - self.live.len()
+        self.free_list.len()
     }
 
     pub fn len(&self) -> usize {
-        self.live.len()
+        self.index.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.live.is_empty()
+        self.index.is_empty()
     }
 
     pub fn contains(&self, id: RequestId) -> bool {
-        self.live.contains_key(&id)
+        self.index.contains_key(&id)
     }
 
-    /// Allocate a zeroed sequence slot. Err if full or duplicate.
-    pub fn alloc(&mut self, id: RequestId) -> anyhow::Result<()> {
-        anyhow::ensure!(self.live.len() < self.capacity, "kv cache full");
-        anyhow::ensure!(!self.live.contains_key(&id), "slot {id} double-alloc");
-        let plane = self.kv_seq * self.kv_row;
-        let data = vec![vec![0.0f32; plane]; self.n_layers * 2];
-        self.live.insert(id, SeqKv { data, pos: 0 });
-        Ok(())
+    /// The slot currently holding sequence `id`.
+    pub fn slot_of(&self, id: RequestId) -> Option<usize> {
+        self.index.get(&id).copied()
     }
 
-    pub fn free(&mut self, id: RequestId) -> bool {
-        self.live.remove(&id).is_some()
+    /// Allocate the lowest free slot for `id`, zeroing its buffers. Err if
+    /// full or duplicate. Returns the slot index and whether it is a reuse.
+    pub fn alloc(&mut self, id: RequestId) -> anyhow::Result<SlotAlloc> {
+        anyhow::ensure!(!self.free_list.is_empty(), "kv cache full");
+        anyhow::ensure!(!self.index.contains_key(&id), "slot {id} double-alloc");
+        let slot = self.free_list.pop().unwrap();
+        let refill = self.used_before[slot];
+        let seq = &mut self.slots[slot];
+        for plane in seq.data.iter_mut() {
+            plane.fill(0.0);
+        }
+        seq.pos = 0;
+        self.owner[slot] = Some(id);
+        self.index.insert(id, slot);
+        Ok(SlotAlloc { slot, refill })
+    }
+
+    /// Release `id`'s slot back to the free-list; returns the slot index if
+    /// `id` was live.
+    pub fn free(&mut self, id: RequestId) -> Option<usize> {
+        let slot = self.index.remove(&id)?;
+        self.owner[slot] = None;
+        self.used_before[slot] = true;
+        // keep the free-list sorted descending (lowest slot pops first)
+        let at = self.free_list.partition_point(|s| *s > slot);
+        self.free_list.insert(at, slot);
+        Some(slot)
     }
 
     pub fn get(&self, id: RequestId) -> Option<&SeqKv> {
-        self.live.get(&id)
+        self.index.get(&id).map(|s| &self.slots[*s])
     }
 
     pub fn get_mut(&mut self, id: RequestId) -> Option<&mut SeqKv> {
-        self.live.get_mut(&id)
+        let slot = *self.index.get(&id)?;
+        Some(&mut self.slots[slot])
     }
 
+    /// Live sequence ids, ascending.
     pub fn ids(&self) -> Vec<RequestId> {
-        let mut v: Vec<_> = self.live.keys().copied().collect();
+        let mut v: Vec<_> = self.index.keys().copied().collect();
         v.sort_unstable();
         v
+    }
+
+    /// Live sequence ids ordered by slot index — the engine's canonical
+    /// lane order, stable under churn (a refilled lane re-enters at its
+    /// slot's position).
+    pub fn ids_by_slot(&self) -> Vec<RequestId> {
+        self.owner.iter().filter_map(|o| *o).collect()
     }
 
     /// Gather lanes `ids` into one batch KV buffer per (layer, k/v), shaped
@@ -95,7 +164,7 @@ impl KvCache {
         let mut out = vec![vec![0.0f32; batch * plane]; self.n_layers * 2];
         if batch * plane * out.len() < crate::util::par::PAR_MIN_LEN {
             for (lane, id) in ids.iter().enumerate() {
-                let seq = &self.live[id];
+                let seq = &self.slots[self.index[id]];
                 for (li, buf) in out.iter_mut().enumerate() {
                     buf[lane * plane..(lane + 1) * plane].copy_from_slice(&seq.data[li]);
                 }
@@ -104,7 +173,7 @@ impl KvCache {
             crate::util::par::for_each_chunk(&mut out, 1, |li, bufs| {
                 let buf = &mut bufs[0];
                 for (lane, id) in ids.iter().enumerate() {
-                    let seq = &self.live[id];
+                    let seq = &self.slots[self.index[id]];
                     buf[lane * plane..(lane + 1) * plane].copy_from_slice(&seq.data[li]);
                 }
             });
@@ -115,17 +184,23 @@ impl KvCache {
     /// Scatter updated batch KV back into the per-sequence state and bump
     /// positions.
     ///
-    /// One `iter_mut` pass over the slot map yields simultaneous `&mut`
+    /// One `iter_mut` pass over the slot pool yields simultaneous `&mut`
     /// borrows of the distinct live sequences, so at serving dims each
     /// (lane, sequence) copy-back runs on its own pool worker.
     pub fn scatter_batch(&mut self, ids: &[RequestId], batch: usize, planes: &[Vec<f32>]) {
         let plane = self.kv_seq * self.kv_row;
         assert_eq!(planes.len(), self.n_layers * 2);
         if batch * plane * planes.len() >= crate::util::par::PAR_MIN_LEN {
+            let owner = &self.owner;
             let mut pairs: Vec<(usize, &mut SeqKv)> = self
-                .live
+                .slots
                 .iter_mut()
-                .filter_map(|(id, seq)| ids.iter().position(|x| x == id).map(|lane| (lane, seq)))
+                .enumerate()
+                .filter_map(|(si, seq)| {
+                    owner[si]
+                        .and_then(|id| ids.iter().position(|x| *x == id))
+                        .map(|lane| (lane, seq))
+                })
                 .collect();
             // One pair per distinct live id: only equivalent to the serial
             // loop when every id resolved and none repeat — otherwise fall
@@ -145,7 +220,8 @@ impl KvCache {
         }
         for (lane, id) in ids.iter().enumerate() {
             debug_assert!(lane < batch);
-            let seq = self.live.get_mut(id).expect("scatter into missing slot");
+            let slot = *self.index.get(id).expect("scatter into missing slot");
+            let seq = &mut self.slots[slot];
             for (li, buf) in planes.iter().enumerate() {
                 seq.data[li].copy_from_slice(&buf[lane * plane..(lane + 1) * plane]);
             }
@@ -169,8 +245,8 @@ mod tests {
         c.alloc(1).unwrap();
         c.alloc(2).unwrap();
         assert_eq!(c.free_slots(), 2);
-        assert!(c.free(1));
-        assert!(!c.free(1));
+        assert!(c.free(1).is_some());
+        assert!(c.free(1).is_none());
         assert_eq!(c.free_slots(), 3);
     }
 
@@ -188,6 +264,36 @@ mod tests {
             c.alloc(id).unwrap();
         }
         assert!(c.alloc(99).is_err());
+    }
+
+    #[test]
+    fn lowest_slot_first_and_refill_flag() {
+        let mut c = cache();
+        assert_eq!(c.alloc(10).unwrap(), SlotAlloc { slot: 0, refill: false });
+        assert_eq!(c.alloc(11).unwrap(), SlotAlloc { slot: 1, refill: false });
+        assert_eq!(c.alloc(12).unwrap(), SlotAlloc { slot: 2, refill: false });
+        // free the middle slot; the next alloc reuses it and reports refill
+        assert_eq!(c.free(11), Some(1));
+        assert_eq!(c.alloc(13).unwrap(), SlotAlloc { slot: 1, refill: true });
+        assert_eq!(c.slot_of(13), Some(1));
+        assert_eq!(c.ids_by_slot(), vec![10, 13, 12]);
+    }
+
+    #[test]
+    fn reused_slot_is_zeroed() {
+        let mut c = cache();
+        c.alloc(1).unwrap();
+        let seq = c.get_mut(1).unwrap();
+        for plane in seq.data.iter_mut() {
+            plane.fill(7.5);
+        }
+        seq.pos = 5;
+        c.free(1);
+        let a = c.alloc(2).unwrap();
+        assert_eq!(a, SlotAlloc { slot: 0, refill: true });
+        let seq = c.get(2).unwrap();
+        assert_eq!(seq.pos, 0);
+        assert!(seq.data.iter().all(|p| p.iter().all(|x| *x == 0.0)), "stale rows leaked");
     }
 
     #[test]

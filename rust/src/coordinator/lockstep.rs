@@ -1,0 +1,232 @@
+//! Retained lockstep (static-cohort) reference engine.
+//!
+//! This is the serving loop the continuous-batching [`super::Engine`]
+//! replaced: admit a fixed cohort of requests, prefill them together, then
+//! decode until **every** lane in the cohort finishes before admitting the
+//! next cohort — one long request stalls the whole batch, which is exactly
+//! the inefficiency continuous batching removes.
+//!
+//! It is kept (and kept deliberately simple and independent — no shared
+//! scheduling code with `Engine`) as the correctness anchor for the
+//! refactor: because the model forward is lane-independent, a closed-loop
+//! workload with no cancellations must produce **bit-identical per-request
+//! token sequences** on both engines; only the decode interleaving may
+//! differ. `rust/tests/serving_pipeline.rs` gates this on every run.
+
+use std::collections::VecDeque;
+
+use anyhow::Result;
+
+use super::engine::{argmax, EngineConfig, StepExecutor};
+use super::request::{FinishReason, GenRequest, GenResult};
+
+/// Per-lane state within a cohort.
+struct Lane {
+    req: GenRequest,
+    prompt_len: usize,
+    generated: Vec<i32>,
+    token_s: Vec<f64>,
+    /// One `(kv_seq, row)` plane per (layer, k/v).
+    kv: Vec<Vec<f32>>,
+    pos: usize,
+    done: Option<FinishReason>,
+}
+
+/// Static-cohort lockstep engine: the pre-refactor serving loop, retained
+/// as the token-parity reference (`queue_depth`/cancellation are not
+/// supported here — it exists to replay closed-loop workloads).
+pub struct LockstepEngine<E: StepExecutor> {
+    pub exec: E,
+    pub cfg: EngineConfig,
+    queue: VecDeque<GenRequest>,
+}
+
+impl<E: StepExecutor> LockstepEngine<E> {
+    pub fn new(exec: E, cfg: EngineConfig) -> Self {
+        LockstepEngine { exec, cfg, queue: VecDeque::new() }
+    }
+
+    pub fn submit(&mut self, req: GenRequest) {
+        self.queue.push_back(req);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Smallest compiled bucket covering `lanes`, else the largest —
+    /// mirrors `Batcher::bucket_for` without sharing its state.
+    fn bucket_for(&self, lanes: usize) -> usize {
+        let sizes = self.exec.batch_sizes();
+        sizes.iter().copied().find(|b| *b >= lanes).unwrap_or(*sizes.last().unwrap())
+    }
+
+    /// Drain the queue cohort by cohort; returns results sorted by id.
+    pub fn run_to_completion(&mut self) -> Result<Vec<GenResult>> {
+        let mut results = Vec::new();
+        while !self.queue.is_empty() {
+            let cohort_cap = self.cfg.max_slots.min(*self.exec.batch_sizes().last().unwrap());
+            let n = cohort_cap.min(self.queue.len());
+            let cohort: Vec<GenRequest> = self.queue.drain(..n).collect();
+            results.extend(self.run_cohort(cohort)?);
+        }
+        results.sort_by_key(|r| r.id);
+        Ok(results)
+    }
+
+    /// Prefill one cohort, then decode until every lane finishes.
+    fn run_cohort(&mut self, cohort: Vec<GenRequest>) -> Result<Vec<GenResult>> {
+        let pl = self.exec.prefill_len();
+        let vocab = self.exec.vocab();
+        let kv_seq = self.exec.kv_seq();
+        let plane = kv_seq * self.exec.kv_row();
+        let n_planes = self.exec.n_layers() * 2;
+
+        // prefill the whole cohort in one bucketed batch
+        let batch = self.bucket_for(cohort.len());
+        let mut tokens = vec![0i32; batch * pl];
+        let mut lens = vec![1i32; batch];
+        for (i, r) in cohort.iter().enumerate() {
+            let l = r.prompt.len().min(pl);
+            tokens[i * pl..i * pl + l].copy_from_slice(&r.prompt[..l]);
+            lens[i] = l as i32;
+        }
+        let (logits, kv_planes) = self.exec.prefill(&tokens, &lens, batch)?;
+
+        let mut lanes: Vec<Lane> = Vec::with_capacity(cohort.len());
+        for (i, req) in cohort.into_iter().enumerate() {
+            let prompt_len = req.prompt.len().min(pl);
+            let kv: Vec<Vec<f32>> = (0..n_planes)
+                .map(|li| kv_planes[li][i * plane..(i + 1) * plane].to_vec())
+                .collect();
+            let first = argmax(&logits[i * vocab..(i + 1) * vocab]);
+            let t = req.arrived.elapsed().as_secs_f64();
+            let done = if first == self.cfg.eos {
+                Some(FinishReason::Eos)
+            } else if req.max_new_tokens <= 1 {
+                Some(FinishReason::Length)
+            } else {
+                None
+            };
+            lanes.push(Lane {
+                req,
+                prompt_len,
+                generated: vec![first],
+                token_s: vec![t],
+                kv,
+                pos: prompt_len,
+                done,
+            });
+        }
+
+        // lockstep decode: the cohort is not refilled — finished lanes sit
+        // idle until the slowest lane drains
+        while lanes.iter().any(|l| l.done.is_none()) {
+            let active: Vec<usize> =
+                (0..lanes.len()).filter(|i| lanes[*i].done.is_none()).collect();
+            let batch = self.bucket_for(active.len());
+            let mut tokens = vec![0i32; batch];
+            let mut pos = vec![0i32; batch];
+            let mut kv_in = vec![vec![0.0f32; batch * plane]; n_planes];
+            for (lane, i) in active.iter().enumerate() {
+                let l = &lanes[*i];
+                tokens[lane] = *l.generated.last().unwrap();
+                pos[lane] = l.pos as i32;
+                for (li, buf) in kv_in.iter_mut().enumerate() {
+                    buf[lane * plane..(lane + 1) * plane].copy_from_slice(&l.kv[li]);
+                }
+            }
+            let (logits, kv_out) = self.exec.decode(&tokens, &pos, &kv_in, batch)?;
+            for (lane, i) in active.iter().enumerate() {
+                let l = &mut lanes[*i];
+                for (li, buf) in kv_out.iter().enumerate() {
+                    l.kv[li].copy_from_slice(&buf[lane * plane..(lane + 1) * plane]);
+                }
+                l.pos += 1;
+                let next = argmax(&logits[lane * vocab..(lane + 1) * vocab]);
+                l.generated.push(next);
+                l.token_s.push(l.req.arrived.elapsed().as_secs_f64());
+                l.done = if next == self.cfg.eos {
+                    Some(FinishReason::Eos)
+                } else if l.generated.len() >= l.req.max_new_tokens {
+                    Some(FinishReason::Length)
+                } else if l.prompt_len + l.generated.len() >= kv_seq {
+                    Some(FinishReason::KvLimit)
+                } else {
+                    None
+                };
+            }
+        }
+
+        Ok(lanes
+            .into_iter()
+            .map(|l| GenResult {
+                id: l.req.id,
+                prompt_len: l.prompt_len,
+                ttft_s: l.token_s.first().copied().unwrap_or(0.0),
+                total_s: l.req.arrived.elapsed().as_secs_f64(),
+                outcome: l.done.unwrap(),
+                tokens: l.generated,
+                token_s: l.token_s,
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::engine::MockExecutor;
+    use super::*;
+
+    fn engine() -> LockstepEngine<MockExecutor> {
+        LockstepEngine::new(
+            MockExecutor::default(),
+            EngineConfig { max_slots: 4, eos: -1, ..Default::default() },
+        )
+    }
+
+    #[test]
+    fn single_request_matches_mock_semantics() {
+        let mut e = engine();
+        e.submit(GenRequest::new(1, vec![5, 6], 4));
+        let out = e.run_to_completion().unwrap();
+        assert_eq!(out[0].tokens, vec![11, 12, 13, 14]);
+        assert_eq!(out[0].outcome, FinishReason::Length);
+    }
+
+    #[test]
+    fn cohorts_drain_everything() {
+        let mut e = engine();
+        for id in 0..10 {
+            e.submit(GenRequest::new(id, vec![id as i32], 3));
+        }
+        let out = e.run_to_completion().unwrap();
+        assert_eq!(out.len(), 10);
+        for (i, r) in out.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+            assert_eq!(r.tokens.len(), 3);
+        }
+    }
+
+    #[test]
+    fn mixed_lengths_cohort_waits_for_slowest() {
+        let mut e = engine();
+        e.submit(GenRequest::new(0, vec![1], 2));
+        e.submit(GenRequest::new(1, vec![2], 9));
+        let out = e.run_to_completion().unwrap();
+        assert_eq!(out[0].tokens.len(), 2);
+        assert_eq!(out[1].tokens.len(), 9);
+    }
+
+    #[test]
+    fn eos_finishes_lane() {
+        let mut e = LockstepEngine::new(
+            MockExecutor::default(),
+            EngineConfig { max_slots: 2, eos: 12, ..Default::default() },
+        );
+        e.submit(GenRequest::new(1, vec![5, 6], 10));
+        let out = e.run_to_completion().unwrap();
+        assert_eq!(out[0].tokens, vec![11, 12]);
+        assert_eq!(out[0].outcome, FinishReason::Eos);
+    }
+}

@@ -1,33 +1,40 @@
 //! L3 coordinator: the serving stack that drives the AOT-compiled decode /
-//! prefill graphs — request router, continuous batcher, KV-slot manager,
-//! and the engine loop (std-thread + channels; tokio is not vendorable
-//! offline, and a single-node CPU serving loop does not need it).
+//! prefill graphs — request router, admission layer, KV-slot manager, and
+//! the continuous-batching engine loop (std-thread + channels; tokio is
+//! not vendorable offline, and a single-node CPU serving loop does not
+//! need it).
 //!
 //! Shape of the system (vLLM-style, scaled to this testbed):
 //!
 //! ```text
 //!  clients ──▶ Router ──▶ admission queue ──▶ Batcher ──▶ Engine step loop
-//!                 ▲                              │            │
-//!                 └──── completions ◀────────────┴── KvCache ◀┘
+//!                 ▲      (bounded, deadlines,    │            │
+//!                 │       cancel, backpressure)  │            ├─▶ TokenSink
+//!                 └──── results ◀────────────────┴── KvCache ◀┘   (stream)
 //! ```
 //!
-//! The engine interleaves prefill and decode: each iteration admits up to
-//! one prefill batch of waiting requests (if slots are free), then runs one
-//! decode step over all running sequences, bucketed to the compiled batch
-//! sizes (1/2/4/8). The paper's runtime claim (Fig. 4) falls out here: all
-//! quantized methods share one decode executable, so their throughput is
-//! identical by construction and measured as such.
+//! The engine is **continuously batched**: requests join and leave
+//! mid-decode. Each iteration sweeps deadlines/cancellations (evicted
+//! lanes free their KV slot immediately), admits waiting requests into the
+//! freed slots (prefill), then runs one decode step over all running
+//! lanes, re-bucketed per step to the compiled batch sizes (1/2/4/8). The
+//! pre-refactor static-cohort loop survives as [`LockstepEngine`], the
+//! token-parity reference. The paper's runtime claim (Fig. 4) falls out
+//! here: all quantized methods share one decode executable, so their
+//! throughput is identical by construction and measured as such.
 
 pub mod batcher;
 pub mod engine;
 pub mod kv_cache;
+pub mod lockstep;
 pub mod request;
 pub mod router;
 pub mod scheduler;
 
-pub use batcher::Batcher;
+pub use batcher::{Batcher, PushOutcome};
 pub use engine::{Engine, EngineConfig, EngineStats};
 pub use kv_cache::KvCache;
-pub use request::{GenRequest, GenResult, RequestId};
+pub use lockstep::LockstepEngine;
+pub use request::{FinishReason, GenRequest, GenResult, RequestId, StreamEvent, TokenSink};
 pub use router::Router;
-pub use scheduler::{SchedulerPolicy, StepPlan};
+pub use scheduler::{SchedEvent, SchedulerPolicy, StepPlan};

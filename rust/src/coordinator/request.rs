@@ -1,10 +1,54 @@
-//! Request / result types shared across the serving stack.
+//! Request / result / stream-event types shared across the serving stack.
+//!
+//! Every request that enters the admission layer leaves it with exactly one
+//! [`GenResult`] whose [`FinishReason`] says how: generated to EOS/length,
+//! evicted on deadline, cancelled, or rejected at the queue. Conservation
+//! of this invariant (no request lost, duplicated, or reordered within a
+//! lane) is property-tested in `rust/tests/coordinator_props.rs`.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 pub type RequestId = u64;
 
-/// A generation request entering the router.
+/// Why a request's lifecycle ended — the admission/decode/stream pipeline's
+/// terminal states.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FinishReason {
+    /// Generated the EOS token.
+    Eos,
+    /// Hit `max_new_tokens`.
+    Length,
+    /// Hit the KV sequence capacity.
+    KvLimit,
+    /// Cancelled by the client (mid-queue or mid-decode).
+    Cancelled,
+    /// Deadline expired (mid-queue or mid-decode); partial tokens kept.
+    TimedOut,
+    /// Refused at admission: the bounded queue was full (backpressure).
+    RejectedQueueFull,
+}
+
+impl FinishReason {
+    /// True for natural completions (the request got its full generation
+    /// opportunity): EOS / length / KV-capacity stops.
+    pub fn is_complete(self) -> bool {
+        matches!(self, FinishReason::Eos | FinishReason::Length | FinishReason::KvLimit)
+    }
+
+    /// Short stable label (events, JSON reports).
+    pub fn label(self) -> &'static str {
+        match self {
+            FinishReason::Eos => "eos",
+            FinishReason::Length => "length",
+            FinishReason::KvLimit => "kv_limit",
+            FinishReason::Cancelled => "cancelled",
+            FinishReason::TimedOut => "timed_out",
+            FinishReason::RejectedQueueFull => "rejected_queue_full",
+        }
+    }
+}
+
+/// A generation request entering the admission queue.
 #[derive(Clone, Debug)]
 pub struct GenRequest {
     pub id: RequestId,
@@ -13,28 +57,122 @@ pub struct GenRequest {
     /// Greedy decoding when None; top-k sampling seed otherwise.
     pub sample_seed: Option<u64>,
     pub arrived: Instant,
+    /// Optional latency SLO: the request is evicted with
+    /// [`FinishReason::TimedOut`] once `arrived + deadline` passes, whether
+    /// it is still queued or already decoding.
+    pub deadline: Option<Duration>,
 }
 
 impl GenRequest {
     pub fn new(id: RequestId, prompt: Vec<i32>, max_new_tokens: usize) -> Self {
-        GenRequest { id, prompt, max_new_tokens, sample_seed: None, arrived: Instant::now() }
+        GenRequest {
+            id,
+            prompt,
+            max_new_tokens,
+            sample_seed: None,
+            arrived: Instant::now(),
+            deadline: None,
+        }
+    }
+
+    /// Attach a deadline relative to arrival.
+    pub fn with_deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Has this request's deadline passed?
+    pub fn expired(&self) -> bool {
+        self.deadline.is_some_and(|d| self.arrived.elapsed() > d)
     }
 }
 
-/// A finished generation.
+/// A finished lifecycle: one per submitted request, whatever the outcome.
 #[derive(Clone, Debug)]
 pub struct GenResult {
     pub id: RequestId,
     pub prompt_len: usize,
+    /// Generated tokens (possibly partial for TimedOut/Cancelled, empty
+    /// for queue-level outcomes).
     pub tokens: Vec<i32>,
-    /// Time from arrival to first generated token.
+    /// How the lifecycle ended.
+    pub outcome: FinishReason,
+    /// Arrival-relative emission time of each generated token (seconds);
+    /// `token_s[0]` is the TTFT sample, consecutive differences are the
+    /// inter-token latency samples.
+    pub token_s: Vec<f64>,
+    /// Time from arrival to first generated token (0 if none).
     pub ttft_s: f64,
-    /// Time from arrival to completion.
+    /// Time from arrival to the end of the lifecycle.
     pub total_s: f64,
 }
 
 impl GenResult {
     pub fn decode_tokens(&self) -> usize {
         self.tokens.len()
+    }
+
+    /// Inter-token latency samples (seconds): differences of consecutive
+    /// token emission times. Empty for < 2 tokens.
+    pub fn inter_token_s(&self) -> Vec<f64> {
+        self.token_s.windows(2).map(|w| (w[1] - w[0]).max(0.0)).collect()
+    }
+}
+
+/// Per-token streaming event, delivered to the engine's sink as tokens are
+/// produced — the serving front-end's streaming surface (collect-at-end
+/// [`GenResult`]s remain the batch/bench surface).
+#[derive(Clone, Debug, PartialEq)]
+pub enum StreamEvent {
+    /// `index`-th generated token of request `id` at arrival-relative
+    /// time `t_s`.
+    Token { id: RequestId, index: usize, token: i32, t_s: f64 },
+    /// Request `id` left the pipeline; `n_tokens` tokens were streamed.
+    Finished { id: RequestId, outcome: FinishReason, n_tokens: usize },
+}
+
+/// Boxed per-token callback (`None` = no streaming consumer).
+pub type TokenSink = Box<dyn FnMut(&StreamEvent)>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deadline_expiry() {
+        let r = GenRequest::new(1, vec![1], 4);
+        assert!(!r.expired(), "no deadline never expires");
+        let r = r.with_deadline(Duration::from_secs(3600));
+        assert!(!r.expired());
+        let r = GenRequest::new(2, vec![1], 4).with_deadline(Duration::ZERO);
+        std::thread::sleep(Duration::from_millis(1));
+        assert!(r.expired());
+    }
+
+    #[test]
+    fn inter_token_samples() {
+        let r = GenResult {
+            id: 1,
+            prompt_len: 2,
+            tokens: vec![10, 11, 12],
+            outcome: FinishReason::Length,
+            token_s: vec![0.010, 0.013, 0.019],
+            ttft_s: 0.010,
+            total_s: 0.019,
+        };
+        let itl = r.inter_token_s();
+        assert_eq!(itl.len(), 2);
+        assert!((itl[0] - 0.003).abs() < 1e-12 && (itl[1] - 0.006).abs() < 1e-12);
+    }
+
+    #[test]
+    fn outcome_classes() {
+        assert!(FinishReason::Eos.is_complete());
+        assert!(FinishReason::Length.is_complete());
+        assert!(FinishReason::KvLimit.is_complete());
+        assert!(!FinishReason::TimedOut.is_complete());
+        assert!(!FinishReason::Cancelled.is_complete());
+        assert!(!FinishReason::RejectedQueueFull.is_complete());
+        assert_eq!(FinishReason::RejectedQueueFull.label(), "rejected_queue_full");
     }
 }

@@ -7,8 +7,16 @@
 //! whenever slots are free (prefill batches amortize well), then decode all
 //! running lanes, oldest first, in buckets. This mirrors vLLM's default
 //! behaviour at this scale.
+//!
+//! Alongside the per-step plan, this module defines the scheduling **event
+//! log** ([`SchedEvent`]): every admit / refill / evict / finish / reject
+//! decision the engine makes, in order. Backends must agree on this log —
+//! `runtime::sched_fingerprint` hashes it and the parity tests compare the
+//! hashes, so a native and an XLA engine driven by the same workload are
+//! provably making the same scheduling decisions even when their lane
+//! arithmetic runs on different devices.
 
-use super::request::RequestId;
+use super::request::{FinishReason, RequestId};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SchedulerPolicy {
@@ -16,6 +24,48 @@ pub enum SchedulerPolicy {
     PrefillPriority,
     /// Only admit when fewer than `low_watermark` lanes are running.
     DecodePriority { low_watermark: usize },
+}
+
+/// One scheduling decision, in engine order. The full log is the engine's
+/// scheduling trace; [`crate::runtime::sched_fingerprint`] folds it into a
+/// u64 for cross-backend lockstep checks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedEvent {
+    /// Request `id` entered KV slot `slot`; `refill` is true when the slot
+    /// is being reused after a previous occupant left mid-run (the
+    /// continuous-batching churn path).
+    Admit { id: RequestId, slot: usize, refill: bool },
+    /// Request `id` left slot `slot` with a terminal `reason` — natural
+    /// completion (Eos/Length/KvLimit) or mid-decode eviction
+    /// (Cancelled/TimedOut).
+    Evict { id: RequestId, slot: usize, reason: FinishReason },
+    /// Request `id` never reached a slot: rejected at admission or removed
+    /// from the queue (cancel / deadline expiry).
+    Drop { id: RequestId, reason: FinishReason },
+}
+
+impl SchedEvent {
+    /// Stable (tag, id, a, b) encoding used by the fingerprint hash.
+    pub fn encode(self) -> (u8, u64, u64, u64) {
+        match self {
+            SchedEvent::Admit { id, slot, refill } => (1, id, slot as u64, refill as u64),
+            SchedEvent::Evict { id, slot, reason } => {
+                (2, id, slot as u64, reason.label().len() as u64 ^ hash_label(reason))
+            }
+            SchedEvent::Drop { id, reason } => (3, id, hash_label(reason), 0),
+        }
+    }
+}
+
+fn hash_label(reason: FinishReason) -> u64 {
+    // FNV-1a over the stable label — keeps the encoding independent of
+    // enum discriminant order.
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in reason.label().bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
 }
 
 /// The plan for one engine iteration.
@@ -78,5 +128,26 @@ mod tests {
     fn no_waiting_no_admit() {
         let p = plan_step(SchedulerPolicy::PrefillPriority, 0, &[7], 3, 8);
         assert_eq!(p.admit, 0);
+    }
+
+    #[test]
+    fn event_encoding_distinguishes_variants() {
+        let a = SchedEvent::Admit { id: 1, slot: 0, refill: false };
+        let b = SchedEvent::Admit { id: 1, slot: 0, refill: true };
+        let c = SchedEvent::Evict { id: 1, slot: 0, reason: FinishReason::Eos };
+        let d = SchedEvent::Drop { id: 1, reason: FinishReason::Cancelled };
+        let codes = [a.encode(), b.encode(), c.encode(), d.encode()];
+        for i in 0..codes.len() {
+            for j in (i + 1)..codes.len() {
+                assert_ne!(codes[i], codes[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn evict_reasons_distinct() {
+        let eos = SchedEvent::Evict { id: 9, slot: 2, reason: FinishReason::Eos };
+        let timeout = SchedEvent::Evict { id: 9, slot: 2, reason: FinishReason::TimedOut };
+        assert_ne!(eos.encode(), timeout.encode());
     }
 }

@@ -86,6 +86,87 @@ pub fn serving_workload(
         .collect()
 }
 
+/// One payload class for the open-loop serving benchmark: a named
+/// (prompt-length range, decode budget) bucket with a sampling weight. SLO
+/// percentiles are reported per class so a tail-heavy class can't hide
+/// behind a chatty one.
+#[derive(Clone, Debug)]
+pub struct PayloadClass {
+    pub name: &'static str,
+    pub min_prompt: usize,
+    pub max_prompt: usize,
+    pub max_new: usize,
+    /// Relative sampling weight (need not be normalized).
+    pub weight: u64,
+}
+
+/// The default class mix: mostly short interactive turns, some mid-size,
+/// a long-decode tail — the shape that makes lockstep cohorts stall and
+/// continuous batching win. Prompt ranges are clamped to the model's
+/// prefill window by [`open_loop_workload`].
+pub fn default_payload_classes() -> Vec<PayloadClass> {
+    vec![
+        PayloadClass { name: "short", min_prompt: 4, max_prompt: 8, max_new: 8, weight: 6 },
+        PayloadClass { name: "medium", min_prompt: 8, max_prompt: 16, max_new: 16, weight: 3 },
+        PayloadClass { name: "long", min_prompt: 12, max_prompt: 24, max_new: 48, weight: 1 },
+    ]
+}
+
+/// One request of an open-loop arrival schedule.
+#[derive(Clone, Debug)]
+pub struct OpenLoopRequest {
+    /// Arrival time, seconds from benchmark start (Poisson process).
+    pub arrival_s: f64,
+    /// Index into the class list this request was drawn from.
+    pub class: usize,
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+}
+
+/// Open-loop serving workload: `n` requests with exponential inter-arrival
+/// gaps at `rate` req/s (a Poisson arrival process — the open-loop load
+/// model where arrivals do not wait for completions), each drawn from
+/// `classes` by weight. Prompt lengths clamp to `[1, max_prompt]`.
+/// Deterministic in `seed`.
+pub fn open_loop_workload(
+    n: usize,
+    rate: f64,
+    max_prompt: usize,
+    classes: &[PayloadClass],
+    seed: u64,
+) -> Vec<OpenLoopRequest> {
+    assert!(rate > 0.0, "arrival rate must be positive");
+    assert!(!classes.is_empty());
+    let total_w: u64 = classes.iter().map(|c| c.weight).sum();
+    assert!(total_w > 0, "class weights must not all be zero");
+    let mut rng = Pcg64::seed(seed);
+    let mut t = 0.0f64;
+    (0..n)
+        .map(|_| {
+            // exponential gap: -ln(1-u)/rate, u in [0,1)
+            t += -(1.0 - rng.f64()).ln() / rate;
+            let mut pick = rng.below(total_w);
+            let mut class = 0usize;
+            for (i, c) in classes.iter().enumerate() {
+                if pick < c.weight {
+                    class = i;
+                    break;
+                }
+                pick -= c.weight;
+            }
+            let c = &classes[class];
+            let lo = c.min_prompt.min(max_prompt).max(1);
+            let hi = c.max_prompt.min(max_prompt).max(lo);
+            let len = lo + rng.below((hi - lo) as u64 + 1) as usize;
+            let mut prompt = vec![1i32]; // BOS
+            for _ in 1..len {
+                prompt.push(32 + rng.below(224) as i32);
+            }
+            OpenLoopRequest { arrival_s: t, class, prompt, max_new: c.max_new }
+        })
+        .collect()
+}
+
 /// Export a `BTreeMap<String, Tensor>` helper for writing results (used by
 /// examples that persist intermediate tensors).
 pub fn tensor_map(items: Vec<(&str, Tensor)>) -> BTreeMap<String, Tensor> {
@@ -110,5 +191,63 @@ mod tests {
     #[test]
     fn workload_deterministic() {
         assert_eq!(serving_workload(4, 16, 8, 9), serving_workload(4, 16, 8, 9));
+    }
+
+    #[test]
+    fn open_loop_arrivals_increase_monotonically() {
+        let classes = default_payload_classes();
+        let w = open_loop_workload(64, 50.0, 32, &classes, 11);
+        assert_eq!(w.len(), 64);
+        let mut prev = 0.0;
+        for r in &w {
+            assert!(r.arrival_s > prev, "arrival times strictly increase");
+            prev = r.arrival_s;
+            assert!(r.class < classes.len());
+            let c = &classes[r.class];
+            assert!(r.prompt.len() >= c.min_prompt.min(32));
+            assert!(r.prompt.len() <= c.max_prompt.min(32));
+            assert_eq!(r.prompt[0], 1);
+            assert_eq!(r.max_new, c.max_new);
+        }
+    }
+
+    #[test]
+    fn open_loop_rate_scales_gaps() {
+        let classes = default_payload_classes();
+        let slow = open_loop_workload(200, 10.0, 32, &classes, 3);
+        let fast = open_loop_workload(200, 100.0, 32, &classes, 3);
+        // same seed, 10x the rate => ~10x shorter schedule
+        let ratio = slow.last().unwrap().arrival_s / fast.last().unwrap().arrival_s;
+        assert!((ratio - 10.0).abs() < 1e-6, "ratio {ratio}");
+    }
+
+    #[test]
+    fn open_loop_deterministic_and_mixed() {
+        let classes = default_payload_classes();
+        let a = open_loop_workload(100, 25.0, 32, &classes, 7);
+        let b = open_loop_workload(100, 25.0, 32, &classes, 7);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.class, y.class);
+            assert!((x.arrival_s - y.arrival_s).abs() < 1e-15);
+        }
+        // weighted mix actually samples every class at n=100
+        for i in 0..classes.len() {
+            assert!(a.iter().any(|r| r.class == i), "class {i} never sampled");
+        }
+    }
+
+    #[test]
+    fn prompt_ranges_clamp_to_prefill_window() {
+        let classes = vec![PayloadClass {
+            name: "wide",
+            min_prompt: 10,
+            max_prompt: 100,
+            max_new: 4,
+            weight: 1,
+        }];
+        let w = open_loop_workload(32, 40.0, 16, &classes, 5);
+        assert!(w.iter().all(|r| r.prompt.len() <= 16));
     }
 }

@@ -4,6 +4,8 @@
 //!   info                          artifact + model summary
 //!   eval   --weights TAG --quant TAG [--ppl-only] [--backend B]
 //!   serve  --weights TAG --quant TAG [--requests N] [--slots N] [--max-new N] [--backend B]
+//!          [--open-loop] [--arrival-rate R] [--deadline-ms MS] [--queue-depth N]
+//!          [--seed N] [--synthetic]
 //!   learn  [--steps N] [--lr F] [--block N] [--bits N] [--features model|outlier|dirac]
 //!          [--sites residual,t2,ffn] [--heads 0,1] [--save-spec PATH]
 //!   fold   --weights TAG --spec PATH --out DIR [--tag TAG]
@@ -33,10 +35,10 @@ use latmix::mx::{MxConfig, pack::PackedMx};
 use latmix::runtime::{Backend, NativeBackend};
 #[cfg(feature = "backend-xla")]
 use latmix::runtime::Runtime;
-use latmix::server::run_serving_native;
+use latmix::server::{run_open_loop_native, run_serving_native, serve_open_loop};
 #[cfg(feature = "backend-xla")]
-use latmix::server::run_serving;
-use latmix::server::ServeReport;
+use latmix::server::{run_open_loop, run_serving};
+use latmix::server::{OpenLoopConfig, ServeReport, ServingReport};
 use latmix::transform::{TransformSite, TransformSpec};
 
 fn main() -> Result<()> {
@@ -55,6 +57,8 @@ fn main() -> Result<()> {
                  \n\
                  eval   --weights TAG --quant TAG [--ppl-only] [--backend xla|native]\n\
                  serve  --weights TAG --quant TAG [--requests N] [--slots N] [--max-new N] [--backend xla|native]\n\
+                 \x20       [--open-loop] [--arrival-rate R] [--deadline-ms MS] [--queue-depth N]\n\
+                 \x20       [--seed N] [--synthetic]\n\
                  learn  [--steps N] [--lr F] [--block N] [--bits 4|6|8] [--format FMT]\n\
                  \x20       [--features model|outlier|dirac] [--layer N] [--d N] [--rows N]\n\
                  \x20       [--init bd_hadamard|hadamard|identity] [--seed N]\n\
@@ -146,21 +150,33 @@ fn eval_on<B: Backend>(rt: &B, args: &Args) -> Result<()> {
 }
 
 fn serve(args: &Args) -> Result<()> {
+    if args.flag("open-loop") {
+        return serve_open(args);
+    }
     let d = desc()?;
     let wtag = args.opt("weights").unwrap_or("fp16").to_string();
     let qtag = args.opt("quant").unwrap_or("fp").to_string();
     let requests = args.opt_usize("requests", 16);
     let slots = args.opt_usize("slots", 8);
     let max_new = args.opt_usize("max-new", 32);
+    let seed = args.opt_usize("seed", 42) as u64;
     let rep: ServeReport = match backend_name(args) {
-        "native" => run_serving_native(&d, &qtag, &wtag, requests, max_new, slots, 42)?,
+        "native" => run_serving_native(&d, &qtag, &wtag, requests, max_new, slots, seed)?,
         #[cfg(feature = "backend-xla")]
         "xla" => {
             let rt = Runtime::new(d)?;
-            run_serving(&rt, &qtag, &wtag, requests, max_new, slots, 42)?
+            run_serving(&rt, &qtag, &wtag, requests, max_new, slots, seed)?
         }
         other => return Err(unknown_backend(other)),
     };
+    if rep.is_empty() {
+        println!(
+            "serve: 0 requests completed (graph={} weights={}) — no latency percentiles \
+             to report; run with --requests N > 0",
+            rep.tag, rep.weights
+        );
+        return Ok(());
+    }
     println!(
         "graph={} weights={} requests={} wall={:.2}s decode_tok/s={:.1} total_tok/s={:.1}",
         rep.tag, rep.weights, rep.requests, rep.wall_s, rep.decode_tok_per_s, rep.total_tok_per_s
@@ -169,6 +185,95 @@ fn serve(args: &Args) -> Result<()> {
         "ttft p50={:.1}ms p99={:.1}ms  latency p50={:.1}ms p99={:.1}ms",
         rep.ttft_p50_ms, rep.ttft_p99_ms, rep.latency_p50_ms, rep.latency_p99_ms
     );
+    Ok(())
+}
+
+/// `latmix serve --open-loop`: Poisson arrivals at `--arrival-rate` req/s
+/// over the weighted payload classes, with optional `--queue-depth`
+/// backpressure and `--deadline-ms` SLO eviction. Writes the per-class
+/// p50/p90/p99 TTFT + inter-token latency snapshot to `BENCH_serving.json`.
+/// `--synthetic` serves deterministic latmix-tiny weights with no artifact
+/// directory at all (the CI smoke path).
+fn serve_open(args: &Args) -> Result<()> {
+    let cfg = OpenLoopConfig {
+        n_requests: args.opt_usize("requests", 64),
+        arrival_rate: args.opt_f64("arrival-rate", 100.0),
+        max_slots: args.opt_usize("slots", 8),
+        queue_depth: args
+            .opt("queue-depth")
+            .map(|d| d.parse::<usize>().with_context(|| format!("bad --queue-depth {d:?}")))
+            .transpose()?,
+        deadline: args
+            .opt("deadline-ms")
+            .map(|m| -> Result<_> {
+                let ms: f64 = m.parse().with_context(|| format!("bad --deadline-ms {m:?}"))?;
+                anyhow::ensure!(ms >= 0.0, "--deadline-ms must be >= 0");
+                Ok(std::time::Duration::from_secs_f64(ms / 1e3))
+            })
+            .transpose()?,
+        seed: args.opt_usize("seed", 42) as u64,
+    };
+    anyhow::ensure!(cfg.arrival_rate > 0.0, "--arrival-rate must be > 0");
+    let qtag = args.opt("quant").unwrap_or("fp").to_string();
+    let rep: ServingReport = if args.flag("synthetic") {
+        use latmix::coordinator::engine::NativeExecutor;
+        let exec =
+            NativeExecutor::synthetic(NativeDims::latmix_tiny(), &qtag, vec![1, 2, 4, 8], cfg.seed)?;
+        serve_open_loop(exec, &qtag, "synthetic", "native", &cfg)?
+    } else {
+        let d = desc()?;
+        let wtag = args.opt("weights").unwrap_or("fp16").to_string();
+        match backend_name(args) {
+            "native" => run_open_loop_native(&d, &qtag, &wtag, &cfg)?,
+            #[cfg(feature = "backend-xla")]
+            "xla" => {
+                let rt = Runtime::new(d)?;
+                run_open_loop(&rt, &qtag, &wtag, &cfg)?
+            }
+            other => return Err(unknown_backend(other)),
+        }
+    };
+    if rep.requests == 0 {
+        println!("serve --open-loop: 0 requests submitted — nothing to report");
+        return Ok(());
+    }
+    println!(
+        "open-loop: backend={} graph={} weights={} rate={:.1}req/s requests={} lost={} \
+         wall={:.2}s decode_tok/s={:.1}",
+        rep.backend,
+        rep.tag,
+        rep.weights,
+        rep.arrival_rate,
+        rep.requests,
+        rep.lost,
+        rep.wall_s,
+        rep.decode_tok_per_s
+    );
+    let mut table = latmix::bench::Table::new(
+        "serving_slo",
+        "Per-class SLO percentiles (open-loop)",
+        &[
+            "class", "reqs", "done", "rej", "timeout", "ttft p50/p90/p99 ms",
+            "itl p50/p90/p99 ms",
+        ],
+    );
+    for c in &rep.classes {
+        table.row(vec![
+            c.class.clone(),
+            c.requests.to_string(),
+            c.completed.to_string(),
+            c.rejected.to_string(),
+            c.timed_out.to_string(),
+            format!("{:.2} / {:.2} / {:.2}", c.ttft_ms[0], c.ttft_ms[1], c.ttft_ms[2]),
+            format!("{:.2} / {:.2} / {:.2}", c.itl_ms[0], c.itl_ms[1], c.itl_ms[2]),
+        ]);
+    }
+    table.emit();
+    let path = rep.emit();
+    println!("serving snapshot -> {}", path.display());
+    if rep.lost > 0 {
+        anyhow::bail!("{} request(s) lost — conservation bug in the serving pipeline", rep.lost);
+    }
     Ok(())
 }
 

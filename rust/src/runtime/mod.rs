@@ -28,6 +28,7 @@ pub use pjrt::{f32_literal, i32_literal, literal_to_f32, tensor_to_literal, Runt
 
 use anyhow::Result;
 
+use crate::coordinator::SchedEvent;
 use crate::model::{ModelDesc, WeightSet};
 
 /// A graph-execution backend: stages weight sets once, then runs the
@@ -103,12 +104,49 @@ pub fn decode_batch_sizes(graphs: &[String], tag: &str) -> Vec<usize> {
     out
 }
 
+/// Fold a scheduling event log into one u64 (FNV-1a over each event's
+/// stable encoding) — the cross-backend lockstep contract for the
+/// continuous-batching engine. Two engines that admit, refill, and evict
+/// the same requests into the same slots in the same order produce the
+/// same fingerprint, whatever device ran the lane arithmetic; the parity
+/// suites (`backend_parity.rs`, `integration_runtime.rs`) compare these
+/// alongside the token streams.
+pub fn sched_fingerprint(events: &[SchedEvent]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut mix = |v: u64| {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    };
+    for ev in events {
+        let (tag, id, a, b) = ev.encode();
+        mix(tag as u64);
+        mix(id);
+        mix(a);
+        mix(b);
+    }
+    h
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::FinishReason;
 
     fn graphs(names: &[&str]) -> Vec<String> {
         names.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn fingerprint_sensitive_to_order_and_content() {
+        let a = SchedEvent::Admit { id: 1, slot: 0, refill: false };
+        let b = SchedEvent::Evict { id: 1, slot: 0, reason: FinishReason::Eos };
+        assert_eq!(sched_fingerprint(&[a, b]), sched_fingerprint(&[a, b]));
+        assert_ne!(sched_fingerprint(&[a, b]), sched_fingerprint(&[b, a]));
+        assert_ne!(sched_fingerprint(&[a]), sched_fingerprint(&[a, b]));
+        let c = SchedEvent::Evict { id: 1, slot: 0, reason: FinishReason::TimedOut };
+        assert_ne!(sched_fingerprint(&[a, b]), sched_fingerprint(&[a, c]));
     }
 
     #[test]

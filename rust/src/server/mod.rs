@@ -1,26 +1,43 @@
-//! Serving front-end: drives the engine with a synthetic request workload
+//! Serving front-end: drives the engine with synthetic request workloads
 //! and reports throughput/latency — the Fig. 4 measurement path and the
-//! `latmix serve` subcommand. The measurement loop is generic over
-//! [`StepExecutor`], so the same closed-loop benchmark runs on the PJRT
-//! executor (`backend-xla` feature) and the pure-Rust [`NativeExecutor`].
+//! `latmix serve` subcommand. The measurement loops are generic over
+//! [`StepExecutor`], so the same benchmarks run on the PJRT executor
+//! (`backend-xla` feature) and the pure-Rust [`NativeExecutor`].
+//!
+//! Two load models:
+//!
+//! - **closed-loop** ([`serve_with_executor`]): the whole workload is
+//!   staged up front and the engine drains it — an offline-throughput
+//!   measurement where latency is dominated by queueing behind the batch.
+//! - **open-loop** ([`serve_open_loop`]): requests arrive on a Poisson
+//!   schedule that does not wait for completions, drawn from weighted
+//!   payload classes, with optional queue bound and per-request deadline.
+//!   This exercises the full admission/decode/stream pipeline and reports
+//!   p50/p90/p99 TTFT + inter-token latency **per class** into
+//!   `BENCH_serving.json` (schema documented in README.md).
+
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::coordinator::engine::{NativeExecutor, StepExecutor};
 #[cfg(feature = "backend-xla")]
 use crate::coordinator::engine::XlaExecutor;
-use crate::coordinator::{Engine, EngineConfig, GenRequest, GenResult};
-use crate::data::serving_workload;
+use crate::coordinator::{Engine, EngineConfig, FinishReason, GenRequest, GenResult};
+use crate::data::{default_payload_classes, open_loop_workload, serving_workload, PayloadClass};
 use crate::model::{ModelDesc, WeightSet};
 #[cfg(feature = "backend-xla")]
 use crate::runtime::Runtime;
 use crate::util::Summary;
 
-/// Aggregated serving metrics for one run.
+/// Aggregated serving metrics for one closed-loop run. Percentiles are
+/// computed over **completed** requests only (EOS/length/KV-limit);
+/// rejected or evicted lifecycles have no meaningful latency sample.
 #[derive(Clone, Debug)]
 pub struct ServeReport {
     pub tag: String,
     pub weights: String,
+    /// Completed requests (the percentile population).
     pub requests: usize,
     pub wall_s: f64,
     pub decode_tok_per_s: f64,
@@ -38,10 +55,28 @@ impl ServeReport {
         results: &[GenResult],
         stats: &crate::coordinator::EngineStats,
     ) -> ServeReport {
+        let completed: Vec<&GenResult> = results.iter().filter(|r| r.outcome.is_complete()).collect();
+        if completed.is_empty() {
+            // Explicit zero-request report: percentiles over an empty
+            // sample set are meaningless, so report zeros instead of
+            // whatever an empty Summary would produce.
+            return ServeReport {
+                tag: tag.to_string(),
+                weights: weights.to_string(),
+                requests: 0,
+                wall_s: stats.wall_s,
+                decode_tok_per_s: 0.0,
+                total_tok_per_s: 0.0,
+                ttft_p50_ms: 0.0,
+                ttft_p99_ms: 0.0,
+                latency_p50_ms: 0.0,
+                latency_p99_ms: 0.0,
+            };
+        }
         let mut ttft = Summary::new();
         let mut lat = Summary::new();
         let mut total_toks = 0usize;
-        for r in results {
+        for r in &completed {
             ttft.push(r.ttft_s * 1e3);
             lat.push(r.total_s * 1e3);
             total_toks += r.prompt_len + r.tokens.len();
@@ -49,7 +84,7 @@ impl ServeReport {
         ServeReport {
             tag: tag.to_string(),
             weights: weights.to_string(),
-            requests: results.len(),
+            requests: completed.len(),
             wall_s: stats.wall_s,
             decode_tok_per_s: stats.decode_tok_per_s(),
             total_tok_per_s: total_toks as f64 / stats.wall_s.max(1e-9),
@@ -58,6 +93,10 @@ impl ServeReport {
             latency_p50_ms: lat.percentile(50.0),
             latency_p99_ms: lat.percentile(99.0),
         }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests == 0
     }
 }
 
@@ -117,4 +156,404 @@ pub fn run_serving_native(
     let ws = WeightSet::load(desc, weights_tag)?;
     let exec = NativeExecutor::new(desc, graph_tag, &ws)?;
     serve_with_executor(exec, graph_tag, weights_tag, n_requests, max_new, max_slots, seed)
+}
+
+// ---------------------------------------------------------------------------
+// Open-loop load generator + per-class SLO report
+
+/// Knobs for one open-loop run (CLI flags map 1:1 onto these).
+#[derive(Clone, Debug)]
+pub struct OpenLoopConfig {
+    pub n_requests: usize,
+    /// Poisson arrival rate, requests/second.
+    pub arrival_rate: f64,
+    pub max_slots: usize,
+    /// Admission-queue bound (None = unbounded, nothing is rejected).
+    pub queue_depth: Option<usize>,
+    /// Per-request latency SLO (None = no deadline eviction).
+    pub deadline: Option<Duration>,
+    pub seed: u64,
+}
+
+impl Default for OpenLoopConfig {
+    fn default() -> Self {
+        OpenLoopConfig {
+            n_requests: 64,
+            arrival_rate: 100.0,
+            max_slots: 8,
+            queue_depth: None,
+            deadline: None,
+            seed: 7,
+        }
+    }
+}
+
+/// Per-payload-class SLO aggregation: outcome counts + TTFT and
+/// inter-token-latency percentiles over the class's completed requests.
+#[derive(Clone, Debug)]
+pub struct ClassLatency {
+    pub class: String,
+    pub requests: usize,
+    pub completed: usize,
+    pub rejected: usize,
+    pub timed_out: usize,
+    pub cancelled: usize,
+    /// [p50, p90, p99] time-to-first-token, milliseconds.
+    pub ttft_ms: [f64; 3],
+    /// [p50, p90, p99] inter-token latency, milliseconds.
+    pub itl_ms: [f64; 3],
+}
+
+/// One open-loop serving run, aggregated per class — serialized to
+/// `BENCH_serving.json` (schema 1) for in-repo regression diffing.
+#[derive(Clone, Debug)]
+pub struct ServingReport {
+    pub tag: String,
+    pub weights: String,
+    /// "native" | "xla" — which executor decoded.
+    pub backend: String,
+    pub arrival_rate: f64,
+    pub queue_depth: Option<usize>,
+    pub deadline_ms: Option<f64>,
+    /// Requests submitted (arrival schedule length).
+    pub requests: usize,
+    /// Submitted requests that produced no result — must be 0; anything
+    /// else is a conservation bug and CI's serving smoke fails on it.
+    pub lost: usize,
+    pub wall_s: f64,
+    pub decode_tok_per_s: f64,
+    pub classes: Vec<ClassLatency>,
+}
+
+impl ServingReport {
+    fn aggregate(
+        classes: &[PayloadClass],
+        class_of: &[usize],
+        results: &[GenResult],
+    ) -> Vec<ClassLatency> {
+        let mut out: Vec<ClassLatency> = classes
+            .iter()
+            .map(|c| ClassLatency {
+                class: c.name.to_string(),
+                requests: 0,
+                completed: 0,
+                rejected: 0,
+                timed_out: 0,
+                cancelled: 0,
+                ttft_ms: [0.0; 3],
+                itl_ms: [0.0; 3],
+            })
+            .collect();
+        let mut ttft: Vec<Summary> = classes.iter().map(|_| Summary::new()).collect();
+        let mut itl: Vec<Summary> = classes.iter().map(|_| Summary::new()).collect();
+        for r in results {
+            let ci = class_of[r.id as usize];
+            out[ci].requests += 1;
+            match r.outcome {
+                o if o.is_complete() => {
+                    out[ci].completed += 1;
+                    ttft[ci].push(r.ttft_s * 1e3);
+                    for s in r.inter_token_s() {
+                        itl[ci].push(s * 1e3);
+                    }
+                }
+                FinishReason::RejectedQueueFull => out[ci].rejected += 1,
+                FinishReason::TimedOut => out[ci].timed_out += 1,
+                FinishReason::Cancelled => out[ci].cancelled += 1,
+                _ => unreachable!("is_complete covers the remaining outcomes"),
+            }
+        }
+        for (ci, c) in out.iter_mut().enumerate() {
+            if c.completed > 0 {
+                for (k, p) in [50.0, 90.0, 99.0].into_iter().enumerate() {
+                    c.ttft_ms[k] = ttft[ci].percentile(p);
+                    c.itl_ms[k] = itl[ci].percentile(p);
+                }
+            }
+        }
+        out
+    }
+
+    /// Render as the `BENCH_serving.json` document (schema 1):
+    ///
+    /// ```json
+    /// {
+    ///   "bench": "serving", "schema": 1, "backend": "native",
+    ///   "tag": "fp", "weights": "fp16",
+    ///   "arrival_rate": 100.0, "requests": 64, "lost": 0,
+    ///   "wall_s": ..., "decode_tok_per_s": ...,
+    ///   "classes": [
+    ///     {"class": "short", "requests": 40, "completed": 40,
+    ///      "rejected": 0, "timed_out": 0, "cancelled": 0,
+    ///      "ttft_p50_ms": ..., "ttft_p90_ms": ..., "ttft_p99_ms": ...,
+    ///      "itl_p50_ms": ..., "itl_p90_ms": ..., "itl_p99_ms": ...}
+    ///   ]
+    /// }
+    /// ```
+    pub fn render_json(&self) -> String {
+        use crate::bench::json_str;
+        let mut out = String::from("{\n");
+        out += "  \"bench\": \"serving\",\n  \"schema\": 1,\n";
+        out += &format!("  \"backend\": {},\n", json_str(&self.backend));
+        out += &format!("  \"tag\": {},\n", json_str(&self.tag));
+        out += &format!("  \"weights\": {},\n", json_str(&self.weights));
+        out += &format!("  \"arrival_rate\": {:e},\n", self.arrival_rate);
+        match self.queue_depth {
+            Some(d) => out += &format!("  \"queue_depth\": {d},\n"),
+            None => out += "  \"queue_depth\": null,\n",
+        }
+        match self.deadline_ms {
+            Some(d) => out += &format!("  \"deadline_ms\": {d:e},\n"),
+            None => out += "  \"deadline_ms\": null,\n",
+        }
+        out += &format!("  \"requests\": {},\n", self.requests);
+        out += &format!("  \"lost\": {},\n", self.lost);
+        out += &format!("  \"wall_s\": {:e},\n", self.wall_s);
+        out += &format!("  \"decode_tok_per_s\": {:e},\n", self.decode_tok_per_s);
+        out += "  \"classes\": [\n";
+        let rows: Vec<String> = self
+            .classes
+            .iter()
+            .map(|c| {
+                format!(
+                    "    {{\"class\": {}, \"requests\": {}, \"completed\": {}, \
+                     \"rejected\": {}, \"timed_out\": {}, \"cancelled\": {}, \
+                     \"ttft_p50_ms\": {:e}, \"ttft_p90_ms\": {:e}, \"ttft_p99_ms\": {:e}, \
+                     \"itl_p50_ms\": {:e}, \"itl_p90_ms\": {:e}, \"itl_p99_ms\": {:e}}}",
+                    json_str(&c.class),
+                    c.requests,
+                    c.completed,
+                    c.rejected,
+                    c.timed_out,
+                    c.cancelled,
+                    c.ttft_ms[0],
+                    c.ttft_ms[1],
+                    c.ttft_ms[2],
+                    c.itl_ms[0],
+                    c.itl_ms[1],
+                    c.itl_ms[2],
+                )
+            })
+            .collect();
+        out += &rows.join(",\n");
+        out += "\n  ]\n}\n";
+        out
+    }
+
+    /// Write `BENCH_serving.json` at the repo root (or `LATMIX_BENCH_DIR`),
+    /// mirroring the microbench snapshot conventions. Returns the path.
+    pub fn emit(&self) -> std::path::PathBuf {
+        let dir = match std::env::var("LATMIX_BENCH_DIR") {
+            Ok(d) => std::path::PathBuf::from(d),
+            Err(_) => crate::bench::repo_root(),
+        };
+        let path = dir.join("BENCH_serving.json");
+        if let Err(e) = std::fs::write(&path, self.render_json()) {
+            eprintln!("warning: could not write {}: {e}", path.display());
+        }
+        path
+    }
+}
+
+/// Open-loop serving benchmark: requests arrive on a Poisson schedule
+/// (they do NOT wait for completions — the queue grows when the engine
+/// falls behind), drawn from the default payload classes. Streams tokens
+/// through the engine sink and aggregates per-class SLO percentiles.
+pub fn serve_open_loop<E: StepExecutor>(
+    exec: E,
+    graph_tag: &str,
+    weights_tag: &str,
+    backend: &str,
+    cfg: &OpenLoopConfig,
+) -> Result<ServingReport> {
+    let classes = default_payload_classes();
+    let workload = open_loop_workload(
+        cfg.n_requests,
+        cfg.arrival_rate,
+        exec.prefill_len(),
+        &classes,
+        cfg.seed,
+    );
+    let class_of: Vec<usize> = workload.iter().map(|r| r.class).collect();
+    let mut engine = Engine::new(
+        exec,
+        EngineConfig {
+            max_slots: cfg.max_slots,
+            eos: -1,
+            queue_depth: cfg.queue_depth,
+            ..Default::default()
+        },
+    );
+    let t0 = Instant::now();
+    let mut results: Vec<GenResult> = Vec::with_capacity(workload.len());
+    let mut next = 0usize;
+    while next < workload.len() || engine.pending() > 0 {
+        // inject every arrival that is due by now
+        let now = t0.elapsed().as_secs_f64();
+        while next < workload.len() && workload[next].arrival_s <= now {
+            let w = &workload[next];
+            let mut req = GenRequest::new(next as u64, w.prompt.clone(), w.max_new);
+            if let Some(d) = cfg.deadline {
+                req = req.with_deadline(d);
+            }
+            engine.try_submit(req);
+            next += 1;
+        }
+        if engine.pending() > 0 {
+            engine.step()?;
+            results.append(&mut engine.take_results());
+        } else if next < workload.len() {
+            // idle until the next arrival (capped so injection stays timely)
+            let wait = workload[next].arrival_s - t0.elapsed().as_secs_f64();
+            if wait > 0.0 {
+                std::thread::sleep(Duration::from_secs_f64(wait.min(0.010)));
+            }
+        }
+    }
+    results.append(&mut engine.take_results());
+    engine.stats.wall_s = t0.elapsed().as_secs_f64();
+
+    let lost = cfg.n_requests - results.len().min(cfg.n_requests);
+    Ok(ServingReport {
+        tag: graph_tag.to_string(),
+        weights: weights_tag.to_string(),
+        backend: backend.to_string(),
+        arrival_rate: cfg.arrival_rate,
+        queue_depth: cfg.queue_depth,
+        deadline_ms: cfg.deadline.map(|d| d.as_secs_f64() * 1e3),
+        requests: cfg.n_requests,
+        lost,
+        wall_s: engine.stats.wall_s,
+        decode_tok_per_s: engine.stats.decode_tok_per_s(),
+        classes: ServingReport::aggregate(&classes, &class_of, &results),
+    })
+}
+
+/// Open-loop run over artifact-backed native weights.
+pub fn run_open_loop_native(
+    desc: &ModelDesc,
+    graph_tag: &str,
+    weights_tag: &str,
+    cfg: &OpenLoopConfig,
+) -> Result<ServingReport> {
+    let ws = WeightSet::load(desc, weights_tag)?;
+    let exec = NativeExecutor::new(desc, graph_tag, &ws)?;
+    serve_open_loop(exec, graph_tag, weights_tag, "native", cfg)
+}
+
+/// Open-loop run over the PJRT executor.
+#[cfg(feature = "backend-xla")]
+pub fn run_open_loop(
+    rt: &Runtime,
+    graph_tag: &str,
+    weights_tag: &str,
+    cfg: &OpenLoopConfig,
+) -> Result<ServingReport> {
+    let ws = WeightSet::load(&rt.desc, weights_tag)?;
+    let exec = XlaExecutor::new(rt, graph_tag, &ws)?;
+    serve_open_loop(exec, graph_tag, weights_tag, "xla", cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::coordinator::engine::MockExecutor;
+    use crate::coordinator::EngineStats;
+
+    use super::*;
+
+    #[test]
+    fn empty_results_yield_zero_report() {
+        let rep = ServeReport::from_results("fp", "fp16", &[], &EngineStats::default());
+        assert!(rep.is_empty());
+        assert_eq!(rep.requests, 0);
+        assert_eq!(rep.ttft_p50_ms, 0.0);
+        assert_eq!(rep.latency_p99_ms, 0.0);
+        assert!(rep.ttft_p99_ms.is_finite() && rep.latency_p50_ms.is_finite());
+    }
+
+    #[test]
+    fn incomplete_outcomes_excluded_from_percentiles() {
+        let complete = GenResult {
+            id: 0,
+            prompt_len: 4,
+            tokens: vec![1, 2],
+            outcome: FinishReason::Length,
+            token_s: vec![0.001, 0.002],
+            ttft_s: 0.001,
+            total_s: 0.002,
+        };
+        let rejected = GenResult {
+            id: 1,
+            prompt_len: 4,
+            tokens: vec![],
+            outcome: FinishReason::RejectedQueueFull,
+            token_s: vec![],
+            ttft_s: 0.0,
+            total_s: 0.0,
+        };
+        let rep = ServeReport::from_results(
+            "fp",
+            "fp16",
+            &[complete, rejected],
+            &EngineStats::default(),
+        );
+        assert_eq!(rep.requests, 1, "only the completed request counts");
+        assert!(rep.ttft_p50_ms > 0.0);
+    }
+
+    #[test]
+    fn open_loop_conserves_requests_and_reports_classes() {
+        let cfg = OpenLoopConfig {
+            n_requests: 24,
+            arrival_rate: 2000.0,
+            max_slots: 4,
+            ..Default::default()
+        };
+        let rep =
+            serve_open_loop(MockExecutor::default(), "fp", "mock", "native", &cfg).unwrap();
+        assert_eq!(rep.lost, 0, "no request may vanish");
+        assert_eq!(rep.requests, 24);
+        let total: usize = rep.classes.iter().map(|c| c.requests).sum();
+        assert_eq!(total, 24, "every result lands in exactly one class");
+        let completed: usize = rep.classes.iter().map(|c| c.completed).sum();
+        assert_eq!(completed, 24, "unbounded queue, no deadline: all complete");
+        for c in rep.classes.iter().filter(|c| c.completed > 0) {
+            assert!(c.ttft_ms[2] >= c.ttft_ms[0], "p99 >= p50");
+        }
+    }
+
+    #[test]
+    fn open_loop_backpressure_rejects_but_conserves() {
+        let cfg = OpenLoopConfig {
+            n_requests: 32,
+            arrival_rate: 1e6, // everything arrives at once
+            max_slots: 2,
+            queue_depth: Some(2),
+            ..Default::default()
+        };
+        let rep =
+            serve_open_loop(MockExecutor::default(), "fp", "mock", "native", &cfg).unwrap();
+        assert_eq!(rep.lost, 0);
+        let rejected: usize = rep.classes.iter().map(|c| c.rejected).sum();
+        let completed: usize = rep.classes.iter().map(|c| c.completed).sum();
+        assert!(rejected > 0, "flood + tiny queue must reject");
+        assert_eq!(rejected + completed, 32);
+    }
+
+    #[test]
+    fn serving_json_well_formed() {
+        let cfg = OpenLoopConfig { n_requests: 8, arrival_rate: 5000.0, ..Default::default() };
+        let rep =
+            serve_open_loop(MockExecutor::default(), "fp", "mock", "native", &cfg).unwrap();
+        let s = rep.render_json();
+        assert!(s.contains("\"bench\": \"serving\""));
+        assert!(s.contains("\"schema\": 1"));
+        assert!(s.contains("\"lost\": 0"));
+        assert!(s.contains("\"ttft_p90_ms\""));
+        assert!(s.contains("\"itl_p99_ms\""));
+        assert!(!s.contains("NaN") && !s.contains("inf"));
+        // crude balance check on braces/brackets
+        assert_eq!(s.matches('{').count(), s.matches('}').count());
+        assert_eq!(s.matches('[').count(), s.matches(']').count());
+    }
 }

@@ -7,9 +7,9 @@
 use latmix::coordinator::engine::{
     Engine, EngineConfig, MockExecutor, NativeExecutor, StepExecutor,
 };
-use latmix::coordinator::{Batcher, GenRequest, SchedulerPolicy};
+use latmix::coordinator::{Batcher, GenRequest};
 use latmix::model::{NativeDims, NativeWeights};
-use latmix::runtime::decode_batch_sizes;
+use latmix::runtime::{decode_batch_sizes, sched_fingerprint};
 
 /// Dims matching `MockExecutor::default()` (vocab 64, 2 layers, kv_seq 32,
 /// kv_row/d_model 4, prefill 8) so both executors schedule identically.
@@ -29,21 +29,24 @@ fn native_like_mock() -> NativeExecutor {
     NativeExecutor::synthetic(mock_dims(), "fp", vec![1, 2, 4], 17).unwrap()
 }
 
-/// Scheduling fingerprint of one engine run: per-request token counts plus
-/// every batching/decode counter the engine keeps.
+/// Scheduling fingerprint of one engine run: per-request token counts,
+/// every batching/decode counter the engine keeps, and the hash of the
+/// full admit/refill/evict event log (`runtime::sched_fingerprint`) — two
+/// backends that schedule identically must agree on every component.
 fn fingerprint<E: StepExecutor>(
     exec: E,
     reqs: &[(Vec<i32>, usize)],
-) -> (Vec<(u64, usize)>, u64, u64, u64, u64, u64) {
+) -> (Vec<(u64, usize)>, u64, u64, u64, u64, u64, u64) {
     let mut engine = Engine::new(
         exec,
-        EngineConfig { max_slots: 3, policy: SchedulerPolicy::PrefillPriority, eos: -1 },
+        EngineConfig { max_slots: 3, eos: -1, ..Default::default() },
     );
     for (i, (prompt, max_new)) in reqs.iter().enumerate() {
         engine.submit(GenRequest::new(i as u64, prompt.clone(), *max_new));
     }
     let out = engine.run_to_completion().unwrap();
     let counts: Vec<(u64, usize)> = out.iter().map(|r| (r.id, r.tokens.len())).collect();
+    let events = sched_fingerprint(engine.events());
     let s = &engine.stats;
     (
         counts,
@@ -52,6 +55,7 @@ fn fingerprint<E: StepExecutor>(
         s.decode_lanes,
         s.prefill_tokens,
         s.decode_tokens,
+        events,
     )
 }
 

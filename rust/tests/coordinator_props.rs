@@ -4,8 +4,10 @@
 //! properties run over both `StepExecutor` backends that exist on every
 //! build: the mock and the pure-Rust `NativeExecutor`.
 
+use std::time::Duration;
+
 use latmix::coordinator::engine::{Engine, EngineConfig, MockExecutor, NativeExecutor};
-use latmix::coordinator::{Batcher, GenRequest, KvCache, Router, SchedulerPolicy};
+use latmix::coordinator::{Batcher, FinishReason, GenRequest, KvCache, Router};
 use latmix::model::NativeDims;
 use latmix::mx::{mx_qdq, pack::PackedMx, MxConfig};
 use latmix::testing::{forall, ScriptGen, UsizeGen, VecGen};
@@ -140,7 +142,7 @@ fn prop_kv_slot_accounting() {
                 }
                 _ => {
                     let id = *val;
-                    let ok = kv.free(id);
+                    let ok = kv.free(id).is_some();
                     let should = live.contains(&id);
                     if ok != should {
                         return Err(format!("free({id}) = {ok}, expected {should}"));
@@ -200,7 +202,7 @@ fn prop_engine_completes_all() {
     forall("engine_completion", 25, &gen, |script| {
         let mut e = Engine::new(
             MockExecutor::default(),
-            EngineConfig { max_slots: 3, policy: SchedulerPolicy::PrefillPriority, eos: -1 },
+            EngineConfig { max_slots: 3, eos: -1, ..Default::default() },
         );
         let mut rng = Pcg64::seed(script.len() as u64);
         let mut want = Vec::new();
@@ -232,7 +234,7 @@ fn prop_engine_completes_all_native() {
     forall("engine_completion_native", 10, &gen, |script| {
         let mut e = Engine::new(
             native_exec(5),
-            EngineConfig { max_slots: 3, policy: SchedulerPolicy::PrefillPriority, eos: -1 },
+            EngineConfig { max_slots: 3, eos: -1, ..Default::default() },
         );
         let mut rng = Pcg64::seed(script.len() as u64);
         let mut want = Vec::new();
@@ -270,7 +272,7 @@ fn prop_engine_deterministic_native() {
         let run = || {
             let mut e = Engine::new(
                 native_exec(9),
-                EngineConfig { max_slots: 4, policy: SchedulerPolicy::PrefillPriority, eos: -1 },
+                EngineConfig { max_slots: 4, eos: -1, ..Default::default() },
             );
             for i in 0..*n {
                 e.submit(GenRequest::new(i as u64, vec![i as i32, 7], 5));
@@ -288,6 +290,148 @@ fn prop_engine_deterministic_native() {
     });
 }
 
+/// Continuous-batching lifecycle conservation: under random interleavings
+/// of submit / step / cancel against a bounded queue, every submitted
+/// request yields exactly one result, and every completed (or partially
+/// generated) token stream is the mock's arithmetic sequence for that
+/// request — no request lost, duplicated, or fed another lane's tokens.
+#[test]
+fn prop_lifecycle_conservation_under_churn() {
+    let gen = ScriptGen { max_len: 40, ops: 3, max_value: 30 };
+    forall("lifecycle_conservation", 40, &gen, |script| {
+        let mut e = Engine::new(
+            MockExecutor::default(),
+            EngineConfig { max_slots: 2, eos: -1, queue_depth: Some(2), ..Default::default() },
+        );
+        let mut next_id = 0u64;
+        for (op, val) in script {
+            match op % 3 {
+                0 => {
+                    let prompt = vec![next_id as i32];
+                    e.try_submit(GenRequest::new(next_id, prompt, 1 + (*val as usize % 5)));
+                    next_id += 1;
+                }
+                1 => {
+                    if e.pending() > 0 {
+                        e.step().map_err(|e| e.to_string())?;
+                    }
+                }
+                _ => {
+                    if next_id > 0 {
+                        e.cancel(val % next_id);
+                    }
+                }
+            }
+        }
+        let out = e.run_to_completion().map_err(|e| e.to_string())?;
+        let ids: Vec<u64> = out.iter().map(|r| r.id).collect();
+        let expect: Vec<u64> = (0..next_id).collect();
+        if ids != expect {
+            return Err(format!("conservation broken: got ids {ids:?}, want 0..{next_id}"));
+        }
+        for r in &out {
+            // mock semantics: first token = sum(prompt) % 64, then +1 mod 64
+            let s = (r.id % 64) as i32;
+            for (k, t) in r.tokens.iter().enumerate() {
+                if *t != (s + k as i32) % 64 {
+                    return Err(format!(
+                        "req {}: token {k} is {t}, want {} — cross-lane bleed or reorder",
+                        r.id,
+                        (s + k as i32) % 64
+                    ));
+                }
+            }
+            if r.outcome.is_complete() && r.tokens.is_empty() {
+                return Err(format!("req {} complete with no tokens", r.id));
+            }
+            if r.outcome == FinishReason::RejectedQueueFull && !r.tokens.is_empty() {
+                return Err(format!("req {} rejected but has tokens", r.id));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// KV slot reuse never leaks stale rows: every alloc — first use or
+/// refill after a poisoned occupant — must hand out fully zeroed planes.
+#[test]
+fn prop_kv_refill_never_leaks_stale_rows() {
+    let gen = ScriptGen { max_len: 60, ops: 2, max_value: 16 };
+    forall("kv_stale_rows", 50, &gen, |script| {
+        let cap = 4;
+        let mut kv = KvCache::new(cap, 2, 8, 4);
+        for (op, val) in script {
+            let id = *val;
+            match op % 2 {
+                0 => {
+                    if let Ok(alloc) = kv.alloc(id) {
+                        let seq = kv.get(id).unwrap();
+                        if seq.pos != 0 {
+                            return Err(format!("slot {} pos {} != 0", alloc.slot, seq.pos));
+                        }
+                        for (li, plane) in seq.data.iter().enumerate() {
+                            if plane.iter().any(|x| *x != 0.0) {
+                                return Err(format!(
+                                    "slot {} (refill={}) plane {li} has stale rows",
+                                    alloc.slot, alloc.refill
+                                ));
+                            }
+                        }
+                        // poison the slot so a leaky refill is detectable
+                        let seq = kv.get_mut(id).unwrap();
+                        for plane in seq.data.iter_mut() {
+                            plane.fill(1e9);
+                        }
+                        seq.pos = 7;
+                    }
+                }
+                _ => {
+                    kv.free(id);
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Deadline-expired requests are evicted with `TimedOut`; requests without
+/// a deadline complete normally alongside them.
+#[test]
+fn prop_deadline_expiry_evicts_timed_out() {
+    let gen = ScriptGen { max_len: 10, ops: 2, max_value: 5 };
+    forall("deadline_timeout", 25, &gen, |script| {
+        let mut e = Engine::new(
+            MockExecutor::default(),
+            EngineConfig { max_slots: 3, eos: -1, ..Default::default() },
+        );
+        let mut doomed = Vec::new();
+        for (i, (op, val)) in script.iter().enumerate() {
+            let want = 1 + (*val as usize % 4);
+            let req = GenRequest::new(i as u64, vec![i as i32], want);
+            if op % 2 == 0 {
+                e.submit(req.with_deadline(Duration::ZERO));
+                doomed.push(i as u64);
+            } else {
+                e.submit(req);
+            }
+        }
+        std::thread::sleep(Duration::from_millis(1));
+        let out = e.run_to_completion().map_err(|e| e.to_string())?;
+        if out.len() != script.len() {
+            return Err(format!("{} of {} results", out.len(), script.len()));
+        }
+        for r in &out {
+            let is_doomed = doomed.contains(&r.id);
+            match (is_doomed, r.outcome) {
+                (true, FinishReason::TimedOut) => {}
+                (false, o) if o.is_complete() => {}
+                (d, o) => return Err(format!("req {} doomed={d} but outcome {o:?}", r.id)),
+            }
+        }
+        Ok(())
+    });
+}
+
 /// Mock-engine determinism: same workload -> same tokens (no state bleed
 /// between lanes in gather/scatter).
 #[test]
@@ -297,7 +441,7 @@ fn prop_engine_deterministic() {
         let run = || {
             let mut e = Engine::new(
                 MockExecutor::default(),
-                EngineConfig { max_slots: 4, policy: SchedulerPolicy::PrefillPriority, eos: -1 },
+                EngineConfig { max_slots: 4, eos: -1, ..Default::default() },
             );
             for i in 0..*n {
                 e.submit(GenRequest::new(i as u64, vec![i as i32, 7], 5));

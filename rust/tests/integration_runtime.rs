@@ -105,14 +105,15 @@ fn native_executor_agrees_with_xla_on_artifacts() {
 
     fn run_stream<E: StepExecutor>(
         mut engine: Engine<E>,
-    ) -> (Vec<usize>, u64, u64, u64, u64) {
+    ) -> (Vec<usize>, u64, u64, u64, u64, u64) {
         for i in 0..6u64 {
             engine.submit(GenRequest::new(i, vec![1, 40 + i as i32, 50], 5));
         }
         let out = engine.run_to_completion().unwrap();
         let counts: Vec<usize> = out.iter().map(|r| r.tokens.len()).collect();
+        let events = latmix::runtime::sched_fingerprint(engine.events());
         let s = engine.stats.clone();
-        (counts, s.prefill_batches, s.decode_steps, s.decode_lanes, s.decode_tokens)
+        (counts, s.prefill_batches, s.decode_steps, s.decode_lanes, s.decode_tokens, events)
     }
     let cfg = EngineConfig { max_slots: 4, eos: -1, ..Default::default() };
     let a = run_stream(Engine::new(xla_exec, cfg.clone()));

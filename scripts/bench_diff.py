@@ -1,18 +1,23 @@
 #!/usr/bin/env python3
-"""Bench-trajectory diff: compare a fresh BENCH_microbench.json against the
-committed baseline and emit a per-kernel ns/unit comparison table.
+"""Bench-trajectory diff: compare a fresh bench snapshot against the
+committed baseline and emit a comparison table.
 
 Usage: bench_diff.py <baseline.json> <fresh.json>
 
+Two snapshot kinds are understood, dispatched on the `"bench"` field:
+
+- `microbench` (schema 2): per-kernel ns/unit rows keyed on (op, backend).
+  For rows with a throughput unit, ns/unit = 1e9 / throughput; otherwise
+  mean iteration time is used. See README.md §Perf methodology.
+- `serving` (schema 1): per-payload-class SLO rows keyed on class name;
+  TTFT and inter-token p50/p99 milliseconds are diffed per class.
+
 - The markdown table goes to $GITHUB_STEP_SUMMARY when set, else stdout.
-- Regressions > 25% ns/unit emit GitHub `::warning::` annotations on
-  stdout — warn, never fail (CI perf is noisy; the table is the signal).
+- Regressions > 25% emit GitHub `::warning::` annotations on stdout —
+  warn, never fail (CI perf is noisy; the table is the signal).
 - Missing/empty baseline is fine: every row reports as `new` and the fresh
   snapshot becomes the first real baseline once committed.
 
-Rows are keyed on (op, backend) — schema 2 records which executor produced
-each row (see README.md §Perf methodology). For rows with a throughput
-unit, ns/unit = 1e9 / throughput; otherwise mean iteration time is used.
 Stdlib only.
 """
 
@@ -49,12 +54,7 @@ def ns_per_unit(row):
     return row.get("mean_s", 0.0) * 1e9, "iter"
 
 
-def main():
-    if len(sys.argv) != 3:
-        print(__doc__, file=sys.stderr)
-        return 2
-    base, fresh = load(sys.argv[1]), load(sys.argv[2])
-
+def diff_microbench(base, fresh):
     lines = ["## Bench trajectory — microbench (ns per unit, lower is better)", ""]
     warnings = []
     brows = keyed(base)
@@ -94,7 +94,74 @@ def main():
                 f"| {key[0]} | {key[1]} | {unit} | {b_ns:.2f} | {f_ns:.2f} | {delta:+.1f}%{mark} |"
             )
             if delta > 25.0:
-                warnings.append((key, delta))
+                warnings.append((f"{key[0]!r} [{key[1]}]", "ns/unit", delta))
+    return lines, warnings
+
+
+def class_rows(snap):
+    out = {}
+    for c in (snap or {}).get("classes", []):
+        if isinstance(c, dict):
+            out[c.get("class", "?")] = c
+    return out
+
+
+# Serving SLO metrics diffed per payload class (schema 1 field names).
+SERVING_METRICS = ("ttft_p50_ms", "ttft_p99_ms", "itl_p50_ms", "itl_p99_ms")
+
+
+def diff_serving(base, fresh):
+    lines = ["## Bench trajectory — serving (per-class SLO ms, lower is better)", ""]
+    warnings = []
+    brows = class_rows(base)
+    fresh_rows = [c for c in (fresh or {}).get("classes", []) if isinstance(c, dict)]
+    if not fresh_rows:
+        lines.append("_no fresh BENCH_serving.json class rows — did the serving smoke run?_")
+        return lines, warnings
+    if not brows:
+        note = (
+            "committed stub" if base and base.get("classes") == [] else "missing/unreadable"
+        )
+        lines.append(
+            f"_no baseline class rows ({note}) — every row below is new; commit this "
+            "run's BENCH_serving.json as the first real baseline_"
+        )
+        lines.append("")
+    lines.append("| class | reqs | done | metric | baseline | fresh | delta |")
+    lines.append("|---|---|---|---|---|---|---|")
+    for row in fresh_rows:
+        name = row.get("class", "?")
+        reqs, done = row.get("requests", "?"), row.get("completed", "?")
+        b = brows.get(name)
+        for metric in SERVING_METRICS:
+            f_v = row.get(metric, 0.0)
+            b_v = (b or {}).get(metric, 0.0)
+            if b is None or not b_v:
+                lines.append(
+                    f"| {name} | {reqs} | {done} | {metric} | - | {f_v:.2f} | new |"
+                )
+                continue
+            delta = (f_v - b_v) / b_v * 100.0
+            mark = " :warning:" if delta > 25.0 else ""
+            lines.append(
+                f"| {name} | {reqs} | {done} | {metric} | {b_v:.2f} | {f_v:.2f} "
+                f"| {delta:+.1f}%{mark} |"
+            )
+            if delta > 25.0:
+                warnings.append((f"class {name!r}", metric, delta))
+    return lines, warnings
+
+
+def main():
+    if len(sys.argv) != 3:
+        print(__doc__, file=sys.stderr)
+        return 2
+    base, fresh = load(sys.argv[1]), load(sys.argv[2])
+    kind = ((fresh or {}).get("bench") or (base or {}).get("bench") or "microbench")
+    if kind == "serving":
+        lines, warnings = diff_serving(base, fresh)
+    else:
+        lines, warnings = diff_microbench(base, fresh)
 
     text = "\n".join(lines) + "\n"
     summary = os.environ.get("GITHUB_STEP_SUMMARY")
@@ -102,10 +169,10 @@ def main():
         with open(summary, "a") as f:
             f.write(text)
     print(text)
-    for (op, backend), delta in warnings:
+    for what, unit, delta in warnings:
         print(
-            f"::warning::microbench regression >25% on {op!r} [{backend}]: "
-            f"{delta:+.1f}% ns/unit vs committed baseline"
+            f"::warning::{kind} regression >25% on {what}: "
+            f"{delta:+.1f}% {unit} vs committed baseline"
         )
     return 0
 

@@ -17,4 +17,28 @@ LATMIX_BENCH_SMOKE=1 cargo bench --no-default-features --bench microbench
 
 test -f BENCH_microbench.json
 grep -q '"backend"' BENCH_microbench.json
-echo "core OK: no-XLA build + tests passed, BENCH_microbench.json written"
+
+# Serving smoke: open-loop continuous-batching run over synthetic
+# latmix-tiny weights (no artifact directory needed); refreshes
+# BENCH_serving.json (schema 1, per-class SLO rows). The binary itself
+# exits non-zero on any lost request; the python check re-asserts
+# conservation and that every class row carries the full percentile set.
+cargo run --no-default-features -q -- serve --open-loop --synthetic \
+  --requests 48 --arrival-rate 400 --slots 4 --seed 7
+python3 - <<'EOF'
+import json
+snap = json.load(open("BENCH_serving.json"))
+assert snap["bench"] == "serving" and snap["schema"] == 1, "bad serving schema"
+assert snap["lost"] == 0, f"serving smoke lost {snap['lost']} request(s)"
+assert snap["requests"] > 0 and snap["classes"], "no serving rows"
+keys = {"class", "requests", "completed", "rejected", "timed_out", "cancelled",
+        "ttft_p50_ms", "ttft_p90_ms", "ttft_p99_ms",
+        "itl_p50_ms", "itl_p90_ms", "itl_p99_ms"}
+for c in snap["classes"]:
+    missing = keys - c.keys()
+    assert not missing, f"class row missing {sorted(missing)}"
+print("serving smoke OK:", snap["requests"], "requests over",
+      len(snap["classes"]), "classes, 0 lost")
+EOF
+
+echo "core OK: no-XLA build + tests passed, BENCH_microbench.json + BENCH_serving.json written"
