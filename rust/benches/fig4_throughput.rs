@@ -52,7 +52,7 @@ mod srv {
         pub fn run(
             &self, g: &str, w: &str, n: usize, m: usize, s: usize, seed: u64,
         ) -> anyhow::Result<ServeReport> {
-            run_serving_native(&self.0, g, w, n, m, s, seed)
+            run_serving_native(&self.0, g, w, n, m, s, seed, false)
         }
     }
 }

@@ -21,7 +21,7 @@ use latmix::bench::{fmt_time, Bencher, JsonReport, Table};
 use latmix::coordinator::engine::{Engine, EngineConfig, MockExecutor, NativeExecutor, StepExecutor};
 use latmix::coordinator::{Batcher, GenRequest, KvCache};
 use latmix::latmix::{learn_feature_transform, outlier_features, LearnConfig};
-use latmix::linalg::{block_hadamard_apply, Mat};
+use latmix::linalg::{block_hadamard_apply, packed_matmul, Mat, PackedMat};
 use latmix::model::NativeDims;
 use latmix::mx::{mx_qdq_rows, pack::PackedMx, reference, MxConfig};
 use latmix::quant::{gptq_quantize, rtn_quantize};
@@ -134,6 +134,25 @@ fn main() {
         format!("{:.2} GFLOP/s", r.throughput(flops) / 1e9)]);
     json.push(&r, Some(("flop/s", flops)));
 
+    // fused packed-MX GEMM vs the dense kernel above (same 192x192 shape):
+    // decode-only throughput, then the full decode-inside-GEMM row — the
+    // serving hot path under --packed-weights
+    for fmt in ["mxfp4", "mxint4"] {
+        let pcfg = MxConfig::from_name(fmt, Some(32)).unwrap();
+        let pw = PackedMat::pack(&mm, pcfg).unwrap();
+        let mut dst = vec![0.0f32; 192 * 192];
+        let r = Bencher::new(&format!("decode_packed_{fmt}_b32 192x192"))
+            .with_iters(wu, iu)
+            .run(|| pw.decode_rows(0, 192, &mut dst));
+        elem_row(&mut tab, &mut json, &r, (192 * 192) as f64);
+        let r = Bencher::new(&format!("packed_gemm 192x192 {fmt}_b32"))
+            .with_iters(wu, iu)
+            .run(|| packed_matmul(&mm, &pw));
+        tab.row(vec![r.name.clone(), fmt_time(r.mean_s), fmt_time(r.p99_s),
+            format!("{:.2} GFLOP/s", r.throughput(flops) / 1e9)]);
+        json.push(&r, Some(("flop/s", flops)));
+    }
+
     // Fig. 2 transform learning (latmix::learn_feature_transform): a short
     // run of the E(T) optimizer — matmul + inverse + fake-quant + hand
     // backward per step; throughput in optimizer steps/s.
@@ -231,6 +250,33 @@ fn native_decode_bench(json: &mut JsonReport, smoke: bool) {
                 .run(|| exec.decode(&tokens, &pos, &kv, b).unwrap());
             tab.row(vec![
                 tag.into(),
+                b.to_string(),
+                fmt_time(r.mean_s),
+                fmt_time(r.p99_s),
+                format!("{:.1}", b as f64 / r.mean_s),
+            ]);
+            json.push(&r, Some(("tok/s", b as f64)));
+        }
+    }
+    // same quantized tag with MX-packed weights: every linear() now runs
+    // the fused packed GEMM (decode on FP4 nibbles) instead of dense f32 —
+    // the `--packed-weights` serving hot path
+    {
+        let exec = NativeExecutor::synthetic(dims, "mxfp4_b32_t3", vec![1, 2, 4, 8], 42)
+            .unwrap()
+            .into_packed()
+            .unwrap();
+        let kvdims = exec.n_layers() * 2;
+        for b in [1usize, 4, 8] {
+            let plane = exec.kv_seq() * exec.kv_row();
+            let kv: Vec<Vec<f32>> = vec![vec![0.0f32; b * plane]; kvdims];
+            let tokens = vec![5i32; b];
+            let pos = vec![3i32; b];
+            let r = Bencher::new(&format!("native decode mxfp4_b32_t3+packed b={b}"))
+                .with_iters(iters.0, iters.1)
+                .run(|| exec.decode(&tokens, &pos, &kv, b).unwrap());
+            tab.row(vec![
+                "mxfp4+packed".into(),
                 b.to_string(),
                 fmt_time(r.mean_s),
                 fmt_time(r.p99_s),

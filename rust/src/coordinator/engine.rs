@@ -33,13 +33,15 @@
 use std::collections::HashSet;
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use super::batcher::{Batcher, PushOutcome};
 use super::kv_cache::KvCache;
 use super::request::{FinishReason, GenRequest, GenResult, RequestId, StreamEvent, TokenSink};
 use super::scheduler::{plan_step, SchedEvent, SchedulerPolicy};
-use crate::model::{GraphSpec, ModelDesc, NativeDims, NativeWeights, SpecRun, WeightSet};
+use crate::model::{
+    GraphSpec, ModelDesc, NativeDims, NativeWeights, PackedNativeWeights, SpecRun, WeightSet,
+};
 use crate::runtime::decode_batch_sizes;
 use crate::transform::{TransformMode, TransformSpec};
 #[cfg(feature = "backend-xla")]
@@ -182,10 +184,20 @@ fn split_logits_kv(mut parts: Vec<xla::Literal>) -> Result<(Vec<f32>, Vec<Vec<f3
 #[derive(Clone)]
 pub struct NativeExecutor {
     pub tag: String,
-    weights: NativeWeights,
+    weights: ExecWeights,
     spec: GraphSpec,
     batches: Vec<usize>,
     transforms: Option<(TransformSpec, TransformMode)>,
+}
+
+/// Weight storage mode of a [`NativeExecutor`]: dense f32 matrices, or
+/// bit-packed MX ([`PackedNativeWeights`]) consumed in place by the fused
+/// `linalg::packed_matmul` kernel. Both run the same generic forward —
+/// the enum only picks the `linear()` instantiation.
+#[derive(Clone)]
+enum ExecWeights {
+    Dense(NativeWeights),
+    Packed(PackedNativeWeights),
 }
 
 impl NativeExecutor {
@@ -203,7 +215,13 @@ impl NativeExecutor {
         let batches = decode_batch_sizes(&desc.graphs, tag);
         anyhow::ensure!(!batches.is_empty(), "no decode graphs for tag {tag}");
         let transforms = TransformSpec::load_online(desc)?;
-        Ok(NativeExecutor { tag: tag.to_string(), weights, spec, batches, transforms })
+        Ok(NativeExecutor {
+            tag: tag.to_string(),
+            weights: ExecWeights::Dense(weights),
+            spec,
+            batches,
+            transforms,
+        })
     }
 
     /// Artifact-free constructor (tests, smoke benches): deterministic
@@ -219,7 +237,7 @@ impl NativeExecutor {
         let batches = normalize_batches(batches)?;
         Ok(NativeExecutor {
             tag: tag.to_string(),
-            weights,
+            weights: ExecWeights::Dense(weights),
             spec,
             batches,
             transforms: None,
@@ -250,6 +268,43 @@ impl NativeExecutor {
         Ok(exec)
     }
 
+    /// Switch to packed-weight storage (`--packed-weights`): re-encode
+    /// every linear weight matrix into the graph tag's MX format and run
+    /// all subsequent prefill/decode GEMMs fused on the packed bytes —
+    /// the f32 weight matrices are dropped. Requires a quantized tag (the
+    /// fp graph has no MX format to pack into); a no-op if already packed.
+    pub fn into_packed(mut self) -> Result<Self> {
+        let cfg = self.spec.act.with_context(|| {
+            format!("packed weights require a quantized graph tag, got {:?}", self.tag)
+        })?;
+        self.weights = match self.weights {
+            ExecWeights::Dense(w) => ExecWeights::Packed(w.pack_weights(cfg)?),
+            packed => packed,
+        };
+        Ok(self)
+    }
+
+    /// Whether weights are held in bit-packed MX form.
+    pub fn packed_weights(&self) -> bool {
+        matches!(self.weights, ExecWeights::Packed(_))
+    }
+
+    /// Resident bytes of the weight storage (the serve reports print this;
+    /// ~7.5x smaller packed vs dense at B=32).
+    pub fn resident_weight_bytes(&self) -> usize {
+        match &self.weights {
+            ExecWeights::Dense(w) => w.weight_bytes(),
+            ExecWeights::Packed(w) => w.weight_bytes(),
+        }
+    }
+
+    fn dims(&self) -> &NativeDims {
+        match &self.weights {
+            ExecWeights::Dense(w) => &w.dims,
+            ExecWeights::Packed(w) => &w.dims,
+        }
+    }
+
     fn spec_run(&self) -> SpecRun<'_> {
         self.transforms.as_ref().map(|(s, m)| (s, *m))
     }
@@ -271,19 +326,19 @@ fn normalize_batches(mut batches: Vec<usize>) -> Result<Vec<usize>> {
 
 impl StepExecutor for NativeExecutor {
     fn vocab(&self) -> usize {
-        self.weights.dims.vocab
+        self.dims().vocab
     }
     fn n_layers(&self) -> usize {
-        self.weights.dims.n_layers
+        self.dims().n_layers
     }
     fn kv_seq(&self) -> usize {
-        self.weights.dims.kv_seq
+        self.dims().kv_seq
     }
     fn kv_row(&self) -> usize {
-        self.weights.dims.d_model
+        self.dims().d_model
     }
     fn prefill_len(&self) -> usize {
-        self.weights.dims.prefill_len
+        self.dims().prefill_len
     }
     fn batch_sizes(&self) -> Vec<usize> {
         self.batches.clone()
@@ -291,7 +346,14 @@ impl StepExecutor for NativeExecutor {
 
     fn prefill(&self, tokens: &[i32], lens: &[i32], batch: usize)
         -> Result<(Vec<f32>, Vec<Vec<f32>>)> {
-        self.weights.forward_prefill_spec(tokens, lens, batch, &self.spec, self.spec_run())
+        match &self.weights {
+            ExecWeights::Dense(w) => {
+                w.forward_prefill_spec(tokens, lens, batch, &self.spec, self.spec_run())
+            }
+            ExecWeights::Packed(w) => {
+                w.forward_prefill_spec(tokens, lens, batch, &self.spec, self.spec_run())
+            }
+        }
     }
 
     fn decode(
@@ -301,7 +363,14 @@ impl StepExecutor for NativeExecutor {
         kv: &[Vec<f32>],
         batch: usize,
     ) -> Result<(Vec<f32>, Vec<Vec<f32>>)> {
-        self.weights.forward_decode_spec(tokens, pos, kv, batch, &self.spec, self.spec_run())
+        match &self.weights {
+            ExecWeights::Dense(w) => {
+                w.forward_decode_spec(tokens, pos, kv, batch, &self.spec, self.spec_run())
+            }
+            ExecWeights::Packed(w) => {
+                w.forward_decode_spec(tokens, pos, kv, batch, &self.spec, self.spec_run())
+            }
+        }
     }
 }
 

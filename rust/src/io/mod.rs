@@ -1,4 +1,10 @@
 //! Artifact I/O: the `.lxt` tensor container and the build manifest.
+//!
+//! `.lxt` weight sets are f32 on disk in every storage mode — the
+//! `--packed-weights` serving path re-packs linear weights into MX bytes
+//! at executor construction ([`crate::coordinator::engine::NativeExecutor`]
+//! `::into_packed`), never in the artifact container, so one artifact
+//! serves both the dense and packed modes.
 
 pub mod lxt;
 pub mod manifest;

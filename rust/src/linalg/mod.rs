@@ -3,12 +3,19 @@
 //! Provides exactly what the LATMiX analysis path needs: matmul, LU-based
 //! inverse/solve, QR, Hadamard construction, spectral norm (power
 //! iteration), condition number, block-diagonal assembly. Not a general
-//! BLAS — shapes here are ≤ a few hundred, called off the hot path; the
-//! serving hot path delegates all heavy math to the compiled XLA artifacts.
+//! BLAS — shapes stay ≤ a few hundred per side — but since the native
+//! executor landed (`model/forward.rs`), `linear()` over [`Mat::matmul`]
+//! *is* the serving hot path, so the matmul micro-kernel is tuned (4-wide
+//! k-unroll, row fan-out over `util::par`) and [`packed`] adds the fused
+//! GEMM that consumes bit-packed MX weights without dequantizing them.
 
 pub mod hadamard;
+pub mod packed;
 
 pub use hadamard::{block_hadamard_apply, hadamard};
+pub use packed::{packed_matmul, PackedMat, WeightMatrix};
+
+use crate::util::par;
 
 /// Row-major f32 matrix.
 #[derive(Clone, Debug, PartialEq)]
@@ -64,14 +71,19 @@ impl Mat {
     /// 4-wide so the inner j-loop fuses four B rows per pass (4x the
     /// arithmetic intensity per `out` traversal), and the old `a == 0.0`
     /// zero-skip branch is gone: on dense data it only bought branch
-    /// mispredictions in the innermost loop.
+    /// mispredictions in the innermost loop. Output rows fan out over the
+    /// `util::par` pool above [`par::PAR_MIN_LEN`] output elements; each
+    /// row's accumulation order is fixed, so results are bit-identical
+    /// for any worker count (property-tested in `packed_gemm_props.rs`).
     pub fn matmul(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         let (m, kd, n) = (self.rows, self.cols, other.cols);
         let mut out = Mat::zeros(m, n);
-        for i in 0..m {
+        if m == 0 || n == 0 {
+            return out;
+        }
+        let row_kernel = |i: usize, orow: &mut [f32]| {
             let arow = &self.data[i * kd..(i + 1) * kd];
-            let orow = &mut out.data[i * n..(i + 1) * n];
             let mut k = 0;
             while k + 4 <= kd {
                 let (a0, a1, a2, a3) = (arow[k], arow[k + 1], arow[k + 2], arow[k + 3]);
@@ -92,6 +104,13 @@ impl Mat {
                 }
                 k += 1;
             }
+        };
+        if m < 2 || m * n < par::PAR_MIN_LEN {
+            for (i, orow) in out.data.chunks_mut(n).enumerate() {
+                row_kernel(i, orow);
+            }
+        } else {
+            par::for_each_chunk(&mut out.data, n, row_kernel);
         }
         out
     }

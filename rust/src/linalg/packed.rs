@@ -1,0 +1,298 @@
+//! Fused packed-MX GEMM: matmul directly on bit-packed FP4/INT4 weights.
+//!
+//! [`PackedMat`] stores a weight matrix as one flat [`PackedMx`] over its
+//! row-major data — `cols % block_size == 0` guarantees every MX block
+//! lies inside a single weight row, so row `k` of the matrix is exactly
+//! the byte range of blocks `k*bpr .. (k+1)*bpr` (`bpr = cols / block`).
+//! [`packed_matmul`] streams those bytes through the 256-entry byte-pair
+//! LUTs in `mx::formats`, applies the E8M0 block scale in-register as a
+//! multiply by `exp2i(e)` (the scale is an exact power of two, so the
+//! decoded value is bit-identical to `PackedMx::unpack`), accumulates in
+//! f32, and fans output-row bands out over the `util::par` pool. The f32
+//! weight matrix is never materialized: resident weight bytes drop ~7.5x
+//! (4.25 packed bits vs 32) and the kernel's memory traffic with them.
+//!
+//! Bit-exactness contract (property-tested in
+//! `rust/tests/packed_gemm_props.rs` against the `mx::reference` scalar
+//! oracle): `packed_matmul(a, &PackedMat::pack(w, cfg)?)` equals
+//! `a.matmul(&dequantized_w)` bit-for-bit, where `dequantized_w` is the
+//! scalar-reference dequantization of the same packed bytes. The kernel
+//! replays the dense [`Mat::matmul`] accumulation order per output row
+//! (4-wide k-unroll, then the scalar remainder), so fusing the decode
+//! changes nothing about the float semantics — engine token streams are
+//! identical packed-vs-dequantized (`rust/tests/serving_pipeline.rs`).
+
+use anyhow::{ensure, Result};
+
+use super::Mat;
+use crate::mx::formats::{exp2i, fp4_pair_lut, int4_pair_lut};
+use crate::mx::pack::PackedMx;
+use crate::mx::quantize::MxConfig;
+use crate::util::par;
+
+/// Output rows per parallel work item in [`packed_matmul`]: amortizes the
+/// k-panel decode across a band of rows while keeping enough chunks for
+/// the pool to balance.
+const ROW_BAND: usize = 8;
+
+/// A weight matrix held in bit-packed MX form (two 4-bit codes per byte +
+/// one E8M0 scale byte per block), decodable row-by-row.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedMat {
+    pub rows: usize,
+    pub cols: usize,
+    packed: PackedMx,
+}
+
+impl PackedMat {
+    /// Pack a row-major weight matrix. Requires a single-level 4-bit
+    /// element format with an even block size that tiles `cols`, so MX
+    /// blocks align to weight rows and nibble pairs never straddle bytes
+    /// — the layout row-wise decode depends on.
+    pub fn pack(w: &Mat, cfg: MxConfig) -> Result<PackedMat> {
+        ensure!(
+            cfg.element.bits == 4 && !cfg.nv && cfg.name != "none",
+            "PackedMat: single-level 4-bit element formats only, got {}",
+            cfg.name
+        );
+        ensure!(
+            cfg.block_size % 2 == 0,
+            "PackedMat: odd block size {} straddles code bytes",
+            cfg.block_size
+        );
+        ensure!(
+            w.cols % cfg.block_size == 0,
+            "PackedMat: cols {} not a multiple of block size {}",
+            w.cols,
+            cfg.block_size
+        );
+        Ok(PackedMat { rows: w.rows, cols: w.cols, packed: PackedMx::pack(&w.data, cfg) })
+    }
+
+    pub fn config(&self) -> MxConfig {
+        self.packed.cfg
+    }
+
+    /// Total packed bytes (codes + scales) — the resident footprint.
+    pub fn bytes(&self) -> usize {
+        self.packed.bytes()
+    }
+
+    /// Dequantize back to a dense matrix (off the hot path; parity tests
+    /// and the dequantized serving mode use this).
+    pub fn unpack(&self) -> Mat {
+        Mat::from_vec(self.rows, self.cols, self.packed.unpack())
+    }
+
+    /// Decode weight rows `k0 .. k0+count` into `dst` (row-major
+    /// `count x cols`). Per-element semantics are exactly
+    /// `PackedMx::unpack_into`: one LUT load per packed byte, two
+    /// multiplies by the power-of-two block scale out.
+    pub fn decode_rows(&self, k0: usize, count: usize, dst: &mut [f32]) {
+        let n = self.cols;
+        if n == 0 || count == 0 {
+            return;
+        }
+        let b = self.packed.cfg.block_size;
+        let bpr = n / b;
+        let lut = if self.packed.cfg.element.is_fp { fp4_pair_lut() } else { int4_pair_lut() };
+        let scales = &self.packed.scales;
+        let codes = &self.packed.codes;
+        for (r, row) in dst.chunks_exact_mut(n).take(count).enumerate() {
+            let bi0 = (k0 + r) * bpr;
+            for (j, chunk) in row.chunks_exact_mut(b).enumerate() {
+                let bi = bi0 + j;
+                let s = exp2i(scales[bi] as i32 - 127);
+                let cb = &codes[bi * b / 2..(bi + 1) * b / 2];
+                for (pair, byte) in chunk.chunks_exact_mut(2).zip(cb) {
+                    let d = &lut[*byte as usize];
+                    pair[0] = d[0] * s;
+                    pair[1] = d[1] * s;
+                }
+            }
+        }
+    }
+}
+
+/// `a @ w` with `w` kept in packed MX form end to end.
+///
+/// Decodes a 4-row k-panel of `w` at a time into a small scratch buffer
+/// and replays the dense [`Mat::matmul`] micro-kernel over it, so each
+/// output row sees the identical sequence of f32 operations as
+/// `a.matmul(&w.unpack())` — bit-exact, and (since rows are independent)
+/// invariant to the worker count. Output rows fan out over `util::par`
+/// in bands of [`ROW_BAND`] above [`par::PAR_MIN_LEN`] output elements.
+pub fn packed_matmul(a: &Mat, w: &PackedMat) -> Mat {
+    assert_eq!(a.cols, w.rows, "packed_matmul shape mismatch");
+    let (m, kd, n) = (a.rows, a.cols, w.cols);
+    let mut out = Mat::zeros(m, n);
+    if m == 0 || n == 0 {
+        return out;
+    }
+    // `i0` = first output row of the band, `oband` = its slice of `out`.
+    let do_band = |i0: usize, oband: &mut [f32]| {
+        let band_rows = oband.len() / n;
+        let mut panel = vec![0.0f32; 4 * n];
+        let mut k = 0;
+        while k + 4 <= kd {
+            w.decode_rows(k, 4, &mut panel);
+            let (b0, rest) = panel.split_at(n);
+            let (b1, rest) = rest.split_at(n);
+            let (b2, b3) = rest.split_at(n);
+            for r in 0..band_rows {
+                let arow = &a.data[(i0 + r) * kd..(i0 + r + 1) * kd];
+                let (a0, a1, a2, a3) = (arow[k], arow[k + 1], arow[k + 2], arow[k + 3]);
+                let orow = &mut oband[r * n..(r + 1) * n];
+                for j in 0..n {
+                    orow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+                }
+            }
+            k += 4;
+        }
+        while k < kd {
+            w.decode_rows(k, 1, &mut panel[..n]);
+            let brow = &panel[..n];
+            for r in 0..band_rows {
+                let av = a.data[(i0 + r) * kd + k];
+                let orow = &mut oband[r * n..(r + 1) * n];
+                for (o, b) in orow.iter_mut().zip(brow.iter()) {
+                    *o += av * b;
+                }
+            }
+            k += 1;
+        }
+    };
+    if m * n < par::PAR_MIN_LEN {
+        do_band(0, &mut out.data);
+    } else {
+        par::for_each_chunk(&mut out.data, ROW_BAND * n, |bi, band| do_band(bi * ROW_BAND, band));
+    }
+    out
+}
+
+/// The shape a linear-layer weight can take in the native forward pass:
+/// dense f32 ([`Mat`]) or bit-packed MX ([`PackedMat`]). `model::linear`
+/// is generic over this, which is what lets `NativeWeights` keep weights
+/// packed from `.lxt` load all the way through the serving hot path.
+pub trait WeightMatrix: Clone + std::fmt::Debug {
+    /// Input (K) dimension — weight layout is `(in, out)`, `y = x W + b`.
+    fn in_dim(&self) -> usize;
+    /// Output (N) dimension.
+    fn out_dim(&self) -> usize;
+    /// `x @ W` for a row-major activation matrix `x`.
+    fn matmul_pre(&self, x: &Mat) -> Mat;
+    /// Resident bytes of the weight storage itself.
+    fn weight_bytes(&self) -> usize;
+}
+
+impl WeightMatrix for Mat {
+    fn in_dim(&self) -> usize {
+        self.rows
+    }
+
+    fn out_dim(&self) -> usize {
+        self.cols
+    }
+
+    fn matmul_pre(&self, x: &Mat) -> Mat {
+        x.matmul(self)
+    }
+
+    fn weight_bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+}
+
+impl WeightMatrix for PackedMat {
+    fn in_dim(&self) -> usize {
+        self.rows
+    }
+
+    fn out_dim(&self) -> usize {
+        self.cols
+    }
+
+    fn matmul_pre(&self, x: &Mat) -> Mat {
+        packed_matmul(x, self)
+    }
+
+    fn weight_bytes(&self) -> usize {
+        self.bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn rand_mat(rows: usize, cols: usize, seed: u64) -> Mat {
+        let mut r = Pcg64::seed(seed);
+        Mat::from_vec(rows, cols, r.normal_vec(rows * cols, 1.5))
+    }
+
+    #[test]
+    fn pack_roundtrip_matches_flat_unpack() {
+        for fmt in ["mxfp4", "mxint4"] {
+            let cfg = MxConfig::from_name(fmt, Some(16)).unwrap();
+            let w = rand_mat(13, 48, 21);
+            let p = PackedMat::pack(&w, cfg).unwrap();
+            let u = p.unpack();
+            assert_eq!((u.rows, u.cols), (13, 48));
+            // row-wise decode agrees with the flat unpack, any offset/count
+            let mut rows = vec![0.0f32; 3 * 48];
+            p.decode_rows(5, 3, &mut rows);
+            assert_eq!(&rows, &u.data[5 * 48..8 * 48], "{fmt}");
+        }
+    }
+
+    #[test]
+    fn packed_matmul_matches_dense_on_unpacked() {
+        let cfg = MxConfig::from_name("mxfp4", Some(32)).unwrap();
+        // kd = 37 exercises the 4-wide remainder; m = 1 is the GEMV decode shape
+        for (m, kd, n) in [(1usize, 37usize, 64usize), (6, 32, 96), (4, 7, 32)] {
+            let a = rand_mat(m, kd, 31);
+            let w = rand_mat(kd, n, 32);
+            let p = PackedMat::pack(&w, cfg).unwrap();
+            let fused = packed_matmul(&a, &p);
+            let dense = a.matmul(&p.unpack());
+            for (i, (x, y)) in fused.data.iter().zip(&dense.data).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "m={m} kd={kd} n={n} idx {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn pack_rejects_bad_layouts() {
+        let w = rand_mat(8, 48, 33);
+        let cfg = MxConfig::from_name("mxfp4", Some(32)).unwrap();
+        assert!(PackedMat::pack(&w, cfg).is_err(), "48 cols not a multiple of 32");
+        let mut odd = MxConfig::from_name("mxfp4", Some(16)).unwrap();
+        odd.block_size = 3;
+        assert!(PackedMat::pack(&w, odd).is_err(), "odd block size");
+        let eight = MxConfig::from_name("mxfp8", Some(16)).unwrap();
+        assert!(PackedMat::pack(&w, eight).is_err(), "8-bit elements");
+        let nv = MxConfig::from_name("nvfp4", Some(16)).unwrap();
+        assert!(PackedMat::pack(&w, nv).is_err(), "two-level scales");
+    }
+
+    #[test]
+    fn weight_matrix_dims_and_bytes() {
+        let cfg = MxConfig::from_name("mxfp4", Some(32)).unwrap();
+        let w = rand_mat(64, 128, 34);
+        let p = PackedMat::pack(&w, cfg).unwrap();
+        assert_eq!((p.in_dim(), p.out_dim()), (w.in_dim(), w.out_dim()));
+        assert_eq!(w.weight_bytes(), 64 * 128 * 4);
+        // 4.25 bits/elem at B=32 vs 32 bits dense: ~7.5x smaller
+        let ratio = w.weight_bytes() as f64 / p.weight_bytes() as f64;
+        assert!((ratio - 32.0 / 4.25).abs() < 1e-9, "{ratio}");
+    }
+
+    #[test]
+    fn degenerate_shapes() {
+        let cfg = MxConfig::from_name("mxint4", Some(16)).unwrap();
+        let w = PackedMat::pack(&rand_mat(5, 16, 35), cfg).unwrap();
+        let empty = packed_matmul(&Mat::zeros(0, 5), &w);
+        assert_eq!((empty.rows, empty.cols), (0, 16));
+    }
+}

@@ -5,7 +5,7 @@
 //!   eval   --weights TAG --quant TAG [--ppl-only] [--backend B]
 //!   serve  --weights TAG --quant TAG [--requests N] [--slots N] [--max-new N] [--backend B]
 //!          [--open-loop] [--arrival-rate R] [--deadline-ms MS] [--queue-depth N]
-//!          [--seed N] [--synthetic]
+//!          [--seed N] [--synthetic] [--packed-weights]
 //!   learn  [--steps N] [--lr F] [--block N] [--bits N] [--features model|outlier|dirac]
 //!          [--sites residual,t2,ffn] [--heads 0,1] [--save-spec PATH]
 //!   fold   --weights TAG --spec PATH --out DIR [--tag TAG]
@@ -58,7 +58,7 @@ fn main() -> Result<()> {
                  eval   --weights TAG --quant TAG [--ppl-only] [--backend xla|native]\n\
                  serve  --weights TAG --quant TAG [--requests N] [--slots N] [--max-new N] [--backend xla|native]\n\
                  \x20       [--open-loop] [--arrival-rate R] [--deadline-ms MS] [--queue-depth N]\n\
-                 \x20       [--seed N] [--synthetic]\n\
+                 \x20       [--seed N] [--synthetic] [--packed-weights]\n\
                  learn  [--steps N] [--lr F] [--block N] [--bits 4|6|8] [--format FMT]\n\
                  \x20       [--features model|outlier|dirac] [--layer N] [--d N] [--rows N]\n\
                  \x20       [--init bd_hadamard|hadamard|identity] [--seed N]\n\
@@ -160,15 +160,24 @@ fn serve(args: &Args) -> Result<()> {
     let slots = args.opt_usize("slots", 8);
     let max_new = args.opt_usize("max-new", 32);
     let seed = args.opt_usize("seed", 42) as u64;
+    let packed = args.flag("packed-weights");
     let rep: ServeReport = match backend_name(args) {
-        "native" => run_serving_native(&d, &qtag, &wtag, requests, max_new, slots, seed)?,
+        "native" => run_serving_native(&d, &qtag, &wtag, requests, max_new, slots, seed, packed)?,
         #[cfg(feature = "backend-xla")]
         "xla" => {
+            anyhow::ensure!(!packed, "--packed-weights is native-only (use --backend native)");
             let rt = Runtime::new(d)?;
             run_serving(&rt, &qtag, &wtag, requests, max_new, slots, seed)?
         }
         other => return Err(unknown_backend(other)),
     };
+    if rep.resident_weight_bytes > 0 {
+        println!(
+            "resident weights: {:.2} MiB ({})",
+            rep.resident_weight_bytes as f64 / (1 << 20) as f64,
+            if packed { "MX-packed" } else { "dense f32" }
+        );
+    }
     if rep.is_empty() {
         println!(
             "serve: 0 requests completed (graph={} weights={}) — no latency percentiles \
@@ -215,18 +224,26 @@ fn serve_open(args: &Args) -> Result<()> {
     };
     anyhow::ensure!(cfg.arrival_rate > 0.0, "--arrival-rate must be > 0");
     let qtag = args.opt("quant").unwrap_or("fp").to_string();
+    let packed = args.flag("packed-weights");
     let rep: ServingReport = if args.flag("synthetic") {
         use latmix::coordinator::engine::NativeExecutor;
-        let exec =
+        let mut exec =
             NativeExecutor::synthetic(NativeDims::latmix_tiny(), &qtag, vec![1, 2, 4, 8], cfg.seed)?;
-        serve_open_loop(exec, &qtag, "synthetic", "native", &cfg)?
+        if packed {
+            exec = exec.into_packed()?;
+        }
+        let bytes = exec.resident_weight_bytes();
+        let mut rep = serve_open_loop(exec, &qtag, "synthetic", "native", &cfg)?;
+        rep.resident_weight_bytes = bytes;
+        rep
     } else {
         let d = desc()?;
         let wtag = args.opt("weights").unwrap_or("fp16").to_string();
         match backend_name(args) {
-            "native" => run_open_loop_native(&d, &qtag, &wtag, &cfg)?,
+            "native" => run_open_loop_native(&d, &qtag, &wtag, &cfg, packed)?,
             #[cfg(feature = "backend-xla")]
             "xla" => {
+                anyhow::ensure!(!packed, "--packed-weights is native-only (use --backend native)");
                 let rt = Runtime::new(d)?;
                 run_open_loop(&rt, &qtag, &wtag, &cfg)?
             }
@@ -249,6 +266,13 @@ fn serve_open(args: &Args) -> Result<()> {
         rep.wall_s,
         rep.decode_tok_per_s
     );
+    if rep.resident_weight_bytes > 0 {
+        println!(
+            "resident weights: {:.2} MiB ({})",
+            rep.resident_weight_bytes as f64 / (1 << 20) as f64,
+            if packed { "MX-packed" } else { "dense f32" }
+        );
+    }
     let mut table = latmix::bench::Table::new(
         "serving_slo",
         "Per-class SLO percentiles (open-loop)",

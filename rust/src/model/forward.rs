@@ -39,7 +39,7 @@ use std::collections::HashMap;
 use anyhow::{Context, Result};
 
 use crate::io::lxt::Tensor;
-use crate::linalg::{block_hadamard_apply, Mat};
+use crate::linalg::{block_hadamard_apply, Mat, PackedMat, WeightMatrix};
 use crate::mx::{mx_qdq_rows, MxConfig};
 use crate::transform::spec::{TransformMode, TransformSpec};
 use crate::transform::Affine;
@@ -172,38 +172,49 @@ impl GraphSpec {
 }
 
 /// One transformer block's parameters (row-vector convention: `y = x W + b`,
-/// `W: (in, out)` — identical to the python pytree).
+/// `W: (in, out)` — identical to the python pytree). Generic over the
+/// weight-matrix storage `W` ([`linalg::WeightMatrix`]): dense f32 [`Mat`]
+/// by default, or bit-packed [`PackedMat`] in the packed serving mode.
+/// Norm gains and biases are small and stay f32 either way.
 #[derive(Clone, Debug, PartialEq)]
-pub struct LayerWeights {
+pub struct LayerWeights<W = Mat> {
     pub ln1: Vec<f32>,
-    pub wq: Mat,
+    pub wq: W,
     pub bq: Vec<f32>,
-    pub wk: Mat,
+    pub wk: W,
     pub bk: Vec<f32>,
-    pub wv: Mat,
+    pub wv: W,
     pub bv: Vec<f32>,
-    pub wo: Mat,
+    pub wo: W,
     pub bo: Vec<f32>,
     pub ln2: Vec<f32>,
-    pub wg: Mat,
+    pub wg: W,
     pub bg: Vec<f32>,
-    pub wu: Mat,
+    pub wu: W,
     pub bu: Vec<f32>,
-    pub wd: Mat,
+    pub wd: W,
     pub bd: Vec<f32>,
 }
 
 /// A full parsed weight set plus its dimensions — the native analogue of a
-/// staged PJRT literal vector.
+/// staged PJRT literal vector. Generic over linear-layer weight storage
+/// (see [`LayerWeights`]); the embedding stays a dense [`Mat`] in every
+/// mode because it is only ever read row-wise (`embed_rows` gathers, the
+/// GEMM never touches it).
 #[derive(Clone, Debug, PartialEq)]
-pub struct NativeWeights {
+pub struct NativeWeights<W = Mat> {
     pub dims: NativeDims,
     pub embed: Mat,
-    pub layers: Vec<LayerWeights>,
+    pub layers: Vec<LayerWeights<W>>,
     pub lnf: Vec<f32>,
-    pub head: Mat,
+    pub head: W,
     pub bhead: Vec<f32>,
 }
+
+/// Weights held in bit-packed MX form: every linear matmul runs the fused
+/// `linalg::packed_matmul` LUT kernel and the f32 weight matrices are
+/// never materialized (~7.5x fewer resident weight bytes at B=32).
+pub type PackedNativeWeights = NativeWeights<PackedMat>;
 
 impl NativeWeights {
     /// Parse an `.lxt` weight set using the manifest's canonical argument
@@ -367,6 +378,120 @@ impl NativeWeights {
             order,
             WeightSet { tag: tag.to_string(), tensors, param_count },
         )
+    }
+
+    /// Re-encode every linear weight matrix into bit-packed MX storage
+    /// (`cfg` is the graph tag's activation format — the packed serving
+    /// mode reuses it for weights). The embedding, norm gains, and biases
+    /// stay f32. Fails on formats `PackedMat` cannot hold (non-4-bit,
+    /// two-level scales, blocks that do not tile a weight width).
+    pub fn pack_weights(&self, cfg: MxConfig) -> Result<PackedNativeWeights> {
+        let pk = |w: &Mat, name: &str| -> Result<PackedMat> {
+            PackedMat::pack(w, cfg).with_context(|| format!("packing weight {name}"))
+        };
+        let mut layers = Vec::with_capacity(self.layers.len());
+        for (i, lw) in self.layers.iter().enumerate() {
+            let p = |k: &str| format!("layers.{i}.{k}");
+            layers.push(LayerWeights {
+                ln1: lw.ln1.clone(),
+                wq: pk(&lw.wq, &p("wq"))?,
+                bq: lw.bq.clone(),
+                wk: pk(&lw.wk, &p("wk"))?,
+                bk: lw.bk.clone(),
+                wv: pk(&lw.wv, &p("wv"))?,
+                bv: lw.bv.clone(),
+                wo: pk(&lw.wo, &p("wo"))?,
+                bo: lw.bo.clone(),
+                ln2: lw.ln2.clone(),
+                wg: pk(&lw.wg, &p("wg"))?,
+                bg: lw.bg.clone(),
+                wu: pk(&lw.wu, &p("wu"))?,
+                bu: lw.bu.clone(),
+                wd: pk(&lw.wd, &p("wd"))?,
+                bd: lw.bd.clone(),
+            });
+        }
+        Ok(NativeWeights {
+            dims: self.dims,
+            embed: self.embed.clone(),
+            layers,
+            lnf: self.lnf.clone(),
+            head: pk(&self.head, "head")?,
+            bhead: self.bhead.clone(),
+        })
+    }
+}
+
+impl PackedNativeWeights {
+    /// Dequantize every packed weight back to dense f32 — the *same*
+    /// packed bytes, decoded once up front instead of inside the GEMM.
+    /// Running this twin through the engine is the packed-vs-dequantized
+    /// parity gate: token streams must be bit-identical because
+    /// `packed_matmul` replays the dense kernel's accumulation order.
+    pub fn unpack_weights(&self) -> NativeWeights {
+        let layers = self
+            .layers
+            .iter()
+            .map(|lw| LayerWeights {
+                ln1: lw.ln1.clone(),
+                wq: lw.wq.unpack(),
+                bq: lw.bq.clone(),
+                wk: lw.wk.unpack(),
+                bk: lw.bk.clone(),
+                wv: lw.wv.unpack(),
+                bv: lw.bv.clone(),
+                wo: lw.wo.unpack(),
+                bo: lw.bo.clone(),
+                ln2: lw.ln2.clone(),
+                wg: lw.wg.unpack(),
+                bg: lw.bg.clone(),
+                wu: lw.wu.unpack(),
+                bu: lw.bu.clone(),
+                wd: lw.wd.unpack(),
+                bd: lw.bd.clone(),
+            })
+            .collect();
+        NativeWeights {
+            dims: self.dims,
+            embed: self.embed.clone(),
+            layers,
+            lnf: self.lnf.clone(),
+            head: self.head.unpack(),
+            bhead: self.bhead.clone(),
+        }
+    }
+}
+
+impl<W: WeightMatrix> NativeWeights<W> {
+    /// Resident bytes of all weight storage (embedding + linear matrices
+    /// + norms/biases) — what the serve report prints as
+    /// `resident_weight_bytes`.
+    pub fn weight_bytes(&self) -> usize {
+        let f32s = std::mem::size_of::<f32>();
+        let vecs = |v: &Vec<f32>| v.len() * f32s;
+        let mut total = self.embed.data.len() * f32s
+            + vecs(&self.lnf)
+            + vecs(&self.bhead)
+            + self.head.weight_bytes();
+        for lw in &self.layers {
+            total += lw.wq.weight_bytes()
+                + lw.wk.weight_bytes()
+                + lw.wv.weight_bytes()
+                + lw.wo.weight_bytes()
+                + lw.wg.weight_bytes()
+                + lw.wu.weight_bytes()
+                + lw.wd.weight_bytes()
+                + vecs(&lw.ln1)
+                + vecs(&lw.ln2)
+                + vecs(&lw.bq)
+                + vecs(&lw.bk)
+                + vecs(&lw.bv)
+                + vecs(&lw.bo)
+                + vecs(&lw.bg)
+                + vecs(&lw.bu)
+                + vecs(&lw.bd);
+        }
+        total
     }
 
     // -- entry points -------------------------------------------------------
@@ -694,7 +819,7 @@ impl NativeWeights {
     fn block_full(
         &self,
         li: usize,
-        lw: &LayerWeights,
+        lw: &LayerWeights<W>,
         x: &mut Vec<f32>,
         batch: usize,
         t: usize,
@@ -713,7 +838,7 @@ impl NativeWeights {
     fn attn_block(
         &self,
         li: usize,
-        lw: &LayerWeights,
+        lw: &LayerWeights<W>,
         x: &mut Vec<f32>,
         batch: usize,
         t: usize,
@@ -748,7 +873,14 @@ impl NativeWeights {
 
     /// Pre-norm SiLU-gated FFN with optional online T3 Hadamard and
     /// optional `FfnDown` transform, in place.
-    fn ffn(&self, li: usize, lw: &LayerWeights, x: &mut Vec<f32>, spec: &GraphSpec, tf: SpecRun) {
+    fn ffn(
+        &self,
+        li: usize,
+        lw: &LayerWeights<W>,
+        x: &mut Vec<f32>,
+        spec: &GraphSpec,
+        tf: SpecRun,
+    ) {
         let mut ff = self.ffn_gate(lw, x, spec, tf);
         let tfd = tf.and_then(|(s, _)| s.ffn_down(li));
         if let Some(tfd) = tfd {
@@ -767,7 +899,13 @@ impl NativeWeights {
 
     /// The FFN up to (and including) the online T3 Hadamard: the rows an
     /// `FfnDown` transform — and `capture_ffn_input` — operate on.
-    fn ffn_gate(&self, lw: &LayerWeights, x: &[f32], spec: &GraphSpec, tf: SpecRun) -> Vec<f32> {
+    fn ffn_gate(
+        &self,
+        lw: &LayerWeights<W>,
+        x: &[f32],
+        spec: &GraphSpec,
+        tf: SpecRun,
+    ) -> Vec<f32> {
         let d = self.dims.d_model;
         let mut hq = rmsnorm_rows(x, d, &lw.ln2);
         qdq_rows(&mut hq, d, spec);
@@ -906,12 +1044,15 @@ fn rmsnorm_rows(x: &[f32], d: usize, g: &[f32]) -> Vec<f32> {
     out
 }
 
-/// `x @ w + b` for row-major `x` with `x.len() / w.rows` rows.
-fn linear(x: &[f32], w: &Mat, b: &[f32]) -> Vec<f32> {
-    debug_assert_eq!(x.len() % w.rows, 0);
-    let n = x.len() / w.rows;
-    let mut out = Mat::from_vec(n, w.rows, x.to_vec()).matmul(w).data;
-    for row in out.chunks_mut(w.cols) {
+/// `x @ w + b` for row-major `x` with `x.len() / w.in_dim()` rows.
+/// Generic over the weight storage: a dense [`Mat`] runs `Mat::matmul`, a
+/// [`PackedMat`] runs the fused `linalg::packed_matmul` LUT kernel on the
+/// packed bytes directly — the serving hot path's single dispatch point.
+fn linear<W: WeightMatrix>(x: &[f32], w: &W, b: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(x.len() % w.in_dim(), 0);
+    let n = x.len() / w.in_dim();
+    let mut out = w.matmul_pre(&Mat::from_vec(n, w.in_dim(), x.to_vec())).data;
+    for row in out.chunks_mut(w.out_dim()) {
         for (o, bb) in row.iter_mut().zip(b) {
             *o += *bb;
         }
@@ -1072,6 +1213,33 @@ mod tests {
         assert_eq!(order.len(), 1 + 16 * 2 + 3);
         let back = NativeWeights::from_weight_set(tiny(), &order, &ws).unwrap();
         assert_eq!(w, back);
+    }
+
+    #[test]
+    fn packed_weights_forward_parity() {
+        let dims = quantizable();
+        let w = NativeWeights::synthetic(dims, 41);
+        let g = GraphSpec::from_tag("mxfp4_b32").unwrap();
+        let packed = w.pack_weights(g.act.unwrap()).unwrap();
+        assert!(
+            packed.weight_bytes() < w.weight_bytes(),
+            "{} !< {}",
+            packed.weight_bytes(),
+            w.weight_bytes()
+        );
+        let dq = packed.unpack_weights();
+        let toks: Vec<i32> = (0..6).collect();
+        let a = packed.forward_seq(&toks, 1, 6, &g).unwrap();
+        let b = dq.forward_seq(&toks, 1, 6, &g).unwrap();
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "fused vs dequantized idx {i}");
+        }
+        // packing IS weight quantization: the fp-weight model must differ
+        let raw = w.forward_seq(&toks, 1, 6, &g).unwrap();
+        assert_ne!(a, raw, "packing the weights must change the function");
+        // blocks that do not tile a weight width are rejected
+        let w16 = NativeWeights::synthetic(tiny(), 41);
+        assert!(w16.pack_weights(g.act.unwrap()).is_err(), "d_model 16 vs block 32");
     }
 
     #[test]

@@ -9,7 +9,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
-pub use forward::{GraphSpec, LayerWeights, NativeDims, NativeWeights, SpecRun};
+pub use forward::{GraphSpec, LayerWeights, NativeDims, NativeWeights, PackedNativeWeights, SpecRun};
 
 use std::collections::BTreeMap;
 

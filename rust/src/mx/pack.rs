@@ -21,7 +21,7 @@ use super::quantize::{MxConfig, SCALE_EMAX, SCALE_EMIN};
 use crate::util::par;
 
 /// A bit-packed MX tensor (4-bit element formats only).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct PackedMx {
     pub cfg: MxConfig,
     pub len: usize,

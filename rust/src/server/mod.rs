@@ -46,6 +46,10 @@ pub struct ServeReport {
     pub ttft_p99_ms: f64,
     pub latency_p50_ms: f64,
     pub latency_p99_ms: f64,
+    /// Bytes of model weights resident in the executor (packed MX bytes
+    /// when `--packed-weights`, f32 bytes otherwise). 0 when the executor
+    /// does not expose a footprint (mock/XLA paths).
+    pub resident_weight_bytes: usize,
 }
 
 impl ServeReport {
@@ -71,6 +75,7 @@ impl ServeReport {
                 ttft_p99_ms: 0.0,
                 latency_p50_ms: 0.0,
                 latency_p99_ms: 0.0,
+                resident_weight_bytes: 0,
             };
         }
         let mut ttft = Summary::new();
@@ -92,6 +97,7 @@ impl ServeReport {
             ttft_p99_ms: ttft.percentile(99.0),
             latency_p50_ms: lat.percentile(50.0),
             latency_p99_ms: lat.percentile(99.0),
+            resident_weight_bytes: 0,
         }
     }
 
@@ -143,7 +149,9 @@ pub fn run_serving(
 }
 
 /// Run the serving benchmark on the pure-Rust executor (no XLA toolchain
-/// needed; same `.lxt` weights and compiled-batch discipline).
+/// needed; same `.lxt` weights and compiled-batch discipline). With
+/// `packed`, weights are repacked into MX bytes at load and the fused
+/// packed GEMM decodes them in-register (quantized graph tags only).
 pub fn run_serving_native(
     desc: &ModelDesc,
     graph_tag: &str,
@@ -152,10 +160,18 @@ pub fn run_serving_native(
     max_new: usize,
     max_slots: usize,
     seed: u64,
+    packed: bool,
 ) -> Result<ServeReport> {
     let ws = WeightSet::load(desc, weights_tag)?;
-    let exec = NativeExecutor::new(desc, graph_tag, &ws)?;
-    serve_with_executor(exec, graph_tag, weights_tag, n_requests, max_new, max_slots, seed)
+    let mut exec = NativeExecutor::new(desc, graph_tag, &ws)?;
+    if packed {
+        exec = exec.into_packed()?;
+    }
+    let bytes = exec.resident_weight_bytes();
+    let mut rep =
+        serve_with_executor(exec, graph_tag, weights_tag, n_requests, max_new, max_slots, seed)?;
+    rep.resident_weight_bytes = bytes;
+    Ok(rep)
 }
 
 // ---------------------------------------------------------------------------
@@ -222,6 +238,9 @@ pub struct ServingReport {
     pub lost: usize,
     pub wall_s: f64,
     pub decode_tok_per_s: f64,
+    /// Bytes of model weights resident in the executor (packed MX bytes
+    /// when `--packed-weights`, f32 bytes otherwise; 0 when unknown).
+    pub resident_weight_bytes: usize,
     pub classes: Vec<ClassLatency>,
 }
 
@@ -282,6 +301,7 @@ impl ServingReport {
     ///   "tag": "fp", "weights": "fp16",
     ///   "arrival_rate": 100.0, "requests": 64, "lost": 0,
     ///   "wall_s": ..., "decode_tok_per_s": ...,
+    ///   "resident_weight_bytes": 0,
     ///   "classes": [
     ///     {"class": "short", "requests": 40, "completed": 40,
     ///      "rejected": 0, "timed_out": 0, "cancelled": 0,
@@ -310,6 +330,7 @@ impl ServingReport {
         out += &format!("  \"lost\": {},\n", self.lost);
         out += &format!("  \"wall_s\": {:e},\n", self.wall_s);
         out += &format!("  \"decode_tok_per_s\": {:e},\n", self.decode_tok_per_s);
+        out += &format!("  \"resident_weight_bytes\": {},\n", self.resident_weight_bytes);
         out += "  \"classes\": [\n";
         let rows: Vec<String> = self
             .classes
@@ -425,20 +446,29 @@ pub fn serve_open_loop<E: StepExecutor>(
         lost,
         wall_s: engine.stats.wall_s,
         decode_tok_per_s: engine.stats.decode_tok_per_s(),
+        resident_weight_bytes: 0,
         classes: ServingReport::aggregate(&classes, &class_of, &results),
     })
 }
 
-/// Open-loop run over artifact-backed native weights.
+/// Open-loop run over artifact-backed native weights. With `packed`,
+/// weights stay MX-packed and the fused packed GEMM serves them.
 pub fn run_open_loop_native(
     desc: &ModelDesc,
     graph_tag: &str,
     weights_tag: &str,
     cfg: &OpenLoopConfig,
+    packed: bool,
 ) -> Result<ServingReport> {
     let ws = WeightSet::load(desc, weights_tag)?;
-    let exec = NativeExecutor::new(desc, graph_tag, &ws)?;
-    serve_open_loop(exec, graph_tag, weights_tag, "native", cfg)
+    let mut exec = NativeExecutor::new(desc, graph_tag, &ws)?;
+    if packed {
+        exec = exec.into_packed()?;
+    }
+    let bytes = exec.resident_weight_bytes();
+    let mut rep = serve_open_loop(exec, graph_tag, weights_tag, "native", cfg)?;
+    rep.resident_weight_bytes = bytes;
+    Ok(rep)
 }
 
 /// Open-loop run over the PJRT executor.
@@ -549,6 +579,7 @@ mod tests {
         assert!(s.contains("\"bench\": \"serving\""));
         assert!(s.contains("\"schema\": 1"));
         assert!(s.contains("\"lost\": 0"));
+        assert!(s.contains("\"resident_weight_bytes\": 0"));
         assert!(s.contains("\"ttft_p90_ms\""));
         assert!(s.contains("\"itl_p99_ms\""));
         assert!(!s.contains("NaN") && !s.contains("inf"));

@@ -1,0 +1,181 @@
+//! Bit-exactness and determinism properties for the fused packed-MX GEMM.
+//!
+//! The contract (see `latmix::linalg::packed`): `packed_matmul(a, pw)` must
+//! agree bit-for-bit with the two-step oracle — dequantize the same packed
+//! bytes through the scalar reference codec (`latmix::mx::reference`) into
+//! an f32 matrix, then run the dense [`Mat::matmul`] kernel — on every
+//! supported 4-bit tag, block size, shape class (K not a multiple of the
+//! block or of the 4-wide unroll, single-row GEMV), and adversarial scale
+//! range (denormal-range blocks). Both the packed and the newly parallel
+//! dense kernels must also be invariant to the worker count.
+
+use latmix::linalg::{packed_matmul, Mat, PackedMat};
+use latmix::mx::reference;
+use latmix::mx::MxConfig;
+use latmix::testing::{forall, VecGen};
+use latmix::util::{par, Pcg64};
+
+const PACK_FORMATS: [&str; 2] = ["mxfp4", "mxint4"];
+
+fn bits_eq(fast: &[f32], reference: &[f32]) -> Result<(), String> {
+    if fast.len() != reference.len() {
+        return Err(format!("len {} vs {}", fast.len(), reference.len()));
+    }
+    for (i, (a, b)) in fast.iter().zip(reference).enumerate() {
+        if a.to_bits() != b.to_bits() {
+            return Err(format!(
+                "idx {i}: fast {a} ({:#010x}) vs ref {b} ({:#010x})",
+                a.to_bits(),
+                b.to_bits()
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// The oracle: dequantize via the scalar reference codec, then dense matmul.
+fn oracle_dequant(w: &Mat, cfg: &MxConfig) -> Mat {
+    let (scales, codes) = reference::pack_ref(&w.data, cfg);
+    let deq = reference::unpack_ref(cfg, w.data.len(), &scales, &codes);
+    Mat::from_vec(w.rows, w.cols, deq)
+}
+
+/// One full check: pack `w`, assert the decode path reproduces the
+/// reference dequant bit-for-bit, then assert the fused GEMM matches
+/// dequantize-then-`Mat::matmul` bit-for-bit.
+fn check_case(a: &Mat, w: &Mat, cfg: MxConfig) -> Result<(), String> {
+    let pw = PackedMat::pack(w, cfg).map_err(|e| e.to_string())?;
+    let deq = oracle_dequant(w, &cfg);
+    bits_eq(&pw.unpack().data, &deq.data).map_err(|e| format!("decode vs reference: {e}"))?;
+    let fused = packed_matmul(a, &pw);
+    let dense = a.matmul(&deq);
+    bits_eq(&fused.data, &dense.data).map_err(|e| format!("fused vs dense oracle: {e}"))
+}
+
+fn rand_mat(rng: &mut Pcg64, rows: usize, cols: usize, scale: f32) -> Mat {
+    Mat::from_vec(rows, cols, rng.normal_vec(rows * cols, scale))
+}
+
+/// Fixed shape grid: GEMV (m=1), K not a multiple of the block size, K not
+/// a multiple of the 4-wide unroll, and multi-block N — for every
+/// supported tag and block size.
+#[test]
+fn packed_matmul_bit_exact_vs_oracle() {
+    let mut rng = Pcg64::seed(91);
+    for fmt in PACK_FORMATS {
+        for block in [16usize, 32] {
+            let cfg = MxConfig::from_name(fmt, Some(block)).unwrap();
+            // (m, k, n): k deliberately not a multiple of block or 4
+            for (m, k, n) in [
+                (1usize, 37usize, 2 * block), // single-row GEMV, odd K
+                (5, 12, block),
+                (4, 64, 3 * block),
+                (3, 130, 2 * block), // K % 4 == 2 remainder path
+                (2, 3, block),       // K below one unroll step
+            ] {
+                let a = rand_mat(&mut rng, m, k, 1.5);
+                let w = rand_mat(&mut rng, k, n, 0.8);
+                check_case(&a, &w, cfg)
+                    .unwrap_or_else(|e| panic!("{fmt} b{block} ({m}x{k}x{n}): {e}"));
+            }
+        }
+    }
+}
+
+/// Randomized weights spanning the full scale range, down into
+/// denormal-range blocks (log-magnitudes to -140) and up to
+/// overflow-adjacent scales.
+#[test]
+fn packed_matmul_bit_exact_randomized() {
+    for fmt in PACK_FORMATS {
+        for block in [16usize, 32] {
+            let cfg = MxConfig::from_name(fmt, Some(block)).unwrap();
+            let gen = VecGen {
+                min_len: block,
+                max_len: block * 64,
+                multiple_of: block,
+                log_scale_range: (-140.0, 30.0),
+            };
+            forall(&format!("packed_gemm_{fmt}_{block}"), 50, &gen, |v| {
+                // reshape the flat sample into a (K x block) weight so K
+                // sweeps arbitrary values while rows stay block-aligned
+                let k = v.len() / block;
+                let w = Mat::from_vec(k, block, v.clone());
+                let mut rng = Pcg64::seed(v.len() as u64);
+                let a = rand_mat(&mut rng, 3, k, 1.0);
+                check_case(&a, &w, cfg)
+            });
+        }
+    }
+}
+
+/// Hand-built adversarial weights: all zeros, negative zeros, and blocks of
+/// smallest subnormals with mixed signs — the scale-handling edge cases
+/// where decode-then-accumulate and accumulate-then-scale differ.
+#[test]
+fn packed_matmul_denormal_edge_cases() {
+    let mut rng = Pcg64::seed(92);
+    for fmt in PACK_FORMATS {
+        for block in [16usize, 32] {
+            let cfg = MxConfig::from_name(fmt, Some(block)).unwrap();
+            let n = 2 * block; // two blocks per weight row
+            let mut cases = vec![vec![0.0f32; 4 * n], vec![-0.0f32; 4 * n]];
+            let denorm: Vec<f32> = (0..4 * n)
+                .map(|i| {
+                    let v = f32::from_bits(1 + i as u32); // smallest subnormals
+                    if i % 2 == 0 { v } else { -v }
+                })
+                .collect();
+            cases.push(denorm);
+            let mut mixed = vec![0.0f32; 4 * n];
+            mixed[0] = -0.0;
+            mixed[1] = f32::MIN_POSITIVE; // smallest normal
+            mixed[2] = -f32::MIN_POSITIVE / 2.0; // subnormal
+            mixed[3] = f32::MAX;
+            mixed[4] = -1.5e-39; // subnormal
+            mixed[n] = 1.0; // second block is ordinary
+            mixed[n + 1] = -3.25;
+            cases.push(mixed);
+            for (ei, v) in cases.into_iter().enumerate() {
+                let w = Mat::from_vec(4, n, v);
+                let a = rand_mat(&mut rng, 2, 4, 1.0);
+                check_case(&a, &w, cfg)
+                    .unwrap_or_else(|e| panic!("{fmt} b{block} edge case {ei}: {e}"));
+            }
+        }
+    }
+}
+
+/// The row fan-out must not change a single bit: 1 worker vs N, on a shape
+/// large enough (m*n >= PAR_MIN_LEN) to engage the parallel path.
+#[test]
+fn packed_matmul_thread_count_invariant() {
+    let mut rng = Pcg64::seed(93);
+    let (m, k, n) = (128usize, 96usize, 64usize); // m*n = 8192 >= 4096
+    let a = rand_mat(&mut rng, m, k, 1.0);
+    for fmt in PACK_FORMATS {
+        let cfg = MxConfig::from_name(fmt, Some(32)).unwrap();
+        let w = rand_mat(&mut rng, k, n, 0.7);
+        let pw = PackedMat::pack(&w, cfg).unwrap();
+        let one = par::with_threads(1, || packed_matmul(&a, &pw));
+        for t in [2usize, 3, 7, 16] {
+            let many = par::with_threads(t, || packed_matmul(&a, &pw));
+            bits_eq(&many.data, &one.data).unwrap_or_else(|e| panic!("{fmt} threads={t}: {e}"));
+        }
+    }
+}
+
+/// Satellite of the same PR: the dense `Mat::matmul` row fan-out must also
+/// be thread-count invariant (each output row is owned by one worker).
+#[test]
+fn dense_matmul_thread_count_invariant() {
+    let mut rng = Pcg64::seed(94);
+    let (m, k, n) = (128usize, 96usize, 64usize);
+    let a = rand_mat(&mut rng, m, k, 1.0);
+    let b = rand_mat(&mut rng, k, n, 0.7);
+    let one = par::with_threads(1, || a.matmul(&b));
+    for t in [2usize, 3, 7, 16] {
+        let many = par::with_threads(t, || a.matmul(&b));
+        bits_eq(&many.data, &one.data).unwrap_or_else(|e| panic!("threads={t}: {e}"));
+    }
+}

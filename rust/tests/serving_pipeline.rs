@@ -112,6 +112,60 @@ fn continuous_matches_lockstep_latmix_tiny() {
 }
 
 #[test]
+fn packed_weights_match_dequantized_token_streams() {
+    // The fused packed-GEMM gate: serving on MX-packed weights must emit
+    // token streams bit-identical to serving on the SAME packed bytes
+    // dequantized back to f32 and run through the dense kernel. (Packing
+    // is lossy vs the raw f32 weights; the parity is packed-vs-dequantized,
+    // not packed-vs-raw.)
+    use latmix::model::NativeWeights;
+    use latmix::mx::MxConfig;
+
+    let dims = NativeDims::latmix_tiny();
+    for (tag, fmt, bs) in [("mxfp4_b32_t3", "mxfp4", 32usize), ("mxint4_b32", "mxint4", 32)] {
+        let cfg = MxConfig::from_name(fmt, Some(bs)).unwrap();
+        let raw = NativeWeights::synthetic(dims, 3);
+        let dq = raw.pack_weights(cfg).unwrap().unpack_weights();
+
+        let reqs = serving_workload(8, 6, 6, 41);
+        let ecfg = EngineConfig { max_slots: 4, eos: -1, ..Default::default() };
+
+        let packed_exec = NativeExecutor::synthetic(dims, tag, vec![1, 2, 4, 8], 3)
+            .unwrap()
+            .into_packed()
+            .unwrap();
+        assert!(packed_exec.packed_weights(), "{tag}: executor must report packed storage");
+        assert!(
+            packed_exec.resident_weight_bytes() < dq.weight_bytes(),
+            "{tag}: packed residency must undercut dense f32"
+        );
+        let mut packed_eng = Engine::new(packed_exec, ecfg.clone());
+        submit_all(&reqs, |r| packed_eng.submit(r));
+        let packed_out = packed_eng.run_to_completion().unwrap();
+
+        let dq_exec = NativeExecutor::from_weights(dq, tag, vec![1, 2, 4, 8]).unwrap();
+        let mut dq_eng = Engine::new(dq_exec, ecfg);
+        submit_all(&reqs, |r| dq_eng.submit(r));
+        let dq_out = dq_eng.run_to_completion().unwrap();
+
+        assert_eq!(
+            essence(&packed_out),
+            essence(&dq_out),
+            "{tag}: packed and dequantized token streams diverged"
+        );
+    }
+}
+
+#[test]
+fn packed_weights_rejected_on_fp_tag() {
+    // fp graphs have no MX config to pack against — into_packed must error,
+    // not silently serve unquantized.
+    let exec = NativeExecutor::synthetic(NativeDims::latmix_tiny(), "fp", vec![1, 2], 3).unwrap();
+    let err = exec.into_packed().unwrap_err().to_string();
+    assert!(err.contains("quantized"), "unexpected error: {err}");
+}
+
+#[test]
 fn stream_events_reassemble_final_tokens() {
     // Every Token event must land in order, and the reassembled per-request
     // streams must equal the final GenResult token sequences exactly.

@@ -18,6 +18,24 @@ LATMIX_BENCH_SMOKE=1 cargo bench --no-default-features --bench microbench
 test -f BENCH_microbench.json
 grep -q '"backend"' BENCH_microbench.json
 
+# Packed-weights serving smoke: same open-loop run on a quantized tag with
+# weights kept MX-packed end to end (the fused packed-GEMM hot path). Runs
+# BEFORE the fp run so the committed BENCH_serving.json snapshot below
+# stays the fp-tag baseline. Asserts conservation and that the packed
+# residency actually landed in the report.
+cargo run --no-default-features -q -- serve --open-loop --synthetic \
+  --quant mxfp4_b32_t3 --packed-weights \
+  --requests 48 --arrival-rate 400 --slots 4 --seed 7
+python3 - <<'EOF'
+import json
+snap = json.load(open("BENCH_serving.json"))
+assert snap["tag"] == "mxfp4_b32_t3", f"packed smoke ran wrong tag {snap['tag']!r}"
+assert snap["lost"] == 0, f"packed smoke lost {snap['lost']} request(s)"
+assert snap["resident_weight_bytes"] > 0, "packed run reported no weight residency"
+print("packed serving smoke OK:", snap["requests"], "requests, 0 lost,",
+      snap["resident_weight_bytes"], "resident weight bytes (MX-packed)")
+EOF
+
 # Serving smoke: open-loop continuous-batching run over synthetic
 # latmix-tiny weights (no artifact directory needed); refreshes
 # BENCH_serving.json (schema 1, per-class SLO rows). The binary itself
