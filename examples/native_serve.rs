@@ -11,7 +11,7 @@
 use latmix::coordinator::engine::{NativeExecutor, StepExecutor};
 use latmix::coordinator::{Engine, EngineConfig, GenRequest};
 use latmix::model::{ModelDesc, NativeDims, WeightSet};
-use latmix::server::serve_with_executor;
+use latmix::server::{serve_with_executor, ServeOptions};
 
 fn main() -> anyhow::Result<()> {
     // Artifact-backed when available, synthetic otherwise — either way the
@@ -40,11 +40,18 @@ fn main() -> anyhow::Result<()> {
     println!("prompt {:?} -> generated {:?}", prompt, out[0].tokens);
 
     // ...then the closed-loop throughput benchmark (Fig. 4 protocol).
+    // ServeOptions replaces the old positional-argument pile; unset fields
+    // keep their defaults (KvSpec::default() = f32 pages, 16-token blocks).
     let prefill = exec.prefill_len();
-    let rep = serve_with_executor(exec, "fp", "native", 12, 16, 4, 7)?;
+    let opts = ServeOptions::default().tags("fp", "native").requests(12).max_new(16).slots(4).seed(7);
+    let rep = serve_with_executor(exec, &opts)?;
     println!(
-        "prefill_len={prefill} requests={} decode tok/s={:.1} ttft p50={:.1}ms latency p50={:.1}ms",
-        rep.requests, rep.decode_tok_per_s, rep.ttft_p50_ms, rep.latency_p50_ms
+        "prefill_len={prefill} requests={} decode tok/s={:.1} ttft p50={:.1}ms latency p50={:.1}ms kv={}B",
+        rep.core.requests,
+        rep.core.decode_tok_per_s,
+        rep.ttft_p50_ms,
+        rep.latency_p50_ms,
+        rep.core.residency.kv_bytes
     );
     Ok(())
 }

@@ -26,7 +26,7 @@ use latmix::model::{ModelDesc, WeightSet};
 use latmix::mx::{pack::PackedMx, MxConfig};
 use latmix::quant::{mse, rtn_quantize};
 use latmix::runtime::Runtime;
-use latmix::server::run_serving;
+use latmix::server::{run_serving, ServeOptions};
 
 fn main() -> anyhow::Result<()> {
     let art = latmix::artifacts_dir();
@@ -121,10 +121,12 @@ fn main() -> anyhow::Result<()> {
         ("FP graph", "fp", "fp_raw"),
         ("LATMiX MXFP4 graph", "mxfp4_b32_t3", "latmix-lu_mxfp4_b32"),
     ] {
-        match run_serving(&rt, gtag, wtag, 12, 24, 8, 7) {
+        let opts =
+            ServeOptions::default().tags(gtag, wtag).requests(12).max_new(24).slots(8).seed(7);
+        match run_serving(&rt, &opts) {
             Ok(rep) => println!(
                 "{label:>20}: {:.1} decode tok/s | ttft p50 {:.0} ms | latency p50 {:.0} ms",
-                rep.decode_tok_per_s, rep.ttft_p50_ms, rep.latency_p50_ms
+                rep.core.decode_tok_per_s, rep.ttft_p50_ms, rep.latency_p50_ms
             ),
             Err(e) => println!("{label:>20}: unavailable ({e})"),
         }

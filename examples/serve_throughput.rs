@@ -11,7 +11,7 @@ use latmix::bench::Table;
 use latmix::cli::Args;
 use latmix::model::ModelDesc;
 use latmix::runtime::Runtime;
-use latmix::server::run_serving;
+use latmix::server::{run_serving, ServeOptions};
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
@@ -34,10 +34,16 @@ fn main() -> anyhow::Result<()> {
         &["slots", "decode tok/s", "total tok/s", "ttft p50 ms", "latency p50 ms", "p99 ms"],
     );
     for s in slots {
-        let rep = run_serving(&rt, &gtag, &wtag, requests, max_new, s, 42)?;
+        let opts = ServeOptions::default()
+            .tags(&gtag, &wtag)
+            .requests(requests)
+            .max_new(max_new)
+            .slots(s)
+            .seed(42);
+        let rep = run_serving(&rt, &opts)?;
         tab.row(vec![
             s.to_string(),
-            format!("{:.1}", rep.decode_tok_per_s),
+            format!("{:.1}", rep.core.decode_tok_per_s),
             format!("{:.1}", rep.total_tok_per_s),
             format!("{:.1}", rep.ttft_p50_ms),
             format!("{:.1}", rep.latency_p50_ms),

@@ -16,7 +16,7 @@ use latmix::model::ModelDesc;
 mod srv {
     use latmix::model::ModelDesc;
     use latmix::runtime::Runtime;
-    use latmix::server::{run_serving, ServeReport};
+    use latmix::server::{run_serving, ServeOptions, ServeReport};
 
     pub const LABEL: &str = "xla";
 
@@ -30,7 +30,9 @@ mod srv {
         pub fn run(
             &self, g: &str, w: &str, n: usize, m: usize, s: usize, seed: u64,
         ) -> anyhow::Result<ServeReport> {
-            run_serving(&self.0, g, w, n, m, s, seed)
+            let opts =
+                ServeOptions::default().tags(g, w).requests(n).max_new(m).slots(s).seed(seed);
+            run_serving(&self.0, &opts)
         }
     }
 }
@@ -38,7 +40,7 @@ mod srv {
 #[cfg(not(feature = "backend-xla"))]
 mod srv {
     use latmix::model::ModelDesc;
-    use latmix::server::{run_serving_native, ServeReport};
+    use latmix::server::{run_serving_native, ServeOptions, ServeReport};
 
     pub const LABEL: &str = "native";
 
@@ -52,7 +54,9 @@ mod srv {
         pub fn run(
             &self, g: &str, w: &str, n: usize, m: usize, s: usize, seed: u64,
         ) -> anyhow::Result<ServeReport> {
-            run_serving_native(&self.0, g, w, n, m, s, seed, false)
+            let opts =
+                ServeOptions::default().tags(g, w).requests(n).max_new(m).slots(s).seed(seed);
+            run_serving_native(&self.0, &opts)
         }
     }
 }
@@ -96,7 +100,7 @@ fn main() {
         let mut cells = vec![name.to_string()];
         for s in slots {
             match rt.run(gtag, wtag, requests, max_new, s, 42) {
-                Ok(rep) => cells.push(format!("{:.1}", rep.decode_tok_per_s)),
+                Ok(rep) => cells.push(format!("{:.1}", rep.core.decode_tok_per_s)),
                 Err(e) => {
                     eprintln!("  {name} b={s}: {e}");
                     cells.push("-".into());

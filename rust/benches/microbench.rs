@@ -19,11 +19,11 @@
 
 use latmix::bench::{fmt_time, Bencher, JsonReport, Table};
 use latmix::coordinator::engine::{Engine, EngineConfig, MockExecutor, NativeExecutor, StepExecutor};
-use latmix::coordinator::{Batcher, GenRequest, KvCache};
+use latmix::coordinator::{Batcher, GenRequest, KvCache, KvFormat, KvSpec};
 use latmix::latmix::{learn_feature_transform, outlier_features, LearnConfig};
 use latmix::linalg::{block_hadamard_apply, packed_matmul, Mat, PackedMat};
 use latmix::model::NativeDims;
-use latmix::mx::{mx_qdq_rows, pack::PackedMx, reference, MxConfig};
+use latmix::mx::{mx_qdq_rows, pack::PackedMx, page, reference, MxConfig};
 use latmix::quant::{gptq_quantize, rtn_quantize};
 use latmix::util::Pcg64;
 
@@ -185,20 +185,56 @@ fn main() {
         format!("{:.1} Mreq/s", r.throughput(1000.0) / 1e6)]);
     json.push(&r, Some(("req/s", 1000.0)));
 
-    // KV gather/scatter at serving dims (4 layers, 160 seq, 128 row, b=8)
+    // paged KV gather + decode-step append at serving dims (4 layers, 160
+    // seq, 128 row, 16-token pages, b=8): page-table materialization into
+    // dense per-lane planes plus one fresh row per plane per lane
     let mut kv = KvCache::new(8, 4, 160, 128);
+    let plen = 64usize;
+    let plane = 160 * 128;
     for id in 0..8u64 {
         kv.alloc(id).unwrap();
+        let planes: Vec<Vec<f32>> = (0..8)
+            .map(|_| {
+                let mut p = vec![0.0f32; plane];
+                p[..plen * 128].copy_from_slice(&rng.normal_vec(plen * 128, 1.0));
+                p
+            })
+            .collect();
+        let prompt: Vec<i32> = (0..plen as i32).map(|t| t + id as i32 * 1000).collect();
+        kv.write_prefill(id, &prompt, &planes, 0).unwrap();
     }
     let ids: Vec<u64> = (0..8).collect();
-    let r = Bencher::new("kv gather+scatter b=8").with_iters(wu, iu).run(|| {
-        let g = kv.gather_batch(&ids, 8);
-        kv.scatter_batch(&ids, 8, &g);
+    let step_rows: Vec<Vec<f32>> = (0..8).map(|_| rng.normal_vec(8 * 128, 1.0)).collect();
+    let r = Bencher::new("kv gather+append b=8").with_iters(wu, iu).run(|| {
+        let g = kv.gather_batch(&ids, 8).unwrap();
+        kv.append_step(&ids, 8, &step_rows).unwrap();
+        g
     });
-    let bytes = 8.0 * 4.0 * 2.0 * 160.0 * 128.0 * 4.0 * 2.0; // gather+scatter
+    let bytes = 8.0 * 8.0 * (160.0 * 128.0 + 128.0) * 4.0; // gather + append
     tab.row(vec![r.name.clone(), fmt_time(r.mean_s), fmt_time(r.p99_s),
         format!("{:.1} GiB/s", r.throughput(bytes) / (1 << 30) as f64)]);
     json.push(&r, Some(("byte/s", bytes)));
+
+    // page codec cost for quantized KV: encode (quantize-on-write) plus
+    // decode (gather) over one 16-token page of rows at serving width
+    for fmt in ["mxfp8", "mxfp4"] {
+        let cfg = KvSpec {
+            format: if fmt == "mxfp8" { KvFormat::Mxfp8 } else { KvFormat::Mxfp4 },
+            ..KvSpec::default()
+        }
+        .mx_config(128)
+        .unwrap();
+        let n = 16 * 128;
+        let src = rng.normal_vec(n, 1.0);
+        let mut scales = vec![0u8; page::scale_bytes(&cfg, n)];
+        let mut codes = vec![0u8; page::code_bytes(&cfg, n)];
+        let mut dst = vec![0.0f32; n];
+        let r = Bencher::new(&format!("kv_page_qdq_{fmt} 16x128")).with_iters(wu, iu).run(|| {
+            page::encode_run(&src, &cfg, &mut scales, &mut codes);
+            page::decode_run(&cfg, &scales, &codes, &mut dst);
+        });
+        elem_row(&mut tab, &mut json, &r, n as f64);
+    }
 
     // mock engine step loop (coordinator overhead without PJRT)
     let (wu, iu) = it(2, 10);
@@ -285,6 +321,58 @@ fn native_decode_bench(json: &mut JsonReport, smoke: bool) {
             json.push(&r, Some(("tok/s", b as f64)));
         }
     }
+    // paged decode step (page-table gather + fused row append) vs the
+    // dense rows above: f32 pages replay the dense math bit for bit, so
+    // the delta is pure paging overhead; mxfp8 pages add quantize-on-write
+    // QDQ to every appended row and LUT decode to every gather
+    {
+        let exec = NativeExecutor::synthetic(dims, "fp", vec![1, 2, 4, 8], 42).unwrap();
+        for (label, spec) in [
+            ("paged-f32", KvSpec::default()),
+            ("paged-mxfp8", KvSpec { format: KvFormat::Mxfp8, ..KvSpec::default() }),
+        ] {
+            let b = 4usize;
+            let mut kv =
+                KvCache::with_spec(b, exec.n_layers(), exec.kv_seq(), exec.kv_row(), spec);
+            let plane = exec.kv_seq() * exec.kv_row();
+            let mut rng = latmix::util::Pcg64::seed(17);
+            let plen = 32usize;
+            for id in 0..b as u64 {
+                kv.alloc(id).unwrap();
+                let planes: Vec<Vec<f32>> = (0..exec.n_layers() * 2)
+                    .map(|_| {
+                        let mut p = vec![0.0f32; plane];
+                        let fill = rng.normal_vec(plen * exec.kv_row(), 0.5);
+                        p[..plen * exec.kv_row()].copy_from_slice(&fill);
+                        p
+                    })
+                    .collect();
+                let prompt: Vec<i32> = (0..plen as i32).map(|t| t + id as i32 * 100).collect();
+                kv.write_prefill(id, &prompt, &planes, 0).unwrap();
+            }
+            let ids: Vec<u64> = (0..b as u64).collect();
+            let tokens = vec![5i32; b];
+            let r = Bencher::new(&format!("native decode fp {label} b={b}"))
+                .with_iters(iters.0, iters.1)
+                .run(|| {
+                    let pos: Vec<i32> =
+                        ids.iter().map(|id| kv.pos_of(*id).unwrap() as i32).collect();
+                    let g = kv.gather_batch(&ids, b).unwrap();
+                    let (logits, rows) = exec.decode_append(&tokens, &pos, &g, b).unwrap();
+                    kv.append_step(&ids, b, &rows).unwrap();
+                    logits
+                });
+            tab.row(vec![
+                format!("fp {label}"),
+                b.to_string(),
+                fmt_time(r.mean_s),
+                fmt_time(r.p99_s),
+                format!("{:.1}", b as f64 / r.mean_s),
+            ]);
+            json.push(&r, Some(("tok/s", b as f64)));
+        }
+    }
+
     // transform-spec pipeline at latmix-tiny dims: folding cost (one-time,
     // deploy path) and the per-step overhead of the unfolded reference
     // executor (T1 + per-head T2 + FfnDown applied on the fly) — the

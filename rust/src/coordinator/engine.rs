@@ -36,7 +36,7 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use super::batcher::{Batcher, PushOutcome};
-use super::kv_cache::KvCache;
+use super::kv_cache::{KvCache, KvSpec};
 use super::request::{FinishReason, GenRequest, GenResult, RequestId, StreamEvent, TokenSink};
 use super::scheduler::{plan_step, SchedEvent, SchedulerPolicy};
 use crate::model::{
@@ -71,6 +71,40 @@ pub trait StepExecutor {
         kv: &[Vec<f32>],
         batch: usize,
     ) -> Result<(Vec<f32>, Vec<Vec<f32>>)>;
+
+    /// One decode step returning the *appended* K/V rows instead of full
+    /// planes: `rows[li]` is the fresh `(batch, kv_row)` row each lane
+    /// writes at its `pos` (k before v per layer) — what the paged
+    /// `KvCache` quantizes on write. The default adapter slices the row
+    /// out of a full [`StepExecutor::decode`] output; executors with an
+    /// append-native forward override it to skip materializing
+    /// `O(kv_seq)` output planes per step.
+    fn decode_append(
+        &self,
+        tokens: &[i32],
+        pos: &[i32],
+        kv: &[Vec<f32>],
+        batch: usize,
+    ) -> Result<(Vec<f32>, Vec<Vec<f32>>)> {
+        let (logits, kv_out) = self.decode(tokens, pos, kv, batch)?;
+        let (row, s_max) = (self.kv_row(), self.kv_seq());
+        let plane = s_max * row;
+        let rows = kv_out
+            .iter()
+            .map(|buf| {
+                let mut out = vec![0.0f32; batch * row];
+                for b in 0..batch.min(pos.len()) {
+                    let p = pos[b];
+                    if p >= 0 && (p as usize) < s_max {
+                        let at = b * plane + (p as usize) * row;
+                        out[b * row..(b + 1) * row].copy_from_slice(&buf[at..at + row]);
+                    }
+                }
+                out
+            })
+            .collect();
+        Ok((logits, rows))
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -372,6 +406,23 @@ impl StepExecutor for NativeExecutor {
             }
         }
     }
+
+    fn decode_append(
+        &self,
+        tokens: &[i32],
+        pos: &[i32],
+        kv: &[Vec<f32>],
+        batch: usize,
+    ) -> Result<(Vec<f32>, Vec<Vec<f32>>)> {
+        match &self.weights {
+            ExecWeights::Dense(w) => {
+                w.forward_decode_append_spec(tokens, pos, kv, batch, &self.spec, self.spec_run())
+            }
+            ExecWeights::Packed(w) => {
+                w.forward_decode_append_spec(tokens, pos, kv, batch, &self.spec, self.spec_run())
+            }
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -474,6 +525,8 @@ pub struct EngineConfig {
     /// Admission-queue bound for [`Engine::try_submit`] backpressure
     /// (None = unbounded; [`Engine::submit`] always bypasses the bound).
     pub queue_depth: Option<usize>,
+    /// Paged-KV storage configuration (format + tokens per page).
+    pub kv: KvSpec,
 }
 
 impl Default for EngineConfig {
@@ -483,6 +536,7 @@ impl Default for EngineConfig {
             policy: SchedulerPolicy::PrefillPriority,
             eos: 3,
             queue_depth: None,
+            kv: KvSpec::default(),
         }
     }
 }
@@ -539,7 +593,13 @@ impl<E: StepExecutor> Engine<E> {
         if let Some(d) = cfg.queue_depth {
             batcher = batcher.with_queue_depth(d);
         }
-        let kv = KvCache::new(cfg.max_slots, exec.n_layers(), exec.kv_seq(), exec.kv_row());
+        let kv = KvCache::with_spec(
+            cfg.max_slots,
+            exec.n_layers(),
+            exec.kv_seq(),
+            exec.kv_row(),
+            cfg.kv,
+        );
         Engine {
             exec,
             cfg,
@@ -600,6 +660,23 @@ impl<E: StepExecutor> Engine<E> {
     /// The scheduling event log so far (admit/evict/drop, in engine order).
     pub fn events(&self) -> &[SchedEvent] {
         &self.events
+    }
+
+    /// Bytes of KV page storage currently resident (the lazy page pool's
+    /// high-water mark — grows with actual occupancy, not `max_slots`).
+    pub fn kv_resident_bytes(&self) -> usize {
+        self.kv.resident_bytes()
+    }
+
+    /// Cumulative KV pages mapped via prompt-prefix sharing instead of
+    /// being written.
+    pub fn kv_pages_shared(&self) -> u64 {
+        self.kv.pages_shared()
+    }
+
+    /// What the pre-paging dense per-slot cache would hold resident.
+    pub fn kv_dense_bytes(&self) -> usize {
+        self.kv.dense_bytes()
     }
 
     /// Drain results finished since the last call (open-loop drivers poll
@@ -687,7 +764,6 @@ impl<E: StepExecutor> Engine<E> {
         self.stats.prefill_batches += 1;
         self.stats.prefill_tokens += lens[..lanes].iter().map(|l| *l as u64).sum::<u64>();
         let vocab = self.exec.vocab();
-        let plane = self.exec.kv_seq() * self.exec.kv_row();
         for (lane, req) in reqs.into_iter().enumerate() {
             let prompt_len = req.prompt.len().min(pl);
             let alloc = self.kv.alloc(req.id)?;
@@ -696,12 +772,10 @@ impl<E: StepExecutor> Engine<E> {
                 slot: alloc.slot,
                 refill: alloc.refill,
             });
-            // copy this lane's planes into the per-seq cache
-            let seq = self.kv.get_mut(req.id).unwrap();
-            for (li, buf) in kv_planes.iter().enumerate() {
-                seq.data[li].copy_from_slice(&buf[lane * plane..(lane + 1) * plane]);
-            }
-            seq.pos = prompt_len;
+            // map this lane's prefill rows into pages (shared-prefix pages
+            // are mapped by refcount bump instead of being rewritten)
+            self.kv
+                .write_prefill(req.id, &req.prompt[..prompt_len], &kv_planes, lane)?;
             let first = argmax(&logits[lane * vocab..(lane + 1) * vocab]);
             let t = req.arrived.elapsed().as_secs_f64();
             let rs = RunningSeq {
@@ -739,11 +813,11 @@ impl<E: StepExecutor> Engine<E> {
             for (lane, id) in chunk.iter().enumerate() {
                 let rs = self.running.iter().find(|r| r.req.id == *id).unwrap();
                 tokens[lane] = *rs.generated.last().unwrap();
-                pos[lane] = self.kv.get(*id).unwrap().pos as i32;
+                pos[lane] = self.kv.pos_of(*id).unwrap() as i32;
             }
-            let kv_in = self.kv.gather_batch(chunk, batch);
-            let (logits, kv_out) = self.exec.decode(&tokens, &pos, &kv_in, batch)?;
-            self.kv.scatter_batch(chunk, batch, &kv_out);
+            let kv_in = self.kv.gather_batch(chunk, batch)?;
+            let (logits, new_rows) = self.exec.decode_append(&tokens, &pos, &kv_in, batch)?;
+            self.kv.append_step(chunk, batch, &new_rows)?;
             self.stats.decode_steps += 1;
             self.stats.decode_lanes += chunk.len() as u64;
             let mut stream: Vec<StreamEvent> = Vec::with_capacity(chunk.len());

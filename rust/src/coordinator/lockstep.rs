@@ -12,6 +12,12 @@
 //! workload with no cancellations must produce **bit-identical per-request
 //! token sequences** on both engines; only the decode interleaving may
 //! differ. `rust/tests/serving_pipeline.rs` gates this on every run.
+//!
+//! After the paged-KV refactor this anchor carries extra weight: the
+//! lockstep lanes keep plain **dense** per-lane planes (below), so the
+//! parity gate also pins the continuous engine's paged f32 cache —
+//! page-table gather, copy-on-write prefix sharing, append-on-decode —
+//! to the dense layout bit for bit.
 
 use std::collections::VecDeque;
 

@@ -33,7 +33,7 @@ pub mod scheduler;
 
 pub use batcher::{Batcher, PushOutcome};
 pub use engine::{Engine, EngineConfig, EngineStats};
-pub use kv_cache::KvCache;
+pub use kv_cache::{KvCache, KvFormat, KvSpec};
 pub use lockstep::LockstepEngine;
 pub use request::{FinishReason, GenRequest, GenResult, RequestId, StreamEvent, TokenSink};
 pub use router::Router;

@@ -167,6 +167,39 @@ pub fn open_loop_workload(
         .collect()
 }
 
+/// [`open_loop_workload`] with every prompt's first `shared` post-BOS
+/// tokens overwritten by one fixed seed-derived sequence (prompts shorter
+/// than the prefix are extended to cover it, clamped to `max_prompt`).
+/// All prompts then agree on `tokens[0..=shared]`, so a paged KV cache
+/// maps their leading pages to the same refcounted pool pages. `shared ==
+/// 0` degenerates to the plain workload. K/V rows are lane-independent
+/// and position-indexed, so prefix sharing is bit-safe by construction.
+pub fn open_loop_workload_shared(
+    n: usize,
+    rate: f64,
+    max_prompt: usize,
+    classes: &[PayloadClass],
+    shared: usize,
+    seed: u64,
+) -> Vec<OpenLoopRequest> {
+    let mut w = open_loop_workload(n, rate, max_prompt, classes, seed);
+    let shared = shared.min(max_prompt.saturating_sub(1));
+    if shared == 0 {
+        return w;
+    }
+    // distinct stream from the workload's so the prefix is not correlated
+    // with any prompt's own tail
+    let mut rng = Pcg64::seed(seed ^ 0x9e37_79b9_7f4a_7c15);
+    let prefix: Vec<i32> = (0..shared).map(|_| 32 + rng.below(224) as i32).collect();
+    for r in &mut w {
+        if r.prompt.len() < shared + 1 {
+            r.prompt.resize(shared + 1, 0);
+        }
+        r.prompt[1..shared + 1].copy_from_slice(&prefix);
+    }
+    w
+}
+
 /// Export a `BTreeMap<String, Tensor>` helper for writing results (used by
 /// examples that persist intermediate tensors).
 pub fn tensor_map(items: Vec<(&str, Tensor)>) -> BTreeMap<String, Tensor> {
@@ -235,6 +268,25 @@ mod tests {
         // weighted mix actually samples every class at n=100
         for i in 0..classes.len() {
             assert!(a.iter().any(|r| r.class == i), "class {i} never sampled");
+        }
+    }
+
+    #[test]
+    fn shared_prefix_overwrites_and_extends() {
+        let classes = default_payload_classes();
+        let w = open_loop_workload_shared(40, 50.0, 24, &classes, 10, 13);
+        let first = &w[0].prompt;
+        assert!(first.len() >= 11);
+        for r in &w {
+            assert_eq!(r.prompt[0], 1, "BOS survives");
+            assert_eq!(&r.prompt[..11], &first[..11], "prefix identical across prompts");
+            assert!(r.prompt.len() <= 24);
+        }
+        // shared = 0 is the plain workload, bit for bit
+        let plain = open_loop_workload(40, 50.0, 24, &classes, 13);
+        let zero = open_loop_workload_shared(40, 50.0, 24, &classes, 0, 13);
+        for (a, b) in plain.iter().zip(&zero) {
+            assert_eq!(a.prompt, b.prompt);
         }
     }
 

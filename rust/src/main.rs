@@ -6,6 +6,7 @@
 //!   serve  --weights TAG --quant TAG [--requests N] [--slots N] [--max-new N] [--backend B]
 //!          [--open-loop] [--arrival-rate R] [--deadline-ms MS] [--queue-depth N]
 //!          [--seed N] [--synthetic] [--packed-weights]
+//!          [--kv-bits 32|8|4] [--kv-block N] [--shared-prefix N]
 //!   learn  [--steps N] [--lr F] [--block N] [--bits N] [--features model|outlier|dirac]
 //!          [--sites residual,t2,ffn] [--heads 0,1] [--save-spec PATH]
 //!   fold   --weights TAG --spec PATH --out DIR [--tag TAG]
@@ -35,10 +36,13 @@ use latmix::mx::{MxConfig, pack::PackedMx};
 use latmix::runtime::{Backend, NativeBackend};
 #[cfg(feature = "backend-xla")]
 use latmix::runtime::Runtime;
+use latmix::coordinator::KvSpec;
 use latmix::server::{run_open_loop_native, run_serving_native, serve_open_loop};
 #[cfg(feature = "backend-xla")]
 use latmix::server::{run_open_loop, run_serving};
-use latmix::server::{OpenLoopConfig, ServeReport, ServingReport};
+use latmix::server::{
+    OpenLoopConfig, Residency, ServeOptions, ServeReport, ServingReport, WeightResidency,
+};
 use latmix::transform::{TransformSite, TransformSpec};
 
 fn main() -> Result<()> {
@@ -59,6 +63,7 @@ fn main() -> Result<()> {
                  serve  --weights TAG --quant TAG [--requests N] [--slots N] [--max-new N] [--backend xla|native]\n\
                  \x20       [--open-loop] [--arrival-rate R] [--deadline-ms MS] [--queue-depth N]\n\
                  \x20       [--seed N] [--synthetic] [--packed-weights]\n\
+                 \x20       [--kv-bits 32|8|4] [--kv-block N] [--shared-prefix N]\n\
                  learn  [--steps N] [--lr F] [--block N] [--bits 4|6|8] [--format FMT]\n\
                  \x20       [--features model|outlier|dirac] [--layer N] [--d N] [--rows N]\n\
                  \x20       [--init bd_hadamard|hadamard|identity] [--seed N]\n\
@@ -149,46 +154,76 @@ fn eval_on<B: Backend>(rt: &B, args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse `--kv-bits` / `--kv-block` into the paged-KV storage spec.
+fn kv_spec(args: &Args) -> Result<KvSpec> {
+    let mut kv = KvSpec::from_bits(args.opt_usize("kv-bits", 32))?;
+    kv.block = args.opt_usize("kv-block", kv.block);
+    anyhow::ensure!(kv.block > 0, "--kv-block must be > 0");
+    Ok(kv)
+}
+
+/// One "resident weights / kv cache" footprint summary line.
+fn print_residency(r: &Residency, packed: bool, kv: &KvSpec) {
+    if r.weight_bytes > 0 {
+        println!(
+            "resident weights: {:.2} MiB ({})",
+            r.weight_bytes as f64 / (1 << 20) as f64,
+            if packed { "MX-packed" } else { "dense f32" }
+        );
+    }
+    if r.kv_bytes > 0 {
+        println!(
+            "kv cache: {:.3} MiB resident ({}, {}-token pages, {} page(s) prefix-shared)",
+            r.kv_bytes as f64 / (1 << 20) as f64,
+            kv.label(),
+            kv.block,
+            r.kv_pages_shared
+        );
+    }
+}
+
 fn serve(args: &Args) -> Result<()> {
     if args.flag("open-loop") {
         return serve_open(args);
     }
     let d = desc()?;
-    let wtag = args.opt("weights").unwrap_or("fp16").to_string();
-    let qtag = args.opt("quant").unwrap_or("fp").to_string();
-    let requests = args.opt_usize("requests", 16);
-    let slots = args.opt_usize("slots", 8);
-    let max_new = args.opt_usize("max-new", 32);
-    let seed = args.opt_usize("seed", 42) as u64;
     let packed = args.flag("packed-weights");
+    let kv = kv_spec(args)?;
+    let opts = ServeOptions::default()
+        .tags(args.opt("quant").unwrap_or("fp"), args.opt("weights").unwrap_or("fp16"))
+        .requests(args.opt_usize("requests", 16))
+        .max_new(args.opt_usize("max-new", 32))
+        .slots(args.opt_usize("slots", 8))
+        .seed(args.opt_usize("seed", 42) as u64)
+        .residency(if packed { WeightResidency::Packed } else { WeightResidency::Dense })
+        .kv(kv);
     let rep: ServeReport = match backend_name(args) {
-        "native" => run_serving_native(&d, &qtag, &wtag, requests, max_new, slots, seed, packed)?,
+        "native" => run_serving_native(&d, &opts)?,
         #[cfg(feature = "backend-xla")]
         "xla" => {
             anyhow::ensure!(!packed, "--packed-weights is native-only (use --backend native)");
             let rt = Runtime::new(d)?;
-            run_serving(&rt, &qtag, &wtag, requests, max_new, slots, seed)?
+            run_serving(&rt, &opts)?
         }
         other => return Err(unknown_backend(other)),
     };
-    if rep.resident_weight_bytes > 0 {
-        println!(
-            "resident weights: {:.2} MiB ({})",
-            rep.resident_weight_bytes as f64 / (1 << 20) as f64,
-            if packed { "MX-packed" } else { "dense f32" }
-        );
-    }
+    print_residency(&rep.core.residency, packed, &opts.kv);
     if rep.is_empty() {
         println!(
             "serve: 0 requests completed (graph={} weights={}) — no latency percentiles \
              to report; run with --requests N > 0",
-            rep.tag, rep.weights
+            rep.core.tag, rep.core.weights
         );
         return Ok(());
     }
     println!(
         "graph={} weights={} requests={} wall={:.2}s decode_tok/s={:.1} total_tok/s={:.1}",
-        rep.tag, rep.weights, rep.requests, rep.wall_s, rep.decode_tok_per_s, rep.total_tok_per_s
+        rep.core.tag,
+        rep.core.weights,
+        rep.core.requests,
+        rep.core.wall_s,
+        rep.core.decode_tok_per_s,
+        rep.total_tok_per_s
     );
     println!(
         "ttft p50={:.1}ms p99={:.1}ms  latency p50={:.1}ms p99={:.1}ms",
@@ -202,7 +237,9 @@ fn serve(args: &Args) -> Result<()> {
 /// backpressure and `--deadline-ms` SLO eviction. Writes the per-class
 /// p50/p90/p99 TTFT + inter-token latency snapshot to `BENCH_serving.json`.
 /// `--synthetic` serves deterministic latmix-tiny weights with no artifact
-/// directory at all (the CI smoke path).
+/// directory at all (the CI smoke path). `--shared-prefix N` gives every
+/// prompt the same N post-BOS tokens, turning the prefix into refcounted
+/// shared KV pages; `--kv-bits 8|4` stores KV pages MX-quantized.
 fn serve_open(args: &Args) -> Result<()> {
     let cfg = OpenLoopConfig {
         n_requests: args.opt_usize("requests", 64),
@@ -220,59 +257,61 @@ fn serve_open(args: &Args) -> Result<()> {
                 Ok(std::time::Duration::from_secs_f64(ms / 1e3))
             })
             .transpose()?,
+        shared_prefix: args.opt_usize("shared-prefix", 0),
         seed: args.opt_usize("seed", 42) as u64,
     };
     anyhow::ensure!(cfg.arrival_rate > 0.0, "--arrival-rate must be > 0");
-    let qtag = args.opt("quant").unwrap_or("fp").to_string();
     let packed = args.flag("packed-weights");
+    let opts = ServeOptions::default()
+        .tags(args.opt("quant").unwrap_or("fp"), args.opt("weights").unwrap_or("fp16"))
+        .residency(if packed { WeightResidency::Packed } else { WeightResidency::Dense })
+        .kv(kv_spec(args)?);
     let rep: ServingReport = if args.flag("synthetic") {
         use latmix::coordinator::engine::NativeExecutor;
-        let mut exec =
-            NativeExecutor::synthetic(NativeDims::latmix_tiny(), &qtag, vec![1, 2, 4, 8], cfg.seed)?;
+        let mut exec = NativeExecutor::synthetic(
+            NativeDims::latmix_tiny(),
+            &opts.graph_tag,
+            vec![1, 2, 4, 8],
+            cfg.seed,
+        )?;
         if packed {
             exec = exec.into_packed()?;
         }
         let bytes = exec.resident_weight_bytes();
-        let mut rep = serve_open_loop(exec, &qtag, "synthetic", "native", &cfg)?;
-        rep.resident_weight_bytes = bytes;
+        let synth = opts.clone().tags(&opts.graph_tag, "synthetic");
+        let mut rep = serve_open_loop(exec, &synth, "synthetic", &cfg)?;
+        rep.core.residency.weight_bytes = bytes;
         rep
     } else {
         let d = desc()?;
-        let wtag = args.opt("weights").unwrap_or("fp16").to_string();
         match backend_name(args) {
-            "native" => run_open_loop_native(&d, &qtag, &wtag, &cfg, packed)?,
+            "native" => run_open_loop_native(&d, &opts, &cfg)?,
             #[cfg(feature = "backend-xla")]
             "xla" => {
                 anyhow::ensure!(!packed, "--packed-weights is native-only (use --backend native)");
                 let rt = Runtime::new(d)?;
-                run_open_loop(&rt, &qtag, &wtag, &cfg)?
+                run_open_loop(&rt, &opts, &cfg)?
             }
             other => return Err(unknown_backend(other)),
         }
     };
-    if rep.requests == 0 {
+    if rep.core.requests == 0 {
         println!("serve --open-loop: 0 requests submitted — nothing to report");
         return Ok(());
     }
     println!(
         "open-loop: backend={} graph={} weights={} rate={:.1}req/s requests={} lost={} \
          wall={:.2}s decode_tok/s={:.1}",
-        rep.backend,
-        rep.tag,
-        rep.weights,
+        rep.core.backend,
+        rep.core.tag,
+        rep.core.weights,
         rep.arrival_rate,
-        rep.requests,
+        rep.core.requests,
         rep.lost,
-        rep.wall_s,
-        rep.decode_tok_per_s
+        rep.core.wall_s,
+        rep.core.decode_tok_per_s
     );
-    if rep.resident_weight_bytes > 0 {
-        println!(
-            "resident weights: {:.2} MiB ({})",
-            rep.resident_weight_bytes as f64 / (1 << 20) as f64,
-            if packed { "MX-packed" } else { "dense f32" }
-        );
-    }
+    print_residency(&rep.core.residency, packed, &opts.kv);
     let mut table = latmix::bench::Table::new(
         "serving_slo",
         "Per-class SLO percentiles (open-loop)",

@@ -800,6 +800,101 @@ impl<W: WeightMatrix> NativeWeights<W> {
         Ok((linear(&xf, &self.head, &self.bhead), out_kv))
     }
 
+    /// [`Self::forward_decode_spec`] for the paged KV cache: instead of
+    /// scattering the fresh K/V row into (and returning) full per-lane
+    /// planes, returns just the new `(batch, d_model)` row per plane —
+    /// k before v, post-RoPE / post-T2 — for quantize-on-write append.
+    ///
+    /// Bit-identical to [`Self::forward_decode_spec`]: the fresh row is
+    /// read from `kn`/`vn` directly where the dense path reads it back out
+    /// of the scattered cache, positions `s > p` score `-1e9` whose
+    /// softmax weight underflows to exactly `0.0` (so the `axpy` over
+    /// cached rows beyond `p` is a bitwise no-op in both paths), and every
+    /// other operation is shared.
+    pub fn forward_decode_append_spec(
+        &self,
+        tokens: &[i32],
+        pos: &[i32],
+        kv: &[Vec<f32>],
+        batch: usize,
+        spec: &GraphSpec,
+        tf: SpecRun,
+    ) -> Result<(Vec<f32>, Vec<Vec<f32>>)> {
+        let dims = &self.dims;
+        let (d, s_max, h) = (dims.d_model, dims.kv_seq, dims.n_heads);
+        let dh = dims.head_dim();
+        anyhow::ensure!(tokens.len() == batch && pos.len() == batch, "decode batch mismatch");
+        anyhow::ensure!(kv.len() == dims.n_layers * 2, "kv plane count mismatch");
+        for plane in kv {
+            anyhow::ensure!(plane.len() == batch * s_max * d, "kv plane size mismatch");
+        }
+        spec.validate(dims)?;
+        validate_spec_run(dims, tf)?;
+        let mut new_rows: Vec<Vec<f32>> = Vec::with_capacity(dims.n_layers * 2);
+        let mut x = self.embed_rows(tokens);
+        if let Some(t1) = residual_of(tf) {
+            x = t1.forward_rows(&x);
+        }
+        let scale = 1.0 / (dh as f32).sqrt();
+        for (li, lw) in self.layers.iter().enumerate() {
+            let kc = &kv[2 * li];
+            let vc = &kv[2 * li + 1];
+            let mut hq = rmsnorm_rows(&x, d, &lw.ln1);
+            qdq_rows(&mut hq, d, spec);
+            let hb = match residual_of(tf) {
+                Some(t1) => t1.backward_rows(&hq),
+                None => hq,
+            };
+            let mut q = linear(&hb, &lw.wq, &lw.bq);
+            let mut kn = linear(&hb, &lw.wk, &lw.bk);
+            let mut vn = linear(&hb, &lw.wv, &lw.bv);
+            per_head_forward(&mut vn, d, dh, li, tf);
+            apply_rope_rows(&mut q, h, dh, pos);
+            apply_rope_rows(&mut kn, h, dh, pos);
+            let mut o = vec![0.0f32; batch * d];
+            let mut scores = vec![0.0f32; s_max];
+            for b in 0..batch {
+                let p = pos[b];
+                for hh in 0..h {
+                    let qrow = &q[b * d + hh * dh..b * d + hh * dh + dh];
+                    let krow = &kn[b * d + hh * dh..b * d + hh * dh + dh];
+                    for (s, sc) in scores.iter_mut().enumerate() {
+                        *sc = if (s as i32) < p {
+                            let at = b * s_max * d + s * d + hh * dh;
+                            dot(qrow, &kc[at..at + dh]) * scale
+                        } else if s as i32 == p {
+                            dot(qrow, krow) * scale
+                        } else {
+                            -1e9
+                        };
+                    }
+                    softmax_inplace(&mut scores);
+                    let orow = &mut o[b * d + hh * dh..b * d + hh * dh + dh];
+                    for (s, w) in scores.iter().enumerate() {
+                        if s as i32 == p {
+                            axpy(orow, *w, &vn[b * d + hh * dh..b * d + hh * dh + dh]);
+                        } else {
+                            let at = b * s_max * d + s * d + hh * dh;
+                            axpy(orow, *w, &vc[at..at + dh]);
+                        }
+                    }
+                }
+            }
+            qdq_rows(&mut o, d, spec);
+            per_head_backward(&mut o, d, dh, li, tf);
+            let y = linear(&o, &lw.wo, &lw.bo);
+            add_block_output(&mut x, &y, tf);
+            self.ffn(li, lw, &mut x, spec, tf);
+            new_rows.push(kn);
+            new_rows.push(vn);
+        }
+        let mut xf = rmsnorm_rows(&x, d, &self.lnf);
+        if let Some(t1) = residual_of(tf) {
+            xf = t1.backward_rows(&xf);
+        }
+        Ok((linear(&xf, &self.head, &self.bhead), new_rows))
+    }
+
     // -- internals ----------------------------------------------------------
 
     fn embed_rows(&self, tokens: &[i32]) -> Vec<f32> {

@@ -160,6 +160,65 @@ pub fn int4_decode(code: u8) -> f32 {
     s as f32
 }
 
+/// Encode a scaled FP8 value to its 8-bit code (sign + e4m3), and back.
+/// Same discipline as [`fp4_encode`]: `fp_qdq` snaps `v` onto the E4M3
+/// grid, then the code is read straight out of the f32 bit fields. Unlike
+/// the 4-bit codec the zero sign survives (E4M3 has a -0 encoding), so
+/// `fp8_decode(fp8_encode(v))` reproduces `fp_qdq(v, FP8_E4M3)` bit-exactly
+/// including signed zeros — the KV page codec relies on that to stay
+/// bit-identical with [`super::quantize::qdq_block`].
+#[inline]
+pub fn fp8_encode(v: f32) -> u8 {
+    let q = fp_qdq(v, FP8_E4M3);
+    let bits = q.to_bits();
+    let sign = ((bits >> 31) as u8) << 7;
+    let exp = ((bits >> 23) & 0xff) as i32 - 127; // unbiased f32 exponent
+    if bits & 0x7fff_ffff == 0 {
+        return sign; // +-0
+    }
+    if exp >= -6 {
+        // normal e4m3: biased exponent 1..=15, top 3 mantissa bits
+        let e_field = (exp + 7) as u8;
+        let m = ((bits >> 20) & 0x7) as u8;
+        sign | (e_field << 3) | m
+    } else {
+        // subnormal e4m3: q = m * 2^-9, m in 1..=7 (exact on the grid)
+        let m = (q.abs() * 512.0) as u8;
+        sign | m
+    }
+}
+
+#[inline]
+pub fn fp8_decode(code: u8) -> f32 {
+    let e = ((code >> 3) & 0xf) as i32;
+    let m = (code & 7) as u32;
+    let mag = if e == 0 {
+        // subnormal: m * 2^-9 (exact integer-times-power-of-two product)
+        m as f32 * exp2i(-9)
+    } else {
+        f32::from_bits((((e - 7 + 127) as u32) << 23) | (m << 20))
+    };
+    if code & 0x80 != 0 {
+        -mag
+    } else {
+        mag
+    }
+}
+
+/// Code byte -> decoded FP8 element: the 8-bit sibling of the nibble-pair
+/// LUTs below (one element per byte, so a plain 256-entry value table).
+/// The KV page decode hot path walks this.
+pub fn fp8_lut() -> &'static [f32; 256] {
+    static LUT: std::sync::OnceLock<[f32; 256]> = std::sync::OnceLock::new();
+    LUT.get_or_init(|| {
+        let mut t = [0.0f32; 256];
+        for (b, slot) in t.iter_mut().enumerate() {
+            *slot = fp8_decode(b as u8);
+        }
+        t
+    })
+}
+
 fn pair_lut(decode: fn(u8) -> f32) -> [[f32; 2]; 256] {
     let mut t = [[0.0f32; 2]; 256];
     for b in 0..256usize {
@@ -269,6 +328,58 @@ mod tests {
             let iv = int4_pair_lut()[b as usize];
             assert_eq!(iv[0].to_bits(), int4_decode(b & 0xf).to_bits());
             assert_eq!(iv[1].to_bits(), int4_decode(b >> 4).to_bits());
+        }
+    }
+
+    #[test]
+    fn fp8_codec_roundtrip_all_codes() {
+        // every code decodes to a grid value that encodes back to itself —
+        // except the two OCP NaN slots (S.1111.111), which the saturating
+        // encoder never emits
+        for code in 0u8..=255 {
+            if code & 0x7f == 0x7f {
+                continue;
+            }
+            let v = fp8_decode(code);
+            assert_eq!(fp8_encode(v), code, "code {code} -> {v}");
+            assert_eq!(fp8_decode(fp8_encode(v)).to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn fp8_encode_is_fp_qdq_bitwise() {
+        // decode(encode(v)) == fp_qdq(v) exactly, signed zeros included —
+        // the invariant the KV page codec's MXFP8 bit-parity rests on
+        let mut v = -500.0f32;
+        while v < 500.0 {
+            let q = fp_qdq(v, FP8_E4M3);
+            assert_eq!(fp8_decode(fp8_encode(v)).to_bits(), q.to_bits(), "v={v}");
+            v += 0.3137;
+        }
+        for v in [
+            0.0f32,
+            -0.0,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            1e-40,
+            -1e-40,
+            1e30,
+            -1e-10,
+            2f32.powi(-9),
+            -3.0 * 2f32.powi(-9),
+            448.0,
+            -448.0,
+        ] {
+            let q = fp_qdq(v, FP8_E4M3);
+            assert_eq!(fp8_decode(fp8_encode(v)).to_bits(), q.to_bits(), "v={v}");
+        }
+    }
+
+    #[test]
+    fn fp8_lut_matches_decode() {
+        let lut = fp8_lut();
+        for b in 0..=255u8 {
+            assert_eq!(lut[b as usize].to_bits(), fp8_decode(b).to_bits());
         }
     }
 

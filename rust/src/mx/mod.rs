@@ -12,11 +12,14 @@
 //!   exponent-arithmetic scales, parallel over blocks.
 //! - [`pack`] — true bit-packed storage (4-bit nibbles + E8M0 scale bytes),
 //!   used for footprint accounting and the codec throughput benches.
+//! - [`page`] — page-granular row encode/decode for the paged KV cache
+//!   (quantize-on-write, LUT decode on gather).
 //! - [`reference`] — the retained scalar implementation, the bit-exactness
 //!   oracle for the fast path.
 
 pub mod formats;
 pub mod pack;
+pub mod page;
 pub mod quantize;
 pub mod reference;
 

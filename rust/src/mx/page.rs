@@ -1,0 +1,248 @@
+//! Page-granular KV quantization: encode/decode contiguous runs of KV rows
+//! to MX bytes (one E8M0 scale byte per block, element codes packed 4- or
+//! 8-bit) for the paged `KvCache`.
+//!
+//! Layout is row-major and row-contained: a run of `n` rows of `row` f32
+//! elements encodes to `n * row / block` scale bytes and `n * row_code_bytes`
+//! code bytes, so any row range inside a page decodes independently — the
+//! gather path only ever touches the `[0, pos)` prefix of a page.
+//!
+//! Bit-exactness contract (property-tested in `rust/tests/codec_props.rs`):
+//! - MXFP8 encode→decode reproduces [`super::quantize::mx_qdq_rows`] (and
+//!   the scalar `mx/reference.rs` oracle) bit-for-bit, including the
+//!   denormal-scale division path and signed zeros — the byte codec
+//!   [`fp8_encode`]/[`fp8_lut`] round-trips `fp_qdq` exactly.
+//! - MXFP4/MXINT4 encode→decode reproduces `reference::unpack_ref ∘
+//!   pack_ref` bit-for-bit (the nibble codecs canonicalize `-0.0` to `+0.0`,
+//!   same as [`super::pack::PackedMx`]).
+
+use super::formats::{exp2i, exp2i_ext, floor_log2, fp4_encode, fp4_pair_lut, fp8_encode, fp8_lut,
+    int4_encode, int4_pair_lut};
+use super::quantize::{MxConfig, SCALE_EMAX, SCALE_EMIN};
+
+/// MX block size used along KV rows: the largest power of two ≤ 32 dividing
+/// `row`, so every row length quantizes with row-aligned (and, for nibble
+/// formats with even `row`, byte-aligned) blocks. Real rows (`d_model` a
+/// multiple of 32) get the spec's B=32; the tiny mock dims degrade
+/// gracefully.
+pub fn kv_block(row: usize) -> usize {
+    assert!(row > 0, "kv_block: empty row");
+    let mut b = 32;
+    while row % b != 0 {
+        b /= 2;
+    }
+    b
+}
+
+/// Code bytes per element run of length `n` (4-bit formats pack two codes
+/// per byte).
+pub fn code_bytes(cfg: &MxConfig, n: usize) -> usize {
+    match cfg.element.bits {
+        4 => n / 2,
+        8 => n,
+        b => panic!("page codec: unsupported element width {b}"),
+    }
+}
+
+/// Scale bytes per element run of length `n`.
+pub fn scale_bytes(cfg: &MxConfig, n: usize) -> usize {
+    n / cfg.block_size
+}
+
+fn check(cfg: &MxConfig, n: usize, scales: usize, codes: usize) {
+    assert!(!cfg.nv && cfg.name != "none", "page codec: single-level MX only");
+    assert_eq!(n % cfg.block_size, 0, "page codec: run not block-aligned");
+    if cfg.element.bits == 4 {
+        assert_eq!(cfg.block_size % 2, 0, "page codec: nibble blocks must be even");
+    }
+    assert_eq!(scales, scale_bytes(cfg, n));
+    assert_eq!(codes, code_bytes(cfg, n));
+}
+
+/// Quantize a run of elements (any multiple of `cfg.block_size`) into
+/// scale + code bytes. Same scale/encode discipline as `PackedMx::pack`:
+/// multiply by the exact power-of-two inverse, falling back to the
+/// reference division semantics for denormal-range blocks.
+pub fn encode_run(src: &[f32], cfg: &MxConfig, scales: &mut [u8], codes: &mut [u8]) {
+    check(cfg, src.len(), scales.len(), codes.len());
+    let b = cfg.block_size;
+    let emax = cfg.element.emax;
+    for (bi, block) in src.chunks_exact(b).enumerate() {
+        let amax = block.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        let e = if amax > 0.0 {
+            (floor_log2(amax) - emax).clamp(SCALE_EMIN, SCALE_EMAX)
+        } else {
+            0
+        };
+        scales[bi] = (e + 127) as u8;
+        let s = exp2i(e);
+        match cfg.element.bits {
+            4 => {
+                let is_fp = cfg.element.is_fp;
+                let enc = move |v: f32| if is_fp { fp4_encode(v) } else { int4_encode(v) };
+                let cb = &mut codes[bi * b / 2..(bi + 1) * b / 2];
+                if s == 0.0 {
+                    for (pair, byte) in block.chunks_exact(2).zip(cb.iter_mut()) {
+                        *byte = enc(pair[0] / s) | (enc(pair[1] / s) << 4);
+                    }
+                } else {
+                    let s_inv = exp2i_ext(-e);
+                    for (pair, byte) in block.chunks_exact(2).zip(cb.iter_mut()) {
+                        *byte = enc(pair[0] * s_inv) | (enc(pair[1] * s_inv) << 4);
+                    }
+                }
+            }
+            8 => {
+                let cb = &mut codes[bi * b..(bi + 1) * b];
+                if s == 0.0 {
+                    for (v, byte) in block.iter().zip(cb.iter_mut()) {
+                        *byte = fp8_encode(v / s);
+                    }
+                } else {
+                    let s_inv = exp2i_ext(-e);
+                    for (v, byte) in block.iter().zip(cb.iter_mut()) {
+                        *byte = fp8_encode(v * s_inv);
+                    }
+                }
+            }
+            _ => unreachable!(),
+        }
+    }
+}
+
+/// Dequantize a run previously written by [`encode_run`]: one LUT load per
+/// code byte, scale applied as `s * value` (the same multiply order as
+/// `qdq_block`, keeping MXFP8 bit-identical to the fake-quant path).
+pub fn decode_run(cfg: &MxConfig, scales: &[u8], codes: &[u8], dst: &mut [f32]) {
+    check(cfg, dst.len(), scales.len(), codes.len());
+    let b = cfg.block_size;
+    match cfg.element.bits {
+        4 => {
+            let lut = if cfg.element.is_fp { fp4_pair_lut() } else { int4_pair_lut() };
+            for (bi, chunk) in dst.chunks_exact_mut(b).enumerate() {
+                let s = exp2i(scales[bi] as i32 - 127);
+                let cb = &codes[bi * b / 2..(bi + 1) * b / 2];
+                for (pair, byte) in chunk.chunks_exact_mut(2).zip(cb) {
+                    let d = &lut[*byte as usize];
+                    pair[0] = s * d[0];
+                    pair[1] = s * d[1];
+                }
+            }
+        }
+        8 => {
+            let lut = fp8_lut();
+            for (bi, chunk) in dst.chunks_exact_mut(b).enumerate() {
+                let s = exp2i(scales[bi] as i32 - 127);
+                let cb = &codes[bi * b..(bi + 1) * b];
+                for (v, byte) in chunk.iter_mut().zip(cb) {
+                    *v = s * lut[*byte as usize];
+                }
+            }
+        }
+        _ => unreachable!(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mx::quantize::mx_qdq;
+    use crate::mx::reference;
+    use crate::util::Pcg64;
+
+    fn cfg4() -> MxConfig {
+        MxConfig::from_name("mxfp4", None).unwrap()
+    }
+
+    fn cfg8() -> MxConfig {
+        MxConfig::from_name("mxfp8", None).unwrap()
+    }
+
+    fn sample(rng: &mut Pcg64, n: usize) -> Vec<f32> {
+        rng.normal_vec(n, 1.0)
+            .into_iter()
+            .enumerate()
+            .map(|(i, v)| match i % 7 {
+                0 => 0.0,
+                1 => v * 1e-40, // denormal-scale blocks
+                2 => v * 1e4,
+                _ => v,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn kv_block_divides_and_caps_at_32() {
+        for row in [1, 2, 4, 6, 10, 32, 96, 128, 129, 160] {
+            let b = kv_block(row);
+            assert_eq!(row % b, 0, "row {row} block {b}");
+            assert!(b <= 32 && b >= 1);
+        }
+        assert_eq!(kv_block(128), 32);
+        assert_eq!(kv_block(4), 4);
+        assert_eq!(kv_block(129), 1);
+    }
+
+    #[test]
+    fn fp8_run_matches_qdq_bitwise() {
+        let cfg = cfg8();
+        let mut rng = Pcg64::seed(11);
+        let x = sample(&mut rng, 32 * 17);
+        let mut scales = vec![0u8; scale_bytes(&cfg, x.len())];
+        let mut codes = vec![0u8; code_bytes(&cfg, x.len())];
+        encode_run(&x, &cfg, &mut scales, &mut codes);
+        let mut got = vec![0.0f32; x.len()];
+        decode_run(&cfg, &scales, &codes, &mut got);
+        let want = mx_qdq(&x, x.len(), &cfg);
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.to_bits(), w.to_bits(), "fp8 page qdq mismatch: {g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn fp4_run_matches_reference_pack_bitwise() {
+        let cfg = cfg4();
+        let mut rng = Pcg64::seed(12);
+        let x = sample(&mut rng, 32 * 9);
+        let mut scales = vec![0u8; scale_bytes(&cfg, x.len())];
+        let mut codes = vec![0u8; code_bytes(&cfg, x.len())];
+        encode_run(&x, &cfg, &mut scales, &mut codes);
+        let (rs, rc) = reference::pack_ref(&x, &cfg);
+        assert_eq!(scales, rs);
+        assert_eq!(codes, rc);
+        let mut got = vec![0.0f32; x.len()];
+        decode_run(&cfg, &scales, &codes, &mut got);
+        let want = reference::unpack_ref(&cfg, x.len(), &rs, &rc);
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.to_bits(), w.to_bits(), "fp4 page qdq mismatch: {g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn small_block_rows_roundtrip() {
+        // mock dims: kv_row = 4 -> block 4
+        let mut cfg = cfg8();
+        cfg.block_size = kv_block(4);
+        let mut rng = Pcg64::seed(13);
+        let x = sample(&mut rng, 4 * 6);
+        let mut scales = vec![0u8; scale_bytes(&cfg, x.len())];
+        let mut codes = vec![0u8; code_bytes(&cfg, x.len())];
+        encode_run(&x, &cfg, &mut scales, &mut codes);
+        let mut got = vec![0.0f32; x.len()];
+        decode_run(&cfg, &scales, &codes, &mut got);
+        let want = mx_qdq(&x, x.len(), &cfg);
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.to_bits(), w.to_bits());
+        }
+    }
+
+    #[test]
+    fn zero_bytes_decode_to_zero() {
+        let cfg = cfg8();
+        let scales = vec![0u8; 1];
+        let codes = vec![0u8; 32];
+        let mut out = vec![1.0f32; 32];
+        decode_run(&cfg, &scales, &codes, &mut out);
+        assert!(out.iter().all(|v| *v == 0.0));
+    }
+}

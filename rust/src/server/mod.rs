@@ -4,6 +4,12 @@
 //! [`StepExecutor`], so the same benchmarks run on the PJRT executor
 //! (`backend-xla` feature) and the pure-Rust [`NativeExecutor`].
 //!
+//! Entry points take a typed [`ServeOptions`] (what to serve: graph/weight
+//! tags, workload size, weight residency, KV-cache format) instead of the
+//! old positional argument strings; the open-loop runner layers
+//! [`OpenLoopConfig`] (how load arrives: Poisson rate, queue bound,
+//! deadline, shared prefix) on top. Report types live in [`report`].
+//!
 //! Two load models:
 //!
 //! - **closed-loop** ([`serve_with_executor`]): the whole workload is
@@ -16,6 +22,8 @@
 //!   p50/p90/p99 TTFT + inter-token latency **per class** into
 //!   `BENCH_serving.json` (schema documented in README.md).
 
+pub mod report;
+
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
@@ -23,161 +31,174 @@ use anyhow::Result;
 use crate::coordinator::engine::{NativeExecutor, StepExecutor};
 #[cfg(feature = "backend-xla")]
 use crate::coordinator::engine::XlaExecutor;
-use crate::coordinator::{Engine, EngineConfig, FinishReason, GenRequest, GenResult};
-use crate::data::{default_payload_classes, open_loop_workload, serving_workload, PayloadClass};
+use crate::coordinator::{Engine, EngineConfig, GenRequest, GenResult, KvSpec};
+use crate::data::{
+    default_payload_classes, open_loop_workload_shared, serving_workload,
+};
 use crate::model::{ModelDesc, WeightSet};
 #[cfg(feature = "backend-xla")]
 use crate::runtime::Runtime;
-use crate::util::Summary;
 
-/// Aggregated serving metrics for one closed-loop run. Percentiles are
-/// computed over **completed** requests only (EOS/length/KV-limit);
-/// rejected or evicted lifecycles have no meaningful latency sample.
-#[derive(Clone, Debug)]
-pub struct ServeReport {
-    pub tag: String,
-    pub weights: String,
-    /// Completed requests (the percentile population).
-    pub requests: usize,
-    pub wall_s: f64,
-    pub decode_tok_per_s: f64,
-    pub total_tok_per_s: f64,
-    pub ttft_p50_ms: f64,
-    pub ttft_p99_ms: f64,
-    pub latency_p50_ms: f64,
-    pub latency_p99_ms: f64,
-    /// Bytes of model weights resident in the executor (packed MX bytes
-    /// when `--packed-weights`, f32 bytes otherwise). 0 when the executor
-    /// does not expose a footprint (mock/XLA paths).
-    pub resident_weight_bytes: usize,
+pub use report::{ClassLatency, ReportCore, Residency, ServeReport, ServingReport};
+
+/// How model weights sit in executor memory.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WeightResidency {
+    /// Dequantized f32 weights, dense GEMM.
+    Dense,
+    /// True bit-packed MX bytes, fused packed GEMM (quantized tags only).
+    Packed,
 }
 
-impl ServeReport {
-    pub fn from_results(
-        tag: &str,
-        weights: &str,
-        results: &[GenResult],
-        stats: &crate::coordinator::EngineStats,
-    ) -> ServeReport {
-        let completed: Vec<&GenResult> = results.iter().filter(|r| r.outcome.is_complete()).collect();
-        if completed.is_empty() {
-            // Explicit zero-request report: percentiles over an empty
-            // sample set are meaningless, so report zeros instead of
-            // whatever an empty Summary would produce.
-            return ServeReport {
-                tag: tag.to_string(),
-                weights: weights.to_string(),
-                requests: 0,
-                wall_s: stats.wall_s,
-                decode_tok_per_s: 0.0,
-                total_tok_per_s: 0.0,
-                ttft_p50_ms: 0.0,
-                ttft_p99_ms: 0.0,
-                latency_p50_ms: 0.0,
-                latency_p99_ms: 0.0,
-                resident_weight_bytes: 0,
-            };
-        }
-        let mut ttft = Summary::new();
-        let mut lat = Summary::new();
-        let mut total_toks = 0usize;
-        for r in &completed {
-            ttft.push(r.ttft_s * 1e3);
-            lat.push(r.total_s * 1e3);
-            total_toks += r.prompt_len + r.tokens.len();
-        }
-        ServeReport {
-            tag: tag.to_string(),
-            weights: weights.to_string(),
-            requests: completed.len(),
-            wall_s: stats.wall_s,
-            decode_tok_per_s: stats.decode_tok_per_s(),
-            total_tok_per_s: total_toks as f64 / stats.wall_s.max(1e-9),
-            ttft_p50_ms: ttft.percentile(50.0),
-            ttft_p99_ms: ttft.percentile(99.0),
-            latency_p50_ms: lat.percentile(50.0),
-            latency_p99_ms: lat.percentile(99.0),
-            resident_weight_bytes: 0,
+/// What to serve: the typed replacement for the old positional
+/// `(graph_tag, weights_tag, n_requests, max_new, max_slots, seed,
+/// packed)` argument runs. Build with `Default` + the chainable setters:
+///
+/// ```ignore
+/// let opts = ServeOptions::default()
+///     .tags("mxfp4_latmix", "mxfp4_latmix")
+///     .requests(64)
+///     .residency(WeightResidency::Packed)
+///     .kv(KvSpec::from_bits(8)?);
+/// ```
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    pub graph_tag: String,
+    pub weights_tag: String,
+    /// Closed-loop workload size (open-loop runs take theirs from
+    /// [`OpenLoopConfig::n_requests`]).
+    pub n_requests: usize,
+    pub max_new: usize,
+    /// Closed-loop engine slots (open-loop: [`OpenLoopConfig::max_slots`]).
+    pub max_slots: usize,
+    /// Closed-loop workload seed (open-loop: [`OpenLoopConfig::seed`]).
+    pub seed: u64,
+    pub residency: WeightResidency,
+    /// Paged-KV storage: format (f32 / MXFP8 / MXFP4) + tokens per page.
+    pub kv: KvSpec,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            graph_tag: "fp".to_string(),
+            weights_tag: "fp16".to_string(),
+            n_requests: 16,
+            max_new: 32,
+            max_slots: 8,
+            seed: 42,
+            residency: WeightResidency::Dense,
+            kv: KvSpec::default(),
         }
     }
+}
 
-    pub fn is_empty(&self) -> bool {
-        self.requests == 0
+impl ServeOptions {
+    pub fn tags(mut self, graph: &str, weights: &str) -> Self {
+        self.graph_tag = graph.to_string();
+        self.weights_tag = weights.to_string();
+        self
+    }
+
+    pub fn requests(mut self, n: usize) -> Self {
+        self.n_requests = n;
+        self
+    }
+
+    pub fn max_new(mut self, n: usize) -> Self {
+        self.max_new = n;
+        self
+    }
+
+    pub fn slots(mut self, n: usize) -> Self {
+        self.max_slots = n;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+
+    pub fn residency(mut self, r: WeightResidency) -> Self {
+        self.residency = r;
+        self
+    }
+
+    pub fn kv(mut self, kv: KvSpec) -> Self {
+        self.kv = kv;
+        self
+    }
+
+    /// Load this option set's weights and build the native executor
+    /// (packing them when [`WeightResidency::Packed`]).
+    fn build_native(&self, desc: &ModelDesc) -> Result<NativeExecutor> {
+        let ws = WeightSet::load(desc, &self.weights_tag)?;
+        let exec = NativeExecutor::new(desc, &self.graph_tag, &ws)?;
+        match self.residency {
+            WeightResidency::Dense => Ok(exec),
+            WeightResidency::Packed => exec.into_packed(),
+        }
     }
 }
 
 /// Closed-loop serving benchmark over any step executor: submit
-/// `n_requests` prompts, run the engine to completion, report throughput.
-pub fn serve_with_executor<E: StepExecutor>(
-    exec: E,
-    graph_tag: &str,
-    weights_tag: &str,
-    n_requests: usize,
-    max_new: usize,
-    max_slots: usize,
-    seed: u64,
-) -> Result<ServeReport> {
+/// `opts.n_requests` prompts, run the engine to completion, report
+/// throughput. KV residency/sharing counters are read off the engine;
+/// `backend` and weight bytes are filled by the runner wrappers.
+pub fn serve_with_executor<E: StepExecutor>(exec: E, opts: &ServeOptions) -> Result<ServeReport> {
     let max_prompt = exec.prefill_len();
     let mut engine = Engine::new(
         exec,
-        EngineConfig { max_slots, eos: -1, ..Default::default() },
+        EngineConfig { max_slots: opts.max_slots, eos: -1, kv: opts.kv, ..Default::default() },
     );
-    for (i, (prompt, m)) in serving_workload(n_requests, max_prompt, max_new, seed)
-        .into_iter()
-        .enumerate()
+    for (i, (prompt, m)) in
+        serving_workload(opts.n_requests, max_prompt, opts.max_new, opts.seed)
+            .into_iter()
+            .enumerate()
     {
         engine.submit(GenRequest::new(i as u64, prompt, m));
     }
     let results = engine.run_to_completion()?;
-    Ok(ServeReport::from_results(graph_tag, weights_tag, &results, &engine.stats))
+    let mut rep =
+        ServeReport::from_results(&opts.graph_tag, &opts.weights_tag, &results, &engine.stats);
+    rep.core.residency.kv_bytes = engine.kv_resident_bytes();
+    rep.core.residency.kv_pages_shared = engine.kv_pages_shared();
+    Ok(rep)
 }
 
 /// Run the serving benchmark on the PJRT executor.
 #[cfg(feature = "backend-xla")]
-pub fn run_serving(
-    rt: &Runtime,
-    graph_tag: &str,
-    weights_tag: &str,
-    n_requests: usize,
-    max_new: usize,
-    max_slots: usize,
-    seed: u64,
-) -> Result<ServeReport> {
-    let ws = WeightSet::load(&rt.desc, weights_tag)?;
-    let exec = XlaExecutor::new(rt, graph_tag, &ws)?;
-    serve_with_executor(exec, graph_tag, weights_tag, n_requests, max_new, max_slots, seed)
+pub fn run_serving(rt: &Runtime, opts: &ServeOptions) -> Result<ServeReport> {
+    let ws = WeightSet::load(&rt.desc, &opts.weights_tag)?;
+    let exec = XlaExecutor::new(rt, &opts.graph_tag, &ws)?;
+    let mut rep = serve_with_executor(exec, opts)?;
+    rep.core.backend = "xla".to_string();
+    Ok(rep)
 }
 
 /// Run the serving benchmark on the pure-Rust executor (no XLA toolchain
-/// needed; same `.lxt` weights and compiled-batch discipline). With
-/// `packed`, weights are repacked into MX bytes at load and the fused
-/// packed GEMM decodes them in-register (quantized graph tags only).
-pub fn run_serving_native(
-    desc: &ModelDesc,
-    graph_tag: &str,
-    weights_tag: &str,
-    n_requests: usize,
-    max_new: usize,
-    max_slots: usize,
-    seed: u64,
-    packed: bool,
-) -> Result<ServeReport> {
-    let ws = WeightSet::load(desc, weights_tag)?;
-    let mut exec = NativeExecutor::new(desc, graph_tag, &ws)?;
-    if packed {
-        exec = exec.into_packed()?;
-    }
+/// needed; same `.lxt` weights and compiled-batch discipline). Under
+/// [`WeightResidency::Packed`], weights are repacked into MX bytes at
+/// load and the fused packed GEMM decodes them in-register (quantized
+/// graph tags only).
+pub fn run_serving_native(desc: &ModelDesc, opts: &ServeOptions) -> Result<ServeReport> {
+    let exec = opts.build_native(desc)?;
     let bytes = exec.resident_weight_bytes();
-    let mut rep =
-        serve_with_executor(exec, graph_tag, weights_tag, n_requests, max_new, max_slots, seed)?;
-    rep.resident_weight_bytes = bytes;
+    let mut rep = serve_with_executor(exec, opts)?;
+    rep.core.backend = "native".to_string();
+    rep.core.residency.weight_bytes = bytes;
     Ok(rep)
 }
 
 // ---------------------------------------------------------------------------
 // Open-loop load generator + per-class SLO report
 
-/// Knobs for one open-loop run (CLI flags map 1:1 onto these).
+/// Knobs for one open-loop run (CLI flags map 1:1 onto these). Where a
+/// field shadows [`ServeOptions`] (`n_requests`, `max_slots`, `seed`),
+/// the open-loop runner uses **this** struct's value — `ServeOptions`
+/// contributes what to serve (tags, residency, KV spec), this one how
+/// the load arrives.
 #[derive(Clone, Debug)]
 pub struct OpenLoopConfig {
     pub n_requests: usize,
@@ -188,6 +209,10 @@ pub struct OpenLoopConfig {
     pub queue_depth: Option<usize>,
     /// Per-request latency SLO (None = no deadline eviction).
     pub deadline: Option<Duration>,
+    /// Post-BOS tokens every prompt shares (0 = fully random prompts).
+    /// With a paged KV cache this turns the common prefix into shared
+    /// refcounted pages — `kv_pages_shared` counts the hits.
+    pub shared_prefix: usize,
     pub seed: u64,
 }
 
@@ -199,180 +224,9 @@ impl Default for OpenLoopConfig {
             max_slots: 8,
             queue_depth: None,
             deadline: None,
+            shared_prefix: 0,
             seed: 7,
         }
-    }
-}
-
-/// Per-payload-class SLO aggregation: outcome counts + TTFT and
-/// inter-token-latency percentiles over the class's completed requests.
-#[derive(Clone, Debug)]
-pub struct ClassLatency {
-    pub class: String,
-    pub requests: usize,
-    pub completed: usize,
-    pub rejected: usize,
-    pub timed_out: usize,
-    pub cancelled: usize,
-    /// [p50, p90, p99] time-to-first-token, milliseconds.
-    pub ttft_ms: [f64; 3],
-    /// [p50, p90, p99] inter-token latency, milliseconds.
-    pub itl_ms: [f64; 3],
-}
-
-/// One open-loop serving run, aggregated per class — serialized to
-/// `BENCH_serving.json` (schema 1) for in-repo regression diffing.
-#[derive(Clone, Debug)]
-pub struct ServingReport {
-    pub tag: String,
-    pub weights: String,
-    /// "native" | "xla" — which executor decoded.
-    pub backend: String,
-    pub arrival_rate: f64,
-    pub queue_depth: Option<usize>,
-    pub deadline_ms: Option<f64>,
-    /// Requests submitted (arrival schedule length).
-    pub requests: usize,
-    /// Submitted requests that produced no result — must be 0; anything
-    /// else is a conservation bug and CI's serving smoke fails on it.
-    pub lost: usize,
-    pub wall_s: f64,
-    pub decode_tok_per_s: f64,
-    /// Bytes of model weights resident in the executor (packed MX bytes
-    /// when `--packed-weights`, f32 bytes otherwise; 0 when unknown).
-    pub resident_weight_bytes: usize,
-    pub classes: Vec<ClassLatency>,
-}
-
-impl ServingReport {
-    fn aggregate(
-        classes: &[PayloadClass],
-        class_of: &[usize],
-        results: &[GenResult],
-    ) -> Vec<ClassLatency> {
-        let mut out: Vec<ClassLatency> = classes
-            .iter()
-            .map(|c| ClassLatency {
-                class: c.name.to_string(),
-                requests: 0,
-                completed: 0,
-                rejected: 0,
-                timed_out: 0,
-                cancelled: 0,
-                ttft_ms: [0.0; 3],
-                itl_ms: [0.0; 3],
-            })
-            .collect();
-        let mut ttft: Vec<Summary> = classes.iter().map(|_| Summary::new()).collect();
-        let mut itl: Vec<Summary> = classes.iter().map(|_| Summary::new()).collect();
-        for r in results {
-            let ci = class_of[r.id as usize];
-            out[ci].requests += 1;
-            match r.outcome {
-                o if o.is_complete() => {
-                    out[ci].completed += 1;
-                    ttft[ci].push(r.ttft_s * 1e3);
-                    for s in r.inter_token_s() {
-                        itl[ci].push(s * 1e3);
-                    }
-                }
-                FinishReason::RejectedQueueFull => out[ci].rejected += 1,
-                FinishReason::TimedOut => out[ci].timed_out += 1,
-                FinishReason::Cancelled => out[ci].cancelled += 1,
-                _ => unreachable!("is_complete covers the remaining outcomes"),
-            }
-        }
-        for (ci, c) in out.iter_mut().enumerate() {
-            if c.completed > 0 {
-                for (k, p) in [50.0, 90.0, 99.0].into_iter().enumerate() {
-                    c.ttft_ms[k] = ttft[ci].percentile(p);
-                    c.itl_ms[k] = itl[ci].percentile(p);
-                }
-            }
-        }
-        out
-    }
-
-    /// Render as the `BENCH_serving.json` document (schema 1):
-    ///
-    /// ```json
-    /// {
-    ///   "bench": "serving", "schema": 1, "backend": "native",
-    ///   "tag": "fp", "weights": "fp16",
-    ///   "arrival_rate": 100.0, "requests": 64, "lost": 0,
-    ///   "wall_s": ..., "decode_tok_per_s": ...,
-    ///   "resident_weight_bytes": 0,
-    ///   "classes": [
-    ///     {"class": "short", "requests": 40, "completed": 40,
-    ///      "rejected": 0, "timed_out": 0, "cancelled": 0,
-    ///      "ttft_p50_ms": ..., "ttft_p90_ms": ..., "ttft_p99_ms": ...,
-    ///      "itl_p50_ms": ..., "itl_p90_ms": ..., "itl_p99_ms": ...}
-    ///   ]
-    /// }
-    /// ```
-    pub fn render_json(&self) -> String {
-        use crate::bench::json_str;
-        let mut out = String::from("{\n");
-        out += "  \"bench\": \"serving\",\n  \"schema\": 1,\n";
-        out += &format!("  \"backend\": {},\n", json_str(&self.backend));
-        out += &format!("  \"tag\": {},\n", json_str(&self.tag));
-        out += &format!("  \"weights\": {},\n", json_str(&self.weights));
-        out += &format!("  \"arrival_rate\": {:e},\n", self.arrival_rate);
-        match self.queue_depth {
-            Some(d) => out += &format!("  \"queue_depth\": {d},\n"),
-            None => out += "  \"queue_depth\": null,\n",
-        }
-        match self.deadline_ms {
-            Some(d) => out += &format!("  \"deadline_ms\": {d:e},\n"),
-            None => out += "  \"deadline_ms\": null,\n",
-        }
-        out += &format!("  \"requests\": {},\n", self.requests);
-        out += &format!("  \"lost\": {},\n", self.lost);
-        out += &format!("  \"wall_s\": {:e},\n", self.wall_s);
-        out += &format!("  \"decode_tok_per_s\": {:e},\n", self.decode_tok_per_s);
-        out += &format!("  \"resident_weight_bytes\": {},\n", self.resident_weight_bytes);
-        out += "  \"classes\": [\n";
-        let rows: Vec<String> = self
-            .classes
-            .iter()
-            .map(|c| {
-                format!(
-                    "    {{\"class\": {}, \"requests\": {}, \"completed\": {}, \
-                     \"rejected\": {}, \"timed_out\": {}, \"cancelled\": {}, \
-                     \"ttft_p50_ms\": {:e}, \"ttft_p90_ms\": {:e}, \"ttft_p99_ms\": {:e}, \
-                     \"itl_p50_ms\": {:e}, \"itl_p90_ms\": {:e}, \"itl_p99_ms\": {:e}}}",
-                    json_str(&c.class),
-                    c.requests,
-                    c.completed,
-                    c.rejected,
-                    c.timed_out,
-                    c.cancelled,
-                    c.ttft_ms[0],
-                    c.ttft_ms[1],
-                    c.ttft_ms[2],
-                    c.itl_ms[0],
-                    c.itl_ms[1],
-                    c.itl_ms[2],
-                )
-            })
-            .collect();
-        out += &rows.join(",\n");
-        out += "\n  ]\n}\n";
-        out
-    }
-
-    /// Write `BENCH_serving.json` at the repo root (or `LATMIX_BENCH_DIR`),
-    /// mirroring the microbench snapshot conventions. Returns the path.
-    pub fn emit(&self) -> std::path::PathBuf {
-        let dir = match std::env::var("LATMIX_BENCH_DIR") {
-            Ok(d) => std::path::PathBuf::from(d),
-            Err(_) => crate::bench::repo_root(),
-        };
-        let path = dir.join("BENCH_serving.json");
-        if let Err(e) = std::fs::write(&path, self.render_json()) {
-            eprintln!("warning: could not write {}: {e}", path.display());
-        }
-        path
     }
 }
 
@@ -382,17 +236,17 @@ impl ServingReport {
 /// through the engine sink and aggregates per-class SLO percentiles.
 pub fn serve_open_loop<E: StepExecutor>(
     exec: E,
-    graph_tag: &str,
-    weights_tag: &str,
+    opts: &ServeOptions,
     backend: &str,
     cfg: &OpenLoopConfig,
 ) -> Result<ServingReport> {
     let classes = default_payload_classes();
-    let workload = open_loop_workload(
+    let workload = open_loop_workload_shared(
         cfg.n_requests,
         cfg.arrival_rate,
         exec.prefill_len(),
         &classes,
+        cfg.shared_prefix,
         cfg.seed,
     );
     let class_of: Vec<usize> = workload.iter().map(|r| r.class).collect();
@@ -402,6 +256,7 @@ pub fn serve_open_loop<E: StepExecutor>(
             max_slots: cfg.max_slots,
             eos: -1,
             queue_depth: cfg.queue_depth,
+            kv: opts.kv,
             ..Default::default()
         },
     );
@@ -436,38 +291,39 @@ pub fn serve_open_loop<E: StepExecutor>(
 
     let lost = cfg.n_requests - results.len().min(cfg.n_requests);
     Ok(ServingReport {
-        tag: graph_tag.to_string(),
-        weights: weights_tag.to_string(),
-        backend: backend.to_string(),
+        core: ReportCore {
+            tag: opts.graph_tag.clone(),
+            weights: opts.weights_tag.clone(),
+            backend: backend.to_string(),
+            requests: cfg.n_requests,
+            wall_s: engine.stats.wall_s,
+            decode_tok_per_s: engine.stats.decode_tok_per_s(),
+            residency: Residency {
+                weight_bytes: 0,
+                kv_bytes: engine.kv_resident_bytes(),
+                kv_pages_shared: engine.kv_pages_shared(),
+            },
+        },
         arrival_rate: cfg.arrival_rate,
         queue_depth: cfg.queue_depth,
         deadline_ms: cfg.deadline.map(|d| d.as_secs_f64() * 1e3),
-        requests: cfg.n_requests,
         lost,
-        wall_s: engine.stats.wall_s,
-        decode_tok_per_s: engine.stats.decode_tok_per_s(),
-        resident_weight_bytes: 0,
         classes: ServingReport::aggregate(&classes, &class_of, &results),
     })
 }
 
-/// Open-loop run over artifact-backed native weights. With `packed`,
-/// weights stay MX-packed and the fused packed GEMM serves them.
+/// Open-loop run over artifact-backed native weights. Under
+/// [`WeightResidency::Packed`], weights stay MX-packed and the fused
+/// packed GEMM serves them.
 pub fn run_open_loop_native(
     desc: &ModelDesc,
-    graph_tag: &str,
-    weights_tag: &str,
+    opts: &ServeOptions,
     cfg: &OpenLoopConfig,
-    packed: bool,
 ) -> Result<ServingReport> {
-    let ws = WeightSet::load(desc, weights_tag)?;
-    let mut exec = NativeExecutor::new(desc, graph_tag, &ws)?;
-    if packed {
-        exec = exec.into_packed()?;
-    }
+    let exec = opts.build_native(desc)?;
     let bytes = exec.resident_weight_bytes();
-    let mut rep = serve_open_loop(exec, graph_tag, weights_tag, "native", cfg)?;
-    rep.resident_weight_bytes = bytes;
+    let mut rep = serve_open_loop(exec, opts, "native", cfg)?;
+    rep.core.residency.weight_bytes = bytes;
     Ok(rep)
 }
 
@@ -475,19 +331,18 @@ pub fn run_open_loop_native(
 #[cfg(feature = "backend-xla")]
 pub fn run_open_loop(
     rt: &Runtime,
-    graph_tag: &str,
-    weights_tag: &str,
+    opts: &ServeOptions,
     cfg: &OpenLoopConfig,
 ) -> Result<ServingReport> {
-    let ws = WeightSet::load(&rt.desc, weights_tag)?;
-    let exec = XlaExecutor::new(rt, graph_tag, &ws)?;
-    serve_open_loop(exec, graph_tag, weights_tag, "xla", cfg)
+    let ws = WeightSet::load(&rt.desc, &opts.weights_tag)?;
+    let exec = XlaExecutor::new(rt, &opts.graph_tag, &ws)?;
+    serve_open_loop(exec, opts, "xla", cfg)
 }
 
 #[cfg(test)]
 mod tests {
     use crate::coordinator::engine::MockExecutor;
-    use crate::coordinator::EngineStats;
+    use crate::coordinator::{EngineStats, FinishReason, KvFormat};
 
     use super::*;
 
@@ -495,7 +350,7 @@ mod tests {
     fn empty_results_yield_zero_report() {
         let rep = ServeReport::from_results("fp", "fp16", &[], &EngineStats::default());
         assert!(rep.is_empty());
-        assert_eq!(rep.requests, 0);
+        assert_eq!(rep.core.requests, 0);
         assert_eq!(rep.ttft_p50_ms, 0.0);
         assert_eq!(rep.latency_p99_ms, 0.0);
         assert!(rep.ttft_p99_ms.is_finite() && rep.latency_p50_ms.is_finite());
@@ -527,8 +382,28 @@ mod tests {
             &[complete, rejected],
             &EngineStats::default(),
         );
-        assert_eq!(rep.requests, 1, "only the completed request counts");
+        assert_eq!(rep.core.requests, 1, "only the completed request counts");
         assert!(rep.ttft_p50_ms > 0.0);
+    }
+
+    #[test]
+    fn serve_options_builder_chains() {
+        let opts = ServeOptions::default()
+            .tags("mxfp4_latmix", "mxfp4_latmix")
+            .requests(64)
+            .max_new(12)
+            .slots(4)
+            .seed(9)
+            .residency(WeightResidency::Packed)
+            .kv(KvSpec::from_bits(8).unwrap());
+        assert_eq!(opts.graph_tag, "mxfp4_latmix");
+        assert_eq!(opts.weights_tag, "mxfp4_latmix");
+        assert_eq!(opts.n_requests, 64);
+        assert_eq!(opts.max_new, 12);
+        assert_eq!(opts.max_slots, 4);
+        assert_eq!(opts.seed, 9);
+        assert_eq!(opts.residency, WeightResidency::Packed);
+        assert!(matches!(opts.kv.format, KvFormat::Mxfp8));
     }
 
     #[test]
@@ -539,10 +414,10 @@ mod tests {
             max_slots: 4,
             ..Default::default()
         };
-        let rep =
-            serve_open_loop(MockExecutor::default(), "fp", "mock", "native", &cfg).unwrap();
+        let opts = ServeOptions::default().tags("fp", "mock");
+        let rep = serve_open_loop(MockExecutor::default(), &opts, "native", &cfg).unwrap();
         assert_eq!(rep.lost, 0, "no request may vanish");
-        assert_eq!(rep.requests, 24);
+        assert_eq!(rep.core.requests, 24);
         let total: usize = rep.classes.iter().map(|c| c.requests).sum();
         assert_eq!(total, 24, "every result lands in exactly one class");
         let completed: usize = rep.classes.iter().map(|c| c.completed).sum();
@@ -550,6 +425,7 @@ mod tests {
         for c in rep.classes.iter().filter(|c| c.completed > 0) {
             assert!(c.ttft_ms[2] >= c.ttft_ms[0], "p99 >= p50");
         }
+        assert!(rep.core.residency.kv_bytes > 0, "paged pool reports residency");
     }
 
     #[test]
@@ -561,8 +437,8 @@ mod tests {
             queue_depth: Some(2),
             ..Default::default()
         };
-        let rep =
-            serve_open_loop(MockExecutor::default(), "fp", "mock", "native", &cfg).unwrap();
+        let opts = ServeOptions::default().tags("fp", "mock");
+        let rep = serve_open_loop(MockExecutor::default(), &opts, "native", &cfg).unwrap();
         assert_eq!(rep.lost, 0);
         let rejected: usize = rep.classes.iter().map(|c| c.rejected).sum();
         let completed: usize = rep.classes.iter().map(|c| c.completed).sum();
@@ -571,15 +447,40 @@ mod tests {
     }
 
     #[test]
+    fn open_loop_shared_prefix_shares_pages() {
+        // Shared 4-token prefix + 4-token pages on the mock executor:
+        // every admitted prompt's first page must map to the same pooled
+        // page, so the shared counter climbs above zero.
+        let cfg = OpenLoopConfig {
+            n_requests: 16,
+            arrival_rate: 5000.0,
+            max_slots: 4,
+            shared_prefix: 7,
+            ..Default::default()
+        };
+        let opts = ServeOptions::default()
+            .tags("fp", "mock")
+            .kv(KvSpec { format: KvFormat::F32, block: 4 });
+        let rep = serve_open_loop(MockExecutor::default(), &opts, "native", &cfg).unwrap();
+        assert_eq!(rep.lost, 0);
+        assert!(
+            rep.core.residency.kv_pages_shared > 0,
+            "shared-prefix workload must hit the page-share registry"
+        );
+    }
+
+    #[test]
     fn serving_json_well_formed() {
         let cfg = OpenLoopConfig { n_requests: 8, arrival_rate: 5000.0, ..Default::default() };
-        let rep =
-            serve_open_loop(MockExecutor::default(), "fp", "mock", "native", &cfg).unwrap();
+        let opts = ServeOptions::default().tags("fp", "mock");
+        let rep = serve_open_loop(MockExecutor::default(), &opts, "native", &cfg).unwrap();
         let s = rep.render_json();
         assert!(s.contains("\"bench\": \"serving\""));
         assert!(s.contains("\"schema\": 1"));
         assert!(s.contains("\"lost\": 0"));
         assert!(s.contains("\"resident_weight_bytes\": 0"));
+        assert!(s.contains("\"kv_resident_bytes\""));
+        assert!(s.contains("\"kv_pages_shared\""));
         assert!(s.contains("\"ttft_p90_ms\""));
         assert!(s.contains("\"itl_p99_ms\""));
         assert!(!s.contains("NaN") && !s.contains("inf"));

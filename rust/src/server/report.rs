@@ -1,0 +1,284 @@
+//! Shared serving-report types: the closed-loop [`ServeReport`] and the
+//! open-loop [`ServingReport`] used to carry duplicated tag/weights/
+//! throughput/footprint fields; both now wrap one [`ReportCore`] and the
+//! JSON/emit path lives here. New footprint keys (`kv_resident_bytes`,
+//! `kv_pages_shared`) are **additive**: `BENCH_serving.json` stays
+//! schema 1 and `scripts/bench_diff.py` tolerates their absence in old
+//! snapshots.
+
+use crate::coordinator::{EngineStats, FinishReason, GenResult};
+use crate::data::PayloadClass;
+use crate::util::Summary;
+
+/// Memory-footprint block shared by both report kinds.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Residency {
+    /// Bytes of model weights resident in the executor (packed MX bytes
+    /// when `--packed-weights`, f32 bytes otherwise). 0 when the executor
+    /// does not expose a footprint (mock/XLA paths).
+    pub weight_bytes: usize,
+    /// Bytes of KV page storage resident at run end (the lazy page pool's
+    /// high-water mark; scale+code bytes under `--kv-bits 8/4`).
+    pub kv_bytes: usize,
+    /// Cumulative KV pages mapped by prompt-prefix sharing instead of
+    /// being written.
+    pub kv_pages_shared: u64,
+}
+
+impl Residency {
+    /// The three footprint keys, one JSON line each — the single render
+    /// path both reports use.
+    fn render_json_fields(&self) -> String {
+        format!(
+            "  \"resident_weight_bytes\": {},\n  \"kv_resident_bytes\": {},\n  \
+             \"kv_pages_shared\": {},\n",
+            self.weight_bytes, self.kv_bytes, self.kv_pages_shared
+        )
+    }
+}
+
+/// Fields common to every serving report, whatever the load model.
+#[derive(Clone, Debug, Default)]
+pub struct ReportCore {
+    pub tag: String,
+    pub weights: String,
+    /// "native" | "xla" — which executor decoded ("" until a runner
+    /// wrapper fills it in).
+    pub backend: String,
+    /// Closed-loop: completed requests (the percentile population).
+    /// Open-loop: requests submitted (arrival schedule length).
+    pub requests: usize,
+    pub wall_s: f64,
+    pub decode_tok_per_s: f64,
+    pub residency: Residency,
+}
+
+/// Aggregated serving metrics for one closed-loop run. Percentiles are
+/// computed over **completed** requests only (EOS/length/KV-limit);
+/// rejected or evicted lifecycles have no meaningful latency sample.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub core: ReportCore,
+    pub total_tok_per_s: f64,
+    pub ttft_p50_ms: f64,
+    pub ttft_p99_ms: f64,
+    pub latency_p50_ms: f64,
+    pub latency_p99_ms: f64,
+}
+
+impl ServeReport {
+    pub fn from_results(
+        tag: &str,
+        weights: &str,
+        results: &[GenResult],
+        stats: &EngineStats,
+    ) -> ServeReport {
+        let completed: Vec<&GenResult> =
+            results.iter().filter(|r| r.outcome.is_complete()).collect();
+        let core = ReportCore {
+            tag: tag.to_string(),
+            weights: weights.to_string(),
+            backend: String::new(),
+            requests: completed.len(),
+            wall_s: stats.wall_s,
+            decode_tok_per_s: stats.decode_tok_per_s(),
+            residency: Residency::default(),
+        };
+        if completed.is_empty() {
+            // Explicit zero-request report: percentiles over an empty
+            // sample set are meaningless, so report zeros instead of
+            // whatever an empty Summary would produce.
+            return ServeReport {
+                core: ReportCore { decode_tok_per_s: 0.0, ..core },
+                total_tok_per_s: 0.0,
+                ttft_p50_ms: 0.0,
+                ttft_p99_ms: 0.0,
+                latency_p50_ms: 0.0,
+                latency_p99_ms: 0.0,
+            };
+        }
+        let mut ttft = Summary::new();
+        let mut lat = Summary::new();
+        let mut total_toks = 0usize;
+        for r in &completed {
+            ttft.push(r.ttft_s * 1e3);
+            lat.push(r.total_s * 1e3);
+            total_toks += r.prompt_len + r.tokens.len();
+        }
+        ServeReport {
+            core,
+            total_tok_per_s: total_toks as f64 / stats.wall_s.max(1e-9),
+            ttft_p50_ms: ttft.percentile(50.0),
+            ttft_p99_ms: ttft.percentile(99.0),
+            latency_p50_ms: lat.percentile(50.0),
+            latency_p99_ms: lat.percentile(99.0),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.core.requests == 0
+    }
+}
+
+/// Per-payload-class SLO aggregation: outcome counts + TTFT and
+/// inter-token-latency percentiles over the class's completed requests.
+#[derive(Clone, Debug)]
+pub struct ClassLatency {
+    pub class: String,
+    pub requests: usize,
+    pub completed: usize,
+    pub rejected: usize,
+    pub timed_out: usize,
+    pub cancelled: usize,
+    /// [p50, p90, p99] time-to-first-token, milliseconds.
+    pub ttft_ms: [f64; 3],
+    /// [p50, p90, p99] inter-token latency, milliseconds.
+    pub itl_ms: [f64; 3],
+}
+
+/// One open-loop serving run, aggregated per class — serialized to
+/// `BENCH_serving.json` (schema 1) for in-repo regression diffing.
+#[derive(Clone, Debug)]
+pub struct ServingReport {
+    pub core: ReportCore,
+    pub arrival_rate: f64,
+    pub queue_depth: Option<usize>,
+    pub deadline_ms: Option<f64>,
+    /// Submitted requests that produced no result — must be 0; anything
+    /// else is a conservation bug and CI's serving smoke fails on it.
+    pub lost: usize,
+    pub classes: Vec<ClassLatency>,
+}
+
+impl ServingReport {
+    pub(crate) fn aggregate(
+        classes: &[PayloadClass],
+        class_of: &[usize],
+        results: &[GenResult],
+    ) -> Vec<ClassLatency> {
+        let mut out: Vec<ClassLatency> = classes
+            .iter()
+            .map(|c| ClassLatency {
+                class: c.name.to_string(),
+                requests: 0,
+                completed: 0,
+                rejected: 0,
+                timed_out: 0,
+                cancelled: 0,
+                ttft_ms: [0.0; 3],
+                itl_ms: [0.0; 3],
+            })
+            .collect();
+        let mut ttft: Vec<Summary> = classes.iter().map(|_| Summary::new()).collect();
+        let mut itl: Vec<Summary> = classes.iter().map(|_| Summary::new()).collect();
+        for r in results {
+            let ci = class_of[r.id as usize];
+            out[ci].requests += 1;
+            match r.outcome {
+                o if o.is_complete() => {
+                    out[ci].completed += 1;
+                    ttft[ci].push(r.ttft_s * 1e3);
+                    for s in r.inter_token_s() {
+                        itl[ci].push(s * 1e3);
+                    }
+                }
+                FinishReason::RejectedQueueFull => out[ci].rejected += 1,
+                FinishReason::TimedOut => out[ci].timed_out += 1,
+                FinishReason::Cancelled => out[ci].cancelled += 1,
+                _ => unreachable!("is_complete covers the remaining outcomes"),
+            }
+        }
+        for (ci, c) in out.iter_mut().enumerate() {
+            if c.completed > 0 {
+                for (k, p) in [50.0, 90.0, 99.0].into_iter().enumerate() {
+                    c.ttft_ms[k] = ttft[ci].percentile(p);
+                    c.itl_ms[k] = itl[ci].percentile(p);
+                }
+            }
+        }
+        out
+    }
+
+    /// Render as the `BENCH_serving.json` document (schema 1):
+    ///
+    /// ```json
+    /// {
+    ///   "bench": "serving", "schema": 1, "backend": "native",
+    ///   "tag": "fp", "weights": "fp16",
+    ///   "arrival_rate": 100.0, "requests": 64, "lost": 0,
+    ///   "wall_s": ..., "decode_tok_per_s": ...,
+    ///   "resident_weight_bytes": 0,
+    ///   "kv_resident_bytes": 0, "kv_pages_shared": 0,
+    ///   "classes": [
+    ///     {"class": "short", "requests": 40, "completed": 40,
+    ///      "rejected": 0, "timed_out": 0, "cancelled": 0,
+    ///      "ttft_p50_ms": ..., "ttft_p90_ms": ..., "ttft_p99_ms": ...,
+    ///      "itl_p50_ms": ..., "itl_p90_ms": ..., "itl_p99_ms": ...}
+    ///   ]
+    /// }
+    /// ```
+    pub fn render_json(&self) -> String {
+        use crate::bench::json_str;
+        let mut out = String::from("{\n");
+        out += "  \"bench\": \"serving\",\n  \"schema\": 1,\n";
+        out += &format!("  \"backend\": {},\n", json_str(&self.core.backend));
+        out += &format!("  \"tag\": {},\n", json_str(&self.core.tag));
+        out += &format!("  \"weights\": {},\n", json_str(&self.core.weights));
+        out += &format!("  \"arrival_rate\": {:e},\n", self.arrival_rate);
+        match self.queue_depth {
+            Some(d) => out += &format!("  \"queue_depth\": {d},\n"),
+            None => out += "  \"queue_depth\": null,\n",
+        }
+        match self.deadline_ms {
+            Some(d) => out += &format!("  \"deadline_ms\": {d:e},\n"),
+            None => out += "  \"deadline_ms\": null,\n",
+        }
+        out += &format!("  \"requests\": {},\n", self.core.requests);
+        out += &format!("  \"lost\": {},\n", self.lost);
+        out += &format!("  \"wall_s\": {:e},\n", self.core.wall_s);
+        out += &format!("  \"decode_tok_per_s\": {:e},\n", self.core.decode_tok_per_s);
+        out += &self.core.residency.render_json_fields();
+        out += "  \"classes\": [\n";
+        let rows: Vec<String> = self
+            .classes
+            .iter()
+            .map(|c| {
+                format!(
+                    "    {{\"class\": {}, \"requests\": {}, \"completed\": {}, \
+                     \"rejected\": {}, \"timed_out\": {}, \"cancelled\": {}, \
+                     \"ttft_p50_ms\": {:e}, \"ttft_p90_ms\": {:e}, \"ttft_p99_ms\": {:e}, \
+                     \"itl_p50_ms\": {:e}, \"itl_p90_ms\": {:e}, \"itl_p99_ms\": {:e}}}",
+                    json_str(&c.class),
+                    c.requests,
+                    c.completed,
+                    c.rejected,
+                    c.timed_out,
+                    c.cancelled,
+                    c.ttft_ms[0],
+                    c.ttft_ms[1],
+                    c.ttft_ms[2],
+                    c.itl_ms[0],
+                    c.itl_ms[1],
+                    c.itl_ms[2],
+                )
+            })
+            .collect();
+        out += &rows.join(",\n");
+        out += "\n  ]\n}\n";
+        out
+    }
+
+    /// Write `BENCH_serving.json` at the repo root (or `LATMIX_BENCH_DIR`),
+    /// mirroring the microbench snapshot conventions. Returns the path.
+    pub fn emit(&self) -> std::path::PathBuf {
+        let dir = match std::env::var("LATMIX_BENCH_DIR") {
+            Ok(d) => std::path::PathBuf::from(d),
+            Err(_) => crate::bench::repo_root(),
+        };
+        let path = dir.join("BENCH_serving.json");
+        if let Err(e) = std::fs::write(&path, self.render_json()) {
+            eprintln!("warning: could not write {}: {e}", path.display());
+        }
+        path
+    }
+}

@@ -182,39 +182,68 @@ fn rtn_gptq_thread_count_invariant() {
     bits_eq(&gn, &g1).unwrap_or_else(|e| panic!("gptq: {e}"));
 }
 
-/// KV gather/scatter above the parallel threshold round-trips exactly and
-/// matches the small-cache serial semantics (positions bumped once each).
+/// Paged-KV gather above the parallel threshold: the page-table
+/// materialization is thread-count invariant and append steps land each
+/// lane's row at its own position, bit-exactly.
 #[test]
 fn kv_batch_ops_parallel_roundtrip() {
     let (layers, seq, row) = (3usize, 64usize, 32usize);
     let mut kv = KvCache::new(6, layers, seq, row);
     let mut rng = Pcg64::seed(80);
     let ids: Vec<u64> = (0..6).collect();
+    let plen = 20usize; // ragged against the default 16-token page
+    let mut prefills: Vec<Vec<Vec<f32>>> = Vec::new();
     for &id in &ids {
         kv.alloc(id).unwrap();
-        let filler = rng.normal_vec(seq * row, 1.0);
-        for li in 0..layers * 2 {
-            kv.get_mut(id).unwrap().data[li].copy_from_slice(&filler);
-        }
+        // single-lane prefill planes: (1, plen rows live, seq * row total)
+        let planes: Vec<Vec<f32>> = (0..layers * 2)
+            .map(|_| {
+                let mut p = vec![0.0f32; seq * row];
+                p[..plen * row].copy_from_slice(&rng.normal_vec(plen * row, 1.0));
+                p
+            })
+            .collect();
+        let prompt: Vec<i32> = (0..plen as i32).map(|t| t + id as i32 * 100).collect();
+        kv.write_prefill(id, &prompt, &planes, 0).unwrap();
+        prefills.push(planes);
     }
     // batch * plane * planes = 6*2048*6 = 73728 >= PAR_MIN_LEN -> parallel
-    let g = par::with_threads(4, || kv.gather_batch(&ids, 6));
-    let g_serial = par::with_threads(1, || kv.gather_batch(&ids, 6));
+    let g = par::with_threads(4, || kv.gather_batch(&ids, 6).unwrap());
+    let g_serial = par::with_threads(1, || kv.gather_batch(&ids, 6).unwrap());
     for (a, b) in g.iter().zip(&g_serial) {
-        assert_eq!(a, b);
+        assert_eq!(a, b, "gather is thread-count invariant");
     }
-    let mut g2 = g.clone();
-    for plane in g2.iter_mut() {
-        for v in plane.iter_mut() {
-            *v += 1.0;
+    for (li, plane) in g.iter().enumerate() {
+        for (lane, planes) in prefills.iter().enumerate() {
+            assert_eq!(
+                &plane[lane * seq * row..lane * seq * row + plen * row],
+                &planes[li][..plen * row],
+                "lane {lane} plane {li}: prefill rows materialize exactly"
+            );
+            assert!(
+                plane[lane * seq * row + plen * row..(lane + 1) * seq * row]
+                    .iter()
+                    .all(|v| *v == 0.0),
+                "rows beyond pos stay zero"
+            );
         }
     }
-    par::with_threads(4, || kv.scatter_batch(&ids, 6, &g2));
+    // one append step: each lane gets a distinct fresh row at pos = plen
+    let rows: Vec<Vec<f32>> =
+        (0..layers * 2).map(|_| rng.normal_vec(6 * row, 1.0)).collect();
+    kv.append_step(&ids, 6, &rows).unwrap();
     for &id in &ids {
-        assert_eq!(kv.get(id).unwrap().pos, 1, "pos bumped exactly once");
+        assert_eq!(kv.pos_of(id), Some(plen + 1), "pos bumped exactly once");
     }
-    let g3 = kv.gather_batch(&ids, 6);
-    for (a, b) in g3.iter().zip(&g2) {
-        assert_eq!(a, b, "scatter/gather round-trip");
+    let g2 = kv.gather_batch(&ids, 6).unwrap();
+    for (li, plane) in g2.iter().enumerate() {
+        for lane in 0..6 {
+            let at = lane * seq * row + plen * row;
+            assert_eq!(
+                &plane[at..at + row],
+                &rows[li][lane * row..(lane + 1) * row],
+                "lane {lane} plane {li}: appended row round-trips"
+            );
+        }
     }
 }

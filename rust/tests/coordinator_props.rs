@@ -7,7 +7,7 @@
 use std::time::Duration;
 
 use latmix::coordinator::engine::{Engine, EngineConfig, MockExecutor, NativeExecutor};
-use latmix::coordinator::{Batcher, FinishReason, GenRequest, KvCache, Router};
+use latmix::coordinator::{Batcher, FinishReason, GenRequest, KvCache, KvFormat, KvSpec, Router};
 use latmix::model::NativeDims;
 use latmix::mx::{mx_qdq, pack::PackedMx, MxConfig};
 use latmix::testing::{forall, ScriptGen, UsizeGen, VecGen};
@@ -352,37 +352,51 @@ fn prop_lifecycle_conservation_under_churn() {
     });
 }
 
-/// KV slot reuse never leaks stale rows: every alloc — first use or
-/// refill after a poisoned occupant — must hand out fully zeroed planes.
+/// Page recycling never leaks stale rows: prefills poison every written
+/// row with 1e9; after frees recycle those pages into new (shorter)
+/// sequences, a gather must materialize exactly the live rows and zeros
+/// beyond `pos` — recycled page contents may never bleed through.
 #[test]
 fn prop_kv_refill_never_leaks_stale_rows() {
     let gen = ScriptGen { max_len: 60, ops: 2, max_value: 16 };
     forall("kv_stale_rows", 50, &gen, |script| {
         let cap = 4;
-        let mut kv = KvCache::new(cap, 2, 8, 4);
+        let (layers, seq_max, row) = (2usize, 8usize, 4usize);
+        let mut kv =
+            KvCache::with_spec(cap, layers, seq_max, row, KvSpec { format: KvFormat::F32, block: 3 });
+        let plane = seq_max * row;
+        let mut step = 0i32;
         for (op, val) in script {
             let id = *val;
             match op % 2 {
                 0 => {
                     if let Ok(alloc) = kv.alloc(id) {
-                        let seq = kv.get(id).unwrap();
-                        if seq.pos != 0 {
-                            return Err(format!("slot {} pos {} != 0", alloc.slot, seq.pos));
+                        if kv.pos_of(id) != Some(0) || !kv.pages_of(id).unwrap().is_empty() {
+                            return Err(format!(
+                                "slot {} (refill={}) not fresh",
+                                alloc.slot, alloc.refill
+                            ));
                         }
-                        for (li, plane) in seq.data.iter().enumerate() {
-                            if plane.iter().any(|x| *x != 0.0) {
+                        step += 1;
+                        let plen = 1 + (*val as usize % seq_max);
+                        // unique tokens per prefill: no cross-sequence sharing
+                        let prompt: Vec<i32> =
+                            (0..plen as i32).map(|t| step * 100 + t).collect();
+                        let planes: Vec<Vec<f32>> =
+                            (0..layers * 2).map(|_| vec![1e9f32; plane]).collect();
+                        kv.write_prefill(id, &prompt, &planes, 0).unwrap();
+                        let g = kv.gather_batch(&[id], 1).map_err(|e| e.to_string())?;
+                        for (li, buf) in g.iter().enumerate() {
+                            if buf[..plen * row].iter().any(|x| *x != 1e9) {
+                                return Err(format!("plane {li}: live rows corrupted"));
+                            }
+                            if buf[plen * row..].iter().any(|x| *x != 0.0) {
                                 return Err(format!(
-                                    "slot {} (refill={}) plane {li} has stale rows",
-                                    alloc.slot, alloc.refill
+                                    "plane {li}: stale rows beyond pos {plen} (refill={})",
+                                    alloc.refill
                                 ));
                             }
                         }
-                        // poison the slot so a leaky refill is detectable
-                        let seq = kv.get_mut(id).unwrap();
-                        for plane in seq.data.iter_mut() {
-                            plane.fill(1e9);
-                        }
-                        seq.pos = 7;
                     }
                 }
                 _ => {
@@ -392,6 +406,187 @@ fn prop_kv_refill_never_leaks_stale_rows() {
         }
         Ok(())
     });
+}
+
+/// Page-pool accounting under churn: after every operation, each mapped
+/// page's refcount equals the number of block-table references to it, and
+/// free + distinct-mapped pages account for the whole arena — no leak, no
+/// double-map, no page both free and mapped.
+#[test]
+fn prop_kv_page_pool_accounting_under_churn() {
+    let gen = ScriptGen { max_len: 60, ops: 3, max_value: 12 };
+    forall("kv_page_pool", 40, &gen, |script| {
+        let cap = 4;
+        let (layers, seq_max, row) = (2usize, 8usize, 4usize);
+        let mut kv =
+            KvCache::with_spec(cap, layers, seq_max, row, KvSpec { format: KvFormat::F32, block: 4 });
+        let plane = seq_max * row;
+        for (op, val) in script {
+            let id = *val;
+            match op % 3 {
+                0 => {
+                    if kv.alloc(id).is_ok() {
+                        // shared 4-token lead-in so page sharing and COW
+                        // both happen under the script
+                        let plen = 4 + (*val as usize % 5);
+                        let mut prompt = vec![1i32, 2, 3, 4];
+                        while prompt.len() < plen {
+                            prompt.push(100 + id as i32);
+                        }
+                        let planes: Vec<Vec<f32>> =
+                            (0..layers * 2).map(|_| vec![id as f32 + 0.5; plane]).collect();
+                        kv.write_prefill(id, &prompt, &planes, 0).unwrap();
+                    }
+                }
+                1 => {
+                    if kv.contains(id) && kv.pos_of(id).unwrap() < seq_max {
+                        let rows: Vec<Vec<f32>> =
+                            (0..layers * 2).map(|_| vec![id as f32; row]).collect();
+                        kv.append_step(&[id], 1, &rows).unwrap();
+                    }
+                }
+                _ => {
+                    kv.free(id);
+                }
+            }
+            let mut refs: std::collections::HashMap<usize, u32> = Default::default();
+            for sid in kv.ids() {
+                for p in kv.pages_of(sid).unwrap() {
+                    *refs.entry(p).or_insert(0) += 1;
+                }
+            }
+            for (&p, &n) in &refs {
+                if kv.page_refcount(p) != n {
+                    return Err(format!(
+                        "page {p}: refcount {} but {n} table refs",
+                        kv.page_refcount(p)
+                    ));
+                }
+            }
+            if kv.free_pages() + refs.len() != kv.total_pages() {
+                return Err(format!(
+                    "arena accounting broken: {} free + {} mapped != {} total",
+                    kv.free_pages(),
+                    refs.len(),
+                    kv.total_pages()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Copy-on-write diverges exactly once: two sequences sharing a ragged
+/// prefix page split on the sharer's first append and never re-clone on
+/// later appends; the passive sharer's gathered rows stay bit-identical
+/// throughout.
+#[test]
+fn prop_kv_cow_diverges_only_on_first_write() {
+    let gen = UsizeGen(1, 5);
+    forall("kv_cow_first_write", 10, &gen, |n_appends| {
+        let (layers, seq_max, row) = (2usize, 8usize, 4usize);
+        let mut kv =
+            KvCache::with_spec(2, layers, seq_max, row, KvSpec { format: KvFormat::F32, block: 4 });
+        let prompt = vec![7i32, 8, 9]; // ragged: 3 tokens on a 4-token page
+        let plane = seq_max * row;
+        let planes: Vec<Vec<f32>> = (0..layers * 2)
+            .map(|li| {
+                let mut p = vec![0.0f32; plane];
+                for (j, v) in p.iter_mut().enumerate().take(3 * row) {
+                    *v = li as f32 + j as f32 * 0.25;
+                }
+                p
+            })
+            .collect();
+        for id in [1u64, 2] {
+            kv.alloc(id).unwrap();
+            kv.write_prefill(id, &prompt, &planes, 0).unwrap();
+        }
+        let (pa, pb) = (kv.pages_of(1).unwrap(), kv.pages_of(2).unwrap());
+        if pa != pb {
+            return Err("identical prompts must share their page".into());
+        }
+        if kv.page_refcount(pa[0]) != 2 {
+            return Err(format!("shared page refcount {} != 2", kv.page_refcount(pa[0])));
+        }
+        let passive_before = kv.gather_batch(&[2], 1).map_err(|e| e.to_string())?;
+        let mut first_owned: Option<usize> = None;
+        for k in 0..*n_appends {
+            let rows: Vec<Vec<f32>> =
+                (0..layers * 2).map(|_| vec![-1.0 - k as f32; row]).collect();
+            kv.append_step(&[1], 1, &rows).map_err(|e| e.to_string())?;
+            let head = kv.pages_of(1).unwrap()[0];
+            match first_owned {
+                None => {
+                    if head == pb[0] {
+                        return Err("first append into shared page did not clone".into());
+                    }
+                    first_owned = Some(head);
+                }
+                Some(h) => {
+                    if head != h {
+                        return Err(format!("append {k} re-cloned: page {h} -> {head}"));
+                    }
+                }
+            }
+            if kv.page_refcount(pb[0]) != 1 || kv.page_refcount(head) != 1 {
+                return Err("post-COW refcounts must both be 1".into());
+            }
+        }
+        let passive_after = kv.gather_batch(&[2], 1).map_err(|e| e.to_string())?;
+        if passive_before != passive_after {
+            return Err("sharer's appends perturbed the passive sequence".into());
+        }
+        Ok(())
+    });
+}
+
+/// Quantize-on-write round-trip: MX-paged gathers are bit-identical to
+/// `mx_qdq` over the same rows (itself pinned to `mx/reference.rs` by the
+/// codec tests) — including page-boundary rows and ragged final pages.
+#[test]
+fn prop_kv_quantized_pages_match_reference_qdq() {
+    let gen = UsizeGen(1, 8);
+    for (fmt, kvf) in [("mxfp8", KvFormat::Mxfp8), ("mxfp4", KvFormat::Mxfp4)] {
+        let cfg_name = fmt;
+        forall(&format!("kv_page_qdq_{fmt}"), 8, &gen, move |plen| {
+            let (layers, seq_max, row) = (2usize, 8usize, 4usize);
+            let spec = KvSpec { format: kvf, block: 3 }; // ragged vs plen 1..=8
+            let mut kv = KvCache::with_spec(1, layers, seq_max, row, spec);
+            let cfg = spec.mx_config(row).expect("quantized spec has an MX config");
+            if cfg.name != cfg_name {
+                return Err(format!("spec resolved {} not {cfg_name}", cfg.name));
+            }
+            let plane = seq_max * row;
+            let mut rng = Pcg64::seed(41 + *plen as u64);
+            let planes: Vec<Vec<f32>> = (0..layers * 2)
+                .map(|_| {
+                    let mut p = vec![0.0f32; plane];
+                    let fill = rng.normal_vec(*plen * row, 1.5);
+                    p[..*plen * row].copy_from_slice(&fill);
+                    p
+                })
+                .collect();
+            kv.alloc(9).unwrap();
+            let prompt: Vec<i32> = (0..*plen as i32).collect();
+            kv.write_prefill(9, &prompt, &planes, 0).unwrap();
+            let g = kv.gather_batch(&[9], 1).map_err(|e| e.to_string())?;
+            for (li, buf) in g.iter().enumerate() {
+                let want = mx_qdq(&planes[li][..*plen * row], cfg.block_size, &cfg);
+                for (j, (a, b)) in buf[..*plen * row].iter().zip(&want).enumerate() {
+                    if a.to_bits() != b.to_bits() {
+                        return Err(format!(
+                            "plane {li} elem {j}: paged {a} != qdq {b} (plen {plen})"
+                        ));
+                    }
+                }
+                if buf[*plen * row..].iter().any(|x| *x != 0.0) {
+                    return Err(format!("plane {li}: nonzero beyond pos"));
+                }
+            }
+            Ok(())
+        });
+    }
 }
 
 /// Deadline-expired requests are evicted with `TimedOut`; requests without

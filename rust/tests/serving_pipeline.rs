@@ -11,7 +11,7 @@ use std::rc::Rc;
 use latmix::coordinator::engine::{
     Engine, EngineConfig, MockExecutor, NativeExecutor, StepExecutor,
 };
-use latmix::coordinator::{GenRequest, GenResult, LockstepEngine, StreamEvent};
+use latmix::coordinator::{GenRequest, GenResult, KvFormat, KvSpec, LockstepEngine, StreamEvent};
 use latmix::data::serving_workload;
 use latmix::model::NativeDims;
 
@@ -41,15 +41,18 @@ fn submit_all<F: FnMut(GenRequest)>(reqs: &[(Vec<i32>, usize)], mut push: F) {
     }
 }
 
-/// Run the same request set through both engines on fresh executors and
-/// demand identical per-request (tokens, outcome) per id.
-fn assert_parity<E: StepExecutor>(
+/// [`assert_parity`] with an explicit paged-KV spec on the continuous
+/// engine. The lockstep reference always keeps dense per-lane planes, so
+/// this pins the paged path (page-table gather, COW sharing, append) to
+/// the dense layout bit for bit.
+fn assert_parity_kv<E: StepExecutor>(
     make_exec: impl Fn() -> E,
     max_slots: usize,
     reqs: &[(Vec<i32>, usize)],
+    kv: KvSpec,
     tag: &str,
 ) {
-    let cfg = EngineConfig { max_slots, eos: -1, ..Default::default() };
+    let cfg = EngineConfig { max_slots, eos: -1, kv, ..Default::default() };
 
     let mut cont = Engine::new(make_exec(), cfg.clone());
     submit_all(reqs, |r| cont.submit(r));
@@ -66,6 +69,17 @@ fn assert_parity<E: StepExecutor>(
         essence(&lock_out),
         "{tag}: continuous and lockstep token sequences diverged"
     );
+}
+
+/// Run the same request set through both engines on fresh executors and
+/// demand identical per-request (tokens, outcome) per id.
+fn assert_parity<E: StepExecutor>(
+    make_exec: impl Fn() -> E,
+    max_slots: usize,
+    reqs: &[(Vec<i32>, usize)],
+    tag: &str,
+) {
+    assert_parity_kv(make_exec, max_slots, reqs, KvSpec::default(), tag);
 }
 
 #[test]
@@ -154,6 +168,114 @@ fn packed_weights_match_dequantized_token_streams() {
             "{tag}: packed and dequantized token streams diverged"
         );
     }
+}
+
+#[test]
+fn paged_fp_parity_is_page_size_invariant() {
+    // fp-precision paged KV must be bit-identical to the dense lockstep
+    // reference whatever the page size — including pages smaller than a
+    // prompt, a one-token degenerate page, and a page size that leaves a
+    // ragged final page on every prompt.
+    let reqs = serving_workload(10, 6, 8, 19);
+    for block in [1usize, 3, 4, 16] {
+        assert_parity_kv(
+            MockExecutor::default,
+            3,
+            &reqs,
+            KvSpec { format: KvFormat::F32, block },
+            &format!("mock paged block={block}"),
+        );
+    }
+    let dims = NativeDims::latmix_tiny();
+    let reqs = serving_workload(8, 6, 6, 41);
+    for block in [4usize, 7] {
+        assert_parity_kv(
+            || NativeExecutor::synthetic(dims, "fp", vec![1, 2, 4, 8], 3).unwrap(),
+            4,
+            &reqs,
+            KvSpec { format: KvFormat::F32, block },
+            &format!("latmix_tiny paged block={block}"),
+        );
+    }
+}
+
+#[test]
+fn shared_prefix_keeps_parity_and_shares_pages() {
+    // Prompts that agree on a long prefix: the paged engine maps the
+    // prefix pages once and refcounts them. Token streams must still be
+    // bit-identical to the dense lockstep reference (K/V rows are lane-
+    // independent), the share counter must climb, and the pool must stay
+    // below what dense per-slot planes would hold.
+    let dims = NativeDims::latmix_tiny();
+    let mut reqs = serving_workload(10, 16, 6, 23);
+    let prefix = reqs[0].0.clone();
+    for (p, _) in reqs.iter_mut() {
+        let n = p.len().min(8);
+        p[..n].copy_from_slice(&prefix[..n]);
+    }
+    let kv = KvSpec { format: KvFormat::F32, block: 4 };
+    assert_parity_kv(
+        || NativeExecutor::synthetic(dims, "fp", vec![1, 2, 4, 8], 3).unwrap(),
+        4,
+        &reqs,
+        kv,
+        "latmix_tiny shared prefix",
+    );
+
+    let mut eng = Engine::new(
+        NativeExecutor::synthetic(dims, "fp", vec![1, 2, 4, 8], 3).unwrap(),
+        EngineConfig { max_slots: 4, eos: -1, kv, ..Default::default() },
+    );
+    submit_all(&reqs, |r| eng.submit(r));
+    eng.run_to_completion().unwrap();
+    assert!(eng.kv_pages_shared() > 0, "8-token shared prefix must share 4-token pages");
+    assert!(
+        eng.kv_resident_bytes() < eng.kv_dense_bytes(),
+        "paged pool ({} B) must stay under dense per-slot planes ({} B)",
+        eng.kv_resident_bytes(),
+        eng.kv_dense_bytes()
+    );
+}
+
+#[test]
+fn mxfp8_kv_is_flip_tolerant_vs_fp_kv() {
+    // The quantized-KV gate, shaped like the packed-weights one: MXFP8
+    // pages perturb decode inputs, so token streams may flip — but the
+    // structure must hold. Same requests complete, first generated token
+    // is bit-identical (it comes from prefill logits, computed before any
+    // KV row is stored), and the overall token agreement stays high.
+    let dims = NativeDims::latmix_tiny();
+    let reqs = serving_workload(8, 6, 8, 41);
+    let run = |kv: KvSpec| -> Vec<GenResult> {
+        let mut eng = Engine::new(
+            NativeExecutor::synthetic(dims, "fp", vec![1, 2, 4, 8], 3).unwrap(),
+            EngineConfig { max_slots: 4, eos: -1, kv, ..Default::default() },
+        );
+        submit_all(&reqs, |r| eng.submit(r));
+        let mut out = eng.run_to_completion().unwrap();
+        out.sort_by_key(|r| r.id);
+        out
+    };
+    let fp = run(KvSpec::default());
+    let q8 = run(KvSpec { format: KvFormat::Mxfp8, block: 16 });
+    assert_eq!(fp.len(), q8.len());
+    let (mut agree, mut total) = (0usize, 0usize);
+    for (a, b) in fp.iter().zip(&q8) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.prompt_len, b.prompt_len);
+        assert!(b.outcome.is_complete(), "req {}: quantized run must complete", b.id);
+        assert_eq!(
+            a.tokens.first(),
+            b.tokens.first(),
+            "req {}: first token comes from prefill logits and may not flip",
+            a.id
+        );
+        let n = a.tokens.len().min(b.tokens.len());
+        total += n;
+        agree += (0..n).filter(|&i| a.tokens[i] == b.tokens[i]).count();
+    }
+    let frac = agree as f64 / total.max(1) as f64;
+    assert!(frac >= 0.6, "mxfp8 KV token agreement {frac:.2} below flip-tolerance floor");
 }
 
 #[test]

@@ -36,6 +36,25 @@ print("packed serving smoke OK:", snap["requests"], "requests, 0 lost,",
       snap["resident_weight_bytes"], "resident weight bytes (MX-packed)")
 EOF
 
+# Paged-KV smoke: shared-prefix open-loop run on MXFP8 KV pages with a
+# small page size, so prefix sharing, copy-on-write, and quantize-on-write
+# all engage. Runs BEFORE the fp run below for the same snapshot-baseline
+# reason. Asserts conservation, that prefix pages were actually shared,
+# and that the paged residency keys landed in the report.
+cargo run --no-default-features -q -- serve --open-loop --synthetic \
+  --kv-bits 8 --kv-block 4 --shared-prefix 12 \
+  --requests 48 --arrival-rate 400 --slots 4 --seed 7
+python3 - <<'EOF'
+import json
+snap = json.load(open("BENCH_serving.json"))
+assert snap["lost"] == 0, f"paged-KV smoke lost {snap['lost']} request(s)"
+assert snap["kv_pages_shared"] > 0, "shared-prefix run shared no KV pages"
+assert snap["kv_resident_bytes"] > 0, "paged run reported no KV residency"
+print("paged-KV smoke OK:", snap["requests"], "requests, 0 lost,",
+      snap["kv_pages_shared"], "page(s) prefix-shared,",
+      snap["kv_resident_bytes"], "KV bytes resident (mxfp8 pages)")
+EOF
+
 # Serving smoke: open-loop continuous-batching run over synthetic
 # latmix-tiny weights (no artifact directory needed); refreshes
 # BENCH_serving.json (schema 1, per-class SLO rows). The binary itself
