@@ -21,7 +21,7 @@ use latmix::bench::{fmt_time, Bencher, JsonReport, Table};
 use latmix::coordinator::engine::{Engine, EngineConfig, MockExecutor, NativeExecutor, StepExecutor};
 use latmix::coordinator::{Batcher, GenRequest, KvCache, KvFormat, KvSpec};
 use latmix::latmix::{learn_feature_transform, outlier_features, LearnConfig};
-use latmix::linalg::{block_hadamard_apply, packed_matmul, Mat, PackedMat};
+use latmix::linalg::{block_hadamard_apply, packed_matmul, packed_matmul_cols, Mat, PackedMat};
 use latmix::model::NativeDims;
 use latmix::mx::{mx_qdq_rows, pack::PackedMx, page, reference, MxConfig};
 use latmix::quant::{gptq_quantize, rtn_quantize};
@@ -148,6 +148,27 @@ fn main() {
         let r = Bencher::new(&format!("packed_gemm 192x192 {fmt}_b32"))
             .with_iters(wu, iu)
             .run(|| packed_matmul(&mm, &pw));
+        tab.row(vec![r.name.clone(), fmt_time(r.mean_s), fmt_time(r.p99_s),
+            format!("{:.2} GFLOP/s", r.throughput(flops) / 1e9)]);
+        json.push(&r, Some(("flop/s", flops)));
+    }
+
+    // column-sharded fused packed GEMM: the tensor-parallel shard workers'
+    // kernel (`--workers N` splits gate/up and per-head projections into
+    // exactly these column slices over `par::run_workers`)
+    {
+        let pcfg = MxConfig::from_name("mxfp4", Some(32)).unwrap();
+        let pw = PackedMat::pack(&mm, pcfg).unwrap();
+        let shards = 4usize;
+        let per = (192 + shards - 1) / shards;
+        let r = Bencher::new("packed_gemm 192x192 mxfp4_b32 sharded w=4")
+            .with_iters(wu, iu)
+            .run(|| {
+                latmix::util::par::run_workers(shards, |s| {
+                    let (c0, c1) = (s * per, ((s + 1) * per).min(192));
+                    packed_matmul_cols(&mm, &pw, c0, c1)
+                })
+            });
         tab.row(vec![r.name.clone(), fmt_time(r.mean_s), fmt_time(r.p99_s),
             format!("{:.2} GFLOP/s", r.throughput(flops) / 1e9)]);
         json.push(&r, Some(("flop/s", flops)));
@@ -313,6 +334,36 @@ fn native_decode_bench(json: &mut JsonReport, smoke: bool) {
                 .run(|| exec.decode(&tokens, &pos, &kv, b).unwrap());
             tab.row(vec![
                 "mxfp4+packed".into(),
+                b.to_string(),
+                fmt_time(r.mean_s),
+                fmt_time(r.p99_s),
+                format!("{:.1}", b as f64 / r.mean_s),
+            ]);
+            json.push(&r, Some(("tok/s", b as f64)));
+        }
+    }
+    // tensor-parallel sharded decode at workers=1/2/4: the shard plan is
+    // fixed (head partition + d_ff bands), so the logits are bit-identical
+    // across rows and the deltas are pure fork-join scaling/overhead;
+    // workers=1 runs the segmented kernels serially — the honest baseline
+    // for the split (`rust/tests/shard_parity.rs` gates the parity)
+    {
+        for workers in [1usize, 2, 4] {
+            let exec = NativeExecutor::synthetic(dims, "mxfp4_b32_t3", vec![1, 2, 4, 8], 42)
+                .unwrap()
+                .with_workers(workers)
+                .unwrap();
+            let kvdims = exec.n_layers() * 2;
+            let b = 4usize;
+            let plane = exec.kv_seq() * exec.kv_row();
+            let kv: Vec<Vec<f32>> = vec![vec![0.0f32; b * plane]; kvdims];
+            let tokens = vec![5i32; b];
+            let pos = vec![3i32; b];
+            let r = Bencher::new(&format!("native decode mxfp4_b32_t3 workers={workers} b={b}"))
+                .with_iters(iters.0, iters.1)
+                .run(|| exec.decode(&tokens, &pos, &kv, b).unwrap());
+            tab.row(vec![
+                format!("mxfp4 w={workers}"),
                 b.to_string(),
                 fmt_time(r.mean_s),
                 fmt_time(r.p99_s),

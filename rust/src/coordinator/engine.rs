@@ -40,7 +40,8 @@ use super::kv_cache::{KvCache, KvSpec};
 use super::request::{FinishReason, GenRequest, GenResult, RequestId, StreamEvent, TokenSink};
 use super::scheduler::{plan_step, SchedEvent, SchedulerPolicy};
 use crate::model::{
-    GraphSpec, ModelDesc, NativeDims, NativeWeights, PackedNativeWeights, SpecRun, WeightSet,
+    GraphSpec, ModelDesc, NativeDims, NativeWeights, PackedNativeWeights, ShardPlan, SpecRun,
+    WeightSet,
 };
 use crate::runtime::decode_batch_sizes;
 use crate::transform::{TransformMode, TransformSpec};
@@ -222,6 +223,11 @@ pub struct NativeExecutor {
     spec: GraphSpec,
     batches: Vec<usize>,
     transforms: Option<(TransformSpec, TransformMode)>,
+    /// Tensor-parallel shard plan (`--workers N`). `None` serves on the
+    /// original single-worker forward; `Some` routes every step through
+    /// the sharded forward, whose output is bit-identical for any worker
+    /// count under the same plan (`rust/tests/shard_parity.rs`).
+    shard: Option<ShardPlan>,
 }
 
 /// Weight storage mode of a [`NativeExecutor`]: dense f32 matrices, or
@@ -255,6 +261,7 @@ impl NativeExecutor {
             spec,
             batches,
             transforms,
+            shard: None,
         })
     }
 
@@ -275,6 +282,7 @@ impl NativeExecutor {
             spec,
             batches,
             transforms: None,
+            shard: None,
         })
     }
 
@@ -316,6 +324,30 @@ impl NativeExecutor {
             packed => packed,
         };
         Ok(self)
+    }
+
+    /// Serve with `workers` tensor-parallel shard workers (`--workers N`):
+    /// attention sharded along heads, FFN along fixed `d_ff` bands, with
+    /// fixed-order shard reductions so logits are bit-identical for any
+    /// worker count. `workers == 1` exercises the same segmented kernels
+    /// serially. Validates against the model dims (0 workers and
+    /// `workers > n_heads` are refused).
+    pub fn with_workers(self, workers: usize) -> Result<Self> {
+        let plan = ShardPlan::new(workers, self.dims())?;
+        self.with_shard_plan(plan)
+    }
+
+    /// Like [`NativeExecutor::with_workers`] with an explicit plan — used
+    /// when a folded artifact's manifest pins `shard.ffn_block`.
+    pub fn with_shard_plan(mut self, plan: ShardPlan) -> Result<Self> {
+        plan.validate(self.dims())?;
+        self.shard = Some(plan);
+        Ok(self)
+    }
+
+    /// The active tensor-parallel plan, if any.
+    pub fn shard_plan(&self) -> Option<ShardPlan> {
+        self.shard
     }
 
     /// Whether weights are held in bit-packed MX form.
@@ -380,12 +412,18 @@ impl StepExecutor for NativeExecutor {
 
     fn prefill(&self, tokens: &[i32], lens: &[i32], batch: usize)
         -> Result<(Vec<f32>, Vec<Vec<f32>>)> {
-        match &self.weights {
-            ExecWeights::Dense(w) => {
+        match (&self.weights, &self.shard) {
+            (ExecWeights::Dense(w), None) => {
                 w.forward_prefill_spec(tokens, lens, batch, &self.spec, self.spec_run())
             }
-            ExecWeights::Packed(w) => {
+            (ExecWeights::Packed(w), None) => {
                 w.forward_prefill_spec(tokens, lens, batch, &self.spec, self.spec_run())
+            }
+            (ExecWeights::Dense(w), Some(plan)) => {
+                w.forward_prefill_shard_spec(tokens, lens, batch, &self.spec, self.spec_run(), plan)
+            }
+            (ExecWeights::Packed(w), Some(plan)) => {
+                w.forward_prefill_shard_spec(tokens, lens, batch, &self.spec, self.spec_run(), plan)
             }
         }
     }
@@ -397,13 +435,31 @@ impl StepExecutor for NativeExecutor {
         kv: &[Vec<f32>],
         batch: usize,
     ) -> Result<(Vec<f32>, Vec<Vec<f32>>)> {
-        match &self.weights {
-            ExecWeights::Dense(w) => {
+        match (&self.weights, &self.shard) {
+            (ExecWeights::Dense(w), None) => {
                 w.forward_decode_spec(tokens, pos, kv, batch, &self.spec, self.spec_run())
             }
-            ExecWeights::Packed(w) => {
+            (ExecWeights::Packed(w), None) => {
                 w.forward_decode_spec(tokens, pos, kv, batch, &self.spec, self.spec_run())
             }
+            (ExecWeights::Dense(w), Some(plan)) => w.forward_decode_shard_spec(
+                tokens,
+                pos,
+                kv,
+                batch,
+                &self.spec,
+                self.spec_run(),
+                plan,
+            ),
+            (ExecWeights::Packed(w), Some(plan)) => w.forward_decode_shard_spec(
+                tokens,
+                pos,
+                kv,
+                batch,
+                &self.spec,
+                self.spec_run(),
+                plan,
+            ),
         }
     }
 
@@ -414,13 +470,31 @@ impl StepExecutor for NativeExecutor {
         kv: &[Vec<f32>],
         batch: usize,
     ) -> Result<(Vec<f32>, Vec<Vec<f32>>)> {
-        match &self.weights {
-            ExecWeights::Dense(w) => {
+        match (&self.weights, &self.shard) {
+            (ExecWeights::Dense(w), None) => {
                 w.forward_decode_append_spec(tokens, pos, kv, batch, &self.spec, self.spec_run())
             }
-            ExecWeights::Packed(w) => {
+            (ExecWeights::Packed(w), None) => {
                 w.forward_decode_append_spec(tokens, pos, kv, batch, &self.spec, self.spec_run())
             }
+            (ExecWeights::Dense(w), Some(plan)) => w.forward_decode_append_shard_spec(
+                tokens,
+                pos,
+                kv,
+                batch,
+                &self.spec,
+                self.spec_run(),
+                plan,
+            ),
+            (ExecWeights::Packed(w), Some(plan)) => w.forward_decode_append_shard_spec(
+                tokens,
+                pos,
+                kv,
+                batch,
+                &self.spec,
+                self.spec_run(),
+                plan,
+            ),
         }
     }
 }

@@ -752,7 +752,18 @@ mod tests {
         let mut c = cache();
         c.alloc(1).unwrap();
         c.write_prefill(1, &[5], &planes(&c, 0.0), 0).unwrap();
-        assert!(c.gather_batch(&[1, 42], 2).is_err());
+        let err = c.gather_batch(&[1, 42], 2).unwrap_err().to_string();
+        assert!(err.contains("unmapped sequence 42"), "diagnosable error, got: {err}");
+        // a freed id is unmapped again — stale lane references fail loud
+        c.free(1);
+        assert!(c.gather_batch(&[1], 1).is_err());
+        // and lane count may never exceed the batch shape
+        let mut c = cache();
+        c.alloc(1).unwrap();
+        c.alloc(2).unwrap();
+        c.alloc(3).unwrap();
+        let err = c.gather_batch(&[1, 2, 3], 2).unwrap_err().to_string();
+        assert!(err.contains("more lanes than batch"), "got: {err}");
     }
 
     #[test]

@@ -40,6 +40,17 @@ impl Router {
     /// Returns (request, worker index).
     pub fn route(&mut self, prompt: Vec<i32>, max_new: usize) -> (GenRequest, usize) {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let worker = self.assign(id);
+        (GenRequest::new(id, prompt, max_new), worker)
+    }
+
+    /// Tag an externally-created request id with the least-loaded worker
+    /// and track it as queued. Multi-worker serving uses this to label
+    /// each request with its owning shard worker *without* changing the
+    /// engine's admission order — the tensor-parallel engine executes all
+    /// lanes, so assignment is bookkeeping, not a scheduling input, and
+    /// `sched_fingerprint` stays invariant across worker counts.
+    pub fn assign(&mut self, id: RequestId) -> usize {
         let worker = self
             .worker_load
             .iter()
@@ -50,7 +61,7 @@ impl Router {
         self.worker_load[worker] += 1;
         self.states.insert(id, ReqState::Queued);
         self.assignment.insert(id, worker);
-        (GenRequest::new(id, prompt, max_new), worker)
+        worker
     }
 
     pub fn mark_running(&mut self, id: RequestId) {
@@ -101,6 +112,19 @@ mod tests {
             counts[w] += 1;
         }
         assert_eq!(counts, [3, 3, 3]);
+    }
+
+    #[test]
+    fn assign_tags_external_ids_least_loaded() {
+        let mut r = Router::new(2);
+        // externally numbered requests (engine-side ids) round-robin while
+        // loads are level, and completion rebalances
+        assert_eq!(r.assign(100), 0);
+        assert_eq!(r.assign(200), 1);
+        r.mark_done(100);
+        assert_eq!(r.assign(300), 0, "freed worker is least-loaded again");
+        assert_eq!(r.state(300), Some(ReqState::Queued));
+        assert_eq!(r.loads(), &[1, 1]);
     }
 
     #[test]

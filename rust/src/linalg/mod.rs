@@ -13,7 +13,7 @@ pub mod hadamard;
 pub mod packed;
 
 pub use hadamard::{block_hadamard_apply, hadamard};
-pub use packed::{packed_matmul, PackedMat, WeightMatrix};
+pub use packed::{packed_matmul, packed_matmul_band, packed_matmul_cols, PackedMat, WeightMatrix};
 
 use crate::util::par;
 
@@ -111,6 +111,87 @@ impl Mat {
             }
         } else {
             par::for_each_chunk(&mut out.data, n, row_kernel);
+        }
+        out
+    }
+
+    /// The `[c0, c1)` output-column slice of `x @ self` — bit-identical to
+    /// slicing the full [`Mat::matmul`] product, because each output
+    /// element's k-loop replays the exact dense order (4-wide unroll, then
+    /// the scalar remainder) and output columns never interact. Serial on
+    /// purpose: in the sharded forward pass the shard workers supply the
+    /// parallelism, each owning a disjoint head / FFN column range.
+    pub fn matmul_cols(&self, x: &Mat, c0: usize, c1: usize) -> Mat {
+        assert_eq!(x.cols, self.rows, "matmul_cols shape mismatch");
+        assert!(c0 <= c1 && c1 <= self.cols, "column slice out of range");
+        let (m, kd, n, nc) = (x.rows, self.rows, self.cols, c1 - c0);
+        let mut out = Mat::zeros(m, nc);
+        if m == 0 || nc == 0 {
+            return out;
+        }
+        for (i, orow) in out.data.chunks_mut(nc).enumerate() {
+            let arow = &x.data[i * kd..(i + 1) * kd];
+            let mut k = 0;
+            while k + 4 <= kd {
+                let (a0, a1, a2, a3) = (arow[k], arow[k + 1], arow[k + 2], arow[k + 3]);
+                let b0 = &self.data[k * n + c0..k * n + c1];
+                let b1 = &self.data[(k + 1) * n + c0..(k + 1) * n + c1];
+                let b2 = &self.data[(k + 2) * n + c0..(k + 2) * n + c1];
+                let b3 = &self.data[(k + 3) * n + c0..(k + 3) * n + c1];
+                for j in 0..nc {
+                    orow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+                }
+                k += 4;
+            }
+            while k < kd {
+                let a = arow[k];
+                let brow = &self.data[k * n + c0..k * n + c1];
+                for (o, b) in orow.iter_mut().zip(brow.iter()) {
+                    *o += a * b;
+                }
+                k += 1;
+            }
+        }
+        out
+    }
+
+    /// The row-band partial `x_seg @ self[r0..r1, :]`, where `x_seg` holds
+    /// the matching `[r0, r1)` column slice of the full activation. This is
+    /// the shard side of a row-split GEMM: summing the partials of a fixed
+    /// band partition in ascending band order — then adding the bias — is
+    /// one fixed sequence of f32 adds, so the reduction is bit-identical
+    /// for any worker count. Within a band the k-loop replays the dense
+    /// [`Mat::matmul`] order. Serial on purpose (see [`Mat::matmul_cols`]).
+    pub fn matmul_band(&self, x_seg: &Mat, r0: usize, r1: usize) -> Mat {
+        assert!(r0 <= r1 && r1 <= self.rows, "row band out of range");
+        assert_eq!(x_seg.cols, r1 - r0, "matmul_band shape mismatch");
+        let (m, kd, n) = (x_seg.rows, r1 - r0, self.cols);
+        let mut out = Mat::zeros(m, n);
+        if m == 0 || n == 0 {
+            return out;
+        }
+        for (i, orow) in out.data.chunks_mut(n).enumerate() {
+            let arow = &x_seg.data[i * kd..(i + 1) * kd];
+            let mut k = 0;
+            while k + 4 <= kd {
+                let (a0, a1, a2, a3) = (arow[k], arow[k + 1], arow[k + 2], arow[k + 3]);
+                let b0 = &self.data[(r0 + k) * n..(r0 + k + 1) * n];
+                let b1 = &self.data[(r0 + k + 1) * n..(r0 + k + 2) * n];
+                let b2 = &self.data[(r0 + k + 2) * n..(r0 + k + 3) * n];
+                let b3 = &self.data[(r0 + k + 3) * n..(r0 + k + 4) * n];
+                for j in 0..n {
+                    orow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+                }
+                k += 4;
+            }
+            while k < kd {
+                let a = arow[k];
+                let brow = &self.data[(r0 + k) * n..(r0 + k + 1) * n];
+                for (o, b) in orow.iter_mut().zip(brow.iter()) {
+                    *o += a * b;
+                }
+                k += 1;
+            }
         }
         out
     }
@@ -482,6 +563,55 @@ mod tests {
         assert_eq!(off[(0, 0)], 0.0);
         assert_eq!(off[(5, 6)], 0.0);
         assert_eq!(off[(0, 5)], a[(0, 5)]);
+    }
+
+    #[test]
+    fn matmul_cols_slices_full_product_bitwise() {
+        let mut r = Pcg64::seed(9);
+        // kd = 37 exercises the 4-wide remainder
+        let a = Mat::from_vec(5, 37, r.normal_vec(5 * 37, 1.0));
+        let w = Mat::from_vec(37, 24, r.normal_vec(37 * 24, 1.0));
+        let full = a.matmul(&w);
+        for (c0, c1) in [(0usize, 24usize), (8, 16), (5, 7), (24, 24)] {
+            let cols = w.matmul_cols(&a, c0, c1);
+            assert_eq!((cols.rows, cols.cols), (5, c1 - c0));
+            for i in 0..5 {
+                for j in c0..c1 {
+                    assert_eq!(
+                        cols[(i, j - c0)].to_bits(),
+                        full[(i, j)].to_bits(),
+                        "cols [{c0},{c1}) elem ({i},{j})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_band_full_range_matches_matmul_bitwise() {
+        let mut r = Pcg64::seed(10);
+        let a = Mat::from_vec(3, 37, r.normal_vec(3 * 37, 1.0));
+        let w = Mat::from_vec(37, 16, r.normal_vec(37 * 16, 1.0));
+        // a single band spanning all weight rows is the whole GEMM — same
+        // k-order, so bit-identical to matmul
+        let band = w.matmul_band(&a, 0, 37);
+        let full = a.matmul(&w);
+        for (x, y) in band.data.iter().zip(&full.data) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        // partial bands sum to the full product up to f32 association
+        let lo = w.matmul_band(&Mat::from_vec(3, 20, cols_slice(&a, 0, 20)), 0, 20);
+        let hi = w.matmul_band(&Mat::from_vec(3, 17, cols_slice(&a, 20, 37)), 20, 37);
+        let sum = lo.add(&hi);
+        assert!(sum.sub(&full).max_abs() < 1e-4);
+    }
+
+    fn cols_slice(a: &Mat, c0: usize, c1: usize) -> Vec<f32> {
+        let mut out = Vec::with_capacity(a.rows * (c1 - c0));
+        for i in 0..a.rows {
+            out.extend_from_slice(&a.data[i * a.cols + c0..i * a.cols + c1]);
+        }
+        out
     }
 
     #[test]

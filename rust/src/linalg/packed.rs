@@ -89,17 +89,35 @@ impl PackedMat {
     /// `PackedMx::unpack_into`: one LUT load per packed byte, two
     /// multiplies by the power-of-two block scale out.
     pub fn decode_rows(&self, k0: usize, count: usize, dst: &mut [f32]) {
+        self.decode_rows_window(k0, count, 0, self.cols, dst);
+    }
+
+    /// [`PackedMat::decode_rows`] restricted to the block-aligned column
+    /// window `[cb0, cb1)` — `dst` is row-major `count x (cb1 - cb0)`.
+    /// Lets the column-sliced shard GEMM decode only the blocks its head /
+    /// FFN band touches instead of whole weight rows. Identical per-element
+    /// semantics (each element depends only on its own block's bytes).
+    pub fn decode_rows_window(
+        &self,
+        k0: usize,
+        count: usize,
+        cb0: usize,
+        cb1: usize,
+        dst: &mut [f32],
+    ) {
         let n = self.cols;
-        if n == 0 || count == 0 {
+        let w = cb1 - cb0;
+        if w == 0 || count == 0 {
             return;
         }
         let b = self.packed.cfg.block_size;
+        debug_assert!(cb0 % b == 0 && cb1 % b == 0 && cb1 <= n, "window not block-aligned");
         let bpr = n / b;
         let lut = if self.packed.cfg.element.is_fp { fp4_pair_lut() } else { int4_pair_lut() };
         let scales = &self.packed.scales;
         let codes = &self.packed.codes;
-        for (r, row) in dst.chunks_exact_mut(n).take(count).enumerate() {
-            let bi0 = (k0 + r) * bpr;
+        for (r, row) in dst.chunks_exact_mut(w).take(count).enumerate() {
+            let bi0 = (k0 + r) * bpr + cb0 / b;
             for (j, chunk) in row.chunks_exact_mut(b).enumerate() {
                 let bi = bi0 + j;
                 let s = exp2i(scales[bi] as i32 - 127);
@@ -170,17 +188,127 @@ pub fn packed_matmul(a: &Mat, w: &PackedMat) -> Mat {
     out
 }
 
+/// The `[c0, c1)` output-column slice of `x @ w` with `w` kept packed.
+///
+/// Decodes only the block-aligned window of each 4-row k-panel that covers
+/// `[c0, c1)` and replays the dense [`Mat::matmul_cols`] kernel over the
+/// slice, so the result is bit-identical to the same columns of
+/// [`packed_matmul`] — and hence to `x.matmul(&w.unpack())` sliced. Serial
+/// on purpose: shard workers own disjoint column ranges.
+pub fn packed_matmul_cols(a: &Mat, w: &PackedMat, c0: usize, c1: usize) -> Mat {
+    assert_eq!(a.cols, w.rows, "packed_matmul_cols shape mismatch");
+    assert!(c0 <= c1 && c1 <= w.cols, "column slice out of range");
+    let (m, kd, nc) = (a.rows, a.cols, c1 - c0);
+    let mut out = Mat::zeros(m, nc);
+    if m == 0 || nc == 0 {
+        return out;
+    }
+    let b = w.config().block_size;
+    let cb0 = c0 / b * b;
+    let cb1 = (c1 + b - 1) / b * b;
+    let pw = cb1 - cb0;
+    let (o0, o1) = (c0 - cb0, c0 - cb0 + nc);
+    let mut panel = vec![0.0f32; 4 * pw];
+    let mut k = 0;
+    while k + 4 <= kd {
+        w.decode_rows_window(k, 4, cb0, cb1, &mut panel);
+        let (p0, rest) = panel.split_at(pw);
+        let (p1, rest) = rest.split_at(pw);
+        let (p2, p3) = rest.split_at(pw);
+        let (b0, b1, b2, b3) = (&p0[o0..o1], &p1[o0..o1], &p2[o0..o1], &p3[o0..o1]);
+        for i in 0..m {
+            let arow = &a.data[i * kd..(i + 1) * kd];
+            let (a0, a1, a2, a3) = (arow[k], arow[k + 1], arow[k + 2], arow[k + 3]);
+            let orow = &mut out.data[i * nc..(i + 1) * nc];
+            for j in 0..nc {
+                orow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+            }
+        }
+        k += 4;
+    }
+    while k < kd {
+        w.decode_rows_window(k, 1, cb0, cb1, &mut panel[..pw]);
+        let brow = &panel[o0..o1];
+        for i in 0..m {
+            let av = a.data[i * kd + k];
+            let orow = &mut out.data[i * nc..(i + 1) * nc];
+            for (o, bv) in orow.iter_mut().zip(brow.iter()) {
+                *o += av * bv;
+            }
+        }
+        k += 1;
+    }
+    out
+}
+
+/// The row-band partial `a_seg @ w[r0..r1, :]` with `w` kept packed —
+/// the packed twin of [`Mat::matmul_band`], decoding 4-row k-panels at
+/// `r0 + k` and replaying the same kernel so packed-sharded equals
+/// dense-sharded bit for bit.
+pub fn packed_matmul_band(a_seg: &Mat, w: &PackedMat, r0: usize, r1: usize) -> Mat {
+    assert!(r0 <= r1 && r1 <= w.rows, "row band out of range");
+    assert_eq!(a_seg.cols, r1 - r0, "packed_matmul_band shape mismatch");
+    let (m, kd, n) = (a_seg.rows, r1 - r0, w.cols);
+    let mut out = Mat::zeros(m, n);
+    if m == 0 || n == 0 {
+        return out;
+    }
+    let mut panel = vec![0.0f32; 4 * n];
+    let mut k = 0;
+    while k + 4 <= kd {
+        w.decode_rows(r0 + k, 4, &mut panel);
+        let (b0, rest) = panel.split_at(n);
+        let (b1, rest) = rest.split_at(n);
+        let (b2, b3) = rest.split_at(n);
+        for i in 0..m {
+            let arow = &a_seg.data[i * kd..(i + 1) * kd];
+            let (a0, a1, a2, a3) = (arow[k], arow[k + 1], arow[k + 2], arow[k + 3]);
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+            }
+        }
+        k += 4;
+    }
+    while k < kd {
+        w.decode_rows(r0 + k, 1, &mut panel[..n]);
+        let brow = &panel[..n];
+        for i in 0..m {
+            let av = a_seg.data[i * kd + k];
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for (o, bv) in orow.iter_mut().zip(brow.iter()) {
+                *o += av * bv;
+            }
+        }
+        k += 1;
+    }
+    out
+}
+
 /// The shape a linear-layer weight can take in the native forward pass:
 /// dense f32 ([`Mat`]) or bit-packed MX ([`PackedMat`]). `model::linear`
 /// is generic over this, which is what lets `NativeWeights` keep weights
 /// packed from `.lxt` load all the way through the serving hot path.
-pub trait WeightMatrix: Clone + std::fmt::Debug {
+/// `Send + Sync` because the sharded forward pass hands `&LayerWeights<W>`
+/// to fork-join shard workers (`util::par::run_workers`).
+pub trait WeightMatrix: Clone + std::fmt::Debug + Send + Sync {
     /// Input (K) dimension — weight layout is `(in, out)`, `y = x W + b`.
     fn in_dim(&self) -> usize;
     /// Output (N) dimension.
     fn out_dim(&self) -> usize;
     /// `x @ W` for a row-major activation matrix `x`.
     fn matmul_pre(&self, x: &Mat) -> Mat;
+    /// The `[c0, c1)` output-column slice of `x @ W` — bit-identical to
+    /// slicing [`WeightMatrix::matmul_pre`]'s result (same per-element
+    /// k-order; output columns never interact). Shard workers use this to
+    /// own disjoint head / FFN column ranges.
+    fn matmul_cols(&self, x: &Mat, c0: usize, c1: usize) -> Mat;
+    /// The row-band partial `x_seg @ W[r0..r1, :]` (`x_seg` = the matching
+    /// `[r0, r1)` column slice of the activation). Summing a fixed band
+    /// partition in ascending order is the sharded row-split reduction;
+    /// within a band the k-order replays the dense kernel, so dense and
+    /// packed storage produce bit-identical partials from the same bytes.
+    fn matmul_band(&self, x_seg: &Mat, r0: usize, r1: usize) -> Mat;
     /// Resident bytes of the weight storage itself.
     fn weight_bytes(&self) -> usize;
 }
@@ -196,6 +324,14 @@ impl WeightMatrix for Mat {
 
     fn matmul_pre(&self, x: &Mat) -> Mat {
         x.matmul(self)
+    }
+
+    fn matmul_cols(&self, x: &Mat, c0: usize, c1: usize) -> Mat {
+        Mat::matmul_cols(self, x, c0, c1)
+    }
+
+    fn matmul_band(&self, x_seg: &Mat, r0: usize, r1: usize) -> Mat {
+        Mat::matmul_band(self, x_seg, r0, r1)
     }
 
     fn weight_bytes(&self) -> usize {
@@ -214,6 +350,14 @@ impl WeightMatrix for PackedMat {
 
     fn matmul_pre(&self, x: &Mat) -> Mat {
         packed_matmul(x, self)
+    }
+
+    fn matmul_cols(&self, x: &Mat, c0: usize, c1: usize) -> Mat {
+        packed_matmul_cols(x, self, c0, c1)
+    }
+
+    fn matmul_band(&self, x_seg: &Mat, r0: usize, r1: usize) -> Mat {
+        packed_matmul_band(x_seg, self, r0, r1)
     }
 
     fn weight_bytes(&self) -> usize {
@@ -259,6 +403,53 @@ mod tests {
             for (i, (x, y)) in fused.data.iter().zip(&dense.data).enumerate() {
                 assert_eq!(x.to_bits(), y.to_bits(), "m={m} kd={kd} n={n} idx {i}");
             }
+        }
+    }
+
+    #[test]
+    fn packed_cols_and_band_match_dense_on_unpacked_bitwise() {
+        let cfg = MxConfig::from_name("mxfp4", Some(32)).unwrap();
+        // kd = 37 exercises the 4-wide remainder; slices include
+        // non-block-aligned column windows (decode window over-covers)
+        let a = rand_mat(5, 37, 41);
+        let w = rand_mat(37, 96, 42);
+        let p = PackedMat::pack(&w, cfg).unwrap();
+        let u = p.unpack();
+        for (c0, c1) in [(0usize, 96usize), (32, 64), (40, 72), (7, 11)] {
+            let fused = packed_matmul_cols(&a, &p, c0, c1);
+            let dense = u.matmul_cols(&a, c0, c1);
+            for (i, (x, y)) in fused.data.iter().zip(&dense.data).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "cols [{c0},{c1}) idx {i}");
+            }
+        }
+        let wb = rand_mat(96, 64, 43);
+        let pb = PackedMat::pack(&wb, cfg).unwrap();
+        let ub = pb.unpack();
+        for (r0, r1) in [(0usize, 96usize), (48, 96), (13, 50)] {
+            let mut seg = Vec::new();
+            for i in 0..5 {
+                seg.extend_from_slice(&rand_mat(5, 96, 44).data[i * 96 + r0..i * 96 + r1]);
+            }
+            let a_seg = Mat::from_vec(5, r1 - r0, seg);
+            let fused = packed_matmul_band(&a_seg, &pb, r0, r1);
+            let dense = ub.matmul_band(&a_seg, r0, r1);
+            for (i, (x, y)) in fused.data.iter().zip(&dense.data).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "band [{r0},{r1}) idx {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn decode_window_matches_full_rows() {
+        let cfg = MxConfig::from_name("mxint4", Some(16)).unwrap();
+        let w = rand_mat(9, 64, 45);
+        let p = PackedMat::pack(&w, cfg).unwrap();
+        let mut full = vec![0.0f32; 3 * 64];
+        p.decode_rows(4, 3, &mut full);
+        let mut win = vec![0.0f32; 3 * 32];
+        p.decode_rows_window(4, 3, 16, 48, &mut win);
+        for r in 0..3 {
+            assert_eq!(&win[r * 32..(r + 1) * 32], &full[r * 64 + 16..r * 64 + 48]);
         }
     }
 

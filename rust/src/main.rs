@@ -5,7 +5,7 @@
 //!   eval   --weights TAG --quant TAG [--ppl-only] [--backend B]
 //!   serve  --weights TAG --quant TAG [--requests N] [--slots N] [--max-new N] [--backend B]
 //!          [--open-loop] [--arrival-rate R] [--deadline-ms MS] [--queue-depth N]
-//!          [--seed N] [--synthetic] [--packed-weights]
+//!          [--seed N] [--synthetic] [--packed-weights] [--workers N]
 //!          [--kv-bits 32|8|4] [--kv-block N] [--shared-prefix N]
 //!   learn  [--steps N] [--lr F] [--block N] [--bits N] [--features model|outlier|dirac]
 //!          [--sites residual,t2,ffn] [--heads 0,1] [--save-spec PATH]
@@ -31,7 +31,7 @@ use anyhow::{Context, Result};
 use latmix::cli::Args;
 use latmix::data::{load_ppl_corpus, load_tasks};
 use latmix::eval::{perplexity, zero_shot};
-use latmix::model::{ModelDesc, NativeDims, NativeWeights, WeightSet};
+use latmix::model::{ModelDesc, NativeDims, NativeWeights, ShardPlan, WeightSet};
 use latmix::mx::{MxConfig, pack::PackedMx};
 use latmix::runtime::{Backend, NativeBackend};
 #[cfg(feature = "backend-xla")]
@@ -62,7 +62,7 @@ fn main() -> Result<()> {
                  eval   --weights TAG --quant TAG [--ppl-only] [--backend xla|native]\n\
                  serve  --weights TAG --quant TAG [--requests N] [--slots N] [--max-new N] [--backend xla|native]\n\
                  \x20       [--open-loop] [--arrival-rate R] [--deadline-ms MS] [--queue-depth N]\n\
-                 \x20       [--seed N] [--synthetic] [--packed-weights]\n\
+                 \x20       [--seed N] [--synthetic] [--packed-weights] [--workers N]\n\
                  \x20       [--kv-bits 32|8|4] [--kv-block N] [--shared-prefix N]\n\
                  learn  [--steps N] [--lr F] [--block N] [--bits 4|6|8] [--format FMT]\n\
                  \x20       [--features model|outlier|dirac] [--layer N] [--d N] [--rows N]\n\
@@ -154,6 +154,16 @@ fn eval_on<B: Backend>(rt: &B, args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse `--workers` (tensor-parallel shard worker count; native-only).
+/// `None` keeps the original single-worker forward. Plan validation
+/// (0 workers, workers > n_heads) happens against the model dims when the
+/// executor is built.
+fn shard_workers(args: &Args) -> Result<Option<usize>> {
+    args.opt("workers")
+        .map(|w| w.parse::<usize>().with_context(|| format!("bad --workers {w:?}")))
+        .transpose()
+}
+
 /// Parse `--kv-bits` / `--kv-block` into the paged-KV storage spec.
 fn kv_spec(args: &Args) -> Result<KvSpec> {
     let mut kv = KvSpec::from_bits(args.opt_usize("kv-bits", 32))?;
@@ -188,8 +198,9 @@ fn serve(args: &Args) -> Result<()> {
     }
     let d = desc()?;
     let packed = args.flag("packed-weights");
+    let workers = shard_workers(args)?;
     let kv = kv_spec(args)?;
-    let opts = ServeOptions::default()
+    let mut opts = ServeOptions::default()
         .tags(args.opt("quant").unwrap_or("fp"), args.opt("weights").unwrap_or("fp16"))
         .requests(args.opt_usize("requests", 16))
         .max_new(args.opt_usize("max-new", 32))
@@ -197,17 +208,33 @@ fn serve(args: &Args) -> Result<()> {
         .seed(args.opt_usize("seed", 42) as u64)
         .residency(if packed { WeightResidency::Packed } else { WeightResidency::Dense })
         .kv(kv);
+    if let Some(w) = workers {
+        opts = opts.workers(w);
+    }
     let rep: ServeReport = match backend_name(args) {
         "native" => run_serving_native(&d, &opts)?,
         #[cfg(feature = "backend-xla")]
         "xla" => {
             anyhow::ensure!(!packed, "--packed-weights is native-only (use --backend native)");
+            anyhow::ensure!(
+                workers.is_none(),
+                "--workers is native-only (use --backend native)"
+            );
             let rt = Runtime::new(d)?;
             run_serving(&rt, &opts)?
         }
         other => return Err(unknown_backend(other)),
     };
     print_residency(&rep.core.residency, packed, &opts.kv);
+    if !rep.core.worker_requests.is_empty() {
+        let loads: Vec<String> =
+            rep.core.worker_requests.iter().map(|n| n.to_string()).collect();
+        println!(
+            "shard workers: {} (requests per worker: [{}])",
+            rep.core.worker_requests.len(),
+            loads.join(", ")
+        );
+    }
     if rep.is_empty() {
         println!(
             "serve: 0 requests completed (graph={} weights={}) — no latency percentiles \
@@ -262,10 +289,14 @@ fn serve_open(args: &Args) -> Result<()> {
     };
     anyhow::ensure!(cfg.arrival_rate > 0.0, "--arrival-rate must be > 0");
     let packed = args.flag("packed-weights");
-    let opts = ServeOptions::default()
+    let workers = shard_workers(args)?;
+    let mut opts = ServeOptions::default()
         .tags(args.opt("quant").unwrap_or("fp"), args.opt("weights").unwrap_or("fp16"))
         .residency(if packed { WeightResidency::Packed } else { WeightResidency::Dense })
         .kv(kv_spec(args)?);
+    if let Some(w) = workers {
+        opts = opts.workers(w);
+    }
     let rep: ServingReport = if args.flag("synthetic") {
         use latmix::coordinator::engine::NativeExecutor;
         let mut exec = NativeExecutor::synthetic(
@@ -276,6 +307,9 @@ fn serve_open(args: &Args) -> Result<()> {
         )?;
         if packed {
             exec = exec.into_packed()?;
+        }
+        if let Some(w) = workers {
+            exec = exec.with_workers(w)?;
         }
         let bytes = exec.resident_weight_bytes();
         let synth = opts.clone().tags(&opts.graph_tag, "synthetic");
@@ -289,6 +323,10 @@ fn serve_open(args: &Args) -> Result<()> {
             #[cfg(feature = "backend-xla")]
             "xla" => {
                 anyhow::ensure!(!packed, "--packed-weights is native-only (use --backend native)");
+                anyhow::ensure!(
+                    workers.is_none(),
+                    "--workers is native-only (use --backend native)"
+                );
                 let rt = Runtime::new(d)?;
                 run_open_loop(&rt, &opts, &cfg)?
             }
@@ -622,6 +660,10 @@ fn fold(args: &Args) -> Result<()> {
     out_desc.artifacts = out_dir.clone();
     out_desc.weight_order = order;
     out_desc.transform_folded = Some(spec.site_list());
+    // pin the tensor-parallel shard plan (additive version-2 keys) so
+    // `serve --workers N` slices this artifact identically on every host
+    out_desc.shard_attn = Some("head".to_string());
+    out_desc.shard_ffn_block = Some(ShardPlan::default_ffn_block(d.d_ff));
     out_desc.transform_online = if online.is_empty() {
         None
     } else {

@@ -43,7 +43,7 @@ use crate::linalg::{block_hadamard_apply, Mat, PackedMat, WeightMatrix};
 use crate::mx::{mx_qdq_rows, MxConfig};
 use crate::transform::spec::{TransformMode, TransformSpec};
 use crate::transform::Affine;
-use crate::util::Pcg64;
+use crate::util::{par, Pcg64};
 
 /// Optional spec-application argument of the `*_spec` entry points.
 pub type SpecRun<'a> = Option<(&'a TransformSpec, TransformMode)>;
@@ -98,6 +98,65 @@ impl NativeDims {
             kv_seq: 160,
             prefill_len: 32,
         }
+    }
+}
+
+/// Tensor-parallel shard plan: how the forward pass splits across
+/// `workers` fork-join shard workers ([`crate::util::par::run_workers`]).
+///
+/// The *partition* is fixed by the model, never by the worker count:
+/// attention has one unit per head (Q/K/V/O column/row slices, per-head
+/// T2, per-head KV plane slices), the FFN has one unit per
+/// `ffn_block`-wide `d_ff` band (gate/up column slices, `wd` row bands).
+/// Workers only take ownership of contiguous unit runs; per-unit results
+/// are assembled — and the two row-split reductions (`wo`, `wd`) summed —
+/// serially in ascending unit order. That makes logits, token streams,
+/// and scheduling fingerprints bit-identical for any worker count
+/// (`rust/tests/shard_parity.rs`). T1/residual/norm/QDQ full-row ops are
+/// replicated serially between the fork-join stages.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// Fork-join worker count. `1` runs the same segmented kernels
+    /// serially — the baseline of the 1-vs-N parity suite.
+    pub workers: usize,
+    /// Width of the fixed `d_ff` band partition (the `shard.ffn_block`
+    /// manifest key), persisted per artifact so every host slices a
+    /// folded weight set the same way.
+    pub ffn_block: usize,
+}
+
+impl ShardPlan {
+    /// Default band width: 8 bands, so every supported worker count
+    /// (`workers <= n_heads <= 8` on the tiny models) stays busy through
+    /// the FFN stages.
+    pub fn default_ffn_block(d_ff: usize) -> usize {
+        ((d_ff + 7) / 8).max(1)
+    }
+
+    /// Plan with the default band partition for these dimensions.
+    pub fn new(workers: usize, dims: &NativeDims) -> Result<ShardPlan> {
+        let plan = ShardPlan { workers, ffn_block: Self::default_ffn_block(dims.d_ff) };
+        plan.validate(dims)?;
+        Ok(plan)
+    }
+
+    pub fn validate(&self, dims: &NativeDims) -> Result<()> {
+        anyhow::ensure!(
+            self.workers >= 1,
+            "shard plan needs at least 1 worker (workers=0 is not a valid tensor-parallel split)"
+        );
+        anyhow::ensure!(
+            self.workers <= dims.n_heads,
+            "workers {} exceeds n_heads {}: attention shards along heads, extra workers would own no head",
+            self.workers,
+            dims.n_heads
+        );
+        anyhow::ensure!(self.ffn_block >= 1, "shard plan ffn_block must be >= 1");
+        Ok(())
+    }
+
+    fn ffn_bands(&self, d_ff: usize) -> usize {
+        (d_ff + self.ffn_block - 1) / self.ffn_block
     }
 }
 
@@ -895,6 +954,189 @@ impl<W: WeightMatrix> NativeWeights<W> {
         Ok((linear(&xf, &self.head, &self.bhead), new_rows))
     }
 
+    /// [`Self::forward_prefill_spec`] executed under a tensor-parallel
+    /// [`ShardPlan`]. Bit-identical for any worker count (the partition
+    /// is fixed per-head / per-band; see [`ShardPlan`]); differs from the
+    /// unsharded path only in the f32 association of the two row-split
+    /// reductions (`wo` summed per head, `wd` summed per `d_ff` band).
+    pub fn forward_prefill_shard_spec(
+        &self,
+        tokens: &[i32],
+        lens: &[i32],
+        batch: usize,
+        spec: &GraphSpec,
+        tf: SpecRun,
+        plan: &ShardPlan,
+    ) -> Result<(Vec<f32>, Vec<Vec<f32>>)> {
+        let dims = &self.dims;
+        let (t, d, s_max, v) = (dims.prefill_len, dims.d_model, dims.kv_seq, dims.vocab);
+        anyhow::ensure!(tokens.len() == batch * t, "tokens len != batch * prefill_len");
+        anyhow::ensure!(lens.len() == batch, "lens len != batch");
+        anyhow::ensure!(t <= s_max, "prefill_len {t} exceeds kv_seq {s_max}");
+        spec.validate(dims)?;
+        validate_spec_run(dims, tf)?;
+        plan.validate(dims)?;
+        let lens_u: Vec<usize> = lens.iter().map(|l| (*l).clamp(0, t as i32) as usize).collect();
+        let mut x = self.embed_rows(tokens);
+        if let Some(t1) = residual_of(tf) {
+            x = t1.forward_rows(&x);
+        }
+        let mut kv = Vec::with_capacity(self.layers.len() * 2);
+        for (li, lw) in self.layers.iter().enumerate() {
+            let (k_rows, v_rows) =
+                self.attn_block_shard(li, lw, &mut x, batch, t, &lens_u, spec, tf, plan);
+            self.ffn_shard(li, lw, &mut x, spec, tf, plan);
+            kv.push(export_plane(&k_rows, batch, t, s_max, d));
+            kv.push(export_plane(&v_rows, batch, t, s_max, d));
+        }
+        let mut xf = rmsnorm_rows(&x, d, &self.lnf);
+        if let Some(t1) = residual_of(tf) {
+            xf = t1.backward_rows(&xf);
+        }
+        let all = linear(&xf, &self.head, &self.bhead);
+        let mut logits = vec![0.0f32; batch * v];
+        for b in 0..batch {
+            let last = lens_u[b].max(1).min(t) - 1;
+            logits[b * v..(b + 1) * v]
+                .copy_from_slice(&all[(b * t + last) * v..(b * t + last + 1) * v]);
+        }
+        Ok((logits, kv))
+    }
+
+    /// [`Self::forward_decode_append_spec`] executed under a tensor-parallel
+    /// [`ShardPlan`]: each head unit computes its own fresh K/V row,
+    /// reads its own `hh*dh` slice of the cached planes, and runs its
+    /// attention; the `wo` / `wd` row-splits reduce in fixed unit order.
+    pub fn forward_decode_append_shard_spec(
+        &self,
+        tokens: &[i32],
+        pos: &[i32],
+        kv: &[Vec<f32>],
+        batch: usize,
+        spec: &GraphSpec,
+        tf: SpecRun,
+        plan: &ShardPlan,
+    ) -> Result<(Vec<f32>, Vec<Vec<f32>>)> {
+        let dims = &self.dims;
+        let (d, s_max, h) = (dims.d_model, dims.kv_seq, dims.n_heads);
+        let dh = dims.head_dim();
+        anyhow::ensure!(tokens.len() == batch && pos.len() == batch, "decode batch mismatch");
+        anyhow::ensure!(kv.len() == dims.n_layers * 2, "kv plane count mismatch");
+        for plane in kv {
+            anyhow::ensure!(plane.len() == batch * s_max * d, "kv plane size mismatch");
+        }
+        spec.validate(dims)?;
+        validate_spec_run(dims, tf)?;
+        plan.validate(dims)?;
+        let mut new_rows: Vec<Vec<f32>> = Vec::with_capacity(dims.n_layers * 2);
+        let mut x = self.embed_rows(tokens);
+        if let Some(t1) = residual_of(tf) {
+            x = t1.forward_rows(&x);
+        }
+        let scale = 1.0 / (dh as f32).sqrt();
+        for (li, lw) in self.layers.iter().enumerate() {
+            let kc = &kv[2 * li];
+            let vc = &kv[2 * li + 1];
+            let mut hq = rmsnorm_rows(&x, d, &lw.ln1);
+            qdq_rows(&mut hq, d, spec);
+            let hb = match residual_of(tf) {
+                Some(t1) => t1.backward_rows(&hq),
+                None => hq,
+            };
+            let hb = Mat::from_vec(batch, d, hb);
+            // stage 1 fork-join: each head owns its fresh K/V row and its
+            // dh-slice of the cached planes
+            let heads = run_units(plan.workers, h, |hh| {
+                let (c0, c1) = (hh * dh, (hh + 1) * dh);
+                let mut q = linear_cols(&hb, &lw.wq, &lw.bq, c0, c1);
+                let mut kn = linear_cols(&hb, &lw.wk, &lw.bk, c0, c1);
+                let mut vn = linear_cols(&hb, &lw.wv, &lw.bv, c0, c1);
+                head_seg_forward(&mut vn, dh, li, hh, tf);
+                apply_rope_rows(&mut q, 1, dh, pos);
+                apply_rope_rows(&mut kn, 1, dh, pos);
+                let mut o = vec![0.0f32; batch * dh];
+                let mut scores = vec![0.0f32; s_max];
+                for b in 0..batch {
+                    let p = pos[b];
+                    let qrow = &q[b * dh..(b + 1) * dh];
+                    let krow = &kn[b * dh..(b + 1) * dh];
+                    for (s, sc) in scores.iter_mut().enumerate() {
+                        *sc = if (s as i32) < p {
+                            let at = b * s_max * d + s * d + c0;
+                            dot(qrow, &kc[at..at + dh]) * scale
+                        } else if s as i32 == p {
+                            dot(qrow, krow) * scale
+                        } else {
+                            -1e9
+                        };
+                    }
+                    softmax_inplace(&mut scores);
+                    let orow = &mut o[b * dh..(b + 1) * dh];
+                    for (s, w) in scores.iter().enumerate() {
+                        if s as i32 == p {
+                            axpy(orow, *w, &vn[b * dh..(b + 1) * dh]);
+                        } else {
+                            let at = b * s_max * d + s * d + c0;
+                            axpy(orow, *w, &vc[at..at + dh]);
+                        }
+                    }
+                }
+                (kn, vn, o)
+            });
+            // fixed-order assembly into (batch, d) row buffers
+            let mut kn = vec![0.0f32; batch * d];
+            let mut vn = vec![0.0f32; batch * d];
+            let mut o = vec![0.0f32; batch * d];
+            for (hh, (kh, vh, oh)) in heads.iter().enumerate() {
+                scatter_cols(&mut kn, d, kh, hh * dh, dh);
+                scatter_cols(&mut vn, d, vh, hh * dh, dh);
+                scatter_cols(&mut o, d, oh, hh * dh, dh);
+            }
+            qdq_rows(&mut o, d, spec);
+            per_head_backward(&mut o, d, dh, li, tf);
+            let y = self.attn_out_shard(lw, &o, plan);
+            add_block_output(&mut x, &y, tf);
+            self.ffn_shard(li, lw, &mut x, spec, tf, plan);
+            new_rows.push(kn);
+            new_rows.push(vn);
+        }
+        let mut xf = rmsnorm_rows(&x, d, &self.lnf);
+        if let Some(t1) = residual_of(tf) {
+            xf = t1.backward_rows(&xf);
+        }
+        Ok((linear(&xf, &self.head, &self.bhead), new_rows))
+    }
+
+    /// [`Self::forward_decode_spec`] under a shard plan: runs the append
+    /// variant (bit-identical to full-plane decode by the argument on
+    /// [`Self::forward_decode_append_spec`]) and scatters the fresh rows
+    /// into copies of the input planes.
+    pub fn forward_decode_shard_spec(
+        &self,
+        tokens: &[i32],
+        pos: &[i32],
+        kv: &[Vec<f32>],
+        batch: usize,
+        spec: &GraphSpec,
+        tf: SpecRun,
+        plan: &ShardPlan,
+    ) -> Result<(Vec<f32>, Vec<Vec<f32>>)> {
+        let (logits, new_rows) =
+            self.forward_decode_append_shard_spec(tokens, pos, kv, batch, spec, tf, plan)?;
+        let (d, s_max) = (self.dims.d_model, self.dims.kv_seq);
+        let mut out_kv = kv.to_vec();
+        for (plane, rows) in out_kv.iter_mut().zip(&new_rows) {
+            for b in 0..batch {
+                let p = pos[b];
+                if p >= 0 && (p as usize) < s_max {
+                    let at = b * s_max * d + (p as usize) * d;
+                    plane[at..at + d].copy_from_slice(&rows[b * d..(b + 1) * d]);
+                }
+            }
+        }
+        Ok((logits, out_kv))
+    }
+
     // -- internals ----------------------------------------------------------
 
     fn embed_rows(&self, tokens: &[i32]) -> Vec<f32> {
@@ -1019,6 +1261,161 @@ impl<W: WeightMatrix> NativeWeights<W> {
         }
         ff
     }
+
+    // -- sharded internals --------------------------------------------------
+
+    /// [`Self::attn_block`] split over shard workers: one unit per head
+    /// (Q/K/V column slices, per-head T2 + RoPE + full-sequence attention),
+    /// then the `wo` row-split reduced in fixed head order. The norm / QDQ
+    /// / T1 / T2-backward full-row ops run serially between the stages,
+    /// exactly as in the unsharded path.
+    #[allow(clippy::too_many_arguments)]
+    fn attn_block_shard(
+        &self,
+        li: usize,
+        lw: &LayerWeights<W>,
+        x: &mut Vec<f32>,
+        batch: usize,
+        t: usize,
+        lens: &[usize],
+        spec: &GraphSpec,
+        tf: SpecRun,
+        plan: &ShardPlan,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let dims = &self.dims;
+        let (d, h) = (dims.d_model, dims.n_heads);
+        let dh = dims.head_dim();
+        let n = batch * t;
+        let mut hq = rmsnorm_rows(x, d, &lw.ln1);
+        qdq_rows(&mut hq, d, spec);
+        let hb = match residual_of(tf) {
+            Some(t1) => t1.backward_rows(&hq),
+            None => hq,
+        };
+        let hb = Mat::from_vec(n, d, hb);
+        let pos: Vec<i32> = (0..n).map(|i| (i % t) as i32).collect();
+        // stage 1 fork-join: per-head Q/K/V, T2, RoPE, attention
+        let heads = run_units(plan.workers, h, |hh| {
+            let (c0, c1) = (hh * dh, (hh + 1) * dh);
+            let mut q = linear_cols(&hb, &lw.wq, &lw.bq, c0, c1);
+            let mut k = linear_cols(&hb, &lw.wk, &lw.bk, c0, c1);
+            let mut v = linear_cols(&hb, &lw.wv, &lw.bv, c0, c1);
+            head_seg_forward(&mut v, dh, li, hh, tf);
+            apply_rope_rows(&mut q, 1, dh, &pos);
+            apply_rope_rows(&mut k, 1, dh, &pos);
+            let o = attention_full(&q, &k, &v, batch, t, lens, 1, dh);
+            (k, v, o)
+        });
+        let mut k_rows = vec![0.0f32; n * d];
+        let mut v_rows = vec![0.0f32; n * d];
+        let mut o = vec![0.0f32; n * d];
+        for (hh, (kh, vh, oh)) in heads.iter().enumerate() {
+            scatter_cols(&mut k_rows, d, kh, hh * dh, dh);
+            scatter_cols(&mut v_rows, d, vh, hh * dh, dh);
+            scatter_cols(&mut o, d, oh, hh * dh, dh);
+        }
+        qdq_rows(&mut o, d, spec);
+        per_head_backward(&mut o, d, dh, li, tf);
+        let y = self.attn_out_shard(lw, &o, plan);
+        add_block_output(x, &y, tf);
+        (k_rows, v_rows)
+    }
+
+    /// `o @ wo + bo` as a head-partitioned row-split: stage-2 fork-join
+    /// computes one `matmul_band` partial per head; the partials are
+    /// summed serially in ascending head order, then the bias is added.
+    /// One fixed sequence of f32 adds per output element, whatever the
+    /// worker count.
+    fn attn_out_shard(&self, lw: &LayerWeights<W>, o: &[f32], plan: &ShardPlan) -> Vec<f32> {
+        let (d, h) = (self.dims.d_model, self.dims.n_heads);
+        let dh = self.dims.head_dim();
+        let n = o.len() / d;
+        let partials = run_units(plan.workers, h, |hh| {
+            let seg = cols_of(o, d, hh * dh, (hh + 1) * dh);
+            lw.wo.matmul_band(&seg, hh * dh, (hh + 1) * dh).data
+        });
+        let mut y = vec![0.0f32; n * d];
+        for p in &partials {
+            add_in_place(&mut y, p);
+        }
+        for row in y.chunks_mut(d) {
+            for (ov, bb) in row.iter_mut().zip(&lw.bo) {
+                *ov += *bb;
+            }
+        }
+        y
+    }
+
+    /// [`Self::ffn`] split over shard workers: one unit per
+    /// `ffn_block`-wide `d_ff` band (gate/up column slices + SiLU + gate
+    /// multiply, then the `wd` row-band partials reduced in fixed band
+    /// order). The online T3 Hadamard, FfnDown transform, and QDQ are
+    /// full-row ops and run serially between the stages.
+    fn ffn_shard(
+        &self,
+        li: usize,
+        lw: &LayerWeights<W>,
+        x: &mut Vec<f32>,
+        spec: &GraphSpec,
+        tf: SpecRun,
+        plan: &ShardPlan,
+    ) {
+        let (d, f) = (self.dims.d_model, self.dims.d_ff);
+        let n = x.len() / d;
+        let mut hq = rmsnorm_rows(x, d, &lw.ln2);
+        qdq_rows(&mut hq, d, spec);
+        let hb = match residual_of(tf) {
+            Some(t1) => t1.backward_rows(&hq),
+            None => hq,
+        };
+        let hb = Mat::from_vec(n, d, hb);
+        let fb = plan.ffn_block;
+        let n_bands = plan.ffn_bands(f);
+        let band = |u: usize| (u * fb, ((u + 1) * fb).min(f));
+        // stage 1 fork-join: gate/up/SiLU per band
+        let bands = run_units(plan.workers, n_bands, |u| {
+            let (c0, c1) = band(u);
+            let mut g = linear_cols(&hb, &lw.wg, &lw.bg, c0, c1);
+            silu_in_place(&mut g);
+            let up = linear_cols(&hb, &lw.wu, &lw.bu, c0, c1);
+            for (gv, uv) in g.iter_mut().zip(&up) {
+                *gv *= *uv;
+            }
+            g
+        });
+        let mut ff = vec![0.0f32; n * f];
+        for (u, bvals) in bands.iter().enumerate() {
+            let (c0, c1) = band(u);
+            scatter_cols(&mut ff, f, bvals, c0, c1 - c0);
+        }
+        if let Some(tb) = spec.t3 {
+            block_hadamard_apply(&mut ff, tb);
+        }
+        let tfd = tf.and_then(|(s, _)| s.ffn_down(li));
+        if let Some(tfd) = tfd {
+            ff = tfd.forward_rows(&ff);
+        }
+        qdq_rows(&mut ff, f, spec);
+        if let (Some(tfd), Some((_, TransformMode::Unfolded))) = (tfd, tf) {
+            ff = tfd.backward_rows(&ff);
+        }
+        // stage 2 fork-join: wd row bands, fixed ascending-band reduction
+        let partials = run_units(plan.workers, n_bands, |u| {
+            let (r0, r1) = band(u);
+            let seg = cols_of(&ff, f, r0, r1);
+            lw.wd.matmul_band(&seg, r0, r1).data
+        });
+        let mut y = vec![0.0f32; n * d];
+        for p in &partials {
+            add_in_place(&mut y, p);
+        }
+        for row in y.chunks_mut(d) {
+            for (ov, bb) in row.iter_mut().zip(&lw.bd) {
+                *ov += *bb;
+            }
+        }
+        add_block_output(x, &y, tf);
+    }
 }
 
 // -- free helpers -----------------------------------------------------------
@@ -1100,6 +1497,73 @@ fn per_head_forward(rows: &mut [f32], d: usize, dh: usize, layer: usize, tf: Spe
             let seg = t2.a.apply_affine(&row[c0..c1], Some(&t2.v));
             row[c0..c1].copy_from_slice(&seg);
         }
+    }
+}
+
+/// Fan `n_units` fixed work units out over `workers` fork-join shard
+/// workers and return the per-unit results in unit order. Ownership
+/// mirrors `par::for_each_chunk`'s partition — worker `w` owns the
+/// contiguous run `[w*per, (w+1)*per)`, `per = ceil(n_units / workers)` —
+/// so a result depends only on its unit index, never on which worker
+/// computed it or how many workers there were.
+fn run_units<R: Send>(workers: usize, n_units: usize, f: impl Fn(usize) -> R + Sync) -> Vec<R> {
+    let workers = workers.clamp(1, n_units.max(1));
+    let per = (n_units + workers - 1) / workers;
+    let chunks = par::run_workers(workers, |w| {
+        let lo = (w * per).min(n_units);
+        let hi = ((w + 1) * per).min(n_units);
+        (lo..hi).map(&f).collect::<Vec<R>>()
+    });
+    let mut units = Vec::with_capacity(n_units);
+    for c in chunks {
+        units.extend(c);
+    }
+    units
+}
+
+/// Copy the `[c0, c1)` column slice of flat `(n, d)` rows into its own
+/// `(n, c1-c0)` matrix — the input shape `matmul_band` wants.
+fn cols_of(rows: &[f32], d: usize, c0: usize, c1: usize) -> Mat {
+    let n = rows.len() / d;
+    let w = c1 - c0;
+    let mut out = Mat::zeros(n, w);
+    for i in 0..n {
+        out.data[i * w..(i + 1) * w].copy_from_slice(&rows[i * d + c0..i * d + c1]);
+    }
+    out
+}
+
+/// Scatter `(n, w)` unit rows into columns `[c0, c0+w)` of flat `(n, d)`
+/// rows — the fixed-order assembly step after a fork-join stage.
+fn scatter_cols(dst: &mut [f32], d: usize, src: &[f32], c0: usize, w: usize) {
+    for (i, srow) in src.chunks(w).enumerate() {
+        dst[i * d + c0..i * d + c0 + w].copy_from_slice(srow);
+    }
+}
+
+/// Columns `[c0, c1)` of `linear(x, w, b)`: column-sliced GEMM plus the
+/// matching bias slice. Bit-identical to slicing `linear`'s output —
+/// per-column work never crosses the slice boundary.
+fn linear_cols<W: WeightMatrix>(x: &Mat, w: &W, b: &[f32], c0: usize, c1: usize) -> Vec<f32> {
+    let nc = c1 - c0;
+    let mut out = w.matmul_cols(x, c0, c1).data;
+    for row in out.chunks_mut(nc) {
+        for (o, bb) in row.iter_mut().zip(&b[c0..c1]) {
+            *o += *bb;
+        }
+    }
+    out
+}
+
+/// [`per_head_forward`] for a single head's own `(n, dh)` segment buffer —
+/// the shard-worker form. Applies the same `apply_affine` to the same
+/// slice values, so the transformed rows are bit-identical.
+fn head_seg_forward(rows: &mut [f32], dh: usize, layer: usize, head: usize, tf: SpecRun) {
+    let Some((spec, _)) = tf else { return };
+    let Some(t2) = spec.per_head(layer, head) else { return };
+    for row in rows.chunks_mut(dh) {
+        let seg = t2.a.apply_affine(row, Some(&t2.v));
+        row.copy_from_slice(&seg);
     }
 }
 
@@ -1585,5 +2049,149 @@ mod tests {
         assert!(krow.iter().any(|x| *x != 0.0));
         assert!(kv2[0][..5 * d].iter().all(|x| *x == 0.0));
         assert!(kv2[0][6 * d..].iter().all(|x| *x == 0.0));
+    }
+
+    #[test]
+    fn shard_plan_validation() {
+        let dims = tiny(); // n_heads = 2
+        assert!(ShardPlan::new(1, &dims).is_ok());
+        assert!(ShardPlan::new(2, &dims).is_ok());
+        let zero = ShardPlan::new(0, &dims).unwrap_err();
+        assert!(zero.to_string().contains("at least 1 worker"), "{zero}");
+        let over = ShardPlan::new(3, &dims).unwrap_err();
+        assert!(over.to_string().contains("exceeds n_heads"), "{over}");
+        assert_eq!(ShardPlan::default_ffn_block(384), 48);
+        assert_eq!(ShardPlan::default_ffn_block(3), 1);
+    }
+
+    #[test]
+    fn run_units_order_is_worker_count_invariant() {
+        for workers in [1usize, 2, 3, 4, 7] {
+            assert_eq!(run_units(workers, 7, |u| u * u), vec![0, 1, 4, 9, 16, 25, 36]);
+        }
+        assert_eq!(run_units(3, 0, |u| u), Vec::<usize>::new());
+    }
+
+    /// Greedy-decode `steps` tokens through the sharded prefill/decode
+    /// path and return (tokens, every logits vector bit-cast to u32).
+    fn shard_run(
+        w: &NativeWeights,
+        spec: &GraphSpec,
+        tf: SpecRun,
+        plan: &ShardPlan,
+        steps: usize,
+    ) -> (Vec<i32>, Vec<Vec<u32>>) {
+        let dims = &w.dims;
+        let t = dims.prefill_len;
+        let prompt = [1i32, 4, 9, 2];
+        let mut tokens = vec![0i32; t];
+        tokens[..prompt.len()].copy_from_slice(&prompt);
+        let (logits, mut kv) = w
+            .forward_prefill_shard_spec(&tokens, &[prompt.len() as i32], 1, spec, tf, plan)
+            .unwrap();
+        let mut bits = vec![logits.iter().map(|x| x.to_bits()).collect::<Vec<u32>>()];
+        let mut out = vec![argmax(&logits)];
+        let mut pos = prompt.len() as i32;
+        for _ in 0..steps {
+            let (lg, kv2) = w
+                .forward_decode_shard_spec(&[*out.last().unwrap()], &[pos], &kv, 1, spec, tf, plan)
+                .unwrap();
+            bits.push(lg.iter().map(|x| x.to_bits()).collect());
+            out.push(argmax(&lg));
+            kv = kv2;
+            pos += 1;
+        }
+        (out, bits)
+    }
+
+    #[test]
+    fn sharded_forward_bit_identical_across_worker_counts() {
+        // 1-vs-2 workers on tiny (n_heads = 2), fp and quantized+T3 specs
+        for (dims, tag) in [(tiny(), "fp"), (quantizable(), "mxfp4_b32_t3")] {
+            let w = NativeWeights::synthetic(dims, 77);
+            let spec = GraphSpec::from_tag(tag).unwrap();
+            let p1 = ShardPlan::new(1, &dims).unwrap();
+            let p2 = ShardPlan::new(2, &dims).unwrap();
+            let (t1, b1) = shard_run(&w, &spec, None, &p1, 4);
+            let (t2, b2) = shard_run(&w, &spec, None, &p2, 4);
+            assert_eq!(t1, t2, "{tag}: token streams differ across worker counts");
+            assert_eq!(b1, b2, "{tag}: logits bits differ across worker counts");
+        }
+    }
+
+    #[test]
+    fn sharded_ragged_head_count_bit_identical() {
+        // n_heads = 3 with workers = 2: worker 0 owns heads {0,1},
+        // worker 1 owns {2} — the ragged ownership split must not matter
+        let dims = NativeDims {
+            vocab: 32,
+            d_model: 24,
+            n_layers: 2,
+            n_heads: 3,
+            d_ff: 36,
+            kv_seq: 24,
+            prefill_len: 8,
+        };
+        let w = NativeWeights::synthetic(dims, 91);
+        let spec = GraphSpec::fp();
+        // ffn_block 5 over d_ff 36: 8 bands, last band ragged (width 1)
+        let mk = |workers| ShardPlan { workers, ffn_block: 5 };
+        let (t1, b1) = shard_run(&w, &spec, None, &mk(1), 4);
+        let (t2, b2) = shard_run(&w, &spec, None, &mk(2), 4);
+        let (t3, b3) = shard_run(&w, &spec, None, &mk(3), 4);
+        assert_eq!(t1, t2);
+        assert_eq!(t1, t3);
+        assert_eq!(b1, b2);
+        assert_eq!(b1, b3);
+    }
+
+    #[test]
+    fn sharded_tracks_unsharded_within_association_error() {
+        // the sharded path reassociates the two row-split reductions, so
+        // it is NOT bit-equal to the legacy path — but it must stay within
+        // f32 association error and produce the same greedy tokens here
+        let dims = tiny();
+        let w = NativeWeights::synthetic(dims, 55);
+        let spec = GraphSpec::fp();
+        let plan = ShardPlan::new(2, &dims).unwrap();
+        let t = dims.prefill_len;
+        let prompt = [1i32, 4, 9, 2];
+        let mut tokens = vec![0i32; t];
+        tokens[..prompt.len()].copy_from_slice(&prompt);
+        let (legacy, _) = w.forward_prefill(&tokens, &[prompt.len() as i32], 1, &spec).unwrap();
+        let (sharded, _) = w
+            .forward_prefill_shard_spec(&tokens, &[prompt.len() as i32], 1, &spec, None, &plan)
+            .unwrap();
+        let max = legacy
+            .iter()
+            .zip(&sharded)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max < 1e-3, "sharded drifted past association error: {max}");
+        assert_eq!(argmax(&legacy), argmax(&sharded));
+    }
+
+    #[test]
+    fn sharded_decode_append_matches_full_plane_bitwise() {
+        let dims = tiny();
+        let w = NativeWeights::synthetic(dims, 66);
+        let spec = GraphSpec::fp();
+        let plan = ShardPlan::new(2, &dims).unwrap();
+        let t = dims.prefill_len;
+        let toks: Vec<i32> = (0..t as i32).collect();
+        let (_, kv) = w
+            .forward_prefill_shard_spec(&toks, &[t as i32], 1, &spec, None, &plan)
+            .unwrap();
+        let (lg_full, kv_full) = w
+            .forward_decode_shard_spec(&[3], &[t as i32], &kv, 1, &spec, None, &plan)
+            .unwrap();
+        let (lg_app, rows) = w
+            .forward_decode_append_shard_spec(&[3], &[t as i32], &kv, 1, &spec, None, &plan)
+            .unwrap();
+        assert_eq!(lg_full, lg_app);
+        let d = dims.d_model;
+        for (plane, row) in kv_full.iter().zip(&rows) {
+            assert_eq!(&plane[t * d..(t + 1) * d], &row[..]);
+        }
     }
 }

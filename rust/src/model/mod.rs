@@ -9,7 +9,9 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
-pub use forward::{GraphSpec, LayerWeights, NativeDims, NativeWeights, PackedNativeWeights, SpecRun};
+pub use forward::{
+    GraphSpec, LayerWeights, NativeDims, NativeWeights, PackedNativeWeights, ShardPlan, SpecRun,
+};
 
 use std::collections::BTreeMap;
 
@@ -42,6 +44,15 @@ pub struct ModelDesc {
     /// with online sites are native-only: the AOT HLO graphs predate the
     /// fold, so the XLA lane refuses them.
     pub transform_online: Option<String>,
+    /// Attention shard axis of the tensor-parallel plan (`shard.attn`;
+    /// only `head` is defined). Additive version-2 key — absent on older
+    /// manifests, which serve on the single-worker path.
+    pub shard_attn: Option<String>,
+    /// Fixed d_ff band width of the FFN shard partition
+    /// (`shard.ffn_block`). Persisted so every host slices a folded
+    /// artifact identically; `latmix serve --workers N` feeds it into
+    /// [`forward::ShardPlan`].
+    pub shard_ffn_block: Option<usize>,
 }
 
 impl ModelDesc {
@@ -71,6 +82,11 @@ impl ModelDesc {
             version: m.version(),
             transform_folded: m.values.get("transform.folded").cloned(),
             transform_online: m.values.get("transform.online").cloned(),
+            shard_attn: m.values.get("shard.attn").cloned(),
+            shard_ffn_block: match m.values.get("shard.ffn_block") {
+                Some(_) => Some(m.int("shard.ffn_block")?),
+                None => None,
+            },
         })
     }
 
@@ -111,6 +127,12 @@ impl ModelDesc {
         }
         if let Some(online) = &self.transform_online {
             put("transform.online", online.clone());
+        }
+        if let Some(attn) = &self.shard_attn {
+            put("shard.attn", attn.clone());
+        }
+        if let Some(fb) = self.shard_ffn_block {
+            put("shard.ffn_block", fb.to_string());
         }
         let m = Manifest {
             values,

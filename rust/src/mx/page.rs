@@ -245,4 +245,90 @@ mod tests {
         decode_run(&cfg, &scales, &codes, &mut out);
         assert!(out.iter().all(|v| *v == 0.0));
     }
+
+    // -- golden vectors: the exact bytes a persisted MX page contains.
+    // The property tests above pin encode/decode to the reference
+    // *implementations*; these pin the byte *layout* itself, so a codec
+    // change that reshuffles stored pages (scale bias, code order, nibble
+    // packing) fails against frozen constants, not against itself.
+
+    #[test]
+    fn golden_mxfp8_block_bytes_frozen() {
+        let cfg = cfg8();
+        let vals = [0.0f32, 1.0, -2.0, 0.5, 4.0, -0.25, 3.0, 1.5];
+        let x: Vec<f32> = vals.iter().copied().cycle().take(32).collect();
+        let mut scales = vec![0u8; 1];
+        let mut codes = vec![0u8; 32];
+        encode_run(&x, &cfg, &mut scales, &mut codes);
+        // amax 4.0 -> e = floor_log2(4) - emax(8) = -6 -> E8M0 byte 121
+        assert_eq!(scales, [121]);
+        // scaled by 2^6: [0, 64, -128, 32, 256, -16, 192, 96] on the E4M3
+        // grid; codes are sign | biased-exp<<3 | mantissa
+        let pat: [u8; 8] = [0, 104, 240, 96, 120, 216, 116, 108];
+        let want: Vec<u8> = pat.iter().copied().cycle().take(32).collect();
+        assert_eq!(codes, want);
+        // every input sits exactly on the scaled grid -> lossless decode
+        let mut got = vec![0.0f32; 32];
+        decode_run(&cfg, &scales, &codes, &mut got);
+        for (g, w) in got.iter().zip(&x) {
+            assert_eq!(g.to_bits(), w.to_bits());
+        }
+    }
+
+    #[test]
+    fn golden_mxfp4_block_bytes_frozen() {
+        let cfg = cfg4();
+        // block 1: amax 6.0 -> e = floor_log2(6) - emax(2) = 0 -> byte 127,
+        // every element already on the E2M1 grid
+        let b1 = [1.0f32, -2.0, 0.5, 6.0, -1.5, 3.0, 0.0, 4.0];
+        // block 2: amax 12.0 -> e = 1 -> byte 128; scaled halves land on
+        // the grid except 2.5 -> 1.25, which round-ties-even snaps to 1.0
+        let b2 = [12.0f32, -8.0, 2.0, 0.0, 3.0, -1.0, 6.0, 2.5];
+        let mut x: Vec<f32> = b1.iter().copied().cycle().take(32).collect();
+        x.extend(b2.iter().copied().cycle().take(32));
+        let mut scales = vec![0u8; 2];
+        let mut codes = vec![0u8; 32];
+        encode_run(&x, &cfg, &mut scales, &mut codes);
+        assert_eq!(scales, [127, 128]);
+        // nibble codes sign<<3 | grid-index, packed low nibble first
+        let p1: [u8; 4] = [194, 113, 91, 96];
+        let p2: [u8; 4] = [231, 2, 147, 37];
+        let mut want: Vec<u8> = p1.iter().copied().cycle().take(16).collect();
+        want.extend(p2.iter().copied().cycle().take(16));
+        assert_eq!(codes, want);
+        let mut got = vec![0.0f32; 64];
+        decode_run(&cfg, &scales, &codes, &mut got);
+        let d2 = [12.0f32, -8.0, 2.0, 0.0, 3.0, -1.0, 6.0, 2.0];
+        let mut dec: Vec<f32> = b1.iter().copied().cycle().take(32).collect();
+        dec.extend(d2.iter().copied().cycle().take(32));
+        for (i, (g, w)) in got.iter().zip(&dec).enumerate() {
+            assert_eq!(g.to_bits(), w.to_bits(), "elem {i}: {g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn golden_mxfp8_degenerate_scales_frozen() {
+        let cfg = cfg8();
+        // all-zero block: amax == 0 pins e = 0 (byte 127) and code 0
+        let x = vec![0.0f32; 32];
+        let mut scales = vec![0u8; 1];
+        let mut codes = vec![0u8; 32];
+        encode_run(&x, &cfg, &mut scales, &mut codes);
+        assert_eq!(scales, [127]);
+        assert!(codes.iter().all(|c| *c == 0));
+        let mut got = vec![1.0f32; 32];
+        decode_run(&cfg, &scales, &codes, &mut got);
+        assert!(got.iter().all(|v| v.to_bits() == 0), "+0.0 exactly");
+        // subnormal-amax block: e clamps to the E8M0 bottom code (byte 0),
+        // whose scale is exactly 0.0 -> the encoder's division path sends
+        // every element to +-inf, saturating on the E4M3 grid at +-448
+        // (codes 126 / 254); decode multiplies by 0.0 back to zeros
+        let x: Vec<f32> = [1e-40f32, -1e-40].iter().copied().cycle().take(32).collect();
+        encode_run(&x, &cfg, &mut scales, &mut codes);
+        assert_eq!(scales, [0]);
+        let want: Vec<u8> = [126u8, 254].iter().copied().cycle().take(32).collect();
+        assert_eq!(codes, want);
+        decode_run(&cfg, &scales, &codes, &mut got);
+        assert!(got.iter().all(|v| *v == 0.0));
+    }
 }

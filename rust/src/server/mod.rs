@@ -35,7 +35,8 @@ use crate::coordinator::{Engine, EngineConfig, GenRequest, GenResult, KvSpec};
 use crate::data::{
     default_payload_classes, open_loop_workload_shared, serving_workload,
 };
-use crate::model::{ModelDesc, WeightSet};
+use crate::coordinator::Router;
+use crate::model::{ModelDesc, NativeDims, ShardPlan, WeightSet};
 #[cfg(feature = "backend-xla")]
 use crate::runtime::Runtime;
 
@@ -76,6 +77,11 @@ pub struct ServeOptions {
     pub residency: WeightResidency,
     /// Paged-KV storage: format (f32 / MXFP8 / MXFP4) + tokens per page.
     pub kv: KvSpec,
+    /// Tensor-parallel shard workers (`--workers N`). `None` serves the
+    /// original single-worker forward; `Some(n)` slices attention along
+    /// heads and the FFN along manifest-pinned `d_ff` bands, with output
+    /// bit-identical for any worker count.
+    pub workers: Option<usize>,
 }
 
 impl Default for ServeOptions {
@@ -89,6 +95,7 @@ impl Default for ServeOptions {
             seed: 42,
             residency: WeightResidency::Dense,
             kv: KvSpec::default(),
+            workers: None,
         }
     }
 }
@@ -130,14 +137,34 @@ impl ServeOptions {
         self
     }
 
+    pub fn workers(mut self, n: usize) -> Self {
+        self.workers = Some(n);
+        self
+    }
+
     /// Load this option set's weights and build the native executor
-    /// (packing them when [`WeightResidency::Packed`]).
+    /// (packing them when [`WeightResidency::Packed`], sharding when
+    /// `--workers` is set — honoring the manifest's `shard.ffn_block`
+    /// band width so every host slices the artifact identically).
     fn build_native(&self, desc: &ModelDesc) -> Result<NativeExecutor> {
         let ws = WeightSet::load(desc, &self.weights_tag)?;
         let exec = NativeExecutor::new(desc, &self.graph_tag, &ws)?;
-        match self.residency {
-            WeightResidency::Dense => Ok(exec),
-            WeightResidency::Packed => exec.into_packed(),
+        let exec = match self.residency {
+            WeightResidency::Dense => exec,
+            WeightResidency::Packed => exec.into_packed()?,
+        };
+        match self.workers {
+            None => Ok(exec),
+            Some(w) => {
+                let dims = NativeDims::from_desc(desc);
+                let plan = match desc.shard_ffn_block {
+                    Some(fb) => ShardPlan { workers: w, ffn_block: fb },
+                    None => {
+                        ShardPlan { workers: w, ffn_block: ShardPlan::default_ffn_block(dims.d_ff) }
+                    }
+                };
+                exec.with_shard_plan(plan)
+            }
         }
     }
 }
@@ -148,6 +175,13 @@ impl ServeOptions {
 /// `backend` and weight bytes are filled by the runner wrappers.
 pub fn serve_with_executor<E: StepExecutor>(exec: E, opts: &ServeOptions) -> Result<ServeReport> {
     let max_prompt = exec.prefill_len();
+    // Least-loaded worker assignment: with `--workers N` every request is
+    // tagged with an owning shard worker. The single tensor-parallel
+    // engine still executes every lane — assignment is ownership
+    // bookkeeping for the report, not a scheduling input, so admission
+    // order (and with it `sched_fingerprint`) is identical for any
+    // worker count.
+    let mut router = Router::new(opts.workers.unwrap_or(1).max(1));
     let mut engine = Engine::new(
         exec,
         EngineConfig { max_slots: opts.max_slots, eos: -1, kv: opts.kv, ..Default::default() },
@@ -157,13 +191,21 @@ pub fn serve_with_executor<E: StepExecutor>(exec: E, opts: &ServeOptions) -> Res
             .into_iter()
             .enumerate()
     {
+        router.assign(i as u64);
         engine.submit(GenRequest::new(i as u64, prompt, m));
     }
+    let assigned = router.loads().to_vec();
     let results = engine.run_to_completion()?;
+    for r in &results {
+        router.mark_done(r.id);
+    }
     let mut rep =
         ServeReport::from_results(&opts.graph_tag, &opts.weights_tag, &results, &engine.stats);
     rep.core.residency.kv_bytes = engine.kv_resident_bytes();
     rep.core.residency.kv_pages_shared = engine.kv_pages_shared();
+    if opts.workers.is_some() {
+        rep.core.worker_requests = assigned;
+    }
     Ok(rep)
 }
 
@@ -303,6 +345,7 @@ pub fn serve_open_loop<E: StepExecutor>(
                 kv_bytes: engine.kv_resident_bytes(),
                 kv_pages_shared: engine.kv_pages_shared(),
             },
+            worker_requests: Vec::new(),
         },
         arrival_rate: cfg.arrival_rate,
         queue_depth: cfg.queue_depth,
@@ -395,7 +438,8 @@ mod tests {
             .slots(4)
             .seed(9)
             .residency(WeightResidency::Packed)
-            .kv(KvSpec::from_bits(8).unwrap());
+            .kv(KvSpec::from_bits(8).unwrap())
+            .workers(2);
         assert_eq!(opts.graph_tag, "mxfp4_latmix");
         assert_eq!(opts.weights_tag, "mxfp4_latmix");
         assert_eq!(opts.n_requests, 64);
@@ -404,6 +448,18 @@ mod tests {
         assert_eq!(opts.seed, 9);
         assert_eq!(opts.residency, WeightResidency::Packed);
         assert!(matches!(opts.kv.format, KvFormat::Mxfp8));
+        assert_eq!(opts.workers, Some(2));
+        assert_eq!(ServeOptions::default().workers, None, "legacy path by default");
+    }
+
+    #[test]
+    fn closed_loop_worker_assignment_balances() {
+        let opts = ServeOptions::default().tags("fp", "mock").requests(9).workers(3);
+        let rep = serve_with_executor(MockExecutor::default(), &opts).unwrap();
+        assert_eq!(rep.core.worker_requests, vec![3, 3, 3], "least-loaded spread");
+        let legacy = ServeOptions::default().tags("fp", "mock").requests(9);
+        let rep = serve_with_executor(MockExecutor::default(), &legacy).unwrap();
+        assert!(rep.core.worker_requests.is_empty(), "no worker tags without --workers");
     }
 
     #[test]

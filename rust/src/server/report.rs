@@ -51,6 +51,9 @@ pub struct ReportCore {
     pub wall_s: f64,
     pub decode_tok_per_s: f64,
     pub residency: Residency,
+    /// Requests assigned per shard worker by the router's least-loaded
+    /// policy (`--workers N`). Empty on the single-worker legacy path.
+    pub worker_requests: Vec<usize>,
 }
 
 /// Aggregated serving metrics for one closed-loop run. Percentiles are
@@ -83,6 +86,7 @@ impl ServeReport {
             wall_s: stats.wall_s,
             decode_tok_per_s: stats.decode_tok_per_s(),
             residency: Residency::default(),
+            worker_requests: Vec::new(),
         };
         if completed.is_empty() {
             // Explicit zero-request report: percentiles over an empty

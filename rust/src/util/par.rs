@@ -49,6 +49,28 @@ fn ceil_div(a: usize, b: usize) -> usize {
     (a + b - 1) / b
 }
 
+/// Fork-join stage for the tensor-parallel shard workers: run
+/// `f(worker_index)` on `n` scoped threads and return the results in
+/// worker order. `n == 1` runs inline on the caller — the single-worker
+/// shard path stays an ordinary serial call, which is what makes 1-vs-N
+/// bit-parity checkable (`rust/tests/shard_parity.rs`). Unlike
+/// [`for_each_chunk`] this ignores [`num_threads`]: the caller's shard
+/// plan *is* the worker count.
+pub fn run_workers<R: Send>(n: usize, f: impl Fn(usize) -> R + Sync) -> Vec<R> {
+    let n = n.max(1);
+    if n == 1 {
+        return vec![f(0)];
+    }
+    let f = &f;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..n).map(|w| s.spawn(move || f(w))).collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("shard worker panicked"))
+            .collect()
+    })
+}
+
 /// Apply `f(chunk_index, chunk)` to consecutive `chunk_len`-sized chunks of
 /// `data` (the last chunk may be shorter), fanned out over scoped worker
 /// threads. Workers own contiguous runs of chunks, so side effects equal
@@ -171,6 +193,14 @@ mod tests {
             });
         });
         assert_eq!(one, vec![2, 2, 2]);
+    }
+
+    #[test]
+    fn run_workers_ordered_results() {
+        // results come back in worker order, for 1 and N workers alike
+        assert_eq!(run_workers(1, |w| w * 10), vec![0]);
+        assert_eq!(run_workers(4, |w| w * 10), vec![0, 10, 20, 30]);
+        assert_eq!(run_workers(0, |w| w), vec![0], "clamped to 1");
     }
 
     #[test]

@@ -1,0 +1,250 @@
+//! The 1-vs-N tensor-parallel bit-parity suite for the sharded
+//! `NativeExecutor` forward (`--workers N`).
+//!
+//! The sharded forward owes a hard guarantee: for a fixed shard *plan*
+//! (head-sharded attention, fixed `d_ff` band partition), the worker
+//! count is pure execution parallelism — per-unit partials are computed
+//! over the same logical partition whatever the worker count and reduced
+//! serially in ascending unit order, so f32 association never depends on
+//! how many threads ran. These tests gate that guarantee end to end:
+//!
+//! - step-level logits and KV planes bit-identical for 1/2/4 workers, on
+//!   the fp and quantized (`mxfp4_b32_t3`) graph specs, for dense *and*
+//!   bit-packed MX weights;
+//! - whole-engine token streams and `sched_fingerprint` identical across
+//!   worker counts, with f32 and MX-paged (mxfp8) KV storage;
+//! - ragged ownership (`n_heads % workers != 0`, ragged `d_ff` bands)
+//!   changes nothing;
+//! - the negative paths fail loud: 0 workers, more workers than heads;
+//! - the manifest shard keys are additive: version-2 manifests with (or
+//!   without) `shard.*` keys — and with unknown future `shard.*` keys —
+//!   load on the appropriate path.
+
+use latmix::coordinator::engine::{Engine, EngineConfig, NativeExecutor, StepExecutor};
+use latmix::coordinator::{GenRequest, KvSpec};
+use latmix::io::MANIFEST_VERSION;
+use latmix::model::{ModelDesc, NativeDims, ShardPlan};
+use latmix::runtime::sched_fingerprint;
+
+fn tiny() -> NativeDims {
+    NativeDims::latmix_tiny() // 4 heads, d_ff 384: supports 1/2/4 workers
+}
+
+/// Build the executor for one (tag, packed, workers) config off one fixed
+/// synthetic weight seed, so every worker count serves the same model.
+fn exec(tag: &str, packed: bool, workers: usize) -> NativeExecutor {
+    let mut e = NativeExecutor::synthetic(tiny(), tag, vec![1, 2, 4], 23).unwrap();
+    if packed {
+        e = e.into_packed().unwrap();
+    }
+    e.with_workers(workers).unwrap()
+}
+
+/// One closed-loop engine run: per-request token streams plus the
+/// scheduling-event fingerprint.
+fn run_engine(e: NativeExecutor, kv: KvSpec) -> (Vec<(u64, Vec<i32>)>, u64) {
+    let mut engine =
+        Engine::new(e, EngineConfig { max_slots: 4, eos: -1, kv, ..Default::default() });
+    for i in 0..6u64 {
+        let prompt = vec![1, 40 + i as i32, 50, 3 + (i as i32 % 7)];
+        engine.submit(GenRequest::new(i, prompt, 6));
+    }
+    let out = engine.run_to_completion().unwrap();
+    let toks = out.iter().map(|r| (r.id, r.tokens.clone())).collect();
+    (toks, sched_fingerprint(engine.events()))
+}
+
+/// Step-level trace: prefill logits + 3 chained decode_append steps, all
+/// captured as exact bit patterns (logits and fresh KV rows).
+fn step_trace(e: &NativeExecutor) -> Vec<Vec<u32>> {
+    let pl = e.prefill_len();
+    let batch = 2;
+    let mut tokens = vec![0i32; batch * pl];
+    tokens[..4].copy_from_slice(&[1, 9, 2, 200]);
+    tokens[pl..pl + 3].copy_from_slice(&[7, 7, 30]);
+    let lens = [4i32, 3];
+    let (logits, mut kv) = e.prefill(&tokens, &lens, batch).unwrap();
+    let mut trace = vec![logits.iter().map(|v| v.to_bits()).collect::<Vec<u32>>()];
+    let mut pos = [4i32, 3];
+    let mut next = [11i32, 42];
+    for _ in 0..3 {
+        let (lg, rows) = e.decode_append(&next, &pos, &kv, batch).unwrap();
+        trace.push(lg.iter().map(|v| v.to_bits()).collect());
+        for r in &rows {
+            trace.push(r.iter().map(|v| v.to_bits()).collect());
+        }
+        // write the fresh rows back into the dense planes (what the paged
+        // cache does) so the next step sees them
+        let (row, plane) = (e.kv_row(), e.kv_seq() * e.kv_row());
+        for (li, r) in rows.iter().enumerate() {
+            for b in 0..batch {
+                let at = b * plane + pos[b] as usize * row;
+                kv[li][at..at + row].copy_from_slice(&r[b * row..(b + 1) * row]);
+            }
+        }
+        let vocab = e.vocab();
+        for b in 0..batch {
+            next[b] = argmax(&lg[b * vocab..(b + 1) * vocab]);
+            pos[b] += 1;
+        }
+    }
+    trace
+}
+
+fn argmax(v: &[f32]) -> i32 {
+    let mut best = 0usize;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, x) in v.iter().enumerate() {
+        if *x > bv {
+            bv = *x;
+            best = i;
+        }
+    }
+    best as i32
+}
+
+#[test]
+fn step_logits_bit_identical_across_worker_counts() {
+    for tag in ["fp", "mxfp4_b32_t3"] {
+        for packed in [false, true] {
+            if packed && tag == "fp" {
+                continue; // packing requires a quantized tag
+            }
+            let base = step_trace(&exec(tag, packed, 1));
+            for w in [2usize, 4] {
+                let got = step_trace(&exec(tag, packed, w));
+                assert_eq!(
+                    base, got,
+                    "tag={tag} packed={packed}: workers=1 vs {w} logits/KV bits diverged"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn engine_tokens_and_fingerprint_identical_across_worker_counts() {
+    // f32 KV and MX-paged mxfp8 KV: the KV codec quantizes whatever rows
+    // the executor appends, so bit-identical rows => identical streams.
+    let kvs = [KvSpec::default(), KvSpec::from_bits(8).unwrap()];
+    for tag in ["fp", "mxfp4_b32_t3"] {
+        for kv in kvs {
+            let (toks1, fp1) = run_engine(exec(tag, false, 1), kv);
+            for w in [2usize, 4] {
+                let (toksw, fpw) = run_engine(exec(tag, false, w), kv);
+                assert_eq!(
+                    toks1, toksw,
+                    "tag={tag} kv={:?}: token streams diverged at workers={w}",
+                    kv.format
+                );
+                assert_eq!(fp1, fpw, "tag={tag}: scheduling fingerprint diverged");
+            }
+        }
+    }
+}
+
+#[test]
+fn packed_engine_parity_across_worker_counts() {
+    // Packed-weight sharding replays the dense kernel's k-order over
+    // decoded panels, so the packed executor owes the same 1-vs-N bit
+    // parity (checked through the whole engine, mxfp8-paged KV).
+    let kv = KvSpec::from_bits(8).unwrap();
+    let (toks1, fp1) = run_engine(exec("mxfp4_b32_t3", true, 1), kv);
+    for w in [2usize, 4] {
+        let (toksw, fpw) = run_engine(exec("mxfp4_b32_t3", true, w), kv);
+        assert_eq!(toks1, toksw, "packed token streams diverged at workers={w}");
+        assert_eq!(fp1, fpw);
+    }
+}
+
+#[test]
+fn legacy_unsharded_scheduling_fingerprint_matches_sharded() {
+    // Sharded logits may differ from the legacy forward by f32 association
+    // (two row-split reductions), but scheduling is value-independent here
+    // (fixed max_new, no EOS), so the event fingerprint must agree even
+    // with the legacy path.
+    let legacy = NativeExecutor::synthetic(tiny(), "fp", vec![1, 2, 4], 23).unwrap();
+    let (_, fp_legacy) = run_engine(legacy, KvSpec::default());
+    let (_, fp_shard) = run_engine(exec("fp", false, 4), KvSpec::default());
+    assert_eq!(fp_legacy, fp_shard);
+}
+
+#[test]
+fn ragged_ownership_is_bit_identical() {
+    // workers=3 over 4 heads: the last worker owns no head in stage 1 and
+    // a short band run in the FFN; a ragged ffn_block (5 does not divide
+    // 384) exercises the short-final-band path too.
+    let mk = |workers: usize| {
+        let e = NativeExecutor::synthetic(tiny(), "mxfp4_b32_t3", vec![1, 2, 4], 29).unwrap();
+        e.with_shard_plan(ShardPlan { workers, ffn_block: 5 }).unwrap()
+    };
+    let base = step_trace(&mk(1));
+    for w in [2usize, 3] {
+        assert_eq!(base, step_trace(&mk(w)), "ragged plan diverged at workers={w}");
+    }
+}
+
+#[test]
+fn invalid_worker_counts_fail_loud() {
+    let e = NativeExecutor::synthetic(tiny(), "fp", vec![1, 2, 4], 23).unwrap();
+    let err = e.clone().with_workers(0).unwrap_err().to_string();
+    assert!(err.contains("at least 1 worker"), "got: {err}");
+    // tiny() has 4 heads: a 5th worker would own no attention shard
+    let err = e.clone().with_workers(5).unwrap_err().to_string();
+    assert!(err.contains("exceeds n_heads"), "got: {err}");
+    let err = e
+        .with_shard_plan(ShardPlan { workers: 2, ffn_block: 0 })
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("ffn_block"), "got: {err}");
+}
+
+#[test]
+fn manifest_shard_keys_are_additive() {
+    let dims = tiny();
+    let dir = std::env::temp_dir().join("latmix_shard_manifest_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let desc = |shard: bool| ModelDesc {
+        vocab: dims.vocab,
+        d_model: dims.d_model,
+        n_layers: dims.n_layers,
+        n_heads: dims.n_heads,
+        d_ff: dims.d_ff,
+        kv_seq: dims.kv_seq,
+        prefill_len: dims.prefill_len,
+        ppl_shape: (4, 16),
+        score_shape: (4, 16),
+        weight_order: vec!["w".to_string()],
+        graphs: vec!["decode_fp_b1".to_string()],
+        artifacts: dir.clone(),
+        version: MANIFEST_VERSION,
+        transform_folded: None,
+        transform_online: None,
+        shard_attn: if shard { Some("head".to_string()) } else { None },
+        shard_ffn_block: if shard { Some(ShardPlan::default_ffn_block(dims.d_ff)) } else { None },
+    };
+
+    // no shard keys: loads on the old (single-worker) path
+    desc(false).write_manifest(&dir).unwrap();
+    let loaded = ModelDesc::load(&dir).unwrap();
+    assert_eq!(loaded.version, MANIFEST_VERSION);
+    assert_eq!(loaded.shard_attn, None);
+    assert_eq!(loaded.shard_ffn_block, None);
+
+    // shard keys present (what `latmix fold` writes): version stays 2 and
+    // both keys round-trip
+    desc(true).write_manifest(&dir).unwrap();
+    let loaded = ModelDesc::load(&dir).unwrap();
+    assert_eq!(loaded.version, MANIFEST_VERSION);
+    assert_eq!(loaded.shard_attn.as_deref(), Some("head"));
+    assert_eq!(loaded.shard_ffn_block, Some(ShardPlan::default_ffn_block(dims.d_ff)));
+
+    // an unknown future shard key is tolerated, not fatal
+    let mpath = dir.join("manifest.txt");
+    let mut txt = std::fs::read_to_string(&mpath).unwrap();
+    txt.push_str("shard.kv=page\n");
+    std::fs::write(&mpath, txt).unwrap();
+    let loaded = ModelDesc::load(&dir).unwrap();
+    assert_eq!(loaded.shard_attn.as_deref(), Some("head"));
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -245,6 +245,8 @@ fn learn_fold_serve_end_to_end() {
         version: MANIFEST_VERSION,
         transform_folded: Some(spec.site_list()),
         transform_online: Some("transforms/online.lxt".to_string()),
+        shard_attn: None,
+        shard_ffn_block: None,
     };
     desc.write_manifest(&dir).unwrap();
 
@@ -360,6 +362,8 @@ fn folded_manifest_without_online_spec_fails_loud() {
         transform_folded: None,
         // declared but never written to disk
         transform_online: Some("transforms/online.lxt".to_string()),
+        shard_attn: None,
+        shard_ffn_block: None,
     };
     desc.write_manifest(&dir).unwrap();
     let loaded = ModelDesc::load(&dir).unwrap();

@@ -23,6 +23,7 @@ Stdlib only.
 
 import json
 import os
+import re
 import sys
 
 
@@ -95,7 +96,43 @@ def diff_microbench(base, fresh):
             )
             if delta > 25.0:
                 warnings.append((f"{key[0]!r} [{key[1]}]", "ns/unit", delta))
+        lines.extend(shard_scaling_lines(fresh_rows))
     return lines, warnings
+
+
+def shard_scaling_lines(fresh_rows):
+    """Summarize `... workers=N ...` row families as speedup vs workers=1.
+
+    The sharded-executor rows differ only in worker count (the shard plan —
+    and therefore the math — is fixed), so the interesting number is the
+    fork-join scaling, not the absolute ns. Rows without a workers=1
+    sibling are left to the main table.
+    """
+    fams = {}
+    for row in fresh_rows:
+        op = row.get("op", "?")
+        m = re.search(r"workers=(\d+)", op)
+        if not m:
+            continue
+        base = (
+            re.sub(r"\s+", " ", op[: m.start()] + op[m.end():]).strip(),
+            row.get("backend", "?"),
+        )
+        fams.setdefault(base, {})[int(m.group(1))] = ns_per_unit(row)[0]
+    lines = []
+    for (base, backend), by_w in sorted(fams.items()):
+        one = by_w.get(1)
+        if not one or len(by_w) < 2:
+            continue
+        parts = [
+            f"w={w} {one / ns:.2f}x" for w, ns in sorted(by_w.items()) if w != 1 and ns > 0
+        ]
+        if parts:
+            lines.append(f"- shard scaling `{base}` [{backend}]: " + ", ".join(parts))
+    if lines:
+        lines.insert(0, "")
+        lines.insert(1, "**Shard scaling (speedup vs workers=1, same bit-exact output):**")
+    return lines
 
 
 def class_rows(snap):
