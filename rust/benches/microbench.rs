@@ -7,9 +7,10 @@
 //!
 //! Every timed section lands in two places:
 //! - the human-readable markdown table (stdout + `artifacts/results/`);
-//! - `BENCH_microbench.json` at the repo root (schema 2 in README.md §Perf
-//!   methodology, incl. a per-row `backend` field), the machine-readable
-//!   perf trajectory tracked per PR.
+//! - `BENCH_microbench.json` at the repo root (schema 3 in README.md §Perf
+//!   methodology, incl. a per-row `backend` field and timer-free counter
+//!   rows such as `allocs_per_step`), the machine-readable perf
+//!   trajectory tracked per PR.
 //!
 //! The `* scalar-ref` rows time the retained reference codec
 //! (`latmix::mx::reference`) in the same process, so each JSON snapshot
@@ -25,7 +26,41 @@ use latmix::linalg::{block_hadamard_apply, packed_matmul, packed_matmul_cols, Ma
 use latmix::model::NativeDims;
 use latmix::mx::{mx_qdq_rows, pack::PackedMx, page, reference, MxConfig};
 use latmix::quant::{gptq_quantize, rtn_quantize};
-use latmix::util::Pcg64;
+use latmix::util::{par, Pcg64};
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Counting allocator behind the `allocs_per_step` rows (same harness as
+/// `rust/tests/alloc_steady_state.rs`): counts every alloc/realloc in the
+/// process so a steady-state decode step can be audited for heap traffic.
+struct CountingAlloc;
+
+static ALLOC_COUNT: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
 
 fn main() {
     let smoke = std::env::var("LATMIX_BENCH_SMOKE").is_ok();
@@ -276,6 +311,7 @@ fn main() {
     tab.emit();
 
     native_decode_bench(&mut json, smoke);
+    substrate_bench(&mut json, smoke);
     if !smoke {
         pjrt_decode_bench(&mut json);
     }
@@ -517,6 +553,106 @@ fn native_decode_bench(json: &mut JsonReport, smoke: bool) {
         format!("{:.1}", toks / r.mean_s),
     ]);
     json.push(&r, Some(("tok/s", toks)));
+    tab.emit();
+}
+
+/// Execution-substrate rows: fork-join dispatch cost on the scoped-thread
+/// fallback vs the persistent [`par::WorkerPool`], and the
+/// `allocs_per_step` counters behind the zero-allocation steady-state
+/// gate (`rust/tests/alloc_steady_state.rs` asserts 0; these rows put the
+/// same number in the perf trajectory so `scripts/bench_diff.py` can warn
+/// on drift).
+fn substrate_bench(json: &mut JsonReport, smoke: bool) {
+    let mut tab = Table::new(
+        "microbench_substrate",
+        "Execution substrate (scoped threads vs persistent pool)",
+        &["op", "mean", "p99", "value"],
+    );
+    let (warmup, iters) = if smoke { (1usize, 3usize) } else { (5, 200) };
+
+    // Fork-join overhead: one for_each_chunk dispatch over a tiny buffer
+    // (64 chunks of trivial work), so the row times the barrier itself —
+    // thread spawn + join on the scoped path, park/unpark on the pool.
+    let mut buf = vec![0.0f32; 64 * 64];
+    let pool = par::WorkerPool::new();
+    for w in [1usize, 4] {
+        for substrate in ["scoped", "pool"] {
+            let name = format!("fork_join_overhead {substrate} w={w}");
+            let r = Bencher::new(&name).with_iters(warmup, iters).run(|| {
+                let buf = &mut buf;
+                let body = || {
+                    par::with_threads(w, || {
+                        par::for_each_chunk(buf, 64, |ci, chunk| {
+                            chunk[0] = ci as f32;
+                        });
+                    })
+                };
+                if substrate == "pool" {
+                    pool.install(body)
+                } else {
+                    body()
+                }
+            });
+            tab.row(vec![
+                r.name.clone(),
+                fmt_time(r.mean_s),
+                fmt_time(r.p99_s),
+                "-".into(),
+            ]);
+            json.push(&r, Some(("dispatch/s", 1.0)));
+        }
+    }
+    drop(pool);
+
+    // allocs_per_step: minimum allocation delta over a few steady-state
+    // decode steps on a warm serving engine (min over steps excludes the
+    // legitimate page-boundary KV-arena growth; see the gate test's
+    // methodology notes). 0 is the healthy value.
+    let dims = NativeDims::latmix_tiny();
+    let fp = NativeExecutor::synthetic(dims, "fp", vec![1, 2, 4, 8], 42).unwrap();
+    let packed = NativeExecutor::synthetic(dims, "mxfp4_b32_t3", vec![1, 2, 4, 8], 42)
+        .unwrap()
+        .into_packed()
+        .unwrap();
+    let mxfp8_kv = KvSpec { format: KvFormat::Mxfp8, ..KvSpec::default() };
+    let variants: Vec<(&str, &NativeExecutor, KvSpec)> = vec![
+        ("fp", &fp, KvSpec::default()),
+        ("packed", &packed, KvSpec::default()),
+        ("paged-mxfp8", &fp, mxfp8_kv),
+    ];
+    for (label, exec, kv) in variants {
+        for w in [1usize, 4] {
+            let min = par::with_threads(w, || {
+                let mut e = Engine::new(
+                    exec.clone(),
+                    EngineConfig { max_slots: 4, eos: -1, kv, ..Default::default() },
+                );
+                for id in 0..4u64 {
+                    let prompt: Vec<i32> = (0..12).map(|t| t + id as i32 * 100).collect();
+                    e.submit(GenRequest::new(id, prompt, 64));
+                }
+                // step 1 admits + prefills; two more converge the arenas
+                for _ in 0..3 {
+                    e.step().unwrap();
+                }
+                let mut min = u64::MAX;
+                for _ in 0..5 {
+                    let before = ALLOC_COUNT.load(Ordering::Relaxed);
+                    e.step().unwrap();
+                    min = min.min(ALLOC_COUNT.load(Ordering::Relaxed) - before);
+                }
+                min
+            });
+            let name = format!("allocs_per_step native decode {label} w={w}");
+            tab.row(vec![
+                name.clone(),
+                "-".into(),
+                "-".into(),
+                format!("{min} alloc/step"),
+            ]);
+            json.push_value(&name, min as f64, "alloc/step");
+        }
+    }
     tab.emit();
 }
 

@@ -110,18 +110,23 @@ impl Table {
 
 /// Machine-readable bench report: collects [`BenchResult`]s and writes
 /// `BENCH_<id>.json` at the repo root so every PR's perf trajectory is
-/// diffable in version control. Schema v2 (documented in README.md §Perf
-/// methodology) — every row records which executor produced it:
+/// diffable in version control. Schema v3 (documented in README.md §Perf
+/// methodology) — every row records which executor produced it, and the
+/// schema additively admits timer-free counter rows — see
+/// [`JsonReport::push_value`], e.g. `allocs_per_step` — alongside the
+/// timed ones:
 ///
 /// ```json
 /// {
 ///   "bench": "microbench",
-///   "schema": 2,
+///   "schema": 3,
 ///   "results": [
 ///     {"op": "mx_qdq 64K f32", "backend": "native",
 ///      "mean_s": 1.2e-4, "p50_s": ..., "p99_s": ...,
 ///      "std_s": ..., "iters": 20,
-///      "throughput": 5.4e8, "throughput_unit": "elem/s"}
+///      "throughput": 5.4e8, "throughput_unit": "elem/s"},
+///     {"op": "allocs_per_step native decode fp w=4", "backend": "native",
+///      "value": 0, "value_unit": "alloc/step"}
 ///   ]
 /// }
 /// ```
@@ -165,8 +170,22 @@ impl JsonReport {
         self.entries.push(s);
     }
 
+    /// Record a timer-free counter row (schema v3): a bare measured value
+    /// with its unit, e.g. `allocs_per_step` from the counting-allocator
+    /// harness. Consumers keying on `mean_s`/`throughput` skip these rows;
+    /// `scripts/bench_diff.py` inspects them for regressions.
+    pub fn push_value(&mut self, name: &str, value: f64, unit: &str) {
+        self.entries.push(format!(
+            "{{\"op\": {}, \"backend\": {}, \"value\": {}, \"value_unit\": {}}}",
+            json_str(name),
+            json_str("native"),
+            value,
+            json_str(unit)
+        ));
+    }
+
     pub fn render(&self) -> String {
-        let mut out = format!("{{\n  \"bench\": {},\n  \"schema\": 2,\n  \"results\": [\n", json_str(&self.id));
+        let mut out = format!("{{\n  \"bench\": {},\n  \"schema\": 3,\n  \"results\": [\n", json_str(&self.id));
         out += &self
             .entries
             .iter()
@@ -283,9 +302,11 @@ mod tests {
         let mut j = JsonReport::new("unit");
         j.push(&r, Some(("elem/s", 1000.0)));
         j.push_for(&r, None, "xla");
+        j.push_value("allocs_per_step decode fp w=4", 0.0, "alloc/step");
         let s = j.render();
         assert!(s.contains("\"bench\": \"unit\""));
-        assert!(s.contains("\"schema\": 2"));
+        assert!(s.contains("\"schema\": 3"));
+        assert!(s.contains("\"value\": 0, \"value_unit\": \"alloc/step\""));
         assert!(s.contains("\"op\": \"op \\\"x\\\"\""));
         assert!(s.contains("\"backend\": \"native\""));
         assert!(s.contains("\"backend\": \"xla\""));

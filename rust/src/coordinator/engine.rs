@@ -31,6 +31,7 @@
 //! `rust/tests/serving_pipeline.rs`).
 
 use std::collections::HashSet;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
@@ -38,13 +39,14 @@ use anyhow::{Context, Result};
 use super::batcher::{Batcher, PushOutcome};
 use super::kv_cache::{KvCache, KvSpec};
 use super::request::{FinishReason, GenRequest, GenResult, RequestId, StreamEvent, TokenSink};
-use super::scheduler::{plan_step, SchedEvent, SchedulerPolicy};
+use super::scheduler::{plan_admit, SchedEvent, SchedulerPolicy};
 use crate::model::{
     GraphSpec, ModelDesc, NativeDims, NativeWeights, PackedNativeWeights, ShardPlan, SpecRun,
     WeightSet,
 };
 use crate::runtime::decode_batch_sizes;
 use crate::transform::{TransformMode, TransformSpec};
+use crate::util::{par, scratch};
 #[cfg(feature = "backend-xla")]
 use crate::runtime::{f32_literal, i32_literal, literal_to_f32, Runtime};
 
@@ -105,6 +107,16 @@ pub trait StepExecutor {
             })
             .collect();
         Ok((logits, rows))
+    }
+
+    /// The executor's persistent fork-join pool, if it owns one. The engine
+    /// installs it around its own parallel stages (KV gather fan-out) so a
+    /// steady-state decode step never spawns scoped threads — pool workers
+    /// keep their scratch arenas warm, which is what the zero-allocation
+    /// gate (`rust/tests/alloc_steady_state.rs`) measures. `None` (the
+    /// default) means those stages run on ephemeral scoped threads.
+    fn pool(&self) -> Option<Arc<par::WorkerPool>> {
+        None
     }
 }
 
@@ -228,6 +240,12 @@ pub struct NativeExecutor {
     /// the sharded forward, whose output is bit-identical for any worker
     /// count under the same plan (`rust/tests/shard_parity.rs`).
     shard: Option<ShardPlan>,
+    /// Persistent fork-join pool: every prefill/decode dispatch installs it
+    /// as the `util::par` substrate, so GEMM row fans and shard fork-joins
+    /// reuse long-lived pinned workers instead of spawning scoped threads
+    /// per stage. Clones share the pool (`Arc`); the last drop shuts it
+    /// down and joins the workers.
+    pool: Arc<par::WorkerPool>,
 }
 
 /// Weight storage mode of a [`NativeExecutor`]: dense f32 matrices, or
@@ -262,6 +280,7 @@ impl NativeExecutor {
             batches,
             transforms,
             shard: None,
+            pool: Arc::new(par::WorkerPool::new()),
         })
     }
 
@@ -283,6 +302,7 @@ impl NativeExecutor {
             batches,
             transforms: None,
             shard: None,
+            pool: Arc::new(par::WorkerPool::new()),
         })
     }
 
@@ -412,7 +432,7 @@ impl StepExecutor for NativeExecutor {
 
     fn prefill(&self, tokens: &[i32], lens: &[i32], batch: usize)
         -> Result<(Vec<f32>, Vec<Vec<f32>>)> {
-        match (&self.weights, &self.shard) {
+        self.pool.install(|| match (&self.weights, &self.shard) {
             (ExecWeights::Dense(w), None) => {
                 w.forward_prefill_spec(tokens, lens, batch, &self.spec, self.spec_run())
             }
@@ -425,7 +445,7 @@ impl StepExecutor for NativeExecutor {
             (ExecWeights::Packed(w), Some(plan)) => {
                 w.forward_prefill_shard_spec(tokens, lens, batch, &self.spec, self.spec_run(), plan)
             }
-        }
+        })
     }
 
     fn decode(
@@ -435,7 +455,7 @@ impl StepExecutor for NativeExecutor {
         kv: &[Vec<f32>],
         batch: usize,
     ) -> Result<(Vec<f32>, Vec<Vec<f32>>)> {
-        match (&self.weights, &self.shard) {
+        self.pool.install(|| match (&self.weights, &self.shard) {
             (ExecWeights::Dense(w), None) => {
                 w.forward_decode_spec(tokens, pos, kv, batch, &self.spec, self.spec_run())
             }
@@ -460,7 +480,7 @@ impl StepExecutor for NativeExecutor {
                 self.spec_run(),
                 plan,
             ),
-        }
+        })
     }
 
     fn decode_append(
@@ -470,7 +490,7 @@ impl StepExecutor for NativeExecutor {
         kv: &[Vec<f32>],
         batch: usize,
     ) -> Result<(Vec<f32>, Vec<Vec<f32>>)> {
-        match (&self.weights, &self.shard) {
+        self.pool.install(|| match (&self.weights, &self.shard) {
             (ExecWeights::Dense(w), None) => {
                 w.forward_decode_append_spec(tokens, pos, kv, batch, &self.spec, self.spec_run())
             }
@@ -495,7 +515,11 @@ impl StepExecutor for NativeExecutor {
                 self.spec_run(),
                 plan,
             ),
-        }
+        })
+    }
+
+    fn pool(&self) -> Option<Arc<par::WorkerPool>> {
+        Some(Arc::clone(&self.pool))
     }
 }
 
@@ -644,6 +668,28 @@ struct RunningSeq {
     ttft_s: Option<f64>,
 }
 
+/// Engine-owned staging reused across decode steps (the zero-allocation
+/// steady state: cleared and refilled in place, never reallocated once
+/// warm). Taken out of the engine with `mem::take` for the duration of a
+/// step so its buffers can be borrowed while `&mut self` methods run.
+#[derive(Default)]
+struct StepScratch {
+    /// Running lane ids, rebuilt each decode step.
+    ids: Vec<RequestId>,
+    /// Per-lane last generated token, padded to the compiled bucket.
+    tokens: Vec<i32>,
+    /// Per-lane decode position, padded to the compiled bucket.
+    pos: Vec<i32>,
+    /// KV gather staging — one `(batch, kv_seq, row)` plane per
+    /// (layer, k/v), rebuilt in place by `KvCache::gather_batch_into`.
+    gather: Vec<Vec<f32>>,
+    /// Stream events staged during the lane walk, emitted after it (the
+    /// sink needs `&mut self` while the walk borrows the running lanes).
+    stream: Vec<StreamEvent>,
+    /// Lanes that hit EOS / length / KV limits this step.
+    finished: Vec<(RequestId, FinishReason)>,
+}
+
 /// The continuous-batching generation engine (admission → schedule/decode →
 /// stream; see the module docs for the full state machine).
 pub struct Engine<E: StepExecutor> {
@@ -659,6 +705,10 @@ pub struct Engine<E: StepExecutor> {
     results: Vec<GenResult>,
     events: Vec<SchedEvent>,
     sink: Option<TokenSink>,
+    /// Largest compiled batch bucket (cached: `batch_sizes()` clones).
+    max_bucket: usize,
+    /// Reusable per-step staging buffers (see [`StepScratch`]).
+    scratch: StepScratch,
 }
 
 impl<E: StepExecutor> Engine<E> {
@@ -674,6 +724,7 @@ impl<E: StepExecutor> Engine<E> {
             exec.kv_row(),
             cfg.kv,
         );
+        let max_bucket = *exec.batch_sizes().last().expect("empty batch list");
         Engine {
             exec,
             cfg,
@@ -685,6 +736,8 @@ impl<E: StepExecutor> Engine<E> {
             results: Vec::new(),
             events: Vec::new(),
             sink: None,
+            max_bucket,
+            scratch: StepScratch::default(),
         }
     }
 
@@ -777,16 +830,15 @@ impl<E: StepExecutor> Engine<E> {
     pub fn step(&mut self) -> Result<()> {
         self.sweep_queue();
         self.evict_running();
-        let running_ids: Vec<RequestId> = self.running.iter().map(|r| r.req.id).collect();
-        let plan = plan_step(
+        let admit = plan_admit(
             self.cfg.policy,
             self.batcher.pending(),
-            &running_ids,
+            self.running.len(),
             self.kv.free_slots(),
-            *self.exec.batch_sizes().last().unwrap(),
+            self.max_bucket,
         );
-        if plan.admit > 0 {
-            let reqs = self.batcher.admit(plan.admit.min(self.kv.free_slots()));
+        if admit > 0 {
+            let reqs = self.batcher.admit(admit.min(self.kv.free_slots()));
             self.prefill_batch(reqs)?;
         }
         if !self.running.is_empty() {
@@ -852,13 +904,14 @@ impl<E: StepExecutor> Engine<E> {
                 .write_prefill(req.id, &req.prompt[..prompt_len], &kv_planes, lane)?;
             let first = argmax(&logits[lane * vocab..(lane + 1) * vocab]);
             let t = req.arrived.elapsed().as_secs_f64();
-            let rs = RunningSeq {
-                req,
-                prompt_len,
-                generated: vec![first],
-                token_s: vec![t],
-                ttft_s: Some(t),
-            };
+            // Reserve the full generation budget up front so the per-step
+            // `push` in `decode_step` never reallocates mid-stream.
+            let cap = req.max_new_tokens.max(1);
+            let mut generated = Vec::with_capacity(cap);
+            generated.push(first);
+            let mut token_s = Vec::with_capacity(cap);
+            token_s.push(t);
+            let rs = RunningSeq { req, prompt_len, generated, token_s, ttft_s: Some(t) };
             self.stats.decode_tokens += 1;
             self.emit(StreamEvent::Token { id: rs.req.id, index: 0, token: first, t_s: t });
             if first == self.cfg.eos {
@@ -873,28 +926,47 @@ impl<E: StepExecutor> Engine<E> {
     }
 
     fn decode_step(&mut self) -> Result<()> {
+        // The staging buffers live in `self.scratch` so a steady-state step
+        // reuses them in place; take them out for the duration of the step
+        // so chunk slices can be held across `&mut self` calls.
+        let mut ss = std::mem::take(&mut self.scratch);
+        let out = self.decode_step_inner(&mut ss);
+        self.scratch = ss;
+        out
+    }
+
+    fn decode_step_inner(&mut self, ss: &mut StepScratch) -> Result<()> {
         // decode all running lanes, chunked into per-step re-selected
         // compiled buckets
-        let ids: Vec<RequestId> = self.running.iter().map(|r| r.req.id).collect();
-        let mut finished: Vec<(RequestId, FinishReason)> = Vec::new();
-        let max_bucket = *self.exec.batch_sizes().last().unwrap();
+        ss.ids.clear();
+        ss.ids.extend(self.running.iter().map(|r| r.req.id));
+        ss.finished.clear();
+        let pool = self.exec.pool();
         let vocab = self.exec.vocab();
         let kv_seq = self.exec.kv_seq();
-        for chunk in ids.chunks(max_bucket) {
+        for chunk in ss.ids.chunks(self.max_bucket) {
             let batch = self.batcher.bucket_for(chunk.len());
-            let mut tokens = vec![0i32; batch];
-            let mut pos = vec![0i32; batch];
+            ss.tokens.clear();
+            ss.tokens.resize(batch, 0);
+            ss.pos.clear();
+            ss.pos.resize(batch, 0);
             for (lane, id) in chunk.iter().enumerate() {
                 let rs = self.running.iter().find(|r| r.req.id == *id).unwrap();
-                tokens[lane] = *rs.generated.last().unwrap();
-                pos[lane] = self.kv.pos_of(*id).unwrap() as i32;
+                ss.tokens[lane] = *rs.generated.last().unwrap();
+                ss.pos[lane] = self.kv.pos_of(*id).unwrap() as i32;
             }
-            let kv_in = self.kv.gather_batch(chunk, batch)?;
-            let (logits, new_rows) = self.exec.decode_append(&tokens, &pos, &kv_in, batch)?;
+            // The gather fan-out is an engine-side parallel stage: run it on
+            // the executor's persistent pool so no scoped threads spawn (and
+            // the pool workers' scratch arenas stay warm).
+            par::with_pool(pool.as_deref(), || {
+                self.kv.gather_batch_into(chunk, batch, &mut ss.gather)
+            })?;
+            let (logits, new_rows) =
+                self.exec.decode_append(&ss.tokens, &ss.pos, &ss.gather, batch)?;
             self.kv.append_step(chunk, batch, &new_rows)?;
             self.stats.decode_steps += 1;
             self.stats.decode_lanes += chunk.len() as u64;
-            let mut stream: Vec<StreamEvent> = Vec::with_capacity(chunk.len());
+            ss.stream.clear();
             for (lane, id) in chunk.iter().enumerate() {
                 let rs = self.running.iter_mut().find(|r| r.req.id == *id).unwrap();
                 let next = argmax(&logits[lane * vocab..(lane + 1) * vocab]);
@@ -902,25 +974,29 @@ impl<E: StepExecutor> Engine<E> {
                 rs.generated.push(next);
                 rs.token_s.push(t);
                 self.stats.decode_tokens += 1;
-                stream.push(StreamEvent::Token {
+                ss.stream.push(StreamEvent::Token {
                     id: *id,
                     index: rs.generated.len() - 1,
                     token: next,
                     t_s: t,
                 });
                 if next == self.cfg.eos {
-                    finished.push((*id, FinishReason::Eos));
+                    ss.finished.push((*id, FinishReason::Eos));
                 } else if rs.generated.len() >= rs.req.max_new_tokens {
-                    finished.push((*id, FinishReason::Length));
+                    ss.finished.push((*id, FinishReason::Length));
                 } else if rs.prompt_len + rs.generated.len() >= kv_seq {
-                    finished.push((*id, FinishReason::KvLimit));
+                    ss.finished.push((*id, FinishReason::KvLimit));
                 }
             }
-            for ev in stream {
+            // The executor checked these out of the step arena; recycle them
+            // now that argmax / append_step consumed them.
+            scratch::give(logits);
+            scratch::give_rows(new_rows);
+            for ev in ss.stream.drain(..) {
                 self.emit(ev);
             }
         }
-        for (id, reason) in finished {
+        for (id, reason) in ss.finished.drain(..) {
             let idx = self.running.iter().position(|r| r.req.id == id).unwrap();
             let rs = self.running.remove(idx);
             self.finish(rs, reason);

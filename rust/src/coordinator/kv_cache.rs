@@ -562,24 +562,40 @@ impl KvCache {
     /// decoding garbage).
     ///
     /// Each (layer, k/v) buffer is an independent write target, so at
-    /// serving dims the page decodes fan out over the scoped thread pool
-    /// (contiguous partition: bit-identical for any worker count).
+    /// serving dims the page decodes fan out over the `util::par`
+    /// substrate (contiguous partition: bit-identical for any worker
+    /// count, pool or scoped).
     pub fn gather_batch(&self, ids: &[RequestId], batch: usize) -> anyhow::Result<Vec<Vec<f32>>> {
+        let mut out = Vec::new();
+        self.gather_batch_into(ids, batch, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`KvCache::gather_batch`] into caller-owned storage. `out` is resized
+    /// to `n_layers * 2` planes of `batch * kv_seq * row` f32s — existing
+    /// buffers (e.g. the engine's per-step gather staging) are reused, so a
+    /// steady-state decode step performs no gather allocations. Each plane
+    /// is zero-filled before the page decodes land, exactly matching the
+    /// fresh-buffer semantics of `gather_batch`.
+    pub fn gather_batch_into(
+        &self,
+        ids: &[RequestId],
+        batch: usize,
+        out: &mut Vec<Vec<f32>>,
+    ) -> anyhow::Result<()> {
         anyhow::ensure!(ids.len() <= batch, "gather: more lanes than batch");
-        let mut lanes: Vec<&SeqState> = Vec::with_capacity(ids.len());
         for id in ids {
-            let seq = self
-                .seqs
-                .get(id)
-                .ok_or_else(|| anyhow::anyhow!("gather of unmapped sequence {id}"))?;
-            lanes.push(seq);
+            anyhow::ensure!(self.seqs.contains_key(id), "gather of unmapped sequence {id}");
         }
         let plane = self.kv_seq * self.kv_row;
-        let mut out = vec![vec![0.0f32; batch * plane]; self.n_layers * 2];
-        let (block, row, pool) = (self.spec.block, self.kv_row, &self.pool);
-        let lanes = &lanes;
+        let n_planes = self.n_layers * 2;
+        out.resize_with(n_planes, Vec::new);
+        let (block, row, pool, seqs) = (self.spec.block, self.kv_row, &self.pool, &self.seqs);
         let fill = |li: usize, buf: &mut Vec<f32>| {
-            for (lane, seq) in lanes.iter().enumerate() {
+            buf.clear();
+            buf.resize(batch * plane, 0.0);
+            for (lane, id) in ids.iter().enumerate() {
+                let seq = &seqs[id];
                 let base = lane * plane;
                 for (pi, &pid) in seq.table.iter().enumerate() {
                     let start = pi * block;
@@ -599,9 +615,9 @@ impl KvCache {
                 fill(li, buf);
             }
         } else {
-            crate::util::par::for_each_chunk(&mut out, 1, |li, bufs| fill(li, &mut bufs[0]));
+            crate::util::par::for_each_chunk(out, 1, |li, bufs| fill(li, &mut bufs[0]));
         }
-        Ok(out)
+        Ok(())
     }
 
     /// Bytes of page storage currently resident (arena high-water mark —

@@ -85,17 +85,31 @@ pub fn plan_step(
     free_slots: usize,
     max_prefill_batch: usize,
 ) -> StepPlan {
-    let admit = match policy {
+    let admit = plan_admit(policy, waiting, running.len(), free_slots, max_prefill_batch);
+    StepPlan { admit, decode: running.to_vec() }
+}
+
+/// Allocation-free core of [`plan_step`]: just the admit count. The engine
+/// steady-state loop calls this directly (it already owns the running-lane
+/// list, so cloning it into a [`StepPlan`] every step is pure waste — the
+/// zero-allocation decode gate counts it).
+pub fn plan_admit(
+    policy: SchedulerPolicy,
+    waiting: usize,
+    running: usize,
+    free_slots: usize,
+    max_prefill_batch: usize,
+) -> usize {
+    match policy {
         SchedulerPolicy::PrefillPriority => waiting.min(free_slots).min(max_prefill_batch),
         SchedulerPolicy::DecodePriority { low_watermark } => {
-            if running.len() < low_watermark {
+            if running < low_watermark {
                 waiting.min(free_slots).min(max_prefill_batch)
             } else {
                 0
             }
         }
-    };
-    StepPlan { admit, decode: running.to_vec() }
+    }
 }
 
 #[cfg(test)]

@@ -13,9 +13,12 @@ pub mod hadamard;
 pub mod packed;
 
 pub use hadamard::{block_hadamard_apply, hadamard};
-pub use packed::{packed_matmul, packed_matmul_band, packed_matmul_cols, PackedMat, WeightMatrix};
+pub use packed::{
+    packed_matmul, packed_matmul_band, packed_matmul_cols, packed_matmul_into, PackedMat,
+    WeightMatrix,
+};
 
-use crate::util::par;
+use crate::util::{par, scratch};
 
 /// Row-major f32 matrix.
 #[derive(Clone, Debug, PartialEq)]
@@ -77,41 +80,9 @@ impl Mat {
     /// for any worker count (property-tested in `packed_gemm_props.rs`).
     pub fn matmul(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
-        let (m, kd, n) = (self.rows, self.cols, other.cols);
+        let (m, n) = (self.rows, other.cols);
         let mut out = Mat::zeros(m, n);
-        if m == 0 || n == 0 {
-            return out;
-        }
-        let row_kernel = |i: usize, orow: &mut [f32]| {
-            let arow = &self.data[i * kd..(i + 1) * kd];
-            let mut k = 0;
-            while k + 4 <= kd {
-                let (a0, a1, a2, a3) = (arow[k], arow[k + 1], arow[k + 2], arow[k + 3]);
-                let b0 = &other.data[k * n..(k + 1) * n];
-                let b1 = &other.data[(k + 1) * n..(k + 2) * n];
-                let b2 = &other.data[(k + 2) * n..(k + 3) * n];
-                let b3 = &other.data[(k + 3) * n..(k + 4) * n];
-                for j in 0..n {
-                    orow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
-                }
-                k += 4;
-            }
-            while k < kd {
-                let a = arow[k];
-                let brow = &other.data[k * n..(k + 1) * n];
-                for (o, b) in orow.iter_mut().zip(brow.iter()) {
-                    *o += a * b;
-                }
-                k += 1;
-            }
-        };
-        if m < 2 || m * n < par::PAR_MIN_LEN {
-            for (i, orow) in out.data.chunks_mut(n).enumerate() {
-                row_kernel(i, orow);
-            }
-        } else {
-            par::for_each_chunk(&mut out.data, n, row_kernel);
-        }
+        matmul_rows_into(&self.data, m, other, &mut out.data);
         out
     }
 
@@ -125,7 +96,9 @@ impl Mat {
         assert_eq!(x.cols, self.rows, "matmul_cols shape mismatch");
         assert!(c0 <= c1 && c1 <= self.cols, "column slice out of range");
         let (m, kd, n, nc) = (x.rows, self.rows, self.cols, c1 - c0);
-        let mut out = Mat::zeros(m, nc);
+        // Shard-path hot call: back the output with the scratch arena so a
+        // steady-state decode step recycles it (callers `give` the data).
+        let mut out = Mat { rows: m, cols: nc, data: scratch::take(m * nc) };
         if m == 0 || nc == 0 {
             return out;
         }
@@ -166,7 +139,9 @@ impl Mat {
         assert!(r0 <= r1 && r1 <= self.rows, "row band out of range");
         assert_eq!(x_seg.cols, r1 - r0, "matmul_band shape mismatch");
         let (m, kd, n) = (x_seg.rows, r1 - r0, self.cols);
-        let mut out = Mat::zeros(m, n);
+        // Scratch-backed like [`Mat::matmul_cols`]: shard reductions consume
+        // and recycle these partials every step.
+        let mut out = Mat { rows: m, cols: n, data: scratch::take(m * n) };
         if m == 0 || n == 0 {
             return out;
         }
@@ -438,6 +413,52 @@ impl std::ops::IndexMut<(usize, usize)> for Mat {
     #[inline]
     fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f32 {
         &mut self.data[i * self.cols + j]
+    }
+}
+
+/// `X @ w` for `m` row-major activation rows in `x`, accumulated into the
+/// caller-provided zeroed `out` — the allocation-free spelling of
+/// [`Mat::matmul`], which delegates here. The decode hot path calls this
+/// with `util::scratch` buffers so a steady-state token step performs no
+/// heap allocation. Kernel, parallel-fan threshold, and accumulation order
+/// are byte-for-byte those of the old `Mat::matmul` body, so results stay
+/// bit-identical (packed_gemm_props gates this against the packed GEMM).
+pub fn matmul_rows_into(x: &[f32], m: usize, w: &Mat, out: &mut [f32]) {
+    let (kd, n) = (w.rows, w.cols);
+    assert_eq!(x.len(), m * kd, "matmul_rows_into lhs shape mismatch");
+    assert_eq!(out.len(), m * n, "matmul_rows_into out shape mismatch");
+    if m == 0 || n == 0 {
+        return;
+    }
+    let row_kernel = |i: usize, orow: &mut [f32]| {
+        let arow = &x[i * kd..(i + 1) * kd];
+        let mut k = 0;
+        while k + 4 <= kd {
+            let (a0, a1, a2, a3) = (arow[k], arow[k + 1], arow[k + 2], arow[k + 3]);
+            let b0 = &w.data[k * n..(k + 1) * n];
+            let b1 = &w.data[(k + 1) * n..(k + 2) * n];
+            let b2 = &w.data[(k + 2) * n..(k + 3) * n];
+            let b3 = &w.data[(k + 3) * n..(k + 4) * n];
+            for j in 0..n {
+                orow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+            }
+            k += 4;
+        }
+        while k < kd {
+            let a = arow[k];
+            let brow = &w.data[k * n..(k + 1) * n];
+            for (o, b) in orow.iter_mut().zip(brow.iter()) {
+                *o += a * b;
+            }
+            k += 1;
+        }
+    };
+    if m < 2 || m * n < par::PAR_MIN_LEN {
+        for (i, orow) in out.chunks_mut(n).enumerate() {
+            row_kernel(i, orow);
+        }
+    } else {
+        par::for_each_chunk(out, n, row_kernel);
     }
 }
 

@@ -24,11 +24,11 @@
 
 use anyhow::{ensure, Result};
 
-use super::Mat;
+use super::{matmul_rows_into, Mat};
 use crate::mx::formats::{exp2i, fp4_pair_lut, int4_pair_lut};
 use crate::mx::pack::PackedMx;
 use crate::mx::quantize::MxConfig;
-use crate::util::par;
+use crate::util::{par, scratch};
 
 /// Output rows per parallel work item in [`packed_matmul`]: amortizes the
 /// k-panel decode across a band of rows while keeping enough chunks for
@@ -141,16 +141,30 @@ impl PackedMat {
 /// invariant to the worker count. Output rows fan out over `util::par`
 /// in bands of [`ROW_BAND`] above [`par::PAR_MIN_LEN`] output elements.
 pub fn packed_matmul(a: &Mat, w: &PackedMat) -> Mat {
-    assert_eq!(a.cols, w.rows, "packed_matmul shape mismatch");
-    let (m, kd, n) = (a.rows, a.cols, w.cols);
+    let (m, n) = (a.rows, w.cols);
     let mut out = Mat::zeros(m, n);
+    packed_matmul_into(&a.data, m, w, &mut out.data);
+    out
+}
+
+/// [`packed_matmul`] into a caller-provided zeroed `out` — the
+/// allocation-free spelling the decode hot path uses with `util::scratch`
+/// buffers. The per-band decode panels are checked out of the executing
+/// thread's scratch arena (pool workers keep theirs warm across steps),
+/// so a steady-state call performs no heap allocation. Kernel and fan-out
+/// are byte-for-byte the old `packed_matmul` body: bit-exactness and
+/// worker-count invariance carry over untouched.
+pub fn packed_matmul_into(a: &[f32], m: usize, w: &PackedMat, out: &mut [f32]) {
+    let (kd, n) = (w.rows, w.cols);
+    assert_eq!(a.len(), m * kd, "packed_matmul shape mismatch");
+    assert_eq!(out.len(), m * n, "packed_matmul out shape mismatch");
     if m == 0 || n == 0 {
-        return out;
+        return;
     }
     // `i0` = first output row of the band, `oband` = its slice of `out`.
     let do_band = |i0: usize, oband: &mut [f32]| {
         let band_rows = oband.len() / n;
-        let mut panel = vec![0.0f32; 4 * n];
+        let mut panel = scratch::take(4 * n);
         let mut k = 0;
         while k + 4 <= kd {
             w.decode_rows(k, 4, &mut panel);
@@ -158,7 +172,7 @@ pub fn packed_matmul(a: &Mat, w: &PackedMat) -> Mat {
             let (b1, rest) = rest.split_at(n);
             let (b2, b3) = rest.split_at(n);
             for r in 0..band_rows {
-                let arow = &a.data[(i0 + r) * kd..(i0 + r + 1) * kd];
+                let arow = &a[(i0 + r) * kd..(i0 + r + 1) * kd];
                 let (a0, a1, a2, a3) = (arow[k], arow[k + 1], arow[k + 2], arow[k + 3]);
                 let orow = &mut oband[r * n..(r + 1) * n];
                 for j in 0..n {
@@ -171,7 +185,7 @@ pub fn packed_matmul(a: &Mat, w: &PackedMat) -> Mat {
             w.decode_rows(k, 1, &mut panel[..n]);
             let brow = &panel[..n];
             for r in 0..band_rows {
-                let av = a.data[(i0 + r) * kd + k];
+                let av = a[(i0 + r) * kd + k];
                 let orow = &mut oband[r * n..(r + 1) * n];
                 for (o, b) in orow.iter_mut().zip(brow.iter()) {
                     *o += av * b;
@@ -179,13 +193,13 @@ pub fn packed_matmul(a: &Mat, w: &PackedMat) -> Mat {
             }
             k += 1;
         }
+        scratch::give(panel);
     };
     if m * n < par::PAR_MIN_LEN {
-        do_band(0, &mut out.data);
+        do_band(0, out);
     } else {
-        par::for_each_chunk(&mut out.data, ROW_BAND * n, |bi, band| do_band(bi * ROW_BAND, band));
+        par::for_each_chunk(out, ROW_BAND * n, |bi, band| do_band(bi * ROW_BAND, band));
     }
-    out
 }
 
 /// The `[c0, c1)` output-column slice of `x @ w` with `w` kept packed.
@@ -199,7 +213,7 @@ pub fn packed_matmul_cols(a: &Mat, w: &PackedMat, c0: usize, c1: usize) -> Mat {
     assert_eq!(a.cols, w.rows, "packed_matmul_cols shape mismatch");
     assert!(c0 <= c1 && c1 <= w.cols, "column slice out of range");
     let (m, kd, nc) = (a.rows, a.cols, c1 - c0);
-    let mut out = Mat::zeros(m, nc);
+    let mut out = Mat { rows: m, cols: nc, data: scratch::take(m * nc) };
     if m == 0 || nc == 0 {
         return out;
     }
@@ -208,7 +222,7 @@ pub fn packed_matmul_cols(a: &Mat, w: &PackedMat, c0: usize, c1: usize) -> Mat {
     let cb1 = (c1 + b - 1) / b * b;
     let pw = cb1 - cb0;
     let (o0, o1) = (c0 - cb0, c0 - cb0 + nc);
-    let mut panel = vec![0.0f32; 4 * pw];
+    let mut panel = scratch::take(4 * pw);
     let mut k = 0;
     while k + 4 <= kd {
         w.decode_rows_window(k, 4, cb0, cb1, &mut panel);
@@ -238,6 +252,7 @@ pub fn packed_matmul_cols(a: &Mat, w: &PackedMat, c0: usize, c1: usize) -> Mat {
         }
         k += 1;
     }
+    scratch::give(panel);
     out
 }
 
@@ -249,11 +264,11 @@ pub fn packed_matmul_band(a_seg: &Mat, w: &PackedMat, r0: usize, r1: usize) -> M
     assert!(r0 <= r1 && r1 <= w.rows, "row band out of range");
     assert_eq!(a_seg.cols, r1 - r0, "packed_matmul_band shape mismatch");
     let (m, kd, n) = (a_seg.rows, r1 - r0, w.cols);
-    let mut out = Mat::zeros(m, n);
+    let mut out = Mat { rows: m, cols: n, data: scratch::take(m * n) };
     if m == 0 || n == 0 {
         return out;
     }
-    let mut panel = vec![0.0f32; 4 * n];
+    let mut panel = scratch::take(4 * n);
     let mut k = 0;
     while k + 4 <= kd {
         w.decode_rows(r0 + k, 4, &mut panel);
@@ -282,6 +297,7 @@ pub fn packed_matmul_band(a_seg: &Mat, w: &PackedMat, r0: usize, r1: usize) -> M
         }
         k += 1;
     }
+    scratch::give(panel);
     out
 }
 
@@ -298,6 +314,12 @@ pub trait WeightMatrix: Clone + std::fmt::Debug + Send + Sync {
     fn out_dim(&self) -> usize;
     /// `x @ W` for a row-major activation matrix `x`.
     fn matmul_pre(&self, x: &Mat) -> Mat;
+    /// `x @ W` for `n_rows` row-major activation rows, accumulated into
+    /// the caller-provided zeroed `out` — the allocation-free twin of
+    /// [`WeightMatrix::matmul_pre`] (same kernel, same accumulation
+    /// order, bit-identical output). The decode hot path calls this with
+    /// `util::scratch` buffers.
+    fn matmul_pre_into(&self, x: &[f32], n_rows: usize, out: &mut [f32]);
     /// The `[c0, c1)` output-column slice of `x @ W` — bit-identical to
     /// slicing [`WeightMatrix::matmul_pre`]'s result (same per-element
     /// k-order; output columns never interact). Shard workers use this to
@@ -326,6 +348,10 @@ impl WeightMatrix for Mat {
         x.matmul(self)
     }
 
+    fn matmul_pre_into(&self, x: &[f32], n_rows: usize, out: &mut [f32]) {
+        matmul_rows_into(x, n_rows, self, out);
+    }
+
     fn matmul_cols(&self, x: &Mat, c0: usize, c1: usize) -> Mat {
         Mat::matmul_cols(self, x, c0, c1)
     }
@@ -350,6 +376,10 @@ impl WeightMatrix for PackedMat {
 
     fn matmul_pre(&self, x: &Mat) -> Mat {
         packed_matmul(x, self)
+    }
+
+    fn matmul_pre_into(&self, x: &[f32], n_rows: usize, out: &mut [f32]) {
+        packed_matmul_into(x, n_rows, self, out);
     }
 
     fn matmul_cols(&self, x: &Mat, c0: usize, c1: usize) -> Mat {

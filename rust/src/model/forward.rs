@@ -43,7 +43,7 @@ use crate::linalg::{block_hadamard_apply, Mat, PackedMat, WeightMatrix};
 use crate::mx::{mx_qdq_rows, MxConfig};
 use crate::transform::spec::{TransformMode, TransformSpec};
 use crate::transform::Affine;
-use crate::util::{par, Pcg64};
+use crate::util::{par, scratch, Pcg64};
 
 /// Optional spec-application argument of the `*_spec` entry points.
 pub type SpecRun<'a> = Option<(&'a TransformSpec, TransformMode)>;
@@ -798,7 +798,8 @@ impl<W: WeightMatrix> NativeWeights<W> {
         let mut out_kv: Vec<Vec<f32>> = kv.to_vec();
         let mut x = self.embed_rows(tokens);
         if let Some(t1) = residual_of(tf) {
-            x = t1.forward_rows(&x);
+            let tx = t1.forward_rows(&x);
+            scratch::give(std::mem::replace(&mut x, tx));
         }
         let scale = 1.0 / (dh as f32).sqrt();
         for (li, lw) in self.layers.iter().enumerate() {
@@ -808,17 +809,22 @@ impl<W: WeightMatrix> NativeWeights<W> {
             let mut hq = rmsnorm_rows(&x, d, &lw.ln1);
             qdq_rows(&mut hq, d, spec);
             let hb = match residual_of(tf) {
-                Some(t1) => t1.backward_rows(&hq),
+                Some(t1) => {
+                    let hb = t1.backward_rows(&hq);
+                    scratch::give(hq);
+                    hb
+                }
                 None => hq,
             };
             let mut q = linear(&hb, &lw.wq, &lw.bq);
             let mut kn = linear(&hb, &lw.wk, &lw.bk);
             let mut vn = linear(&hb, &lw.wv, &lw.bv);
+            scratch::give(hb);
             per_head_forward(&mut vn, d, dh, li, tf);
             apply_rope_rows(&mut q, h, dh, pos);
             apply_rope_rows(&mut kn, h, dh, pos);
-            let mut o = vec![0.0f32; batch * d];
-            let mut scores = vec![0.0f32; s_max];
+            let mut o = scratch::take(batch * d);
+            let mut scores = scratch::take(s_max);
             for b in 0..batch {
                 let p = pos[b];
                 // scatter the new K/V row (one-hot in the graph: an
@@ -846,17 +852,27 @@ impl<W: WeightMatrix> NativeWeights<W> {
                     }
                 }
             }
+            scratch::give(q);
+            scratch::give(kn);
+            scratch::give(vn);
+            scratch::give(scores);
             qdq_rows(&mut o, d, spec);
             per_head_backward(&mut o, d, dh, li, tf);
             let y = linear(&o, &lw.wo, &lw.bo);
+            scratch::give(o);
             add_block_output(&mut x, &y, tf);
+            scratch::give(y);
             self.ffn(li, lw, &mut x, spec, tf);
         }
         let mut xf = rmsnorm_rows(&x, d, &self.lnf);
+        scratch::give(x);
         if let Some(t1) = residual_of(tf) {
-            xf = t1.backward_rows(&xf);
+            let txf = t1.backward_rows(&xf);
+            scratch::give(std::mem::replace(&mut xf, txf));
         }
-        Ok((linear(&xf, &self.head, &self.bhead), out_kv))
+        let logits = linear(&xf, &self.head, &self.bhead);
+        scratch::give(xf);
+        Ok((logits, out_kv))
     }
 
     /// [`Self::forward_decode_spec`] for the paged KV cache: instead of
@@ -889,10 +905,11 @@ impl<W: WeightMatrix> NativeWeights<W> {
         }
         spec.validate(dims)?;
         validate_spec_run(dims, tf)?;
-        let mut new_rows: Vec<Vec<f32>> = Vec::with_capacity(dims.n_layers * 2);
+        let mut new_rows: Vec<Vec<f32>> = scratch::take_rows(dims.n_layers * 2);
         let mut x = self.embed_rows(tokens);
         if let Some(t1) = residual_of(tf) {
-            x = t1.forward_rows(&x);
+            let tx = t1.forward_rows(&x);
+            scratch::give(std::mem::replace(&mut x, tx));
         }
         let scale = 1.0 / (dh as f32).sqrt();
         for (li, lw) in self.layers.iter().enumerate() {
@@ -901,17 +918,22 @@ impl<W: WeightMatrix> NativeWeights<W> {
             let mut hq = rmsnorm_rows(&x, d, &lw.ln1);
             qdq_rows(&mut hq, d, spec);
             let hb = match residual_of(tf) {
-                Some(t1) => t1.backward_rows(&hq),
+                Some(t1) => {
+                    let hb = t1.backward_rows(&hq);
+                    scratch::give(hq);
+                    hb
+                }
                 None => hq,
             };
             let mut q = linear(&hb, &lw.wq, &lw.bq);
             let mut kn = linear(&hb, &lw.wk, &lw.bk);
             let mut vn = linear(&hb, &lw.wv, &lw.bv);
+            scratch::give(hb);
             per_head_forward(&mut vn, d, dh, li, tf);
             apply_rope_rows(&mut q, h, dh, pos);
             apply_rope_rows(&mut kn, h, dh, pos);
-            let mut o = vec![0.0f32; batch * d];
-            let mut scores = vec![0.0f32; s_max];
+            let mut o = scratch::take(batch * d);
+            let mut scores = scratch::take(s_max);
             for b in 0..batch {
                 let p = pos[b];
                 for hh in 0..h {
@@ -939,19 +961,27 @@ impl<W: WeightMatrix> NativeWeights<W> {
                     }
                 }
             }
+            scratch::give(q);
+            scratch::give(scores);
             qdq_rows(&mut o, d, spec);
             per_head_backward(&mut o, d, dh, li, tf);
             let y = linear(&o, &lw.wo, &lw.bo);
+            scratch::give(o);
             add_block_output(&mut x, &y, tf);
+            scratch::give(y);
             self.ffn(li, lw, &mut x, spec, tf);
             new_rows.push(kn);
             new_rows.push(vn);
         }
         let mut xf = rmsnorm_rows(&x, d, &self.lnf);
+        scratch::give(x);
         if let Some(t1) = residual_of(tf) {
-            xf = t1.backward_rows(&xf);
+            let txf = t1.backward_rows(&xf);
+            scratch::give(std::mem::replace(&mut xf, txf));
         }
-        Ok((linear(&xf, &self.head, &self.bhead), new_rows))
+        let logits = linear(&xf, &self.head, &self.bhead);
+        scratch::give(xf);
+        Ok((logits, new_rows))
     }
 
     /// [`Self::forward_prefill_spec`] executed under a tensor-parallel
@@ -1028,10 +1058,11 @@ impl<W: WeightMatrix> NativeWeights<W> {
         spec.validate(dims)?;
         validate_spec_run(dims, tf)?;
         plan.validate(dims)?;
-        let mut new_rows: Vec<Vec<f32>> = Vec::with_capacity(dims.n_layers * 2);
+        let mut new_rows: Vec<Vec<f32>> = scratch::take_rows(dims.n_layers * 2);
         let mut x = self.embed_rows(tokens);
         if let Some(t1) = residual_of(tf) {
-            x = t1.forward_rows(&x);
+            let tx = t1.forward_rows(&x);
+            scratch::give(std::mem::replace(&mut x, tx));
         }
         let scale = 1.0 / (dh as f32).sqrt();
         for (li, lw) in self.layers.iter().enumerate() {
@@ -1040,7 +1071,11 @@ impl<W: WeightMatrix> NativeWeights<W> {
             let mut hq = rmsnorm_rows(&x, d, &lw.ln1);
             qdq_rows(&mut hq, d, spec);
             let hb = match residual_of(tf) {
-                Some(t1) => t1.backward_rows(&hq),
+                Some(t1) => {
+                    let hb = t1.backward_rows(&hq);
+                    scratch::give(hq);
+                    hb
+                }
                 None => hq,
             };
             let hb = Mat::from_vec(batch, d, hb);
@@ -1054,8 +1089,8 @@ impl<W: WeightMatrix> NativeWeights<W> {
                 head_seg_forward(&mut vn, dh, li, hh, tf);
                 apply_rope_rows(&mut q, 1, dh, pos);
                 apply_rope_rows(&mut kn, 1, dh, pos);
-                let mut o = vec![0.0f32; batch * dh];
-                let mut scores = vec![0.0f32; s_max];
+                let mut o = scratch::take(batch * dh);
+                let mut scores = scratch::take(s_max);
                 for b in 0..batch {
                     let p = pos[b];
                     let qrow = &q[b * dh..(b + 1) * dh];
@@ -1081,30 +1116,42 @@ impl<W: WeightMatrix> NativeWeights<W> {
                         }
                     }
                 }
+                scratch::give(q);
+                scratch::give(scores);
                 (kn, vn, o)
             });
+            scratch::give(hb.data);
             // fixed-order assembly into (batch, d) row buffers
-            let mut kn = vec![0.0f32; batch * d];
-            let mut vn = vec![0.0f32; batch * d];
-            let mut o = vec![0.0f32; batch * d];
-            for (hh, (kh, vh, oh)) in heads.iter().enumerate() {
-                scatter_cols(&mut kn, d, kh, hh * dh, dh);
-                scatter_cols(&mut vn, d, vh, hh * dh, dh);
-                scatter_cols(&mut o, d, oh, hh * dh, dh);
+            let mut kn = scratch::take(batch * d);
+            let mut vn = scratch::take(batch * d);
+            let mut o = scratch::take(batch * d);
+            for (hh, (kh, vh, oh)) in heads.into_iter().enumerate() {
+                scatter_cols(&mut kn, d, &kh, hh * dh, dh);
+                scatter_cols(&mut vn, d, &vh, hh * dh, dh);
+                scatter_cols(&mut o, d, &oh, hh * dh, dh);
+                scratch::give(kh);
+                scratch::give(vh);
+                scratch::give(oh);
             }
             qdq_rows(&mut o, d, spec);
             per_head_backward(&mut o, d, dh, li, tf);
             let y = self.attn_out_shard(lw, &o, plan);
+            scratch::give(o);
             add_block_output(&mut x, &y, tf);
+            scratch::give(y);
             self.ffn_shard(li, lw, &mut x, spec, tf, plan);
             new_rows.push(kn);
             new_rows.push(vn);
         }
         let mut xf = rmsnorm_rows(&x, d, &self.lnf);
+        scratch::give(x);
         if let Some(t1) = residual_of(tf) {
-            xf = t1.backward_rows(&xf);
+            let txf = t1.backward_rows(&xf);
+            scratch::give(std::mem::replace(&mut xf, txf));
         }
-        Ok((linear(&xf, &self.head, &self.bhead), new_rows))
+        let logits = linear(&xf, &self.head, &self.bhead);
+        scratch::give(xf);
+        Ok((logits, new_rows))
     }
 
     /// [`Self::forward_decode_spec`] under a shard plan: runs the append
@@ -1141,7 +1188,7 @@ impl<W: WeightMatrix> NativeWeights<W> {
 
     fn embed_rows(&self, tokens: &[i32]) -> Vec<f32> {
         let d = self.dims.d_model;
-        let mut x = vec![0.0f32; tokens.len() * d];
+        let mut x = scratch::take(tokens.len() * d);
         for (i, &tk) in tokens.iter().enumerate() {
             // XLA gather clamps out-of-range indices; mirror that.
             let row = (tk.max(0) as usize).min(self.dims.vocab - 1);
@@ -1190,21 +1237,29 @@ impl<W: WeightMatrix> NativeWeights<W> {
         let mut hq = rmsnorm_rows(x, d, &lw.ln1);
         qdq_rows(&mut hq, d, spec);
         let hb = match residual_of(tf) {
-            Some(t1) => t1.backward_rows(&hq),
+            Some(t1) => {
+                let hb = t1.backward_rows(&hq);
+                scratch::give(hq);
+                hb
+            }
             None => hq,
         };
         let mut q = linear(&hb, &lw.wq, &lw.bq);
         let mut k = linear(&hb, &lw.wk, &lw.bk);
         let mut v = linear(&hb, &lw.wv, &lw.bv);
+        scratch::give(hb);
         per_head_forward(&mut v, d, dh, li, tf);
         let pos: Vec<i32> = (0..n).map(|i| (i % t) as i32).collect();
         apply_rope_rows(&mut q, h, dh, &pos);
         apply_rope_rows(&mut k, h, dh, &pos);
         let mut o = attention_full(&q, &k, &v, batch, t, lens, h, dh);
+        scratch::give(q);
         qdq_rows(&mut o, d, spec);
         per_head_backward(&mut o, d, dh, li, tf);
         let y = linear(&o, &lw.wo, &lw.bo);
+        scratch::give(o);
         add_block_output(x, &y, tf);
+        scratch::give(y);
         (k, v)
     }
 
@@ -1221,17 +1276,21 @@ impl<W: WeightMatrix> NativeWeights<W> {
         let mut ff = self.ffn_gate(lw, x, spec, tf);
         let tfd = tf.and_then(|(s, _)| s.ffn_down(li));
         if let Some(tfd) = tfd {
-            ff = tfd.forward_rows(&ff);
+            let tff = tfd.forward_rows(&ff);
+            scratch::give(std::mem::replace(&mut ff, tff));
         }
         qdq_rows(&mut ff, self.dims.d_ff, spec);
         // in Folded mode the inverse is baked into wd; the forward above is
         // the online remainder (same split as the fixed T3 Hadamard, whose
         // inverse lives in pre-folded artifact weights)
         if let (Some(tfd), Some((_, TransformMode::Unfolded))) = (tfd, tf) {
-            ff = tfd.backward_rows(&ff);
+            let tff = tfd.backward_rows(&ff);
+            scratch::give(std::mem::replace(&mut ff, tff));
         }
         let y = linear(&ff, &lw.wd, &lw.bd);
+        scratch::give(ff);
         add_block_output(x, &y, tf);
+        scratch::give(y);
     }
 
     /// The FFN up to (and including) the online T3 Hadamard: the rows an
@@ -1247,15 +1306,21 @@ impl<W: WeightMatrix> NativeWeights<W> {
         let mut hq = rmsnorm_rows(x, d, &lw.ln2);
         qdq_rows(&mut hq, d, spec);
         let hb = match residual_of(tf) {
-            Some(t1) => t1.backward_rows(&hq),
+            Some(t1) => {
+                let hb = t1.backward_rows(&hq);
+                scratch::give(hq);
+                hb
+            }
             None => hq,
         };
         let mut ff = linear(&hb, &lw.wg, &lw.bg);
         silu_in_place(&mut ff);
         let up = linear(&hb, &lw.wu, &lw.bu);
+        scratch::give(hb);
         for (g, u) in ff.iter_mut().zip(&up) {
             *g *= *u;
         }
+        scratch::give(up);
         if let Some(tb) = spec.t3 {
             block_hadamard_apply(&mut ff, tb);
         }
@@ -1289,7 +1354,11 @@ impl<W: WeightMatrix> NativeWeights<W> {
         let mut hq = rmsnorm_rows(x, d, &lw.ln1);
         qdq_rows(&mut hq, d, spec);
         let hb = match residual_of(tf) {
-            Some(t1) => t1.backward_rows(&hq),
+            Some(t1) => {
+                let hb = t1.backward_rows(&hq);
+                scratch::give(hq);
+                hb
+            }
             None => hq,
         };
         let hb = Mat::from_vec(n, d, hb);
@@ -1304,20 +1373,27 @@ impl<W: WeightMatrix> NativeWeights<W> {
             apply_rope_rows(&mut q, 1, dh, &pos);
             apply_rope_rows(&mut k, 1, dh, &pos);
             let o = attention_full(&q, &k, &v, batch, t, lens, 1, dh);
+            scratch::give(q);
             (k, v, o)
         });
-        let mut k_rows = vec![0.0f32; n * d];
-        let mut v_rows = vec![0.0f32; n * d];
-        let mut o = vec![0.0f32; n * d];
-        for (hh, (kh, vh, oh)) in heads.iter().enumerate() {
-            scatter_cols(&mut k_rows, d, kh, hh * dh, dh);
-            scatter_cols(&mut v_rows, d, vh, hh * dh, dh);
-            scatter_cols(&mut o, d, oh, hh * dh, dh);
+        scratch::give(hb.data);
+        let mut k_rows = scratch::take(n * d);
+        let mut v_rows = scratch::take(n * d);
+        let mut o = scratch::take(n * d);
+        for (hh, (kh, vh, oh)) in heads.into_iter().enumerate() {
+            scatter_cols(&mut k_rows, d, &kh, hh * dh, dh);
+            scatter_cols(&mut v_rows, d, &vh, hh * dh, dh);
+            scatter_cols(&mut o, d, &oh, hh * dh, dh);
+            scratch::give(kh);
+            scratch::give(vh);
+            scratch::give(oh);
         }
         qdq_rows(&mut o, d, spec);
         per_head_backward(&mut o, d, dh, li, tf);
         let y = self.attn_out_shard(lw, &o, plan);
+        scratch::give(o);
         add_block_output(x, &y, tf);
+        scratch::give(y);
         (k_rows, v_rows)
     }
 
@@ -1332,11 +1408,14 @@ impl<W: WeightMatrix> NativeWeights<W> {
         let n = o.len() / d;
         let partials = run_units(plan.workers, h, |hh| {
             let seg = cols_of(o, d, hh * dh, (hh + 1) * dh);
-            lw.wo.matmul_band(&seg, hh * dh, (hh + 1) * dh).data
+            let p = lw.wo.matmul_band(&seg, hh * dh, (hh + 1) * dh).data;
+            scratch::give(seg.data);
+            p
         });
-        let mut y = vec![0.0f32; n * d];
-        for p in &partials {
-            add_in_place(&mut y, p);
+        let mut y = scratch::take(n * d);
+        for p in partials {
+            add_in_place(&mut y, &p);
+            scratch::give(p);
         }
         for row in y.chunks_mut(d) {
             for (ov, bb) in row.iter_mut().zip(&lw.bo) {
@@ -1365,7 +1444,11 @@ impl<W: WeightMatrix> NativeWeights<W> {
         let mut hq = rmsnorm_rows(x, d, &lw.ln2);
         qdq_rows(&mut hq, d, spec);
         let hb = match residual_of(tf) {
-            Some(t1) => t1.backward_rows(&hq),
+            Some(t1) => {
+                let hb = t1.backward_rows(&hq);
+                scratch::give(hq);
+                hb
+            }
             None => hq,
         };
         let hb = Mat::from_vec(n, d, hb);
@@ -1381,33 +1464,42 @@ impl<W: WeightMatrix> NativeWeights<W> {
             for (gv, uv) in g.iter_mut().zip(&up) {
                 *gv *= *uv;
             }
+            scratch::give(up);
             g
         });
-        let mut ff = vec![0.0f32; n * f];
-        for (u, bvals) in bands.iter().enumerate() {
+        scratch::give(hb.data);
+        let mut ff = scratch::take(n * f);
+        for (u, bvals) in bands.into_iter().enumerate() {
             let (c0, c1) = band(u);
-            scatter_cols(&mut ff, f, bvals, c0, c1 - c0);
+            scatter_cols(&mut ff, f, &bvals, c0, c1 - c0);
+            scratch::give(bvals);
         }
         if let Some(tb) = spec.t3 {
             block_hadamard_apply(&mut ff, tb);
         }
         let tfd = tf.and_then(|(s, _)| s.ffn_down(li));
         if let Some(tfd) = tfd {
-            ff = tfd.forward_rows(&ff);
+            let tx = tfd.forward_rows(&ff);
+            scratch::give(std::mem::replace(&mut ff, tx));
         }
         qdq_rows(&mut ff, f, spec);
         if let (Some(tfd), Some((_, TransformMode::Unfolded))) = (tfd, tf) {
-            ff = tfd.backward_rows(&ff);
+            let tx = tfd.backward_rows(&ff);
+            scratch::give(std::mem::replace(&mut ff, tx));
         }
         // stage 2 fork-join: wd row bands, fixed ascending-band reduction
         let partials = run_units(plan.workers, n_bands, |u| {
             let (r0, r1) = band(u);
             let seg = cols_of(&ff, f, r0, r1);
-            lw.wd.matmul_band(&seg, r0, r1).data
+            let p = lw.wd.matmul_band(&seg, r0, r1).data;
+            scratch::give(seg.data);
+            p
         });
-        let mut y = vec![0.0f32; n * d];
-        for p in &partials {
-            add_in_place(&mut y, p);
+        scratch::give(ff);
+        let mut y = scratch::take(n * d);
+        for p in partials {
+            add_in_place(&mut y, &p);
+            scratch::give(p);
         }
         for row in y.chunks_mut(d) {
             for (ov, bb) in row.iter_mut().zip(&lw.bd) {
@@ -1415,6 +1507,7 @@ impl<W: WeightMatrix> NativeWeights<W> {
             }
         }
         add_block_output(x, &y, tf);
+        scratch::give(y);
     }
 }
 
@@ -1437,8 +1530,8 @@ fn attention_full(
     let d = h * dh;
     let n = batch * t;
     let scale = 1.0 / (dh as f32).sqrt();
-    let mut o = vec![0.0f32; n * d];
-    let mut scores = vec![0.0f32; t];
+    let mut o = scratch::take(n * d);
+    let mut scores = scratch::take(t);
     for b in 0..batch {
         let len = lens[b];
         let base = b * t * d;
@@ -1462,6 +1555,7 @@ fn attention_full(
             }
         }
     }
+    scratch::give(scores);
     o
 }
 
@@ -1526,7 +1620,7 @@ fn run_units<R: Send>(workers: usize, n_units: usize, f: impl Fn(usize) -> R + S
 fn cols_of(rows: &[f32], d: usize, c0: usize, c1: usize) -> Mat {
     let n = rows.len() / d;
     let w = c1 - c0;
-    let mut out = Mat::zeros(n, w);
+    let mut out = Mat { rows: n, cols: w, data: scratch::take(n * w) };
     for i in 0..n {
         out.data[i * w..(i + 1) * w].copy_from_slice(&rows[i * d + c0..i * d + c1]);
     }
@@ -1592,7 +1686,7 @@ fn add_block_output(x: &mut [f32], y: &[f32], tf: SpecRun) {
 }
 
 fn rmsnorm_rows(x: &[f32], d: usize, g: &[f32]) -> Vec<f32> {
-    let mut out = vec![0.0f32; x.len()];
+    let mut out = scratch::take(x.len());
     for (row_in, row_out) in x.chunks(d).zip(out.chunks_mut(d)) {
         let ms = row_in.iter().map(|v| v * v).sum::<f32>() / d as f32;
         let r = 1.0 / (ms + EPS).sqrt();
@@ -1607,10 +1701,14 @@ fn rmsnorm_rows(x: &[f32], d: usize, g: &[f32]) -> Vec<f32> {
 /// Generic over the weight storage: a dense [`Mat`] runs `Mat::matmul`, a
 /// [`PackedMat`] runs the fused `linalg::packed_matmul` LUT kernel on the
 /// packed bytes directly — the serving hot path's single dispatch point.
+/// The output is checked out of the `util::scratch` arena (no input copy,
+/// no fresh allocation in steady state); callers on the decode hot path
+/// `scratch::give` it back once dead.
 fn linear<W: WeightMatrix>(x: &[f32], w: &W, b: &[f32]) -> Vec<f32> {
     debug_assert_eq!(x.len() % w.in_dim(), 0);
     let n = x.len() / w.in_dim();
-    let mut out = w.matmul_pre(&Mat::from_vec(n, w.in_dim(), x.to_vec())).data;
+    let mut out = scratch::take(n * w.out_dim());
+    w.matmul_pre_into(x, n, &mut out);
     for row in out.chunks_mut(w.out_dim()) {
         for (o, bb) in row.iter_mut().zip(b) {
             *o += *bb;
@@ -1632,9 +1730,10 @@ fn apply_rope_rows(x: &mut [f32], n_heads: usize, dh: usize, pos: &[i32]) {
     let half = dh / 2;
     let d = n_heads * dh;
     // position-independent inverse frequencies, hoisted out of the row loop
-    let inv: Vec<f32> = (0..half)
-        .map(|i| 1.0 / ROPE_THETA.powf((2 * i) as f32 / dh as f32))
-        .collect();
+    let mut inv = scratch::take(half);
+    for (i, v) in inv.iter_mut().enumerate() {
+        *v = 1.0 / ROPE_THETA.powf((2 * i) as f32 / dh as f32);
+    }
     for (row, &p) in x.chunks_mut(d).zip(pos) {
         for (i, &invf) in inv.iter().enumerate() {
             let ang = p as f32 * invf;
@@ -1648,6 +1747,7 @@ fn apply_rope_rows(x: &mut [f32], n_heads: usize, dh: usize, pos: &[i32]) {
             }
         }
     }
+    scratch::give(inv);
 }
 
 fn softmax_inplace(s: &mut [f32]) {

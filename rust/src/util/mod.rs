@@ -1,8 +1,10 @@
-//! Small utilities: deterministic RNG, summary statistics, and the scoped
-//! thread pool used by the quantization hot paths.
+//! Small utilities: deterministic RNG, summary statistics, the fork-join
+//! substrate (persistent worker pool + scoped fallback), and the recycling
+//! scratch arena used by the decode hot paths.
 
 pub mod par;
 pub mod rng;
+pub mod scratch;
 pub mod stats;
 
 pub use rng::Pcg64;

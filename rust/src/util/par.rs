@@ -1,14 +1,35 @@
-//! Scoped data-parallel substrate (rayon is not vendorable offline).
+//! Deterministic data-parallel substrate (rayon is not vendorable offline).
 //!
 //! The quantization hot paths (MX QDQ, pack/unpack, RTN/GPTQ, KV
 //! gather/scatter) all reduce to "apply an independent kernel to disjoint
 //! chunks of one buffer". [`for_each_chunk`] and [`for_each_chunk2`] fan
-//! those chunks out over `std::thread::scope` workers. The partition is
-//! deterministic and each chunk's computation is self-contained, so results
-//! are bit-identical for any worker count — property-tested in
-//! `rust/tests/codec_props.rs`.
+//! those chunks out over worker threads. The partition is deterministic and
+//! each chunk's computation is self-contained, so results are bit-identical
+//! for any worker count — property-tested in `rust/tests/codec_props.rs`.
+//!
+//! Two execution substrates share that partition:
+//!
+//! * **Scoped fallback** — `std::thread::scope` spawns fresh OS threads per
+//!   fork-join stage. Always available; used when no pool is installed.
+//! * **[`WorkerPool`]** — long-lived threads parked on a condvar, installed
+//!   ambiently with [`with_pool`]. A fork-join [`WorkerPool::run_on`]
+//!   dispatches task indices to the same spans the scoped path would have
+//!   spawned, so switching substrates cannot change any result bit. The
+//!   serving executor owns one pool and installs it around every step; pool
+//!   threads also keep the `util::scratch` thread-local arenas warm, which
+//!   is what makes the zero-allocation decode steady state possible
+//!   (scoped threads die after each stage and take their arenas with them).
+//!
+//! Work is assigned by *task index*, never by arrival order: span `ti`
+//! always covers chunks `[ti * per, (ti + 1) * per)`. Any executor that
+//! preserves the index → work mapping is bit-identical to the serial loop,
+//! which is why the pool carries every existing parity gate (codec_props
+//! thread-determinism, shard_parity 1-vs-N, packed-vs-dense) unchanged.
 
-use std::cell::Cell;
+use std::cell::{Cell, RefCell};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
 
 /// Buffers smaller than this (in elements) are not worth a thread spawn;
 /// callers use it to keep tiny inputs on the serial path.
@@ -16,20 +37,35 @@ pub const PAR_MIN_LEN: usize = 1 << 12;
 
 thread_local! {
     static THREAD_OVERRIDE: Cell<Option<usize>> = Cell::new(None);
+    static CURRENT_POOL: RefCell<Option<Arc<PoolInner>>> = RefCell::new(None);
+}
+
+static DEFAULT_THREADS: OnceLock<usize> = OnceLock::new();
+static LIVE_POOL_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// `LATMIX_THREADS` env > available parallelism, resolved once per process.
+/// `num_threads()` is called inside per-block codec loops and the decode
+/// hot path, where a per-call `std::env::var` both takes a lock and
+/// allocates; the env is only ever set at process launch (CI matrix), so
+/// caching cannot change observable behavior.
+fn default_threads() -> usize {
+    *DEFAULT_THREADS.get_or_init(|| {
+        if let Ok(s) = std::env::var("LATMIX_THREADS") {
+            if let Ok(n) = s.parse::<usize>() {
+                return n.max(1);
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    })
 }
 
 /// Worker count: [`with_threads`] override > `LATMIX_THREADS` env >
-/// available parallelism.
+/// available parallelism (the latter two cached in a `OnceLock`).
 pub fn num_threads() -> usize {
     if let Some(n) = THREAD_OVERRIDE.with(|c| c.get()) {
         return n.max(1);
     }
-    if let Ok(s) = std::env::var("LATMIX_THREADS") {
-        if let Ok(n) = s.parse::<usize>() {
-            return n.max(1);
-        }
-    }
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    default_threads()
 }
 
 /// Run `f` with the worker count pinned to `n` on the calling thread.
@@ -49,17 +85,264 @@ fn ceil_div(a: usize, b: usize) -> usize {
     (a + b - 1) / b
 }
 
+// ---------------------------------------------------------------------------
+// Persistent worker pool
+// ---------------------------------------------------------------------------
+
+/// Type-erased pointer to the current fork-join closure. Only dereferenced
+/// by workers between job post and join, while the closure is guaranteed
+/// alive on the dispatching thread's stack (`pool_run` blocks until
+/// `remaining == 0`).
+#[derive(Clone, Copy)]
+struct JobPtr(*const (dyn Fn(usize) + Sync));
+
+// SAFETY: the pointee is `Sync` (shared &-access from many threads is fine)
+// and the pointer never outlives the blocking dispatch that created it.
+unsafe impl Send for JobPtr {}
+
+struct JobSlot {
+    /// Incremented per dispatched job; workers compare against the last
+    /// epoch they executed so one `notify_all` cannot double-run a task.
+    epoch: u64,
+    job: Option<JobPtr>,
+    n_tasks: usize,
+    remaining: usize,
+    shutdown: bool,
+    panicked: bool,
+}
+
+struct PoolInner {
+    job: Mutex<JobSlot>,
+    /// Workers park here between jobs.
+    work: Condvar,
+    /// The dispatcher parks here until `remaining == 0`.
+    done: Condvar,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+    /// Serializes concurrent dispatchers (e.g. two engines sharing a cloned
+    /// executor) over the single job slot.
+    dispatch: Mutex<()>,
+}
+
+fn worker_loop(inner: Arc<PoolInner>, w: usize) {
+    LIVE_POOL_THREADS.fetch_add(1, Ordering::SeqCst);
+    let mut seen = 0u64;
+    loop {
+        let (ptr, epoch) = {
+            let mut g = inner.job.lock().unwrap();
+            loop {
+                if g.shutdown {
+                    drop(g);
+                    LIVE_POOL_THREADS.fetch_sub(1, Ordering::SeqCst);
+                    return;
+                }
+                if g.epoch != seen && w < g.n_tasks {
+                    if let Some(ptr) = g.job {
+                        break (ptr, g.epoch);
+                    }
+                }
+                g = inner.work.wait(g).unwrap();
+            }
+        };
+        seen = epoch;
+        // SAFETY: see `JobPtr` — the closure outlives this job's join.
+        let f = unsafe { &*ptr.0 };
+        let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(w))).is_ok();
+        let mut g = inner.job.lock().unwrap();
+        if !ok {
+            g.panicked = true;
+        }
+        g.remaining -= 1;
+        if g.remaining == 0 {
+            inner.done.notify_all();
+        }
+    }
+}
+
+/// Grow the pool to at least `n` parked workers. Worker `w`'s index is
+/// fixed at spawn, so task → thread assignment is stable for the pool's
+/// lifetime. Spawning only happens the first time a larger fan-out is
+/// requested; the steady state parks and wakes existing threads.
+fn ensure_workers(inner: &Arc<PoolInner>, n: usize) {
+    let mut handles = inner.handles.lock().unwrap();
+    while handles.len() < n {
+        let w = handles.len();
+        let arc = Arc::clone(inner);
+        let h = std::thread::Builder::new()
+            .name(format!("latmix-pool-{w}"))
+            .spawn(move || worker_loop(arc, w))
+            .expect("spawn pool worker");
+        handles.push(h);
+    }
+}
+
+/// Fork-join on the pool: post `f` as tasks `0..n_tasks`, wake the parked
+/// workers, block until every task has finished. Worker `w` runs exactly
+/// task `w`, mirroring the scoped path's spawn-per-span assignment.
+fn pool_run(inner: &Arc<PoolInner>, n_tasks: usize, f: &(dyn Fn(usize) + Sync)) {
+    if n_tasks == 0 {
+        return;
+    }
+    let _serial = inner.dispatch.lock().unwrap();
+    ensure_workers(inner, n_tasks);
+    {
+        let mut g = inner.job.lock().unwrap();
+        g.epoch += 1;
+        g.job = Some(JobPtr(f as *const _));
+        g.n_tasks = n_tasks;
+        g.remaining = n_tasks;
+        g.panicked = false;
+        inner.work.notify_all();
+    }
+    let mut g = inner.job.lock().unwrap();
+    while g.remaining > 0 {
+        g = inner.done.wait(g).unwrap();
+    }
+    g.job = None;
+    let panicked = g.panicked;
+    drop(g);
+    if panicked {
+        // Matches the scoped substrate, where a worker panic propagates
+        // through the join on the dispatching thread.
+        panic!("worker pool task panicked");
+    }
+}
+
+/// Long-lived fork-join pool: threads are spawned lazily on first use,
+/// parked on a condvar between jobs, and joined on drop. Hold it in an
+/// `Arc` and install it ambiently with [`with_pool`] (or
+/// [`WorkerPool::install`]) to route [`for_each_chunk`],
+/// [`for_each_chunk2`], and [`run_workers`] onto persistent threads
+/// instead of per-stage `std::thread::scope` spawns.
+pub struct WorkerPool {
+    inner: Arc<PoolInner>,
+}
+
+impl WorkerPool {
+    /// Create an empty pool; workers are spawned on demand by the first
+    /// fork-join that needs them and reused afterwards.
+    pub fn new() -> Self {
+        WorkerPool {
+            inner: Arc::new(PoolInner {
+                job: Mutex::new(JobSlot {
+                    epoch: 0,
+                    job: None,
+                    n_tasks: 0,
+                    remaining: 0,
+                    shutdown: false,
+                    panicked: false,
+                }),
+                work: Condvar::new(),
+                done: Condvar::new(),
+                handles: Mutex::new(Vec::new()),
+                dispatch: Mutex::new(()),
+            }),
+        }
+    }
+
+    /// Fork-join: run `f(task_index)` for every index in `0..n_tasks` on
+    /// pool workers and return once all have finished. Task `w` always
+    /// runs on worker `w` — the index → work mapping is the contract that
+    /// keeps pool execution bit-identical to the scoped substrate.
+    pub fn run_on(&self, n_tasks: usize, f: impl Fn(usize) + Sync) {
+        pool_run(&self.inner, n_tasks, &f);
+    }
+
+    /// Number of spawned (live) worker threads.
+    pub fn size(&self) -> usize {
+        self.inner.handles.lock().unwrap().len()
+    }
+
+    /// Run `f` with this pool installed as the calling thread's fork-join
+    /// substrate. Shorthand for `with_pool(Some(self), f)`.
+    pub fn install<R>(&self, f: impl FnOnce() -> R) -> R {
+        with_pool(Some(self), f)
+    }
+}
+
+impl Default for WorkerPool {
+    fn default() -> Self {
+        WorkerPool::new()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut g = self.inner.job.lock().unwrap();
+            g.shutdown = true;
+            self.inner.work.notify_all();
+        }
+        let handles = std::mem::take(&mut *self.inner.handles.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Number of pool worker threads currently alive across all pools.
+/// [`WorkerPool`]'s drop joins its workers, so after the last clone of a
+/// pool is dropped this reflects the decrement — used by the pool
+/// lifecycle tests to prove engines do not leak threads.
+pub fn live_pool_threads() -> usize {
+    LIVE_POOL_THREADS.load(Ordering::SeqCst)
+}
+
+/// Install `pool` (or clear the installation with `None`) as the calling
+/// thread's fork-join substrate for the duration of `f`. Nested installs
+/// restore the previous substrate on exit, including on unwind. Installing
+/// is allocation-free (an `Arc` refcount bump), so the serving executor
+/// can wrap every step without disturbing the zero-allocation gate.
+pub fn with_pool<R>(pool: Option<&WorkerPool>, f: impl FnOnce() -> R) -> R {
+    struct Restore(Option<Arc<PoolInner>>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            let prev = self.0.take();
+            CURRENT_POOL.with(|c| *c.borrow_mut() = prev);
+        }
+    }
+    let next = pool.map(|p| Arc::clone(&p.inner));
+    let prev = CURRENT_POOL.with(|c| std::mem::replace(&mut *c.borrow_mut(), next));
+    let _restore = Restore(prev);
+    f()
+}
+
+fn current_pool_inner() -> Option<Arc<PoolInner>> {
+    CURRENT_POOL.with(|c| c.borrow().clone())
+}
+
+// ---------------------------------------------------------------------------
+// Fork-join entry points
+// ---------------------------------------------------------------------------
+
 /// Fork-join stage for the tensor-parallel shard workers: run
-/// `f(worker_index)` on `n` scoped threads and return the results in
-/// worker order. `n == 1` runs inline on the caller — the single-worker
-/// shard path stays an ordinary serial call, which is what makes 1-vs-N
+/// `f(worker_index)` on `n` workers and return the results in worker
+/// order. `n == 1` runs inline on the caller — the single-worker shard
+/// path stays an ordinary serial call, which is what makes 1-vs-N
 /// bit-parity checkable (`rust/tests/shard_parity.rs`). Unlike
 /// [`for_each_chunk`] this ignores [`num_threads`]: the caller's shard
-/// plan *is* the worker count.
+/// plan *is* the worker count. Runs on the installed [`WorkerPool`] when
+/// one is present, scoped threads otherwise; worker `w` computes the same
+/// result either way.
 pub fn run_workers<R: Send>(n: usize, f: impl Fn(usize) -> R + Sync) -> Vec<R> {
     let n = n.max(1);
     if n == 1 {
         return vec![f(0)];
+    }
+    if let Some(pool) = current_pool_inner() {
+        let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        let base = slots.as_mut_ptr() as usize;
+        let f = &f;
+        let task = move |w: usize| {
+            // SAFETY: each task writes only slot `w` (disjoint), and
+            // `pool_run` joins all tasks before `slots` is read or freed.
+            let slot = unsafe { &mut *(base as *mut Option<R>).add(w) };
+            *slot = Some(f(w));
+        };
+        pool_run(&pool, n, &task);
+        return slots
+            .into_iter()
+            .map(|s| s.expect("pool worker result missing"))
+            .collect();
     }
     let f = &f;
     std::thread::scope(|s| {
@@ -72,9 +355,11 @@ pub fn run_workers<R: Send>(n: usize, f: impl Fn(usize) -> R + Sync) -> Vec<R> {
 }
 
 /// Apply `f(chunk_index, chunk)` to consecutive `chunk_len`-sized chunks of
-/// `data` (the last chunk may be shorter), fanned out over scoped worker
-/// threads. Workers own contiguous runs of chunks, so side effects equal
-/// the serial loop exactly for any worker count.
+/// `data` (the last chunk may be shorter), fanned out over worker threads.
+/// Workers own contiguous runs of chunks, so side effects equal the serial
+/// loop exactly for any worker count — and for either substrate: span `ti`
+/// covers chunks `[ti * per, (ti + 1) * per)` whether it lands on a scoped
+/// thread or a parked pool worker.
 pub fn for_each_chunk<T, F>(data: &mut [T], chunk_len: usize, f: F)
 where
     T: Send,
@@ -90,6 +375,27 @@ where
         return;
     }
     let per = ceil_div(n_chunks, threads);
+    if let Some(pool) = current_pool_inner() {
+        let n_spans = ceil_div(n_chunks, per);
+        let len = data.len();
+        let base = data.as_mut_ptr() as usize;
+        let f = &f;
+        let task = move |ti: usize| {
+            let start = ti * per * chunk_len;
+            let end = (start + per * chunk_len).min(len);
+            // SAFETY: spans are disjoint per task index, and `pool_run`
+            // joins every task before returning, so the exclusive borrow
+            // of `data` outlives all reconstructed sub-slices.
+            let span = unsafe {
+                std::slice::from_raw_parts_mut((base as *mut T).add(start), end - start)
+            };
+            for (ci, chunk) in span.chunks_mut(chunk_len).enumerate() {
+                f(ti * per + ci, chunk);
+            }
+        };
+        pool_run(&pool, n_spans, &task);
+        return;
+    }
     let f = &f;
     std::thread::scope(|s| {
         for (ti, span) in data.chunks_mut(per * chunk_len).enumerate() {
@@ -114,7 +420,18 @@ where
 {
     assert!(ca > 0 && cb > 0);
     let n_chunks = ceil_div(a.len(), ca);
-    assert_eq!(n_chunks, ceil_div(b.len(), cb), "chunk count mismatch");
+    let nb_chunks = ceil_div(b.len(), cb);
+    assert_eq!(
+        n_chunks, nb_chunks,
+        "for_each_chunk2 chunk count mismatch: a => {} chunks ({} elems / chunk {}), \
+         b => {} chunks ({} elems / chunk {})",
+        n_chunks,
+        a.len(),
+        ca,
+        nb_chunks,
+        b.len(),
+        cb
+    );
     let threads = num_threads().min(n_chunks);
     if threads <= 1 {
         for (ci, (x, y)) in a.chunks_mut(ca).zip(b.chunks_mut(cb)).enumerate() {
@@ -123,6 +440,30 @@ where
         return;
     }
     let per = ceil_div(n_chunks, threads);
+    if let Some(pool) = current_pool_inner() {
+        let n_spans = ceil_div(n_chunks, per);
+        let (la, lb) = (a.len(), b.len());
+        let base_a = a.as_mut_ptr() as usize;
+        let base_b = b.as_mut_ptr() as usize;
+        let f = &f;
+        let task = move |ti: usize| {
+            let (sa0, sb0) = (ti * per * ca, ti * per * cb);
+            let (sa1, sb1) = ((sa0 + per * ca).min(la), (sb0 + per * cb).min(lb));
+            // SAFETY: same disjoint-span argument as `for_each_chunk`,
+            // applied to both buffers.
+            let (sa, sb) = unsafe {
+                (
+                    std::slice::from_raw_parts_mut((base_a as *mut A).add(sa0), sa1 - sa0),
+                    std::slice::from_raw_parts_mut((base_b as *mut B).add(sb0), sb1 - sb0),
+                )
+            };
+            for (ci, (x, y)) in sa.chunks_mut(ca).zip(sb.chunks_mut(cb)).enumerate() {
+                f(ti * per + ci, x, y);
+            }
+        };
+        pool_run(&pool, n_spans, &task);
+        return;
+    }
     let f = &f;
     std::thread::scope(|s| {
         for (ti, (sa, sb)) in a.chunks_mut(per * ca).zip(b.chunks_mut(per * cb)).enumerate() {
@@ -138,6 +479,14 @@ where
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// Pool-creating tests share this lock so `live_pool_threads()`
+    /// assertions are not perturbed by a concurrently running test.
+    static POOL_TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    fn pool_lock() -> std::sync::MutexGuard<'static, ()> {
+        POOL_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
 
     #[test]
     fn chunk_matches_serial() {
@@ -180,6 +529,14 @@ mod tests {
     }
 
     #[test]
+    #[should_panic(expected = "for_each_chunk2 chunk count mismatch")]
+    fn chunk2_mismatch_reports_counts() {
+        let mut a = vec![0usize; 10]; // 10 chunks of 1
+        let mut b = vec![0u8; 50]; // 13 chunks of 4
+        for_each_chunk2(&mut a, 1, &mut b, 4, |_, _, _| {});
+    }
+
+    #[test]
     fn empty_and_single() {
         let mut empty: Vec<u32> = Vec::new();
         for_each_chunk(&mut empty, 4, |_, _| panic!("no chunks expected"));
@@ -208,5 +565,124 @@ mod tests {
         assert_eq!(with_threads(3, num_threads), 3);
         assert_eq!(with_threads(0, num_threads), 1); // clamped
         assert!(num_threads() >= 1);
+    }
+
+    #[test]
+    fn pool_chunk_matches_scoped() {
+        let _guard = pool_lock();
+        let n = 10_000usize;
+        let mut scoped: Vec<u64> = (0..n as u64).collect();
+        let mut pooled = scoped.clone();
+        let kernel = |ci: usize, chunk: &mut [u64]| {
+            for v in chunk.iter_mut() {
+                *v = v.wrapping_mul(31).wrapping_add(ci as u64);
+            }
+        };
+        with_threads(5, || for_each_chunk(&mut scoped, 7, kernel));
+        let pool = WorkerPool::new();
+        pool.install(|| with_threads(5, || for_each_chunk(&mut pooled, 7, kernel)));
+        assert_eq!(pooled, scoped);
+        assert!(pool.size() >= 2, "parallel fan-out should have spawned workers");
+    }
+
+    #[test]
+    fn pool_chunk2_matches_scoped() {
+        let _guard = pool_lock();
+        let run = |use_pool: bool| {
+            let mut a = vec![0usize; 10];
+            let mut b = vec![0u8; 38];
+            let body = |a: &mut Vec<usize>, b: &mut Vec<u8>| {
+                with_threads(3, || {
+                    for_each_chunk2(a, 1, b, 4, |ci, x, y| {
+                        x[0] = ci * 100 + y.len();
+                        for v in y.iter_mut() {
+                            *v = ci as u8;
+                        }
+                    });
+                });
+            };
+            if use_pool {
+                let pool = WorkerPool::new();
+                pool.install(|| body(&mut a, &mut b));
+            } else {
+                body(&mut a, &mut b);
+            }
+            (a, b)
+        };
+        assert_eq!(run(true), run(false));
+    }
+
+    #[test]
+    fn pool_run_workers_ordered_results() {
+        let _guard = pool_lock();
+        let pool = WorkerPool::new();
+        pool.install(|| {
+            assert_eq!(run_workers(4, |w| w * 10), vec![0, 10, 20, 30]);
+            assert_eq!(run_workers(1, |w| w), vec![0], "n == 1 stays inline");
+        });
+    }
+
+    #[test]
+    fn pool_drop_joins_workers() {
+        let _guard = pool_lock();
+        let before = live_pool_threads();
+        for _ in 0..4 {
+            let pool = WorkerPool::new();
+            pool.run_on(3, |_| {});
+            assert_eq!(live_pool_threads(), before + 3);
+            drop(pool);
+            assert_eq!(live_pool_threads(), before, "drop must join all workers");
+        }
+    }
+
+    #[test]
+    fn pool_grows_on_demand_and_reuses_threads() {
+        let _guard = pool_lock();
+        let before = live_pool_threads();
+        let pool = WorkerPool::new();
+        assert_eq!(pool.size(), 0, "workers spawn lazily");
+        pool.run_on(2, |_| {});
+        assert_eq!(pool.size(), 2);
+        pool.run_on(4, |_| {});
+        assert_eq!(pool.size(), 4);
+        for _ in 0..100 {
+            pool.run_on(4, |_| {});
+        }
+        assert_eq!(pool.size(), 4, "repeat dispatch must not spawn new threads");
+        drop(pool);
+        assert_eq!(live_pool_threads(), before);
+    }
+
+    #[test]
+    fn pool_task_panic_propagates_and_pool_survives() {
+        let _guard = pool_lock();
+        let pool = WorkerPool::new();
+        let hit = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run_on(3, |w| {
+                if w == 1 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(hit.is_err(), "worker panic must propagate to the dispatcher");
+        // The pool stays usable after a task panic.
+        let done = std::sync::atomic::AtomicUsize::new(0);
+        pool.run_on(3, |_| {
+            done.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(done.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn with_pool_restores_previous_substrate() {
+        let _guard = pool_lock();
+        let pool = WorkerPool::new();
+        assert!(current_pool_inner().is_none());
+        pool.install(|| {
+            assert!(current_pool_inner().is_some());
+            with_pool(None, || assert!(current_pool_inner().is_none()));
+            assert!(current_pool_inner().is_some());
+        });
+        assert!(current_pool_inner().is_none());
     }
 }

@@ -1,0 +1,186 @@
+//! Thread-local recycling arena for decode-step temporaries.
+//!
+//! The decode hot path (`model/forward.rs`, `linalg/packed.rs`,
+//! `coordinator/engine.rs`) needs a handful of short-lived `Vec<f32>`
+//! buffers per token step: linear outputs, attention score rows, packed
+//! decode panels, fresh KV rows. Allocating them per step is the single
+//! largest source of steady-state allocator traffic, so they are checked
+//! out of a per-thread freelist instead:
+//!
+//! * [`take`] returns a zero-filled `Vec<f32>` of the requested length,
+//!   reusing the best-fitting recycled buffer (smallest capacity that
+//!   already holds `len`, else the largest available so one `resize`
+//!   upgrades it in place).
+//! * [`give`] returns a buffer to the freelist for the next step.
+//!
+//! `take(len)` is observably identical to `vec![0.0f32; len]` — callers
+//! that forget to `give` merely allocate, which is exactly what the
+//! counting-allocator regression test (`rust/tests/alloc_steady_state.rs`)
+//! is there to catch. The freelist is thread-local on purpose: the
+//! persistent `util::par::WorkerPool` threads keep their arenas warm
+//! across steps, which is what lets parallel stages (packed GEMM panels)
+//! hit the zero-allocation steady state; scoped fallback threads die after
+//! each stage and start cold.
+//!
+//! Capacity discipline: buffer sizes in a serving process are drawn from a
+//! small fixed set (model dims x bucket sizes), so the freelist converges
+//! after a warmup step or two and is capped at [`MAX_FREE`] entries per
+//! thread to bound worst-case retention.
+
+use std::cell::RefCell;
+
+/// Per-thread freelist cap (buffers, not bytes). Decode needs well under
+/// this many live temporaries per step; anything beyond it is freed.
+const MAX_FREE: usize = 64;
+
+thread_local! {
+    static F32_FREE: RefCell<Vec<Vec<f32>>> = RefCell::new(Vec::new());
+    static ROWS_FREE: RefCell<Vec<Vec<Vec<f32>>>> = RefCell::new(Vec::new());
+}
+
+/// Check a zero-filled `Vec<f32>` of length `len` out of the calling
+/// thread's arena. Behaves exactly like `vec![0.0f32; len]`; pair with
+/// [`give`] to recycle the buffer once it is dead.
+pub fn take(len: usize) -> Vec<f32> {
+    if len == 0 {
+        return Vec::new();
+    }
+    let mut v = F32_FREE.with(|c| {
+        let mut free = c.borrow_mut();
+        if free.is_empty() {
+            return Vec::new();
+        }
+        // Best fit: smallest capacity >= len; else the largest buffer, so
+        // the in-place `resize` below upgrades the arena toward the
+        // working set's true high-water marks.
+        let mut best = 0usize;
+        for i in 1..free.len() {
+            let (cap, best_cap) = (free[i].capacity(), free[best].capacity());
+            let better = if best_cap >= len {
+                cap >= len && cap < best_cap
+            } else {
+                cap > best_cap
+            };
+            if better {
+                best = i;
+            }
+        }
+        free.swap_remove(best)
+    });
+    v.clear();
+    v.resize(len, 0.0);
+    v
+}
+
+/// Return a buffer taken with [`take`] (or any plain `Vec<f32>`) to the
+/// calling thread's arena. Contents are discarded; capacity is kept.
+pub fn give(mut v: Vec<f32>) {
+    if v.capacity() == 0 {
+        return;
+    }
+    v.clear();
+    F32_FREE.with(|c| {
+        let mut free = c.borrow_mut();
+        if free.len() < MAX_FREE {
+            free.push(v);
+        }
+    });
+}
+
+/// Check out an empty `Vec<Vec<f32>>` with capacity for at least `n`
+/// inner rows. Callers fill it with [`take`]n rows and hand the whole
+/// thing back with [`give_rows`].
+pub fn take_rows(n: usize) -> Vec<Vec<f32>> {
+    let mut outer: Vec<Vec<f32>> =
+        ROWS_FREE.with(|c| c.borrow_mut().pop()).unwrap_or_default();
+    outer.clear();
+    outer.reserve(n);
+    outer
+}
+
+/// Return a row set from [`take_rows`]: inner rows go back to the `f32`
+/// freelist, the outer vec keeps its capacity for the next step.
+pub fn give_rows(mut rows: Vec<Vec<f32>>) {
+    for r in rows.drain(..) {
+        give(r);
+    }
+    ROWS_FREE.with(|c| {
+        let mut free = c.borrow_mut();
+        if free.len() < MAX_FREE {
+            free.push(rows);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_is_zeroed_like_vec_macro() {
+        let mut v = take(8);
+        assert_eq!(v, vec![0.0f32; 8]);
+        v.iter_mut().for_each(|x| *x = 7.0);
+        give(v);
+        // Recycled buffer comes back zeroed at the requested length.
+        let v2 = take(5);
+        assert_eq!(v2, vec![0.0f32; 5]);
+        give(v2);
+    }
+
+    #[test]
+    fn best_fit_prefers_tightest_capacity() {
+        give(Vec::with_capacity(100));
+        give(Vec::with_capacity(10));
+        give(Vec::with_capacity(40));
+        let v = take(30);
+        assert_eq!(v.capacity(), 40, "smallest capacity >= len wins");
+        give(v);
+    }
+
+    #[test]
+    fn undersized_arena_grows_largest_buffer() {
+        // Drain this thread's arena so the test owns its contents.
+        loop {
+            let v = take(1);
+            if v.capacity() <= 1 {
+                break;
+            }
+            // Buffer came from a prior test; drop it on the floor.
+            drop(v);
+        }
+        give(Vec::with_capacity(4));
+        give(Vec::with_capacity(16));
+        let v = take(64);
+        assert_eq!(v.len(), 64);
+        assert!(v.capacity() >= 64, "largest buffer is resized in place");
+        give(v);
+    }
+
+    #[test]
+    fn rows_roundtrip_recycles_inners() {
+        let mut rows = take_rows(3);
+        for _ in 0..3 {
+            rows.push(take(32));
+        }
+        give_rows(rows);
+        let again = take_rows(3);
+        assert!(again.capacity() >= 3);
+        assert!(again.is_empty());
+        // Inners were recycled into the f32 freelist.
+        let r = take(32);
+        assert!(r.capacity() >= 32);
+        give(r);
+        give_rows(again);
+    }
+
+    #[test]
+    fn zero_len_take_leaves_arena_alone() {
+        give(Vec::with_capacity(8));
+        let v = take(0);
+        assert_eq!(v.capacity(), 0);
+        let w = take(8);
+        assert!(w.capacity() >= 8);
+        give(w);
+    }
+}

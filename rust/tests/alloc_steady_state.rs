@@ -1,0 +1,205 @@
+//! Zero-allocation steady-state decode gate.
+//!
+//! A counting `#[global_allocator]` wraps the system allocator; each test
+//! drives a serving [`Engine`] past its warmup (prefill + a few decode
+//! steps, which populate the scratch arenas and grow every staging buffer
+//! to its high-water mark) and then asserts that a steady-state decode
+//! step performs **zero heap allocations** — across the fp-dense,
+//! packed-weights, and paged-mxfp8-KV executors, at pool worker counts 1
+//! and 4.
+//!
+//! Methodology notes:
+//!
+//! * The allocation counter is process-global, so the measuring tests
+//!   serialize on a `Mutex` and take the *minimum* delta over several
+//!   measured steps: a page-boundary step legitimately grows the KV page
+//!   arena, and the libtest harness itself may allocate on another thread
+//!   mid-window. A real regression allocates on *every* step, so
+//!   `min == 0` is exactly the steady-state claim.
+//! * Worker count matters because parallel stages only stay
+//!   allocation-free on the persistent `util::par::WorkerPool` (scoped
+//!   thread spawns allocate, and dead threads drop their warm arenas);
+//!   the engine installs the executor's pool around every step.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+use latmix::coordinator::engine::{Engine, EngineConfig, NativeExecutor};
+use latmix::coordinator::{GenRequest, KvFormat, KvSpec};
+use latmix::model::NativeDims;
+use latmix::util::par;
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+/// The counter is global: measurement windows must not overlap.
+static MEASURE_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> MutexGuard<'static, ()> {
+    MEASURE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+const BATCH: usize = 4;
+const PROMPT_LEN: usize = 12;
+const WARMUP_STEPS: usize = 2;
+const MEASURED_STEPS: usize = 5;
+
+fn serving_engine(exec: NativeExecutor, kv: KvSpec) -> Engine<NativeExecutor> {
+    let cfg = EngineConfig { max_slots: BATCH, eos: -1, kv, ..Default::default() };
+    let mut engine = Engine::new(exec, cfg);
+    for id in 0..BATCH as u64 {
+        // Distinct prompts: prefix-shared pages would put copy-on-write
+        // page allocations inside the measured decode steps.
+        let prompt: Vec<i32> = (0..PROMPT_LEN as i32).map(|t| t + id as i32 * 100).collect();
+        engine.submit(GenRequest::new(id, prompt, 64));
+    }
+    engine
+}
+
+/// Warm up, then return the minimum allocation delta over
+/// `MEASURED_STEPS` steady-state decode steps.
+fn min_allocs_per_step(exec: NativeExecutor, kv: KvSpec, threads: usize) -> u64 {
+    let _guard = lock();
+    par::with_threads(threads, || {
+        let mut engine = serving_engine(exec, kv);
+        // Step 1 admits + prefills all lanes and decodes once; the next
+        // steps are pure decode and converge the scratch arenas.
+        for _ in 0..1 + WARMUP_STEPS {
+            engine.step().unwrap();
+        }
+        let mut min = u64::MAX;
+        for _ in 0..MEASURED_STEPS {
+            let before = allocs();
+            engine.step().unwrap();
+            min = min.min(allocs() - before);
+        }
+        assert_eq!(engine.pending(), BATCH, "lanes must stay running during measurement");
+        min
+    })
+}
+
+fn assert_zero(label: &str, exec: NativeExecutor, kv: KvSpec, threads: usize) {
+    let min = min_allocs_per_step(exec, kv, threads);
+    assert_eq!(
+        min, 0,
+        "{label} w={threads}: steady-state decode step performed {min} heap allocations"
+    );
+}
+
+fn fp_exec() -> NativeExecutor {
+    NativeExecutor::synthetic(NativeDims::latmix_tiny(), "fp", vec![1, 2, 4, 8], 42).unwrap()
+}
+
+fn packed_exec() -> NativeExecutor {
+    NativeExecutor::synthetic(NativeDims::latmix_tiny(), "mxfp4_b32_t3", vec![1, 2, 4, 8], 42)
+        .unwrap()
+        .into_packed()
+        .unwrap()
+}
+
+#[test]
+fn fp_dense_zero_alloc_steady_state_w1() {
+    assert_zero("fp-dense", fp_exec(), KvSpec::default(), 1);
+}
+
+#[test]
+fn fp_dense_zero_alloc_steady_state_w4() {
+    assert_zero("fp-dense", fp_exec(), KvSpec::default(), 4);
+}
+
+#[test]
+fn packed_weights_zero_alloc_steady_state_w1() {
+    assert_zero("packed", packed_exec(), KvSpec::default(), 1);
+}
+
+#[test]
+fn packed_weights_zero_alloc_steady_state_w4() {
+    assert_zero("packed", packed_exec(), KvSpec::default(), 4);
+}
+
+#[test]
+fn paged_mxfp8_zero_alloc_steady_state_w1() {
+    let kv = KvSpec { format: KvFormat::Mxfp8, ..KvSpec::default() };
+    assert_zero("paged-mxfp8", fp_exec(), kv, 1);
+}
+
+#[test]
+fn paged_mxfp8_zero_alloc_steady_state_w4() {
+    let kv = KvSpec { format: KvFormat::Mxfp8, ..KvSpec::default() };
+    assert_zero("paged-mxfp8", fp_exec(), kv, 4);
+}
+
+/// Dropping an engine joins its executor's pool workers: repeated
+/// construct/serve/drop cycles neither leak threads nor accumulate them.
+#[test]
+fn engine_drop_joins_pool_workers() {
+    let _guard = lock();
+    let baseline = par::live_pool_threads();
+    for round in 0..3 {
+        par::with_threads(4, || {
+            let mut engine = serving_engine(fp_exec(), KvSpec::default());
+            for _ in 0..3 {
+                engine.step().unwrap();
+            }
+            drop(engine);
+        });
+        assert_eq!(
+            par::live_pool_threads(),
+            baseline,
+            "round {round}: pool workers leaked past engine drop"
+        );
+    }
+}
+
+/// A cloned executor shares one pool; the workers survive until the last
+/// clone drops.
+#[test]
+fn cloned_executor_shares_one_pool() {
+    let _guard = lock();
+    let baseline = par::live_pool_threads();
+    par::with_threads(4, || {
+        let exec = fp_exec();
+        let clone = exec.clone();
+        let mut engine = serving_engine(exec, KvSpec::default());
+        for _ in 0..2 {
+            engine.step().unwrap();
+        }
+        let live = par::live_pool_threads();
+        assert!(live > baseline, "pool should have spawned workers during prefill");
+        drop(engine);
+        // The clone still holds the pool: workers stay parked, not joined.
+        assert_eq!(par::live_pool_threads(), live, "clone drop must be the joining drop");
+        drop(clone);
+        assert_eq!(par::live_pool_threads(), baseline, "last clone drop joins the workers");
+    });
+}

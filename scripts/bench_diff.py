@@ -6,15 +6,21 @@ Usage: bench_diff.py <baseline.json> <fresh.json>
 
 Two snapshot kinds are understood, dispatched on the `"bench"` field:
 
-- `microbench` (schema 2): per-kernel ns/unit rows keyed on (op, backend).
-  For rows with a throughput unit, ns/unit = 1e9 / throughput; otherwise
-  mean iteration time is used. See README.md §Perf methodology.
+- `microbench` (schema 3): per-kernel ns/unit rows keyed on (op, backend).
+  For timed rows with a throughput unit, ns/unit = 1e9 / throughput;
+  otherwise mean iteration time is used. Timer-free counter rows (schema 3,
+  `value` + `value_unit` — e.g. the `allocs_per_step` rows from the
+  counting-allocator harness) are diffed on the raw value.
+  See README.md §Perf methodology.
 - `serving` (schema 1): per-payload-class SLO rows keyed on class name;
   TTFT and inter-token p50/p99 milliseconds are diffed per class.
 
 - The markdown table goes to $GITHUB_STEP_SUMMARY when set, else stdout.
 - Regressions > 25% emit GitHub `::warning::` annotations on stdout —
-  warn, never fail (CI perf is noisy; the table is the signal).
+  warn, never fail (CI perf is noisy; the table is the signal). A nonzero
+  `alloc/step` counter row also warns: zero is the steady-state invariant
+  (enforced hard by rust/tests/alloc_steady_state.rs), so any drift in the
+  smoke bench deserves a look even though counters are not timing-noisy.
 - Missing/empty baseline is fine: every row reports as `new` and the fresh
   snapshot becomes the first real baseline once committed.
 
@@ -83,6 +89,9 @@ def diff_microbench(base, fresh):
         # rows stay visible instead of last-one-wins vanishing
         for row in fresh_rows:
             key = (row.get("op", "?"), row.get("backend", "?"))
+            if "value_unit" in row:
+                lines.extend(counter_row(key, row, brows.get(key), warnings))
+                continue
             f_ns, unit = ns_per_unit(row)
             b = brows.get(key)
             if b is None:
@@ -95,9 +104,34 @@ def diff_microbench(base, fresh):
                 f"| {key[0]} | {key[1]} | {unit} | {b_ns:.2f} | {f_ns:.2f} | {delta:+.1f}%{mark} |"
             )
             if delta > 25.0:
-                warnings.append((f"{key[0]!r} [{key[1]}]", "ns/unit", delta))
+                warnings.append(
+                    f"microbench regression >25% on {key[0]!r} [{key[1]}]: "
+                    f"{delta:+.1f}% ns/unit vs committed baseline"
+                )
         lines.extend(shard_scaling_lines(fresh_rows))
     return lines, warnings
+
+
+def counter_row(key, row, base_row, warnings):
+    """Diff one schema-3 counter row (`value` + `value_unit`) on the raw
+    value; a nonzero `alloc/step` reading always warns — zero allocations
+    per steady-state decode step is an invariant, not a noisy timing."""
+    f_v = row.get("value", 0.0)
+    unit = row.get("value_unit", "count")
+    alloc_drift = unit == "alloc/step" and f_v > 0
+    if base_row is None or "value" not in base_row:
+        b_txt, delta = "-", "new"
+    else:
+        b_v = base_row["value"]
+        b_txt, delta = f"{b_v:g}", f"{f_v - b_v:+g}"
+    mark = " :warning:" if alloc_drift else ""
+    if alloc_drift:
+        warnings.append(
+            f"microbench counter {key[0]!r} [{key[1]}]: {f_v:g} {unit} "
+            "(steady-state decode should allocate 0; see "
+            "rust/tests/alloc_steady_state.rs)"
+        )
+    return [f"| {key[0]} | {key[1]} | {unit} | {b_txt} | {f_v:g} | {delta}{mark} |"]
 
 
 def shard_scaling_lines(fresh_rows):
@@ -185,7 +219,10 @@ def diff_serving(base, fresh):
                 f"| {delta:+.1f}%{mark} |"
             )
             if delta > 25.0:
-                warnings.append((f"class {name!r}", metric, delta))
+                warnings.append(
+                    f"serving regression >25% on class {name!r}: "
+                    f"{delta:+.1f}% {metric} vs committed baseline"
+                )
     return lines, warnings
 
 
@@ -206,11 +243,8 @@ def main():
         with open(summary, "a") as f:
             f.write(text)
     print(text)
-    for what, unit, delta in warnings:
-        print(
-            f"::warning::{kind} regression >25% on {what}: "
-            f"{delta:+.1f}% {unit} vs committed baseline"
-        )
+    for msg in warnings:
+        print(f"::warning::{msg}")
     return 0
 
 

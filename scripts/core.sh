@@ -2,7 +2,8 @@
 # Core (no-XLA) gate — exactly what CI's always-on `core` job runs:
 # build + full test suite with the default `backend-xla` feature disabled,
 # then a smoke microbench on the native executor that refreshes
-# BENCH_microbench.json (schema 2, per-row `backend` field). Run this
+# BENCH_microbench.json (schema 3, per-row `backend` field plus the
+# allocs_per_step counter rows). Run this
 # locally to reproduce the enforced CI lane on any machine; no XLA
 # toolchain required. (CI's lint steps — clippy, rustfmt, and the
 # `RUSTDOCFLAGS="-D warnings" cargo doc` docs gate — live in ci.yml.)
@@ -53,6 +54,21 @@ assert snap["kv_resident_bytes"] > 0, "paged run reported no KV residency"
 print("paged-KV smoke OK:", snap["requests"], "requests, 0 lost,",
       snap["kv_pages_shared"], "page(s) prefix-shared,",
       snap["kv_resident_bytes"], "KV bytes resident (mxfp8 pages)")
+EOF
+
+# Tensor-parallel serving smoke: the same open-loop run with the executor
+# sharded across 2 workers on the persistent pool (the shard parity suite
+# guarantees bit-identical tokens vs 1 worker; this leg proves the pool
+# substrate survives a full serving run). Runs BEFORE the fp baseline run
+# below for the same snapshot-baseline reason. Asserts conservation.
+cargo run --no-default-features -q -- serve --open-loop --synthetic \
+  --workers 2 \
+  --requests 48 --arrival-rate 400 --slots 4 --seed 7
+python3 - <<'EOF'
+import json
+snap = json.load(open("BENCH_serving.json"))
+assert snap["lost"] == 0, f"workers=2 smoke lost {snap['lost']} request(s)"
+print("workers=2 serving smoke OK:", snap["requests"], "requests, 0 lost")
 EOF
 
 # Serving smoke: open-loop continuous-batching run over synthetic
